@@ -1,0 +1,110 @@
+//! The three-layer pipeline in isolation: Pallas kernel (L1) → JAX
+//! model (L2) → AOT HLO artifact → Rust PJRT execution (L3 runtime).
+//!
+//! Loads every artifact from `artifacts/`, verifies the block-step
+//! numerics against the pure-Rust oracle, solves a dense problem
+//! end-to-end through XLA, and reports per-call latency and effective
+//! update throughput for each (B, D) variant — the numbers behind
+//! EXPERIMENTS.md §Perf (L1/L2).
+//!
+//! Run: `make artifacts && cargo run --release --example xla_pipeline`
+
+use hybrid_dca::loss::Hinge;
+use hybrid_dca::runtime::{default_artifacts_dir, ArtifactKind, Runtime};
+use hybrid_dca::solver::block::{block_step, BlockInput};
+use hybrid_dca::solver::StepParams;
+use hybrid_dca::util::{measure, Rng, Stats};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    anyhow::ensure!(
+        Runtime::available(&dir),
+        "no artifacts at {} — run `make artifacts` first",
+        dir.display()
+    );
+    let rt = Runtime::load(&dir)?;
+    println!("loaded {} artifacts from {}\n", rt.names().len(), dir.display());
+
+    let mut rng = Rng::new(99);
+    println!(
+        "{:<26} {:>10} {:>12} {:>14} {:>12}",
+        "artifact", "max|Δ|", "p50 call", "updates/s", "agrees"
+    );
+    for name in rt.names() {
+        let art = rt.get(name).unwrap();
+        if art.meta.kind != ArtifactKind::BlockStep {
+            continue;
+        }
+        let (b, d) = (art.meta.b, art.meta.d);
+        // Random dense case.
+        let x: Vec<f64> = (0..b * d)
+            .map(|_| if rng.next_bool(0.4) { rng.next_gaussian() * 0.5 } else { 0.0 })
+            .collect();
+        let y: Vec<f64> = (0..b).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+        let alpha = vec![0.0f64; b];
+        let v = vec![0.0f64; d];
+        let params = StepParams { lambda: 1e-2, n: 1000, sigma: 2.0 };
+        let oracle = block_step(
+            &BlockInput { x: x.clone(), b, d, y: y.clone(), alpha: alpha.clone(), v: v.clone() },
+            &Hinge,
+            &params,
+        );
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = y.iter().map(|&v| v as f32).collect();
+        let af = vec![0.0f32; b];
+        let vf = vec![0.0f32; d];
+        let out = rt.block_step(art, &xf, &yf, &af, &vf, params.v_scale() as f32, 2.0)?;
+        let max_diff = out
+            .eps
+            .iter()
+            .zip(&oracle.eps)
+            .map(|(a, b)| (*a as f64 - b).abs())
+            .fold(0.0f64, f64::max);
+
+        // Latency.
+        let samples = measure(3, 20, || {
+            let _ = rt
+                .block_step(art, &xf, &yf, &af, &vf, params.v_scale() as f32, 2.0)
+                .unwrap();
+        });
+        let st = Stats::from(&samples);
+        println!(
+            "{:<26} {:>10.2e} {:>12} {:>14.0} {:>12}",
+            name,
+            max_diff,
+            hybrid_dca::util::timer::fmt_duration(st.p50),
+            b as f64 / st.p50,
+            if max_diff < 2e-4 { "✓" } else { "✗" }
+        );
+    }
+
+    // End-to-end dense solve through XLA.
+    println!("\n-- dense SVM solved entirely through the XLA artifacts --");
+    let data = hybrid_dca::data::synth::generate(
+        &hybrid_dca::data::SynthSpec {
+            name: "dense-demo".into(),
+            n: 512,
+            d: 384,
+            nnz_per_row: 64,
+            feature_skew: 0.2,
+            label_noise: 0.05,
+            separator_density: 0.4,
+            topics: 0,
+            topic_mix: 0.0,
+        },
+        &mut rng,
+    );
+    let lambda = 2.0 / data.n() as f64;
+    let mut solver = hybrid_dca::solver::xla_dense::XlaDenseSolver::new(&rt, &data, lambda)?;
+    let (b, d) = solver.shape();
+    println!("dataset n={} d={} → artifact B={b} D={d}", data.n(), data.d());
+    let trace = solver.solve(40, 1e-4)?;
+    for p in trace.points.iter().step_by(8) {
+        println!("epoch {:>3}  gap {:.3e}  ({:.2}s wall)", p.round, p.gap, p.wall_secs);
+    }
+    let final_gap = trace.final_gap().unwrap();
+    println!("final gap {final_gap:.3e}");
+    anyhow::ensure!(final_gap < 1e-2, "XLA solve failed to converge");
+    println!("\nall layers compose ✓");
+    Ok(())
+}

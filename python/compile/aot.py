@@ -1,0 +1,110 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime compiles
+the HLO on its PJRT CPU client and executes it on the solve path.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.
+
+The manifest is a TOML-subset file read by ``rust/src/runtime``::
+
+    [block_step_b16_d64]
+    file = "block_step_b16_d64.hlo.txt"
+    kind = "block_step"
+    b = 16
+    d = 64
+    dtype = "f32"
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--variants ...]``
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (B, D) shape variants exported by default. B and D stay MXU/VMEM
+# friendly (multiples of 8 / 128-divisible where it matters); D must be
+# divisible by the kernel tile (min(D, 128)).
+DEFAULT_VARIANTS = [(16, 64), (32, 256), (64, 512)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block_step(b: int, d: int) -> str:
+    fn = lambda x, y, a, v, s, g: model.block_dual_step(x, y, a, v, s, g)
+    lowered = jax.jit(fn).lower(*model.block_step_example_args(b, d))
+    return to_hlo_text(lowered)
+
+
+def lower_gap_tile(b: int, d: int) -> str:
+    fn = lambda x, y, a, v: model.gap_tile(x, y, a, v)
+    lowered = jax.jit(fn).lower(*model.gap_tile_example_args(b, d))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, variants) -> list:
+    """Lower every variant; write HLO files + manifest. Returns entries."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for b, d in variants:
+        for kind, lower in (("block_step", lower_block_step), ("gap_tile", lower_gap_tile)):
+            name = f"{kind}_b{b}_d{d}"
+            fname = f"{name}.hlo.txt"
+            text = lower(b, d)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append({"name": name, "file": fname, "kind": kind, "b": b, "d": d})
+            print(f"  wrote {fname} ({len(text)} chars)")
+    manifest = "".join(
+        f'[{e["name"]}]\n'
+        f'file = "{e["file"]}"\n'
+        f'kind = "{e["kind"]}"\n'
+        f'b = {e["b"]}\n'
+        f'd = {e["d"]}\n'
+        f'dtype = "f32"\n\n'
+        for e in entries
+    )
+    with open(os.path.join(out_dir, "manifest.toml"), "w") as f:
+        f.write(manifest)
+    print(f"  wrote manifest.toml ({len(entries)} artifacts)")
+    return entries
+
+
+def parse_variants(spec: str):
+    """Parse '16x64,32x256' into [(16, 64), (32, 256)]."""
+    out = []
+    for part in spec.split(","):
+        b_s, d_s = part.lower().split("x")
+        out.append((int(b_s), int(d_s)))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--variants",
+        default=",".join(f"{b}x{d}" for b, d in DEFAULT_VARIANTS),
+        help="comma-separated BxD shape variants",
+    )
+    args = ap.parse_args()
+    variants = parse_variants(args.variants)
+    print(f"lowering {len(variants)} variants to {args.out_dir}")
+    build(args.out_dir, variants)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Layer-1 Pallas kernel: fused Gram tile + base margins.
+
+Computes, for a dense coordinate tile ``X ∈ f32[B, D]`` and the frozen
+primal estimate ``v ∈ f32[D]``::
+
+    G  = X @ X.T        # [B, B]
+    g0 = X @ v          # [B]
+
+in one pass over D, tiled into VMEM-sized chunks of ``TD`` features.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is the MXU-shaped
+heart of block SDCA. Each grid step loads one ``[B, TD]`` slab of X into
+VMEM, feeds the systolic array with ``X_tile @ X_tileᵀ`` (B×TD×B MACs),
+and accumulates into a ``[B, B]`` VMEM-resident accumulator; ``g0``
+rides along as a fused matvec on the same slab, so X is read from HBM
+exactly once. The BlockSpec index maps below express exactly the
+HBM↔VMEM schedule a CUDA implementation would write with threadblocks.
+
+Run under ``interpret=True`` everywhere in this repo: the CPU PJRT
+client cannot execute Mosaic custom-calls; interpret mode lowers to
+plain HLO so the AOT artifact runs on any backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, v_ref, g_ref, g0_ref):
+    """One grid step: accumulate this D-tile's contribution."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        g0_ref[...] = jnp.zeros_like(g0_ref)
+
+    x = x_ref[...]  # [B, TD] slab in VMEM
+    v = v_ref[...]  # [TD]
+    # MXU: [B, TD] @ [TD, B] accumulate in f32.
+    g_ref[...] += jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    g0_ref[...] += x @ v
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def gram_matvec(x, v, *, tile_d=None):
+    """Fused ``(X @ X.T, X @ v)`` via the Pallas kernel.
+
+    Args:
+      x: f32[B, D] dense tile; D must be divisible by ``tile_d``.
+      v: f32[D].
+      tile_d: feature-tile width (default: min(D, 128)).
+
+    Returns:
+      (G f32[B, B], g0 f32[B])
+    """
+    b, d = x.shape
+    if tile_d is None:
+        tile_d = min(d, 128)
+    if d % tile_d != 0:
+        raise ValueError(f"D={d} not divisible by tile_d={tile_d}")
+    grid = (d // tile_d,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, b), lambda i: (0, 0)),
+            pl.BlockSpec((b,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, b), x.dtype),
+            jax.ShapeDtypeStruct((b,), x.dtype),
+        ],
+        interpret=True,
+    )(x, v)
+
+
+def vmem_bytes(b, d, tile_d=None, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (perf model input).
+
+    X slab [B, TD] + v tile [TD] + accumulators G [B, B] and g0 [B].
+    """
+    if tile_d is None:
+        tile_d = min(d, 128)
+    return dtype_bytes * (b * tile_d + tile_d + b * b + b)
+
+
+def mxu_macs(b, d):
+    """Total MXU multiply-accumulates for the Gram product (perf model)."""
+    return b * b * d

@@ -1,0 +1,75 @@
+"""Layer-1 Pallas kernels: plain matvec and vector-matrix products.
+
+* ``matvec(x, v)``      — margins ``m = X @ v``        (gap tiles)
+* ``vecmat(eps, x)``    — update  ``u = eps @ X``      (Δv assembly)
+
+Both tile over D the same way as ``gram_matvec``; ``vecmat``
+accumulates nothing across steps (each D-tile owns its output slice),
+so its BlockSpec writes a different output block per grid step —
+the streaming-store pattern.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matvec_kernel(x_ref, v_ref, m_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    m_ref[...] += x_ref[...] @ v_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def matvec(x, v, *, tile_d=None):
+    """``m = X @ v`` with D-tiled accumulation."""
+    b, d = x.shape
+    if tile_d is None:
+        tile_d = min(d, 128)
+    if d % tile_d != 0:
+        raise ValueError(f"D={d} not divisible by tile_d={tile_d}")
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(d // tile_d,),
+        in_specs=[
+            pl.BlockSpec((b, tile_d), lambda i: (0, i)),
+            pl.BlockSpec((tile_d,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), x.dtype),
+        interpret=True,
+    )(x, v)
+
+
+def _vecmat_kernel(e_ref, x_ref, u_ref):
+    # Each grid step writes its own [TD] output slice: no accumulation.
+    e = e_ref[...]  # [B]
+    x = x_ref[...]  # [B, TD]
+    u_ref[...] = e @ x
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d",))
+def vecmat(eps, x, *, tile_d=None):
+    """``u = eps @ X`` with per-tile streaming stores."""
+    b, d = x.shape
+    if eps.shape != (b,):
+        raise ValueError(f"eps shape {eps.shape} != ({b},)")
+    if tile_d is None:
+        tile_d = min(d, 128)
+    if d % tile_d != 0:
+        raise ValueError(f"D={d} not divisible by tile_d={tile_d}")
+    return pl.pallas_call(
+        _vecmat_kernel,
+        grid=(d // tile_d,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (0,)),
+            pl.BlockSpec((b, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((tile_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), x.dtype),
+        interpret=True,
+    )(eps, x)

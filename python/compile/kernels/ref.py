@@ -1,0 +1,93 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the L2 model.
+
+These are the correctness ground truth at build time: every Pallas
+kernel and every composed model function is pytest-compared against the
+functions here, and the Rust `solver::block` module implements the same
+semantics in f64 (checked end-to-end through the PJRT runtime).
+
+Semantics (must stay in lockstep with rust/src/solver/block.rs):
+
+    G  = X @ X.T                      # Gram tile, [B, B]
+    g0 = X @ v                        # base margins, [B]
+    sequentially for j in 0..B:
+        m_j   = g0[j] + sigma*inv_lambda_n * sum_l eps[l] * G[j, l]
+        q_j   = sigma * G[j, j] * inv_lambda_n
+        a_sig = alpha[j]*y[j]
+        a_new = clip(a_sig + (1 - y[j]*m_j)/q_j, 0, 1)    # hinge step
+        eps[j] = a_new*y[j] - alpha[j]
+    delta_v = inv_lambda_n * (eps @ X)                    # wire scale
+
+Rows with G[j,j] == 0 are skipped (no step possible).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def gram_matvec_ref(x, v):
+    """G = X Xᵀ and g0 = X v."""
+    return x @ x.T, x @ v
+
+
+def matvec_ref(x, v):
+    """Plain margins m = X v."""
+    return x @ v
+
+
+def hinge_step_signed(a_sig, ym, q):
+    """Closed-form hinge dual step in the signed space a = alpha*y.
+
+    Guards q == 0 (empty rows) by returning the unchanged value.
+    """
+    q_safe = jnp.where(q > 0.0, q, 1.0)
+    a_new = jnp.clip(a_sig + (1.0 - ym) / q_safe, 0.0, 1.0)
+    return jnp.where(q > 0.0, a_new, a_sig)
+
+
+def block_dual_step_ref(x, y, alpha, v, inv_lambda_n, sigma):
+    """Reference block dual-coordinate step (see module docstring).
+
+    Args:
+      x: [B, D] dense feature tile.
+      y: [B] labels in {-1, +1}.
+      alpha: [B] current dual variables.
+      v: [D] frozen primal estimate.
+      inv_lambda_n: scalar 1/(λn).
+      sigma: scalar subproblem scaling σ.
+
+    Returns:
+      (alpha_new [B], eps [B], delta_v [D])
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    alpha = jnp.asarray(alpha)
+    v = jnp.asarray(v)
+    b = x.shape[0]
+    gram, g0 = gram_matvec_ref(x, v)
+    corr = sigma * inv_lambda_n
+
+    def body(eps, j):
+        m = g0[j] + corr * jnp.dot(gram[j], eps)
+        q = sigma * gram[j, j] * inv_lambda_n
+        a_sig = alpha[j] * y[j]
+        a_new = hinge_step_signed(a_sig, y[j] * m, q)
+        e = a_new * y[j] - alpha[j]
+        return eps.at[j].set(e), None
+
+    eps, _ = lax.scan(body, jnp.zeros_like(alpha), jnp.arange(b))
+    alpha_new = alpha + eps
+    delta_v = inv_lambda_n * (eps @ x)
+    return alpha_new, eps, delta_v
+
+
+def gap_tile_ref(x, y, alpha, v):
+    """Objective partial sums over a tile (hinge loss).
+
+    Returns:
+      hinge_sum = Σ_j max(0, 1 − y_j·(x_jᵀv))
+      dual_sum  = Σ_j α_j·y_j
+    """
+    m = matvec_ref(x, v)
+    hinge_sum = jnp.sum(jnp.maximum(0.0, 1.0 - y * m))
+    dual_sum = jnp.sum(alpha * y)
+    return hinge_sum, dual_sum

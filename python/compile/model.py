@@ -1,0 +1,95 @@
+"""Layer-2 JAX model: the block dual-coordinate step and the objective
+tile, composed from the Layer-1 Pallas kernels.
+
+These are the functions AOT-lowered by ``aot.py`` into the HLO
+artifacts the Rust coordinator executes via PJRT. Python never runs on
+the solve path — only here, at build time.
+
+Semantics are defined by ``kernels/ref.py`` (and mirrored in Rust by
+``solver::block``); pytest asserts both directions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import gram_matvec as gm
+from compile.kernels import matvec as mv
+from compile.kernels.ref import hinge_step_signed
+
+
+def block_dual_step(x, y, alpha, v, inv_lambda_n, sigma, *, tile_d=None):
+    """Block (mini-batch locally-sequential) hinge dual step.
+
+    Pipeline:
+      1. L1 kernel: fused Gram tile ``G = X Xᵀ`` + margins ``g0 = X v``.
+      2. L2 scan: exact sequential coordinate recurrence over the block
+         (cheap rank-1 updates against the precomputed Gram rows).
+      3. L1 kernel: ``Δv = (1/λn)·(ε @ X)``.
+
+    Args:
+      x: f32[B, D] dense coordinate tile.
+      y: f32[B] labels ±1.
+      alpha: f32[B] current duals.
+      v: f32[D] frozen primal estimate.
+      inv_lambda_n: f32 scalar, 1/(λn).
+      sigma: f32 scalar, subproblem scaling σ.
+
+    Returns:
+      (alpha_new f32[B], eps f32[B], delta_v f32[D])
+    """
+    b = x.shape[0]
+    gram, g0 = gm.gram_matvec(x, v, tile_d=tile_d)
+    corr = sigma * inv_lambda_n
+
+    # The scan needs G[j, j]; carry the row index explicitly.
+    def body(eps, inputs):
+        j, gram_row, g0_j, y_j, alpha_j = inputs
+        m = g0_j + corr * jnp.dot(gram_row, eps)
+        norm_sq = gram_row[j]
+        q = sigma * norm_sq * inv_lambda_n
+        a_sig = alpha_j * y_j
+        a_new = hinge_step_signed(a_sig, y_j * m, q)
+        e = a_new * y_j - alpha_j
+        return eps.at[j].set(e), None
+
+    eps0 = jnp.zeros_like(alpha)
+    xs = (jnp.arange(b), gram, g0, y, alpha)
+    eps, _ = lax.scan(body, eps0, xs)
+    alpha_new = alpha + eps
+    delta_v = inv_lambda_n * mv.vecmat(eps, x, tile_d=tile_d)
+    return alpha_new, eps, delta_v
+
+
+def gap_tile(x, y, alpha, v, *, tile_d=None):
+    """Objective partial sums over a tile (hinge loss).
+
+    Returns:
+      (hinge_sum f32[], dual_sum f32[])
+    """
+    m = mv.matvec(x, v, tile_d=tile_d)
+    hinge_sum = jnp.sum(jnp.maximum(0.0, 1.0 - y * m))
+    dual_sum = jnp.sum(alpha * y)
+    return hinge_sum, dual_sum
+
+
+def block_step_example_args(b, d, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of ``block_dual_step``."""
+    return (
+        jax.ShapeDtypeStruct((b, d), dtype),  # x
+        jax.ShapeDtypeStruct((b,), dtype),    # y
+        jax.ShapeDtypeStruct((b,), dtype),    # alpha
+        jax.ShapeDtypeStruct((d,), dtype),    # v
+        jax.ShapeDtypeStruct((), dtype),      # inv_lambda_n
+        jax.ShapeDtypeStruct((), dtype),      # sigma
+    )
+
+
+def gap_tile_example_args(b, d, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering of ``gap_tile``."""
+    return (
+        jax.ShapeDtypeStruct((b, d), dtype),
+        jax.ShapeDtypeStruct((b,), dtype),
+        jax.ShapeDtypeStruct((b,), dtype),
+        jax.ShapeDtypeStruct((d,), dtype),
+    )

@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernels vs pure-jnp references.
+
+Hypothesis sweeps shapes and value distributions; every case asserts
+allclose against ref.py. interpret=True keeps these runnable on CPU.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gram_matvec as gm
+from compile.kernels import matvec as mv
+from compile.kernels import ref
+
+# Shapes: B small-ish, D a multiple of the tile (tile = min(D, 128)).
+BS = st.sampled_from([1, 2, 4, 8, 16, 32])
+DS = st.sampled_from([8, 64, 128, 256, 384])
+
+
+def make_case(b, d, seed, density=0.5, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(b, d)) * (rng.random((b, d)) < density) * scale).astype(np.float32)
+    v = (rng.normal(size=d) * 0.5).astype(np.float32)
+    return x, v
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_gram_matvec_matches_ref(b, d, seed):
+    x, v = make_case(b, d, seed)
+    g_ref, g0_ref = ref.gram_matvec_ref(x, v)
+    g_k, g0_k = gm.gram_matvec(x, v)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g0_k), np.asarray(g0_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_matvec_matches_ref(b, d, seed):
+    x, v = make_case(b, d, seed)
+    m_ref = ref.matvec_ref(x, v)
+    m_k = mv.matvec(x, v)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_vecmat_matches_ref(b, d, seed):
+    x, _ = make_case(b, d, seed)
+    rng = np.random.default_rng(seed + 1)
+    eps = rng.normal(size=x.shape[0]).astype(np.float32)
+    u_ref = eps @ x
+    u_k = mv.vecmat(eps, x)
+    np.testing.assert_allclose(np.asarray(u_k), np.asarray(u_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([128, 256, 512]), tile=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_tiling_invariance(d, tile, seed):
+    """Result must not depend on the tile width."""
+    x, v = make_case(8, d, seed)
+    g_a, g0_a = gm.gram_matvec(x, v, tile_d=tile)
+    g_b, g0_b = gm.gram_matvec(x, v, tile_d=d)
+    np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_b), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(g0_a), np.asarray(g0_b), rtol=1e-5, atol=1e-5)
+
+
+def test_gram_is_symmetric_psd():
+    x, v = make_case(16, 128, 0)
+    g, _ = gm.gram_matvec(x, v)
+    g = np.asarray(g)
+    np.testing.assert_allclose(g, g.T, atol=1e-5)
+    eigs = np.linalg.eigvalsh(g.astype(np.float64))
+    assert eigs.min() > -1e-4, f"Gram not PSD: min eig {eigs.min()}"
+
+
+def test_non_divisible_tile_rejected():
+    x, v = make_case(4, 100, 0)
+    with pytest.raises(ValueError):
+        gm.gram_matvec(x, v, tile_d=64)
+    with pytest.raises(ValueError):
+        mv.matvec(x, v, tile_d=64)
+
+
+def test_zero_inputs():
+    b, d = 8, 64
+    x = np.zeros((b, d), np.float32)
+    v = np.zeros(d, np.float32)
+    g, g0 = gm.gram_matvec(x, v)
+    assert float(jnp.abs(g).max()) == 0.0
+    assert float(jnp.abs(g0).max()) == 0.0
+
+
+def test_vmem_estimate_reasonable():
+    # The perf model the DESIGN.md §Hardware-Adaptation table uses.
+    bytes_ = gm.vmem_bytes(128, 512, tile_d=512)
+    assert bytes_ < 16 * 2**20, "must fit VMEM"
+    assert gm.mxu_macs(128, 512) == 128 * 128 * 512

@@ -1,0 +1,92 @@
+"""Layer-2 model (block dual step, gap tile) vs ref.py + invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+BS = st.sampled_from([1, 4, 8, 16])
+DS = st.sampled_from([8, 64, 128, 256])
+
+
+def make_case(b, d, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(b, d)) * (rng.random((b, d)) < 0.4) * 0.5).astype(np.float32)
+    y = np.where(rng.random(b) < 0.5, 1.0, -1.0).astype(np.float32)
+    alpha = (rng.random(b) * y).astype(np.float32)
+    v = (rng.normal(size=d) * 0.3).astype(np.float32)
+    inv_ln = np.float32(0.05 + rng.random())
+    sigma = np.float32(1.0 + 3.0 * rng.random())
+    return x, y, alpha, v, inv_ln, sigma
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_block_step_matches_ref(b, d, seed):
+    x, y, alpha, v, inv_ln, sigma = make_case(b, d, seed)
+    a_ref, e_ref, dv_ref = ref.block_dual_step_ref(x, y, alpha, v, inv_ln, sigma)
+    a_k, e_k, dv_k = model.block_dual_step(x, y, alpha, v, inv_ln, sigma)
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(e_k), np.asarray(e_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dv_k), np.asarray(dv_ref), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_block_step_feasibility(b, d, seed):
+    """New duals stay in the hinge box: 0 ≤ α·y ≤ 1."""
+    x, y, alpha, v, inv_ln, sigma = make_case(b, d, seed)
+    a_new, _, _ = model.block_dual_step(x, y, alpha, v, inv_ln, sigma)
+    signed = np.asarray(a_new) * y
+    assert (signed >= -1e-6).all() and (signed <= 1.0 + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_delta_v_consistency(b, d, seed):
+    """Δv must equal inv_λn · εᵀX exactly (the wire contract)."""
+    x, y, alpha, v, inv_ln, sigma = make_case(b, d, seed)
+    _, eps, dv = model.block_dual_step(x, y, alpha, v, inv_ln, sigma)
+    expect = inv_ln * (np.asarray(eps) @ x)
+    np.testing.assert_allclose(np.asarray(dv), expect, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=BS, d=DS, seed=st.integers(0, 2**31 - 1))
+def test_gap_tile_matches_ref(b, d, seed):
+    x, y, alpha, v, _, _ = make_case(b, d, seed)
+    h_ref, d_ref = ref.gap_tile_ref(x, y, alpha, v)
+    h_k, d_k = model.gap_tile(x, y, alpha, v)
+    np.testing.assert_allclose(float(h_k), float(h_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(d_k), float(d_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_block_step_iterates_to_fixed_point():
+    """Repeated block steps (σ=1, applying Δv each round) are exact
+    block coordinate ascent on the one-block dual: the steps must
+    contract to a fixed point where no coordinate wants to move."""
+    x, y, alpha0, v0, _, _ = make_case(8, 64, 123)
+    inv_ln, sigma = np.float32(0.5), np.float32(1.0)
+    alpha, v = alpha0, v0
+    last = None
+    for _ in range(60):
+        a_new, eps, dv = model.block_dual_step(x, y, alpha, v, inv_ln, sigma)
+        alpha = np.asarray(a_new)
+        v = v + np.asarray(dv)
+        last = float(jnp.abs(jnp.asarray(eps)).max())
+    assert last < 1e-4, f"did not reach fixed point: max|eps| = {last}"
+
+
+def test_zero_rows_produce_zero_steps():
+    b, d = 4, 64
+    x = np.zeros((b, d), np.float32)
+    y = np.ones(b, np.float32)
+    alpha = np.zeros(b, np.float32)
+    v = np.zeros(d, np.float32)
+    a_new, eps, dv = model.block_dual_step(x, y, alpha, v, np.float32(0.5), np.float32(1.0))
+    assert float(jnp.abs(jnp.asarray(eps)).max()) == 0.0
+    assert float(jnp.abs(jnp.asarray(dv)).max()) == 0.0
+    np.testing.assert_array_equal(np.asarray(a_new), alpha)

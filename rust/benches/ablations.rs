@@ -1,0 +1,29 @@
+//! Bench: ablations over the design choices (DESIGN.md §6):
+//! merge policy, lock-free vs wild vs serialized updates, σ scaling.
+//! `cargo bench --bench ablations`
+
+use hybrid_dca::harness::{ablations, print_threshold_table, save_traces, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    let (dataset, rounds) = match QuickFull::from_env() {
+        QuickFull::Quick => ("tiny", 20),
+        QuickFull::Full => ("rcv1-s", 60),
+    };
+    let threshold = hybrid_dca::harness::fig3::threshold_for(dataset);
+
+    println!("== ablation: merge policy (oldest- vs newest-first) ==");
+    let traces = ablations::merge_policy(dataset, rounds)?;
+    print_threshold_table(&traces, threshold);
+    save_traces("ablation_merge_policy", &traces)?;
+
+    println!("\n== ablation: atomic vs wild vs serialized updates ==");
+    let traces = ablations::locks(dataset, 4, rounds)?;
+    print_threshold_table(&traces, threshold);
+    save_traces("ablation_locks", &traces)?;
+
+    println!("\n== ablation: σ scaling (νS safe / νK damped / 0.25 unsafe) ==");
+    let traces = ablations::sigma(dataset, rounds)?;
+    print_threshold_table(&traces, threshold);
+    save_traces("ablation_sigma", &traces)?;
+    Ok(())
+}

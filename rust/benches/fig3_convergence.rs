@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 3 (duality gap vs rounds and vs time for
+//! Baseline / CoCoA+ / PassCoDe / Hybrid-DCA on the three datasets).
+//! `cargo bench --bench fig3_convergence`
+//! Set HYBRID_DCA_BENCH=quick for the reduced sweep.
+
+use hybrid_dca::harness::{fig3, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    fig3::run_and_print(QuickFull::from_env())
+}

@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 4 (speedup(p,t) over the sequential
+//! Baseline in virtual cluster time).
+//! `cargo bench --bench fig4_speedup`
+
+use hybrid_dca::harness::{fig4, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    fig4::run_and_print(QuickFull::from_env())
+}

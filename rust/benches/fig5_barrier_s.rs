@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 5 (effect of the bounded barrier S, plus
+//! the heterogeneous-cluster extension).
+//! `cargo bench --bench fig5_barrier_s`
+
+use hybrid_dca::harness::{fig5, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    fig5::run_and_print(QuickFull::from_env())
+}

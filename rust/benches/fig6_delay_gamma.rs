@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 6 (effect of the bounded delay Γ and the
+//! observed-staleness measurement).
+//! `cargo bench --bench fig6_delay_gamma`
+
+use hybrid_dca::harness::{fig6, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    fig6::run_and_print(QuickFull::from_env())
+}

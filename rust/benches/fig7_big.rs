@@ -1,0 +1,9 @@
+//! Bench: regenerate Figure 7 (the big splicesite dataset: Hybrid-DCA
+//! vs CoCoA+ vs CoCoA+-cores-as-nodes; the paper's ~10× headline).
+//! `cargo bench --bench fig7_big`
+
+use hybrid_dca::harness::{fig7, QuickFull};
+
+fn main() -> anyhow::Result<()> {
+    fig7::run_and_print(QuickFull::from_env())
+}

@@ -1,0 +1,144 @@
+//! Bench: the L3 hot path in isolation — coordinate updates per second
+//! for the sequential step, the atomic local solver (1..R cores), and
+//! the XLA block step (when artifacts exist). This is the measurement
+//! harness behind EXPERIMENTS.md §Perf.
+//! `cargo bench --bench hot_loop`
+
+use hybrid_dca::data::Preset;
+use hybrid_dca::harness;
+use hybrid_dca::loss::Hinge;
+use hybrid_dca::sim::{CostModel, UpdateCosts};
+use hybrid_dca::solver::local::LocalSolver;
+use hybrid_dca::solver::sdca::Sdca;
+use hybrid_dca::solver::StepParams;
+use hybrid_dca::util::{measure, Rng, Stats};
+
+fn main() -> anyhow::Result<()> {
+    let data = harness::gen_preset(Preset::RcvS, 42);
+    let lambda = harness::paper_lambda("rcv1-s");
+    let cost_model = CostModel::default();
+    let norms = data.x.row_norms_sq();
+    let costs = UpdateCosts::precompute(&data, &cost_model);
+    let h = 20_000usize;
+
+    println!(
+        "hot-path throughput on {} (n={}, d={}, nnz/row≈{:.0})\n",
+        data.name,
+        data.n(),
+        data.d(),
+        data.x.nnz() as f64 / data.n() as f64
+    );
+    println!("{:<26} {:>14} {:>16}", "path", "p50 round", "updates/s");
+
+    // Sequential exact steps.
+    {
+        let mut solver = Sdca::new(&data, lambda, Rng::new(1), &cost_model);
+        let samples = measure(1, 5, || solver.run_round(&Hinge, h));
+        let st = Stats::from(&samples);
+        println!(
+            "{:<26} {:>14} {:>16.0}",
+            "sequential (Sdca)",
+            hybrid_dca::util::timer::fmt_duration(st.p50),
+            h as f64 / st.p50
+        );
+    }
+
+    // Local solver with R core-threads (real threads, atomic v).
+    for r in [1usize, 2, 4, 8] {
+        let mut rng = Rng::new(2);
+        let part = hybrid_dca::data::Partition::build(
+            data.n(),
+            1,
+            r,
+            hybrid_dca::data::Strategy::Shuffled,
+            &mut rng,
+        );
+        let params = StepParams { lambda, n: data.n(), sigma: 1.0 };
+        let mut solver = LocalSolver::new(part.parts[0].clone(), data.d(), params, false, &mut rng);
+        let h_per_core = h / r;
+        let samples = measure(1, 5, || {
+            let _ = solver.run_round(&data, &Hinge, &norms, &costs, h_per_core);
+            solver.commit(1.0);
+        });
+        let st = Stats::from(&samples);
+        println!(
+            "{:<26} {:>14} {:>16.0}",
+            format!("local atomic (R={r})"),
+            hybrid_dca::util::timer::fmt_duration(st.p50),
+            (h_per_core * r) as f64 / st.p50
+        );
+    }
+
+    // Wild (racy) updates.
+    {
+        let mut rng = Rng::new(3);
+        let part = hybrid_dca::data::Partition::build(
+            data.n(),
+            1,
+            4,
+            hybrid_dca::data::Strategy::Shuffled,
+            &mut rng,
+        );
+        let params = StepParams { lambda, n: data.n(), sigma: 1.0 };
+        let mut solver = LocalSolver::new(part.parts[0].clone(), data.d(), params, true, &mut rng);
+        let samples = measure(1, 5, || {
+            let _ = solver.run_round(&data, &Hinge, &norms, &costs, h / 4);
+            solver.commit(1.0);
+        });
+        let st = Stats::from(&samples);
+        println!(
+            "{:<26} {:>14} {:>16.0}",
+            "local wild (R=4)",
+            hybrid_dca::util::timer::fmt_duration(st.p50),
+            h as f64 / st.p50
+        );
+    }
+
+    // XLA block step (per-update throughput through PJRT).
+    let dir = hybrid_dca::runtime::default_artifacts_dir();
+    if hybrid_dca::runtime::Runtime::available(&dir) {
+        let rt = hybrid_dca::runtime::Runtime::load(&dir)?;
+        for name in rt.names() {
+            let art = rt.get(name).unwrap();
+            if art.meta.kind != hybrid_dca::runtime::ArtifactKind::BlockStep {
+                continue;
+            }
+            let (b, d) = (art.meta.b, art.meta.d);
+            let mut rng = Rng::new(4);
+            let x: Vec<f32> = (0..b * d).map(|_| rng.next_gaussian() as f32 * 0.3).collect();
+            let y: Vec<f32> =
+                (0..b).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+            let a = vec![0.0f32; b];
+            let v = vec![0.0f32; d];
+            let samples = measure(2, 10, || {
+                let _ = rt.block_step(art, &x, &y, &a, &v, 0.05, 1.0).unwrap();
+            });
+            let st = Stats::from(&samples);
+            println!(
+                "{:<26} {:>14} {:>16.0}",
+                format!("xla block ({b}×{d})"),
+                hybrid_dca::util::timer::fmt_duration(st.p50),
+                b as f64 / st.p50
+            );
+            // §Perf optimization: static X/y uploaded once, execute_b.
+            let x_buf = rt.upload(&x, &[b, d]).unwrap();
+            let y_buf = rt.upload(&y, &[b]).unwrap();
+            let samples = measure(2, 10, || {
+                let _ = rt
+                    .block_step_buffered(art, &x_buf, &y_buf, &a, &v, 0.05, 1.0)
+                    .unwrap();
+            });
+            let st2 = Stats::from(&samples);
+            println!(
+                "{:<26} {:>14} {:>16.0}   ({:+.0}% vs literal path)",
+                format!("xla block buf ({b}×{d})"),
+                hybrid_dca::util::timer::fmt_duration(st2.p50),
+                b as f64 / st2.p50,
+                (st.p50 / st2.p50 - 1.0) * 100.0
+            );
+        }
+    } else {
+        println!("(skipping XLA rows — run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Table 1 (dataset statistics) and time dataset
+//! generation per preset. `cargo bench --bench table1_datasets`
+
+use hybrid_dca::util::{measure, Rng, Stats};
+
+fn main() -> anyhow::Result<()> {
+    hybrid_dca::harness::table1::run_and_print()?;
+    println!("\ngeneration cost per preset:");
+    println!("{:<14} {:>12}", "preset", "p50 gen");
+    for p in hybrid_dca::data::synth::ALL_PRESETS {
+        if matches!(p, hybrid_dca::data::Preset::Tiny) {
+            continue;
+        }
+        let samples = measure(1, 3, || {
+            let mut rng = Rng::new(1);
+            let _ = p.generate(&mut rng);
+        });
+        let st = Stats::from(&samples);
+        println!("{:<14} {:>12}", p.spec().name, hybrid_dca::util::timer::fmt_duration(st.p50));
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Declarative command-line parsing (no `clap` offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, required flags, and auto-generated help text.
+
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None ⇒ boolean switch; Some(default) ⇒ takes a value.
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl FlagSpec {
+    pub fn value(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: Some(default), required: false }
+    }
+
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: true }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Self {
+        Self { name, help, default: None, required: false }
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Positional arguments after the flags.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("--{name} '{raw}': {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+}
+
+/// Parse `argv` (excluding program name and subcommand) against specs.
+pub fn parse(specs: &[FlagSpec], argv: &[String]) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for spec in specs {
+        if let Some(d) = spec.default {
+            args.values.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+    let find = |name: &str| specs.iter().find(|s| s.name == name);
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(body) = tok.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let spec = find(name).ok_or_else(|| anyhow::anyhow!("unknown flag --{name}"))?;
+            let is_switch = spec.default.is_none() && !spec.required;
+            if is_switch {
+                anyhow::ensure!(inline_val.is_none(), "switch --{name} takes no value");
+                args.switches.insert(name.to_string(), true);
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        anyhow::ensure!(i < argv.len(), "--{name} needs a value");
+                        argv[i].clone()
+                    }
+                };
+                args.values.insert(name.to_string(), val);
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    for spec in specs {
+        if spec.required && !args.values.contains_key(spec.name) {
+            anyhow::bail!("missing required flag --{}", spec.name);
+        }
+    }
+    Ok(args)
+}
+
+/// Render help text for a subcommand.
+pub fn help(command: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut s = format!("{command} — {about}\n\nFlags:\n");
+    for spec in specs {
+        let kind = if spec.required {
+            " (required)".to_string()
+        } else if let Some(d) = spec.default {
+            format!(" [default: {d}]")
+        } else {
+            " (switch)".to_string()
+        };
+        s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, kind));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec::value("dataset", "tiny", "dataset preset"),
+            FlagSpec::value("rounds", "10", "max rounds"),
+            FlagSpec::switch("verbose", "chatty output"),
+            FlagSpec::required("out", "output path"),
+        ]
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&specs(), &sv(&["--out", "x.csv"])).unwrap();
+        assert_eq!(a.get("dataset"), Some("tiny"));
+        assert_eq!(a.get_parse::<usize>("rounds").unwrap(), 10);
+        assert!(!a.flag("verbose"));
+        let a = parse(&specs(), &sv(&["--dataset=rcv1-s", "--rounds", "5", "--verbose", "--out=o"]))
+            .unwrap();
+        assert_eq!(a.get("dataset"), Some("rcv1-s"));
+        assert_eq!(a.get_parse::<usize>("rounds").unwrap(), 5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn required_enforced() {
+        assert!(parse(&specs(), &sv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&specs(), &sv(&["--out", "x", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_rejected() {
+        assert!(parse(&specs(), &sv(&["--out", "x", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&specs(), &sv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&specs(), &sv(&["--out", "x", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn parse_errors_typed() {
+        let a = parse(&specs(), &sv(&["--out", "x", "--rounds", "abc"])).unwrap();
+        assert!(a.get_parse::<usize>("rounds").is_err());
+    }
+
+    #[test]
+    fn help_renders() {
+        let h = help("train", "train a model", &specs());
+        assert!(h.contains("--dataset"));
+        assert!(h.contains("[default: tiny]"));
+        assert!(h.contains("(required)"));
+        assert!(h.contains("(switch)"));
+    }
+}

@@ -1,0 +1,408 @@
+//! Typed experiment configuration.
+//!
+//! Configs load from a TOML-subset file (`config::toml`), then CLI flags
+//! override individual fields. [`ExpConfig::validate`] enforces the
+//! paper's parameter constraints (e.g. `S ≤ K`, `Γ ≥ 1`, `ν ∈ (0,1]`,
+//! σ ≥ νS — Eq. 5 with the safe choice of Lemma 3.2 in Ma et al. 2015b).
+
+pub mod toml;
+
+use crate::data::partition::Strategy;
+use crate::loss::LossKind;
+use toml::Document;
+
+/// How the subproblem scaling parameter σ is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SigmaPolicy {
+    /// σ = ν·S — the paper's safe choice for Hybrid-DCA.
+    NuS,
+    /// σ = ν·K — CoCoA+'s choice (all-reduce over K workers).
+    NuK,
+    /// Explicit value (ablations).
+    Fixed(f64),
+}
+
+impl SigmaPolicy {
+    pub fn value(self, nu: f64, s: usize, k: usize) -> f64 {
+        match self {
+            SigmaPolicy::NuS => nu * s as f64,
+            SigmaPolicy::NuK => nu * k as f64,
+            SigmaPolicy::Fixed(v) => v,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SigmaPolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "nus" | "s" | "auto" => Some(SigmaPolicy::NuS),
+            "nuk" | "k" => Some(SigmaPolicy::NuK),
+            other => other.parse::<f64>().ok().map(SigmaPolicy::Fixed),
+        }
+    }
+}
+
+/// Which algorithm to run (Figure 3's four solvers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Sequential DCA (Hsieh et al. 2008) — the paper's *Baseline*.
+    Baseline,
+    /// CoCoA+ (Ma et al. 2015): synchronous all-reduce, 1 core per node.
+    CocoaPlus,
+    /// PassCoDe (Hsieh et al. 2015): single node, R async cores.
+    PassCoDe,
+    /// This paper.
+    HybridDca,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "baseline" | "dca" | "sdca" => Some(Algorithm::Baseline),
+            "cocoa+" | "cocoa" | "cocoaplus" => Some(Algorithm::CocoaPlus),
+            "passcode" => Some(Algorithm::PassCoDe),
+            "hybrid" | "hybrid-dca" | "hybriddca" => Some(Algorithm::HybridDca),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Baseline => "Baseline",
+            Algorithm::CocoaPlus => "CoCoA+",
+            Algorithm::PassCoDe => "PassCoDe",
+            Algorithm::HybridDca => "Hybrid-DCA",
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpConfig {
+    // Dataset
+    /// Synthetic preset name, or a LIBSVM path when `data_path` is set.
+    pub dataset: String,
+    pub data_path: Option<String>,
+    pub seed: u64,
+
+    // Problem
+    pub loss: LossKind,
+    pub lambda: f64,
+
+    // Cluster shape (paper: K nodes × R cores)
+    pub k_nodes: usize,
+    pub r_cores: usize,
+    pub partition: Strategy,
+
+    // Local solver (Algorithm 1)
+    /// Local iterations per round *per core* (paper's H).
+    pub h_local: usize,
+    pub nu: f64,
+    pub sigma: SigmaPolicy,
+    /// Use racy "wild" atomic updates (PassCoDe-Wild ablation).
+    pub wild: bool,
+
+    // Master (Algorithm 2)
+    /// Bounded-barrier size S (≤ K).
+    pub s_barrier: usize,
+    /// Bounded-delay Γ (≥ 1).
+    pub gamma: usize,
+
+    // Run control
+    pub max_rounds: usize,
+    pub gap_threshold: f64,
+    /// Evaluate objectives every this many rounds.
+    pub eval_every: usize,
+
+    // Simulation (virtual clock)
+    /// Per-worker slowdown multipliers (empty = homogeneous 1.0).
+    pub stragglers: Vec<f64>,
+    /// Simulated fixed network latency per message (seconds, virtual).
+    pub net_latency: f64,
+    /// Simulated per-element transfer cost for d-vector messages.
+    pub net_per_elem: f64,
+    /// Simulated per-nnz compute cost (seconds, virtual).
+    pub cost_per_nnz: f64,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            dataset: "tiny".into(),
+            data_path: None,
+            seed: 42,
+            loss: LossKind::Hinge,
+            lambda: 1e-4,
+            k_nodes: 4,
+            r_cores: 2,
+            partition: Strategy::Shuffled,
+            h_local: 512,
+            nu: 1.0,
+            sigma: SigmaPolicy::NuS,
+            wild: false,
+            s_barrier: 4,
+            gamma: 1,
+            max_rounds: 100,
+            gap_threshold: 1e-6,
+            eval_every: 1,
+            stragglers: Vec::new(),
+            // Defaults keep the paper's compute-vs-communication regime:
+            // an rcv1-s round (H=512 × ~73 nnz) costs ≈ 3.7 ms of compute
+            // per core vs 0.1 ms per message, matching the paper's
+            // H-balances-communication design point (§1).
+            net_latency: 1e-4,
+            net_per_elem: 1e-6,
+            cost_per_nnz: 1e-7,
+        }
+    }
+}
+
+impl ExpConfig {
+    /// The effective σ for Hybrid-DCA under this config.
+    pub fn sigma_value(&self) -> f64 {
+        self.sigma.value(self.nu, self.s_barrier, self.k_nodes)
+    }
+
+    /// Enforce parameter constraints.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.lambda > 0.0, "lambda must be > 0 (got {})", self.lambda);
+        anyhow::ensure!(self.k_nodes >= 1, "k_nodes must be ≥ 1");
+        anyhow::ensure!(self.r_cores >= 1, "r_cores must be ≥ 1");
+        anyhow::ensure!(
+            (1..=self.k_nodes).contains(&self.s_barrier),
+            "S must satisfy 1 ≤ S ≤ K (S={}, K={})",
+            self.s_barrier,
+            self.k_nodes
+        );
+        anyhow::ensure!(self.gamma >= 1, "Γ must be ≥ 1");
+        anyhow::ensure!(
+            self.nu > 0.0 && self.nu <= 1.0,
+            "ν must be in (0, 1] (got {})",
+            self.nu
+        );
+        // Eq. (5): σ ≥ ν·S is the safe region; warn-level enforcement —
+        // smaller σ is allowed only via explicit Fixed (ablations study
+        // divergence), never via the named policies.
+        let sigma = self.sigma_value();
+        anyhow::ensure!(sigma > 0.0, "σ must be > 0 (got {sigma})");
+        anyhow::ensure!(self.h_local >= 1, "H must be ≥ 1");
+        anyhow::ensure!(self.max_rounds >= 1, "max_rounds must be ≥ 1");
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be ≥ 1");
+        anyhow::ensure!(self.gap_threshold > 0.0, "gap_threshold must be > 0");
+        if !self.stragglers.is_empty() {
+            anyhow::ensure!(
+                self.stragglers.len() == self.k_nodes,
+                "stragglers must have one entry per node ({} != {})",
+                self.stragglers.len(),
+                self.k_nodes
+            );
+            anyhow::ensure!(
+                self.stragglers.iter().all(|&s| s >= 1.0),
+                "straggler multipliers must be ≥ 1.0"
+            );
+        }
+        anyhow::ensure!(
+            self.net_latency >= 0.0 && self.cost_per_nnz >= 0.0 && self.net_per_elem >= 0.0,
+            "negative costs"
+        );
+        Ok(())
+    }
+
+    /// Apply values from a parsed TOML document. Unknown keys error so
+    /// typos are caught.
+    pub fn apply_document(&mut self, doc: &Document) -> anyhow::Result<()> {
+        for (table, kv) in &doc.tables {
+            for (key, val) in kv {
+                let dotted = if table.is_empty() {
+                    key.clone()
+                } else {
+                    format!("{table}.{key}")
+                };
+                self.apply_kv(&dotted, val)
+                    .map_err(|e| anyhow::anyhow!("config key '{dotted}': {e}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_kv(&mut self, dotted: &str, val: &toml::Value) -> anyhow::Result<()> {
+        use toml::Value;
+        let need_f64 =
+            || val.as_float().ok_or_else(|| anyhow::anyhow!("expected number, got {val:?}"));
+        let need_usize =
+            || val.as_usize().ok_or_else(|| anyhow::anyhow!("expected non-negative int, got {val:?}"));
+        let need_str =
+            || val.as_str().ok_or_else(|| anyhow::anyhow!("expected string, got {val:?}"));
+        match dotted {
+            "dataset" | "data.dataset" => self.dataset = need_str()?.to_string(),
+            "data.path" | "data_path" => self.data_path = Some(need_str()?.to_string()),
+            "seed" | "data.seed" => {
+                self.seed = val
+                    .as_int()
+                    .ok_or_else(|| anyhow::anyhow!("expected int"))? as u64
+            }
+            "loss" | "problem.loss" => {
+                let s = need_str()?;
+                self.loss = LossKind::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown loss '{s}'"))?
+            }
+            "lambda" | "problem.lambda" => self.lambda = need_f64()?,
+            "cluster.k" | "k_nodes" => self.k_nodes = need_usize()?,
+            "cluster.r" | "r_cores" => self.r_cores = need_usize()?,
+            "cluster.partition" | "partition" => {
+                self.partition = Strategy::parse(need_str()?)
+                    .ok_or_else(|| anyhow::anyhow!("unknown partition strategy"))?
+            }
+            "solver.h" | "h_local" => self.h_local = need_usize()?,
+            "solver.nu" | "nu" => self.nu = need_f64()?,
+            "solver.sigma" | "sigma" => {
+                self.sigma = match val {
+                    Value::Str(s) => SigmaPolicy::parse(s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown sigma policy '{s}'"))?,
+                    _ => SigmaPolicy::Fixed(need_f64()?),
+                }
+            }
+            "solver.wild" | "wild" => {
+                self.wild = val.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
+            "master.s" | "s_barrier" => self.s_barrier = need_usize()?,
+            "master.gamma" | "gamma" => self.gamma = need_usize()?,
+            "run.max-rounds" | "run.max_rounds" | "max_rounds" => self.max_rounds = need_usize()?,
+            "run.gap-threshold" | "run.gap_threshold" | "gap_threshold" => {
+                self.gap_threshold = need_f64()?
+            }
+            "run.eval-every" | "run.eval_every" | "eval_every" => self.eval_every = need_usize()?,
+            "sim.stragglers" | "stragglers" => {
+                let arr = val.as_array().ok_or_else(|| anyhow::anyhow!("expected array"))?;
+                self.stragglers = arr
+                    .iter()
+                    .map(|v| v.as_float().ok_or_else(|| anyhow::anyhow!("expected numbers")))
+                    .collect::<anyhow::Result<Vec<f64>>>()?;
+            }
+            "sim.net-latency" | "sim.net_latency" | "net_latency" => self.net_latency = need_f64()?,
+            "sim.net-per-elem" | "sim.net_per_elem" | "net_per_elem" => {
+                self.net_per_elem = need_f64()?
+            }
+            "sim.cost-per-nnz" | "sim.cost_per_nnz" | "cost_per_nnz" => {
+                self.cost_per_nnz = need_f64()?
+            }
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, applying defaults first.
+    pub fn from_file(path: &str) -> anyhow::Result<ExpConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read config {path}: {e}"))?;
+        let doc = toml::parse(&text)?;
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExpConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn sigma_policies() {
+        assert_eq!(SigmaPolicy::NuS.value(1.0, 4, 8), 4.0);
+        assert_eq!(SigmaPolicy::NuK.value(0.5, 4, 8), 4.0);
+        assert_eq!(SigmaPolicy::Fixed(2.5).value(1.0, 4, 8), 2.5);
+        assert_eq!(SigmaPolicy::parse("s"), Some(SigmaPolicy::NuS));
+        assert_eq!(SigmaPolicy::parse("K"), Some(SigmaPolicy::NuK));
+        assert_eq!(SigmaPolicy::parse("3.5"), Some(SigmaPolicy::Fixed(3.5)));
+        assert_eq!(SigmaPolicy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn algorithm_parse() {
+        assert_eq!(Algorithm::parse("cocoa+"), Some(Algorithm::CocoaPlus));
+        assert_eq!(Algorithm::parse("Hybrid-DCA"), Some(Algorithm::HybridDca));
+        assert_eq!(Algorithm::parse("sgd"), None);
+    }
+
+    #[test]
+    fn validation_constraints() {
+        let mut c = ExpConfig::default();
+        c.s_barrier = 5; // > K=4
+        assert!(c.validate().is_err());
+        c = ExpConfig::default();
+        c.gamma = 0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::default();
+        c.nu = 1.5;
+        assert!(c.validate().is_err());
+        c = ExpConfig::default();
+        c.lambda = 0.0;
+        assert!(c.validate().is_err());
+        c = ExpConfig::default();
+        c.stragglers = vec![1.0, 2.0]; // wrong length for K=4
+        assert!(c.validate().is_err());
+        c.stragglers = vec![1.0, 2.0, 1.0, 0.5]; // < 1.0
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn apply_document_full() {
+        let text = r#"
+dataset = "rcv1-s"
+seed = 7
+lambda = 1e-4
+loss = "hinge"
+
+[cluster]
+k = 8
+r = 4
+partition = "striped"
+
+[solver]
+h = 1000
+nu = 0.5
+sigma = "k"
+wild = true
+
+[master]
+s = 6
+gamma = 10
+
+[run]
+max_rounds = 50
+gap_threshold = 1e-5
+eval_every = 2
+
+[sim]
+stragglers = [1.0, 1.0, 1.0, 1.0, 2.0, 1.0, 1.0, 4.0]
+net_latency = 0.01
+cost_per_nnz = 1e-7
+"#;
+        let doc = toml::parse(text).unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.dataset, "rcv1-s");
+        assert_eq!(cfg.k_nodes, 8);
+        assert_eq!(cfg.r_cores, 4);
+        assert_eq!(cfg.partition, Strategy::Striped);
+        assert_eq!(cfg.h_local, 1000);
+        assert_eq!(cfg.sigma, SigmaPolicy::NuK);
+        assert!(cfg.wild);
+        assert_eq!(cfg.s_barrier, 6);
+        assert_eq!(cfg.gamma, 10);
+        assert_eq!(cfg.stragglers.len(), 8);
+        assert_eq!(cfg.sigma_value(), 0.5 * 8.0);
+    }
+
+    #[test]
+    fn unknown_key_errors() {
+        let doc = toml::parse("bogus_key = 1\n").unwrap();
+        let mut cfg = ExpConfig::default();
+        assert!(cfg.apply_document(&doc).is_err());
+    }
+}

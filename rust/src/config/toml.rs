@@ -1,0 +1,260 @@
+//! A TOML-subset parser (no `serde`/`toml` crates offline).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! ```toml
+//! # comment
+//! key = 3              # integer
+//! key = 3.5            # float (also 1e-4)
+//! key = "string"
+//! key = true
+//! key = [1, 2, 3]      # homogeneous scalar arrays
+//! [section]            # tables, one level deep
+//! key = ...
+//! ```
+//!
+//! Values are exposed through a dynamically-typed [`Value`]; the typed
+//! schema layer (`config::schema`) does the validation and defaulting.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    /// Floats accept integer literals too (`lambda = 1` is fine).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `table -> key -> value`. Root-level keys live under
+/// the empty-string table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    /// Look up `"table.key"` or root `"key"`.
+    pub fn lookup(&self, dotted: &str) -> Option<&Value> {
+        match dotted.split_once('.') {
+            Some((t, k)) => self.get(t, k),
+            None => self.get("", dotted),
+        }
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> anyhow::Result<Document> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow::anyhow!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            anyhow::ensure!(
+                !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                "line {}: bad table name '{name}'",
+                lineno + 1
+            );
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = key.trim();
+        anyhow::ensure!(
+            !key.is_empty() && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "line {}: bad key '{key}'",
+            lineno + 1
+        );
+        let value = parse_value(val.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        let table = doc.tables.get_mut(&current).unwrap();
+        anyhow::ensure!(
+            table.insert(key.to_string(), value).is_none(),
+            "line {}: duplicate key '{key}'",
+            lineno + 1
+        );
+    }
+    Ok(doc)
+}
+
+/// Strip a `#` comment that is not inside a string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> anyhow::Result<Value> {
+    anyhow::ensure!(!s.is_empty(), "empty value");
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow::anyhow!("unterminated string"))?;
+        anyhow::ensure!(!inner.contains('"'), "embedded quote in string");
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue; // trailing comma
+            }
+            let v = parse_value(part)?;
+            anyhow::ensure!(!matches!(v, Value::Array(_)), "nested arrays unsupported");
+            items.push(v);
+        }
+        return Ok(Value::Array(items));
+    }
+    // Number: prefer int if it parses and has no float syntax.
+    let looks_float = s.contains('.') || s.contains('e') || s.contains('E');
+    if !looks_float {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    anyhow::bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        let doc = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = 1e-4\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Float(2.5)));
+        assert_eq!(doc.get("", "c"), Some(&Value::Str("hi".into())));
+        assert_eq!(doc.get("", "d"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("", "e"), Some(&Value::Float(1e-4)));
+    }
+
+    #[test]
+    fn parse_tables_and_lookup() {
+        let doc = parse("x = 1\n[solver]\nh = 100\n[cluster]\nk = 4\n").unwrap();
+        assert_eq!(doc.lookup("x"), Some(&Value::Int(1)));
+        assert_eq!(doc.lookup("solver.h"), Some(&Value::Int(100)));
+        assert_eq!(doc.lookup("cluster.k"), Some(&Value::Int(4)));
+        assert_eq!(doc.lookup("cluster.missing"), None);
+    }
+
+    #[test]
+    fn parse_arrays() {
+        let doc = parse("s = [2, 4, 8]\nmixed = [1, 2.5]\nempty = []\ntrail = [1, 2,]\n").unwrap();
+        let s = doc.get("", "s").unwrap().as_array().unwrap();
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[2].as_int(), Some(8));
+        assert_eq!(doc.get("", "empty").unwrap().as_array().unwrap().len(), 0);
+        assert_eq!(doc.get("", "trail").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = parse("# top\na = 1 # trailing\n\nb = \"x # not comment\"\n").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Str("x # not comment".into())));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("a 1").is_err());
+        assert!(parse("a = ").is_err());
+        assert!(parse("a = \"x").is_err());
+        assert!(parse("[t\na=1").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        assert!(parse("a = [[1]]").is_err());
+        assert!(parse("bad key = 1").is_err());
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Int(3).as_usize(), Some(3));
+        assert_eq!(Value::Int(-1).as_usize(), None);
+        assert_eq!(Value::Float(2.5).as_int(), None);
+        assert_eq!(Value::Str("s".into()).as_str(), Some("s"));
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,297 @@
+//! End-to-end Hybrid-DCA orchestration: build the partition, spawn the
+//! `K` worker threads (each of which spawns `R` core threads per
+//! round), run the master in the calling thread, and assemble the
+//! final report.
+
+use std::sync::mpsc;
+
+use crate::config::ExpConfig;
+use crate::data::{Dataset, Partition};
+use crate::sim::{resolve_stragglers, CostModel, UpdateCosts};
+use crate::util::Rng;
+
+use super::master::{run_master, MasterCfg, MergePolicy};
+use super::worker::{run_worker, WorkerCfg};
+use super::RunReport;
+
+/// Options that differ between Hybrid-DCA and the CoCoA+ wrapper.
+#[derive(Debug, Clone)]
+pub struct ProtocolOpts {
+    /// Label for traces.
+    pub label: String,
+    /// Use the all-reduce communication cost model (CoCoA+) instead of
+    /// point-to-point (Hybrid-DCA).
+    pub sync_allreduce: bool,
+    /// Merge-order policy (ablation).
+    pub policy: MergePolicy,
+}
+
+impl Default for ProtocolOpts {
+    fn default() -> Self {
+        Self {
+            label: "Hybrid-DCA".into(),
+            sync_allreduce: false,
+            policy: MergePolicy::OldestFirst,
+        }
+    }
+}
+
+/// Run Hybrid-DCA with the default protocol options.
+pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
+    run_with(data, cfg, &ProtocolOpts::default())
+}
+
+/// Run the double-asynchronous protocol with explicit options.
+pub fn run_with(
+    data: &Dataset,
+    cfg: &ExpConfig,
+    opts: &ProtocolOpts,
+) -> anyhow::Result<RunReport> {
+    cfg.validate()?;
+    data.validate()?;
+    let loss = cfg.loss.build();
+    let k = cfg.k_nodes;
+    let mut rng = Rng::new(cfg.seed);
+    let partition = Partition::build(data.n(), k, cfg.r_cores, cfg.partition, &mut rng);
+    partition.validate(data.n()).expect("partition invariant");
+
+    let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
+    let costs = UpdateCosts::precompute(data, &cost_model);
+    let norms = data.x.row_norms_sq();
+    let stragglers = resolve_stragglers(&cfg.stragglers, k);
+    let sigma = cfg.sigma_value();
+
+    // Communication model: point-to-point for Hybrid, tree all-reduce
+    // for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for the sync
+    // collective).
+    let (send_latency, merge_cost, reply_latency) = if opts.sync_allreduce {
+        let ar = cost_model.allreduce_cost(k, data.d());
+        (ar / 2.0, 0.0, ar / 2.0)
+    } else {
+        let m = cost_model.msg_cost(data.d());
+        (m, 0.0, m)
+    };
+
+    let master_cfg = MasterCfg {
+        k_nodes: k,
+        s_barrier: cfg.s_barrier,
+        gamma: cfg.gamma,
+        nu: cfg.nu,
+        lambda: cfg.lambda,
+        max_rounds: cfg.max_rounds,
+        gap_threshold: cfg.gap_threshold,
+        eval_every: cfg.eval_every,
+        policy: opts.policy,
+        merge_cost,
+        reply_latency,
+    };
+
+    let (tx_updates, rx_updates) = mpsc::channel();
+    let mut reply_txs = Vec::with_capacity(k);
+    let mut reply_rxs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = mpsc::channel();
+        reply_txs.push(tx);
+        reply_rxs.push(rx);
+    }
+
+    // Fork one RNG stream per worker up front (deterministic).
+    let worker_rngs: Vec<Rng> = (0..k).map(|_| rng.fork()).collect();
+
+    let mut outcome = None;
+    let mut finals: Vec<Option<super::worker::WorkerFinal>> = (0..k).map(|_| None).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(k);
+        for (w, (cells, wrng)) in partition
+            .parts
+            .iter()
+            .cloned()
+            .zip(worker_rngs.into_iter())
+            .enumerate()
+        {
+            let wcfg = WorkerCfg {
+                worker_id: w,
+                h_local: cfg.h_local,
+                nu: cfg.nu,
+                sigma,
+                lambda: cfg.lambda,
+                wild: cfg.wild,
+                straggler: stragglers[w],
+                send_latency,
+            };
+            let tx = tx_updates.clone();
+            let rx = reply_rxs.remove(0);
+            let loss_ref: &dyn crate::loss::Loss = &*loss;
+            let norms_ref = &norms;
+            let costs_ref = &costs;
+            handles.push(scope.spawn(move || {
+                run_worker(&wcfg, cells, data, loss_ref, norms_ref, costs_ref, tx, rx, wrng)
+            }));
+        }
+        // The master must not hold a sender, or shutdown drain never
+        // disconnects.
+        drop(tx_updates);
+
+        outcome = Some(run_master(
+            &master_cfg,
+            &rx_updates,
+            &reply_txs,
+            data,
+            &*loss,
+            &opts.label,
+        ));
+
+        for h in handles {
+            let fin = h.join().expect("worker thread panicked");
+            let id = fin.worker_id;
+            finals[id] = Some(fin);
+        }
+    });
+
+    let outcome = outcome.expect("master ran");
+    // Assemble the final global α from the workers' committed values.
+    let mut alpha = vec![0.0; data.n()];
+    let mut total_updates = 0u64;
+    let mut worker_rounds = Vec::with_capacity(k);
+    for fin in finals.into_iter().map(|f| f.expect("worker finished")) {
+        for (i, a) in &fin.alpha {
+            alpha[*i] = *a;
+        }
+        total_updates += fin.updates;
+        worker_rounds.push(fin.local_rounds);
+    }
+
+    Ok(RunReport {
+        label: opts.label.clone(),
+        trace: outcome.trace,
+        events: outcome.events,
+        alpha,
+        v: outcome.v,
+        rounds: outcome.rounds,
+        vtime: outcome.vtime,
+        total_updates,
+        worker_rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+
+    fn base_cfg() -> ExpConfig {
+        let mut cfg = ExpConfig::default();
+        cfg.dataset = "tiny".into();
+        cfg.lambda = 1e-2;
+        cfg.k_nodes = 3;
+        cfg.r_cores = 2;
+        cfg.s_barrier = 2;
+        cfg.gamma = 3;
+        cfg.h_local = 200;
+        cfg.max_rounds = 60;
+        cfg.gap_threshold = 1e-4;
+        cfg
+    }
+
+    #[test]
+    fn hybrid_converges_on_tiny() {
+        let data = Preset::Tiny.generate(&mut Rng::new(1));
+        let cfg = base_cfg();
+        let report = run(&data, &cfg).unwrap();
+        let gap = report.trace.final_gap().unwrap();
+        assert!(gap <= 1e-4, "gap {gap} after {} rounds", report.rounds);
+        assert!(report.total_updates > 0);
+        assert_eq!(report.worker_rounds.len(), 3);
+    }
+
+    #[test]
+    fn merge_events_respect_barrier() {
+        let data = Preset::Tiny.generate(&mut Rng::new(2));
+        let cfg = base_cfg();
+        let report = run(&data, &cfg).unwrap();
+        for ev in &report.events {
+            assert_eq!(ev.merged.len(), 2, "barrier size S");
+            let workers: std::collections::HashSet<_> =
+                ev.merged.iter().map(|(w, _)| w).collect();
+            assert_eq!(workers.len(), 2, "distinct workers per merge");
+        }
+    }
+
+    #[test]
+    fn every_update_merged_exactly_once() {
+        let data = Preset::Tiny.generate(&mut Rng::new(3));
+        let cfg = base_cfg();
+        let report = run(&data, &cfg).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for ev in &report.events {
+            for &(w, lr) in &ev.merged {
+                assert!(seen.insert((w, lr)), "update ({w},{lr}) merged twice");
+            }
+        }
+    }
+
+    #[test]
+    fn sync_special_case_s_equals_k() {
+        // S = K, Γ = 1 ⇒ synchronous all-reduce (CoCoA+ structure):
+        // every merge contains all K workers.
+        let data = Preset::Tiny.generate(&mut Rng::new(4));
+        let mut cfg = base_cfg();
+        cfg.s_barrier = cfg.k_nodes;
+        cfg.gamma = 1;
+        let report = run(&data, &cfg).unwrap();
+        for ev in &report.events {
+            assert_eq!(ev.merged.len(), cfg.k_nodes);
+        }
+    }
+
+    #[test]
+    fn final_v_consistent_with_final_alpha_when_nu1_s_eq_k() {
+        // With ν=1 and S=K (no update ever dropped or pending at the
+        // end), the master's v must equal (1/λn)·X·α_final.
+        let data = Preset::Tiny.generate(&mut Rng::new(5));
+        let mut cfg = base_cfg();
+        cfg.s_barrier = cfg.k_nodes;
+        cfg.gamma = 1;
+        cfg.max_rounds = 10;
+        cfg.gap_threshold = 1e-12; // force max_rounds exit
+        let report = run(&data, &cfg).unwrap();
+        let v_exact = crate::metrics::exact_v(&data, &report.alpha, cfg.lambda);
+        for (a, b) in report.v.iter().zip(&v_exact) {
+            assert!((a - b).abs() < 1e-9, "v mismatch {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn virtual_time_monotone() {
+        let data = Preset::Tiny.generate(&mut Rng::new(6));
+        let report = run(&data, &base_cfg()).unwrap();
+        let mut prev = -1.0;
+        for ev in &report.events {
+            assert!(ev.vtime >= prev);
+            prev = ev.vtime;
+        }
+        for w in report.trace.points.windows(2) {
+            assert!(w[1].virt_secs >= w[0].virt_secs);
+        }
+    }
+
+    #[test]
+    fn straggler_slows_virtual_clock() {
+        let data = Preset::Tiny.generate(&mut Rng::new(7));
+        let mut cfg = base_cfg();
+        cfg.max_rounds = 12;
+        cfg.gap_threshold = 1e-12;
+        cfg.s_barrier = cfg.k_nodes; // sync: must wait for the straggler
+        cfg.gamma = 1;
+        let fast = run(&data, &cfg).unwrap();
+        cfg.stragglers = vec![1.0, 1.0, 8.0];
+        let slow = run(&data, &cfg).unwrap();
+        assert!(
+            slow.vtime > fast.vtime * 2.0,
+            "straggler vtime {} vs {}",
+            slow.vtime,
+            fast.vtime
+        );
+    }
+}

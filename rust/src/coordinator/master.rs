@@ -1,0 +1,343 @@
+//! The master — Algorithm 2 verbatim: bounded barrier `S`, bounded
+//! delay `Γ`, oldest-first merge, point-to-point replies to the
+//! contributing workers only.
+//!
+//! ```text
+//! v⁽⁰⁾ ← (1/λn)Xα;  P ← ∅
+//! for t ← 0, 1, …:
+//!   while |P| < S or max_k Γ_k > Γ:
+//!     receive Δv_k from some worker k;  P ← P ∪ {k};  Γ_k ← 1
+//!   P_S ← S workers in P with oldest updates
+//!   v⁽ᵗ⁺¹⁾ ← v⁽ᵗ⁾ + ν Σ_{k∈P_S} Δv_k;  P ← P \ P_S
+//!   ∀k ∉ P_S: Γ_k ← Γ_k + 1
+//!   broadcast v⁽ᵗ⁺¹⁾ to workers in P_S
+//! ```
+//!
+//! ## Virtual-time semantics (conservative discrete-event simulation)
+//!
+//! The cluster timeline is *simulated* (DESIGN.md §3): messages carry a
+//! virtual arrival time computed from the worker's costed compute and
+//! the network model. To keep the simulated protocol causally exact —
+//! the master must not act on a message before its virtual arrival —
+//! messages are processed in **virtual-arrival order**, not OS-thread
+//! delivery order. This is a conservative DES: because every worker
+//! blocks after sending, the master can wait (in real time) until it
+//! physically holds one message from every in-flight worker, then pop
+//! arrivals from a priority queue in virtual order. A side benefit is
+//! that the entire virtual timeline (merge pattern, staleness, times)
+//! is deterministic given the seed, while the *intra-node* asynchrony
+//! (R racing core-threads per worker) remains physically real.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::metrics::{Trace, TracePoint};
+use crate::util::{axpy, norm_sq, Stopwatch};
+
+use super::messages::{MasterReply, WorkerMsg};
+
+/// Event record for one global merge — consumed by the property tests
+/// (barrier size, uniqueness, staleness bounds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergeEvent {
+    /// Global round `t` (1-based: the round this merge produced).
+    pub round: usize,
+    /// `(worker, local_round)` of each merged update, in merge order.
+    pub merged: Vec<(usize, usize)>,
+    /// Γ_k snapshot *after* this merge (freshness counters).
+    pub gamma_after: Vec<usize>,
+    /// Virtual time of the merge.
+    pub vtime: f64,
+    /// Global rounds each merged update waited in `P` before merging.
+    pub queue_wait: Vec<usize>,
+}
+
+/// Merge-order policy (paper: oldest first; ablation: newest first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergePolicy {
+    OldestFirst,
+    NewestFirst,
+}
+
+/// Master configuration.
+#[derive(Debug, Clone)]
+pub struct MasterCfg {
+    pub k_nodes: usize,
+    pub s_barrier: usize,
+    pub gamma: usize,
+    pub nu: f64,
+    pub lambda: f64,
+    pub max_rounds: usize,
+    pub gap_threshold: f64,
+    pub eval_every: usize,
+    pub policy: MergePolicy,
+    /// Virtual master-side merge cost per round (≈0 for p2p Hybrid;
+    /// the extra collective term for CoCoA+'s all-reduce).
+    pub merge_cost: f64,
+    /// Virtual latency of the reply (master → worker message).
+    pub reply_latency: f64,
+}
+
+/// Outcome of a master run.
+#[derive(Debug)]
+pub struct MasterOutcome {
+    pub v: Vec<f64>,
+    pub trace: Trace,
+    pub events: Vec<MergeEvent>,
+    pub rounds: usize,
+    /// Final virtual time.
+    pub vtime: f64,
+}
+
+/// A message waiting in the virtual-arrival priority queue.
+struct Arrival {
+    vtime: f64,
+    seq: u64,
+    msg: WorkerMsg,
+}
+
+impl PartialEq for Arrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Arrival {}
+impl PartialOrd for Arrival {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Arrival {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.vtime
+            .total_cmp(&other.vtime)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A received (popped in virtual order), unmerged update.
+struct Pending {
+    msg: WorkerMsg,
+    /// Global round at which it was received.
+    received_at: usize,
+}
+
+/// Run Algorithm 2 until the gap threshold or `max_rounds`.
+///
+/// `rx` receives worker messages; `txs[k]` replies to worker `k`.
+/// `data`/`loss` are used only for objective evaluation (the paper
+/// computes these distributed / offline; in-process we evaluate
+/// directly — same numbers, zero protocol impact).
+///
+/// The caller must drop its own clone of the worker-side `Sender` so
+/// that `rx` disconnects when all workers exit (shutdown drain).
+pub fn run_master(
+    cfg: &MasterCfg,
+    rx: &Receiver<WorkerMsg>,
+    txs: &[Sender<MasterReply>],
+    data: &Dataset,
+    loss: &dyn Loss,
+    label: &str,
+) -> MasterOutcome {
+    let k = cfg.k_nodes;
+    assert_eq!(txs.len(), k);
+    let s_eff = cfg.s_barrier.min(k);
+    let n = data.n() as f64;
+    let mut v = vec![0.0; data.d()]; // v⁽⁰⁾ = (1/λn)·X·0 = 0
+    let mut gamma_k = vec![1usize; k];
+    // Workers we have replied to whose next message is still in flight.
+    let mut computing: Vec<bool> = vec![true; k];
+    let mut computing_count = k;
+    // Virtual-arrival queue of physically-received messages.
+    let mut pq: BinaryHeap<Reverse<Arrival>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    // Each worker blocks after sending ⇒ at most one pending update each.
+    let mut pending: Vec<Option<Pending>> = (0..k).map(|_| None).collect();
+    // Virtual-arrival (FIFO) order of workers currently in P.
+    let mut arrival_order: VecDeque<usize> = VecDeque::new();
+    // Latest known per-worker dual sums. Initial α = 0 gives 0 for all
+    // supported losses (hinge: a=0→0; squared hinge: 0; logistic: H(0)=0).
+    let mut dual_sums = vec![0.0; k];
+
+    let mut trace = Trace::new(label);
+    let mut events = Vec::new();
+    let sw = Stopwatch::start();
+    let mut vtime = 0.0f64;
+    let mut total_updates: u64 = 0;
+
+    // Initial point (α = 0, v = 0).
+    let o0 = crate::metrics::objectives(data, loss, &vec![0.0; data.n()], &v, cfg.lambda);
+    trace.push(TracePoint {
+        round: 0,
+        wall_secs: 0.0,
+        virt_secs: 0.0,
+        gap: o0.gap,
+        primal: o0.primal,
+        dual: o0.dual,
+        updates: 0,
+    });
+
+    let mut t = 0usize;
+    let mut disconnected = false;
+    'rounds: while t < cfg.max_rounds {
+        // ---- conservative DES step 1: hold one message per in-flight
+        // worker so the next virtual arrival is known exactly ----
+        while computing_count > 0 {
+            match rx.recv() {
+                Ok(msg) => {
+                    let w = msg.worker;
+                    debug_assert!(computing[w], "worker {w} double-sent");
+                    computing[w] = false;
+                    computing_count -= 1;
+                    pq.push(Reverse(Arrival { vtime: msg.arrival_vtime, seq, msg }));
+                    seq += 1;
+                }
+                Err(_) => {
+                    disconnected = true;
+                    break 'rounds;
+                }
+            }
+        }
+
+        // ---- Algorithm 2 gather: pop arrivals in virtual order until
+        // |P| ≥ S and no not-yet-arrived worker is staler than Γ ----
+        let stale_unarrived = |pending: &[Option<Pending>], gamma_k: &[usize]| {
+            (0..k).any(|w| pending[w].is_none() && gamma_k[w] > cfg.gamma)
+        };
+        while arrival_order.len() < s_eff || stale_unarrived(&pending, &gamma_k) {
+            let Reverse(arr) = pq.pop().expect("all K workers are in P or pq");
+            vtime = vtime.max(arr.vtime);
+            let w = arr.msg.worker;
+            gamma_k[w] = 1;
+            dual_sums[w] = arr.msg.dual_sum;
+            arrival_order.push_back(w);
+            pending[w] = Some(Pending { msg: arr.msg, received_at: t });
+        }
+
+        // ---- pick S workers ----
+        // Priority: pending updates whose freshness counter has passed Γ
+        // are merged first (§3.2: "the master makes sure that no worker
+        // has a stale update older than Γ rounds"); remaining slots
+        // follow the policy. NewestFirst (the ablation) skips the
+        // priority pass to expose the starvation it causes.
+        let mut picked: Vec<usize> = Vec::with_capacity(s_eff);
+        if cfg.policy == MergePolicy::OldestFirst {
+            let mut i = 0;
+            while i < arrival_order.len() && picked.len() < s_eff {
+                let w = arrival_order[i];
+                if gamma_k[w] > cfg.gamma {
+                    picked.push(w);
+                    arrival_order.remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        while picked.len() < s_eff {
+            let w = match cfg.policy {
+                MergePolicy::OldestFirst => arrival_order.pop_front().unwrap(),
+                MergePolicy::NewestFirst => arrival_order.pop_back().unwrap(),
+            };
+            picked.push(w);
+        }
+
+        // ---- merge v ← v + ν Σ Δv at the gather-complete time ----
+        let mut merged_ids = Vec::with_capacity(picked.len());
+        let mut queue_wait = Vec::with_capacity(picked.len());
+        for &w in &picked {
+            let p = pending[w].take().expect("picked worker has a pending update");
+            axpy(&mut v, cfg.nu, &p.msg.delta_v);
+            total_updates += p.msg.updates;
+            merged_ids.push((w, p.msg.local_round));
+            queue_wait.push(t - p.received_at);
+        }
+        vtime += cfg.merge_cost;
+
+        // ---- Γ bookkeeping ----
+        for w in 0..k {
+            if !picked.contains(&w) {
+                gamma_k[w] += 1;
+            }
+        }
+        t += 1;
+
+        events.push(MergeEvent {
+            round: t,
+            merged: merged_ids,
+            gamma_after: gamma_k.clone(),
+            vtime,
+            queue_wait,
+        });
+
+        // ---- evaluate + stopping decision ----
+        let mut stop = t >= cfg.max_rounds;
+        if t % cfg.eval_every == 0 || stop {
+            let primal = crate::metrics::primal_objective(data, loss, &v, cfg.lambda);
+            let dual = dual_sums.iter().sum::<f64>() / n - 0.5 * cfg.lambda * norm_sq(&v);
+            let gap = primal - dual;
+            trace.push(TracePoint {
+                round: t,
+                wall_secs: sw.elapsed_secs(),
+                virt_secs: vtime,
+                gap,
+                primal,
+                dual,
+                updates: total_updates,
+            });
+            if gap <= cfg.gap_threshold {
+                stop = true;
+            }
+        }
+
+        if stop {
+            // Terminate contributors, everything still queued in P, and
+            // every message still sitting in the virtual queue (their
+            // workers are all blocked on our reply).
+            for &w in &picked {
+                let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+            }
+            for w in 0..k {
+                if pending[w].take().is_some() {
+                    let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+                }
+            }
+            while let Some(Reverse(arr)) = pq.pop() {
+                let _ = txs[arr.msg.worker].send(MasterReply::terminate_now(vtime, t));
+            }
+            arrival_order.clear();
+            break;
+        }
+        // ---- broadcast merged v to contributors ----
+        for &w in &picked {
+            let _ = txs[w].send(MasterReply {
+                v: v.clone(),
+                arrival_vtime: vtime + cfg.reply_latency,
+                global_round: t,
+                terminate: false,
+            });
+            computing[w] = true;
+            computing_count += 1;
+        }
+    }
+
+    // Shutdown drain: reply terminate to any in-flight messages until
+    // all workers have dropped their senders.
+    if !disconnected {
+        for w in 0..k {
+            if pending[w].take().is_some() {
+                let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+            }
+        }
+        while let Some(Reverse(arr)) = pq.pop() {
+            let _ = txs[arr.msg.worker].send(MasterReply::terminate_now(vtime, t));
+        }
+        while let Ok(msg) = rx.recv() {
+            let _ = txs[msg.worker].send(MasterReply::terminate_now(vtime, t));
+        }
+    }
+
+    MasterOutcome { v, trace, events, rounds: t, vtime }
+}

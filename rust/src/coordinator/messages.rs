@@ -1,0 +1,60 @@
+//! Message types exchanged between workers and the master.
+//!
+//! In the paper these travel over MPI between nodes; here they travel
+//! over `std::sync::mpsc` channels between threads. The payload shapes
+//! are identical to the paper's: workers send `Δv ∈ R^d`, the master
+//! replies with the merged `v ∈ R^d` (§5 counts exactly these 2S
+//! transmissions per round).
+
+/// Worker → master: one round's accumulated update.
+#[derive(Debug, Clone)]
+pub struct WorkerMsg {
+    /// Worker (node) id `k`.
+    pub worker: usize,
+    /// The worker's local round counter (monotone per worker).
+    pub local_round: usize,
+    /// `Δv = v − v_old` accumulated over the round (Algorithm 1 line 10).
+    pub delta_v: Vec<f64>,
+    /// `Σ_{i∈I_k} −φ*(−α_i)` over the worker's *committed* α — lets the
+    /// master assemble `D(α)` without a synchronous gather (the paper
+    /// defers gap computation for the same reason, §6.1).
+    pub dual_sum: f64,
+    /// Virtual time at which this message arrives at the master
+    /// (send time + network latency).
+    pub arrival_vtime: f64,
+    /// Coordinate updates performed in this round (R·H).
+    pub updates: u64,
+}
+
+/// Master → worker: the merged global state (or termination).
+#[derive(Debug, Clone)]
+pub struct MasterReply {
+    /// Merged `v^{(t+1)}` (empty when `terminate`).
+    pub v: Vec<f64>,
+    /// Virtual time at which this reply arrives at the worker.
+    pub arrival_vtime: f64,
+    /// Global round that produced this `v`.
+    pub global_round: usize,
+    /// Stop now.
+    pub terminate: bool,
+}
+
+impl MasterReply {
+    pub fn terminate_now(vtime: f64, round: usize) -> Self {
+        MasterReply { v: Vec::new(), arrival_vtime: vtime, global_round: round, terminate: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminate_reply() {
+        let r = MasterReply::terminate_now(1.5, 7);
+        assert!(r.terminate);
+        assert!(r.v.is_empty());
+        assert_eq!(r.global_round, 7);
+        assert_eq!(r.arrival_vtime, 1.5);
+    }
+}

@@ -1,0 +1,228 @@
+//! The worker node — Algorithm 1: run `R` asynchronous core-threads for
+//! `H` iterations each, send `Δv` to the master, wait for the merged
+//! `v`, commit `α ← α + ν·δ`, repeat.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::sim::UpdateCosts;
+use crate::solver::local::LocalSolver;
+use crate::solver::StepParams;
+use crate::util::Rng;
+
+use super::messages::{MasterReply, WorkerMsg};
+
+/// Worker configuration.
+#[derive(Debug, Clone)]
+pub struct WorkerCfg {
+    pub worker_id: usize,
+    pub h_local: usize,
+    pub nu: f64,
+    pub sigma: f64,
+    pub lambda: f64,
+    pub wild: bool,
+    /// Virtual-clock slowdown multiplier for this node (≥ 1).
+    pub straggler: f64,
+    /// Virtual latency of the send (worker → master message).
+    pub send_latency: f64,
+}
+
+/// Final state returned when the worker terminates.
+#[derive(Debug)]
+pub struct WorkerFinal {
+    pub worker_id: usize,
+    /// Committed α values with their global row ids.
+    pub alpha: Vec<(usize, f64)>,
+    /// Rounds completed locally.
+    pub local_rounds: usize,
+    /// Total coordinate updates performed.
+    pub updates: u64,
+    /// Final local virtual time.
+    pub vtime: f64,
+}
+
+/// Run one worker until the master says terminate.
+///
+/// `cells` are this node's per-core index shards (`I_{k,r}`);
+/// `norms`/`costs` are dataset-wide precomputed tables shared by all
+/// workers.
+#[allow(clippy::too_many_arguments)]
+pub fn run_worker(
+    cfg: &WorkerCfg,
+    cells: Vec<Vec<usize>>,
+    data: &Dataset,
+    loss: &dyn Loss,
+    norms: &[f64],
+    costs: &UpdateCosts,
+    tx: Sender<WorkerMsg>,
+    rx: Receiver<MasterReply>,
+    mut rng: Rng,
+) -> WorkerFinal {
+    let params = StepParams { lambda: cfg.lambda, n: data.n(), sigma: cfg.sigma };
+    let mut solver = LocalSolver::new(cells, data.d(), params, cfg.wild, &mut rng);
+    let mut vtime = 0.0f64;
+    let mut local_rounds = 0usize;
+    let mut total_updates = 0u64;
+
+    loop {
+        // v_old snapshot for Δv (Algorithm 1 line 3).
+        let v_old = solver.v.snapshot();
+
+        // R cores × H iterations (lines 4–9).
+        let stats = solver.run_round(data, loss, norms, costs, cfg.h_local);
+        total_updates += stats.updates;
+        vtime += cfg.straggler * stats.node_secs();
+
+        // Commit α ← α + ν·δ (line 12).
+        //
+        // Note on ordering: the paper commits after receiving the merged
+        // v, but δ is fixed once the round ends, so committing before
+        // the send lets us attach this round's dual sum to the message.
+        solver.commit(cfg.nu);
+        let dual_sum = local_dual_sum(&solver, data, loss);
+
+        // Δv = (v − v_old)/σ (line 10): the live v accumulated the
+        // round's updates at σ·(1/λn) (see `solver::local`); the wire
+        // format is the paper's Δv = (1/λn)·X·δ.
+        let v_now = solver.v.snapshot();
+        let inv_sigma = 1.0 / cfg.sigma;
+        let delta_v: Vec<f64> =
+            v_now.iter().zip(&v_old).map(|(a, b)| (a - b) * inv_sigma).collect();
+
+        let msg = WorkerMsg {
+            worker: cfg.worker_id,
+            local_round: local_rounds,
+            delta_v,
+            dual_sum,
+            arrival_vtime: vtime + cfg.send_latency,
+            updates: stats.updates,
+        };
+        if tx.send(msg).is_err() {
+            break; // master gone
+        }
+
+        // Wait for the merged v (line 11).
+        let reply = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => break,
+        };
+        if reply.terminate {
+            vtime = vtime.max(reply.arrival_vtime);
+            local_rounds += 1;
+            break;
+        }
+        vtime = reply.arrival_vtime.max(vtime);
+        solver.v.copy_from(&reply.v);
+        local_rounds += 1;
+    }
+
+    // Collect committed α for the final report.
+    let mut alpha = Vec::with_capacity(solver.n_local());
+    for shard in &solver.shards {
+        for (j, &i) in shard.idx.iter().enumerate() {
+            alpha.push((i, shard.alpha_start[j]));
+        }
+    }
+    WorkerFinal {
+        worker_id: cfg.worker_id,
+        alpha,
+        local_rounds,
+        updates: total_updates,
+        vtime,
+    }
+}
+
+/// `Σ_{i∈I_k} −φ*(−α_i)` over the committed α.
+fn local_dual_sum(solver: &LocalSolver, data: &Dataset, loss: &dyn Loss) -> f64 {
+    let mut sum = 0.0;
+    for shard in &solver.shards {
+        for (j, &i) in shard.idx.iter().enumerate() {
+            sum += loss.dual_value(shard.alpha_start[j], data.y[i]);
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::loss::Hinge;
+    use crate::sim::CostModel;
+    use std::sync::mpsc;
+
+    /// A single worker against a scripted "master" that echoes the
+    /// worker's own updates back (K = 1 semantics) and terminates after
+    /// 3 rounds.
+    #[test]
+    fn worker_round_trip_and_terminate() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        let cells = {
+            let mut rng = Rng::new(2);
+            crate::data::Partition::build(ds.n(), 1, 2, crate::data::Strategy::Contiguous, &mut rng)
+                .parts[0]
+                .clone()
+        };
+        let (tx_w, rx_m) = mpsc::channel::<WorkerMsg>();
+        let (tx_m, rx_w) = mpsc::channel::<MasterReply>();
+        let cfg = WorkerCfg {
+            worker_id: 0,
+            h_local: 100,
+            nu: 1.0,
+            sigma: 1.0,
+            lambda: 1e-2,
+            wild: false,
+            straggler: 1.0,
+            send_latency: 1e-3,
+        };
+        let master = std::thread::spawn(move || {
+            let mut v = Vec::new();
+            let mut vt = 0.0;
+            for round in 0..3 {
+                let msg = rx_m.recv().unwrap();
+                assert_eq!(msg.worker, 0);
+                assert_eq!(msg.local_round, round);
+                assert_eq!(msg.updates, 200); // R=2 × H=100
+                assert!(msg.arrival_vtime > vt);
+                vt = msg.arrival_vtime;
+                if v.is_empty() {
+                    v = vec![0.0; msg.delta_v.len()];
+                }
+                for (a, b) in v.iter_mut().zip(&msg.delta_v) {
+                    *a += b;
+                }
+                tx_m.send(MasterReply {
+                    v: v.clone(),
+                    arrival_vtime: vt + 1e-3,
+                    global_round: round + 1,
+                    terminate: false,
+                })
+                .unwrap();
+            }
+            let msg = rx_m.recv().unwrap();
+            tx_m.send(MasterReply::terminate_now(msg.arrival_vtime, 4)).unwrap();
+        });
+        let ds_ref = &ds;
+        let fin = run_worker(
+            &cfg,
+            cells,
+            ds_ref,
+            &Hinge,
+            &norms,
+            &costs,
+            tx_w,
+            rx_w,
+            Rng::new(3),
+        );
+        master.join().unwrap();
+        assert_eq!(fin.local_rounds, 4);
+        assert_eq!(fin.updates, 4 * 200);
+        assert_eq!(fin.alpha.len(), ds.n());
+        assert!(fin.vtime > 0.0);
+        // Dual made progress: some α moved.
+        assert!(fin.alpha.iter().any(|&(_, a)| a != 0.0));
+    }
+}

@@ -1,0 +1,392 @@
+//! Compressed sparse row (CSR) matrix over `f64` values with `u32`
+//! column indices.
+//!
+//! Layout convention: the paper writes the data matrix `X ∈ R^{d×n}` with
+//! one *column* per data point. We store the transpose — one CSR **row
+//! per data point** `x_i ∈ R^d` — because every algorithm in the paper
+//! accesses whole data points (`x_iᵀ v`, `v += ε x_i`) and never whole
+//! features. `n = rows()`, `d = dim()`.
+
+use crate::util::Rng;
+
+/// Sparse dataset: CSR feature matrix plus labels.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    /// Row pointer array, length `n + 1`.
+    pub indptr: Vec<usize>,
+    /// Column (feature) indices, length `nnz`, each `< dim`.
+    pub indices: Vec<u32>,
+    /// Nonzero values, length `nnz`.
+    pub values: Vec<f64>,
+    /// Number of features `d`.
+    pub dim: usize,
+}
+
+/// One sparse row view.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseRow<'a> {
+    pub indices: &'a [u32],
+    pub values: &'a [f64],
+}
+
+impl<'a> SparseRow<'a> {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Dot with a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, v: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (&j, &x) in self.indices.iter().zip(self.values.iter()) {
+            acc += x * v[j as usize];
+        }
+        acc
+    }
+
+    /// Squared norm of the row.
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.values.iter().map(|x| x * x).sum()
+    }
+
+    /// Dot with another sparse row (both index-sorted).
+    pub fn dot_sparse(&self, other: &SparseRow<'_>) -> f64 {
+        let (mut i, mut j, mut acc) = (0usize, 0usize, 0.0f64);
+        while i < self.indices.len() && j < other.indices.len() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[i] * other.values[j];
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        acc
+    }
+}
+
+/// Builder collecting rows incrementally.
+#[derive(Debug, Default)]
+pub struct CsrBuilder {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+    dim: usize,
+}
+
+impl CsrBuilder {
+    pub fn new(dim: usize) -> Self {
+        Self { indptr: vec![0], indices: Vec::new(), values: Vec::new(), dim }
+    }
+
+    /// Push one row given (index, value) pairs; pairs are sorted and
+    /// duplicate indices are rejected.
+    pub fn push_row(&mut self, mut entries: Vec<(u32, f64)>) -> anyhow::Result<()> {
+        entries.sort_unstable_by_key(|e| e.0);
+        for w in entries.windows(2) {
+            anyhow::ensure!(w[0].0 != w[1].0, "duplicate feature index {} in row", w[0].0);
+        }
+        if let Some(&(max_idx, _)) = entries.last() {
+            anyhow::ensure!(
+                (max_idx as usize) < self.dim,
+                "feature index {max_idx} out of range (dim={})",
+                self.dim
+            );
+        }
+        for (j, x) in entries {
+            if x != 0.0 {
+                self.indices.push(j);
+                self.values.push(x);
+            }
+        }
+        self.indptr.push(self.indices.len());
+        Ok(())
+    }
+
+    pub fn finish(self) -> CsrMatrix {
+        CsrMatrix {
+            indptr: self.indptr,
+            indices: self.indices,
+            values: self.values,
+            dim: self.dim,
+        }
+    }
+}
+
+impl CsrMatrix {
+    /// Empty matrix with `dim` columns.
+    pub fn empty(dim: usize) -> Self {
+        CsrMatrix { indptr: vec![0], indices: vec![], values: vec![], dim }
+    }
+
+    /// Number of rows (data points `n`).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of columns (features `d`).
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Total number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (s, e) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow { indices: &self.indices[s..e], values: &self.values[s..e] }
+    }
+
+    /// Row access without bounds checks on the pointer array — the
+    /// solver hot path calls this with indices proven valid by the
+    /// partitioning invariants.
+    ///
+    /// # Safety
+    /// `i < self.rows()` must hold.
+    #[inline(always)]
+    pub unsafe fn row_unchecked(&self, i: usize) -> SparseRow<'_> {
+        let s = *self.indptr.get_unchecked(i);
+        let e = *self.indptr.get_unchecked(i + 1);
+        SparseRow {
+            indices: self.indices.get_unchecked(s..e),
+            values: self.values.get_unchecked(s..e),
+        }
+    }
+
+    /// Squared norms of all rows (precomputed once per run: the
+    /// closed-form coordinate step divides by `‖x_i‖²`).
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.rows()).map(|i| self.row(i).norm_sq()).collect()
+    }
+
+    /// Dense matrix-vector product `X v` (rows of X dotted with v).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.dim);
+        (0..self.rows()).map(|i| self.row(i).dot_dense(v)).collect()
+    }
+
+    /// Transposed product `Xᵀ a = Σ_i a_i x_i` into a dense `R^d` vector.
+    pub fn matvec_t(&self, a: &[f64]) -> Vec<f64> {
+        assert_eq!(a.len(), self.rows());
+        let mut out = vec![0.0; self.dim];
+        for i in 0..self.rows() {
+            let ai = a[i];
+            if ai == 0.0 {
+                continue;
+            }
+            let r = self.row(i);
+            for (&j, &x) in r.indices.iter().zip(r.values.iter()) {
+                out[j as usize] += ai * x;
+            }
+        }
+        out
+    }
+
+    /// Extract rows `rows` as a dense row-major `B×dim_slice` tile over
+    /// feature range `[col_lo, col_hi)`. Used to feed the XLA block path.
+    pub fn dense_tile(&self, rows: &[usize], col_lo: usize, col_hi: usize) -> Vec<f64> {
+        assert!(col_lo <= col_hi && col_hi <= self.dim);
+        let w = col_hi - col_lo;
+        let mut out = vec![0.0; rows.len() * w];
+        for (bi, &i) in rows.iter().enumerate() {
+            let r = self.row(i);
+            for (&j, &x) in r.indices.iter().zip(r.values.iter()) {
+                let j = j as usize;
+                if j >= col_lo && j < col_hi {
+                    out[bi * w + (j - col_lo)] = x;
+                }
+            }
+        }
+        out
+    }
+
+    /// Select a subset of rows into a new matrix (used for partitioning).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut b = CsrBuilder::new(self.dim);
+        for &i in rows {
+            let r = self.row(i);
+            let entries: Vec<(u32, f64)> =
+                r.indices.iter().copied().zip(r.values.iter().copied()).collect();
+            b.push_row(entries).expect("rows from a valid matrix are valid");
+        }
+        b.finish()
+    }
+
+    /// Density = nnz / (n·d).
+    pub fn density(&self) -> f64 {
+        if self.rows() == 0 || self.dim == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows() as f64 * self.dim as f64)
+    }
+
+    /// Build a random sparse matrix (test helper; experiment workloads
+    /// use `data::synth` which controls label structure too).
+    pub fn random(rng: &mut Rng, n: usize, d: usize, nnz_per_row: usize) -> CsrMatrix {
+        let mut b = CsrBuilder::new(d);
+        for _ in 0..n {
+            let k = nnz_per_row.min(d).max(1);
+            let idx = rng.sample_indices(d, k);
+            let entries: Vec<(u32, f64)> =
+                idx.into_iter().map(|j| (j as u32, rng.next_gaussian())).collect();
+            b.push_row(entries).unwrap();
+        }
+        b.finish()
+    }
+
+    /// Structural validation of the CSR invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.indptr.is_empty(), "indptr empty");
+        anyhow::ensure!(self.indptr[0] == 0, "indptr[0] != 0");
+        anyhow::ensure!(
+            *self.indptr.last().unwrap() == self.indices.len(),
+            "indptr end mismatch"
+        );
+        anyhow::ensure!(self.indices.len() == self.values.len(), "index/value length");
+        for w in self.indptr.windows(2) {
+            anyhow::ensure!(w[0] <= w[1], "indptr not monotone");
+        }
+        for i in 0..self.rows() {
+            let r = self.row(i);
+            for w in r.indices.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "row {i} indices not strictly sorted");
+            }
+            if let Some(&last) = r.indices.last() {
+                anyhow::ensure!((last as usize) < self.dim, "row {i} index out of range");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2], [0, 3, 0], [4, 5, 6]]
+        let mut b = CsrBuilder::new(3);
+        b.push_row(vec![(0, 1.0), (2, 2.0)]).unwrap();
+        b.push_row(vec![(1, 3.0)]).unwrap();
+        b.push_row(vec![(2, 6.0), (0, 4.0), (1, 5.0)]).unwrap();
+        b.finish()
+    }
+
+    #[test]
+    fn build_and_shape() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.dim(), 3);
+        assert_eq!(m.nnz(), 6);
+        m.validate().unwrap();
+        assert!((m.density() - 6.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn builder_sorts_entries() {
+        let m = sample();
+        assert_eq!(m.row(2).indices, &[0, 1, 2]);
+        assert_eq!(m.row(2).values, &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn builder_rejects_bad_rows() {
+        let mut b = CsrBuilder::new(3);
+        assert!(b.push_row(vec![(1, 1.0), (1, 2.0)]).is_err());
+        assert!(b.push_row(vec![(3, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn builder_drops_explicit_zeros() {
+        let mut b = CsrBuilder::new(4);
+        b.push_row(vec![(0, 0.0), (1, 2.0)]).unwrap();
+        let m = b.finish();
+        assert_eq!(m.nnz(), 1);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let m = sample();
+        let v = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&v), vec![7.0, 6.0, 32.0]);
+        let a = vec![1.0, 1.0, 1.0];
+        assert_eq!(m.matvec_t(&a), vec![5.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn matvec_t_consistent_with_matvec() {
+        // aᵀ(Xv) == (Xᵀa)ᵀv
+        let mut rng = Rng::new(3);
+        let m = CsrMatrix::random(&mut rng, 20, 15, 4);
+        let v: Vec<f64> = (0..15).map(|_| rng.next_gaussian()).collect();
+        let a: Vec<f64> = (0..20).map(|_| rng.next_gaussian()).collect();
+        let lhs: f64 = m.matvec(&v).iter().zip(&a).map(|(x, y)| x * y).sum();
+        let rhs: f64 = m.matvec_t(&a).iter().zip(&v).map(|(x, y)| x * y).sum();
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()));
+    }
+
+    #[test]
+    fn row_ops() {
+        let m = sample();
+        let r0 = m.row(0);
+        assert_eq!(r0.nnz(), 2);
+        assert_eq!(r0.norm_sq(), 5.0);
+        assert_eq!(r0.dot_dense(&[1.0, 1.0, 1.0]), 3.0);
+        let r2 = m.row(2);
+        assert_eq!(r0.dot_sparse(&r2), 1.0 * 4.0 + 2.0 * 6.0);
+    }
+
+    #[test]
+    fn unchecked_matches_checked() {
+        let m = sample();
+        for i in 0..m.rows() {
+            let a = m.row(i);
+            let b = unsafe { m.row_unchecked(i) };
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn dense_tile_extraction() {
+        let m = sample();
+        let t = m.dense_tile(&[0, 2], 0, 3);
+        assert_eq!(t, vec![1.0, 0.0, 2.0, 4.0, 5.0, 6.0]);
+        let t2 = m.dense_tile(&[2], 1, 3);
+        assert_eq!(t2, vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0).values, m.row(2).values);
+        assert_eq!(s.row(1).values, m.row(0).values);
+    }
+
+    #[test]
+    fn norms() {
+        let m = sample();
+        assert_eq!(m.row_norms_sq(), vec![5.0, 9.0, 77.0]);
+    }
+
+    #[test]
+    fn random_matrix_valid() {
+        let mut rng = Rng::new(1);
+        let m = CsrMatrix::random(&mut rng, 50, 30, 5);
+        m.validate().unwrap();
+        assert_eq!(m.rows(), 50);
+        assert!(m.nnz() <= 250);
+    }
+}

@@ -1,0 +1,100 @@
+//! A labelled sparse dataset: the unit every solver consumes.
+
+use super::csr::CsrMatrix;
+
+/// Sparse binary-classification dataset (labels in {−1, +1}).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub x: CsrMatrix,
+    pub y: Vec<f64>,
+    /// Optional human-readable name (preset or file stem).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: CsrMatrix, y: Vec<f64>) -> Self {
+        assert_eq!(x.rows(), y.len(), "labels must match rows");
+        Self { x, y, name: String::new() }
+    }
+
+    pub fn with_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Number of data points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Feature dimension.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.x.dim()
+    }
+
+    /// Validate structure: CSR invariants plus ±1 labels.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.x.validate()?;
+        anyhow::ensure!(self.x.rows() == self.y.len(), "label count mismatch");
+        for (i, &y) in self.y.iter().enumerate() {
+            anyhow::ensure!(y == 1.0 || y == -1.0, "label[{i}] = {y} not ±1");
+        }
+        Ok(())
+    }
+
+    /// Restrict to a subset of rows.
+    pub fn select(&self, rows: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.select_rows(rows),
+            y: rows.iter().map(|&i| self.y[i]).collect(),
+            name: self.name.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::csr::CsrBuilder;
+
+    fn tiny() -> Dataset {
+        let mut b = CsrBuilder::new(2);
+        b.push_row(vec![(0, 1.0)]).unwrap();
+        b.push_row(vec![(1, -1.0)]).unwrap();
+        Dataset::new(b.finish(), vec![1.0, -1.0]).with_name("tiny")
+    }
+
+    #[test]
+    fn accessors() {
+        let ds = tiny();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.name, "tiny");
+        ds.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_labels() {
+        let mut ds = tiny();
+        ds.y[0] = 0.5;
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "labels must match rows")]
+    fn mismatched_labels_panic() {
+        let mut b = CsrBuilder::new(2);
+        b.push_row(vec![(0, 1.0)]).unwrap();
+        let _ = Dataset::new(b.finish(), vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn select_subset() {
+        let ds = tiny();
+        let s = ds.select(&[1]);
+        assert_eq!(s.n(), 1);
+        assert_eq!(s.y, vec![-1.0]);
+    }
+}

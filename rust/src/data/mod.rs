@@ -1,0 +1,15 @@
+//! Data substrate: sparse matrices, LIBSVM I/O, synthetic workload
+//! generation, partitioning, and dataset statistics.
+
+pub mod csr;
+pub mod dataset;
+pub mod libsvm;
+pub mod partition;
+pub mod stats;
+pub mod synth;
+
+pub use csr::{CsrBuilder, CsrMatrix, SparseRow};
+pub use dataset::Dataset;
+pub use partition::{Partition, Strategy};
+pub use stats::DatasetStats;
+pub use synth::{Preset, SynthSpec};

@@ -1,0 +1,208 @@
+//! Data partitioning: node-level partitions `I_k` (paper §3) and
+//! core-level sub-partitions `I_{k,r}` (paper §3.1).
+//!
+//! The paper distributes data *equally across the K nodes* and each node
+//! logically divides its partition into R disjoint subparts, one per
+//! core, "exclusively used by core r" — so α updates never conflict and
+//! only `v` needs atomics. These invariants (exact cover, disjointness)
+//! are what the property tests in `rust/tests/prop_partition.rs` check.
+
+use crate::util::Rng;
+
+/// How global indices are assigned to nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Contiguous blocks (what an MPI scatter of a file does).
+    Contiguous,
+    /// Round-robin striping (balances heterogeneous row costs).
+    Striped,
+    /// Random permutation then contiguous blocks (breaks any ordering
+    /// correlation in the data file; recommended default).
+    Shuffled,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "contiguous" => Some(Strategy::Contiguous),
+            "striped" => Some(Strategy::Striped),
+            "shuffled" => Some(Strategy::Shuffled),
+            _ => None,
+        }
+    }
+}
+
+/// A two-level partition: `parts[k][r]` = global row indices owned by
+/// core `r` of node `k`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partition {
+    pub parts: Vec<Vec<Vec<usize>>>,
+}
+
+impl Partition {
+    /// Split `n` rows across `k_nodes × r_cores`.
+    pub fn build(
+        n: usize,
+        k_nodes: usize,
+        r_cores: usize,
+        strategy: Strategy,
+        rng: &mut Rng,
+    ) -> Partition {
+        assert!(k_nodes > 0 && r_cores > 0);
+        assert!(
+            n >= k_nodes * r_cores,
+            "need at least one row per core: n={n}, K*R={}",
+            k_nodes * r_cores
+        );
+        let order: Vec<usize> = match strategy {
+            Strategy::Contiguous => (0..n).collect(),
+            Strategy::Striped => {
+                // Interleave: node k gets indices ≡ k (mod K), preserving
+                // stripe order inside each node.
+                let mut v = Vec::with_capacity(n);
+                for k in 0..k_nodes {
+                    for i in (k..n).step_by(k_nodes) {
+                        v.push(i);
+                    }
+                }
+                v
+            }
+            Strategy::Shuffled => {
+                let mut v: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut v);
+                v
+            }
+        };
+        // First level: equal contiguous chunks of `order` per node.
+        let node_chunks = split_even(&order, k_nodes);
+        // Second level: equal chunks per core.
+        let parts = node_chunks
+            .into_iter()
+            .map(|chunk| split_even(&chunk, r_cores).into_iter().collect())
+            .collect();
+        Partition { parts }
+    }
+
+    pub fn k_nodes(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn r_cores(&self) -> usize {
+        self.parts.first().map_or(0, |p| p.len())
+    }
+
+    /// All indices of node `k` (flattened over cores).
+    pub fn node_indices(&self, k: usize) -> Vec<usize> {
+        self.parts[k].iter().flatten().copied().collect()
+    }
+
+    /// Total indices across all nodes.
+    pub fn total(&self) -> usize {
+        self.parts.iter().flatten().map(|c| c.len()).sum()
+    }
+
+    /// Check the exact-cover invariant: every index in `0..n` appears
+    /// exactly once across all (node, core) cells.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        let mut seen = vec![false; n];
+        for (k, node) in self.parts.iter().enumerate() {
+            for (r, cell) in node.iter().enumerate() {
+                anyhow::ensure!(!cell.is_empty(), "empty cell ({k},{r})");
+                for &i in cell {
+                    anyhow::ensure!(i < n, "index {i} out of range");
+                    anyhow::ensure!(!seen[i], "index {i} assigned twice");
+                    seen[i] = true;
+                }
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "some index unassigned");
+        Ok(())
+    }
+}
+
+/// Split a slice into `k` nearly-equal contiguous chunks (sizes differ
+/// by at most 1; earlier chunks get the remainder).
+fn split_even(xs: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = xs.len();
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut pos = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(xs[pos..pos + len].to_vec());
+        pos += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_sizes() {
+        let xs: Vec<usize> = (0..10).collect();
+        let chunks = split_even(&xs, 3);
+        assert_eq!(chunks.iter().map(|c| c.len()).collect::<Vec<_>>(), vec![4, 3, 3]);
+        let flat: Vec<usize> = chunks.into_iter().flatten().collect();
+        assert_eq!(flat, xs);
+    }
+
+    #[test]
+    fn contiguous_cover() {
+        let mut rng = Rng::new(1);
+        let p = Partition::build(100, 4, 3, Strategy::Contiguous, &mut rng);
+        p.validate(100).unwrap();
+        assert_eq!(p.k_nodes(), 4);
+        assert_eq!(p.r_cores(), 3);
+        assert_eq!(p.total(), 100);
+        // Contiguity: node 0 holds 0..25.
+        let mut n0 = p.node_indices(0);
+        n0.sort_unstable();
+        assert_eq!(n0, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn striped_cover_and_stripes() {
+        let mut rng = Rng::new(2);
+        let p = Partition::build(12, 3, 2, Strategy::Striped, &mut rng);
+        p.validate(12).unwrap();
+        let mut n1 = p.node_indices(1);
+        n1.sort_unstable();
+        assert_eq!(n1, vec![1, 4, 7, 10]);
+    }
+
+    #[test]
+    fn shuffled_cover_and_differs() {
+        let mut rng = Rng::new(3);
+        let p = Partition::build(200, 4, 2, Strategy::Shuffled, &mut rng);
+        p.validate(200).unwrap();
+        let n0 = p.node_indices(0);
+        assert_ne!(n0, (0..50).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn balance_within_one() {
+        let mut rng = Rng::new(4);
+        let p = Partition::build(103, 4, 3, Strategy::Shuffled, &mut rng);
+        let sizes: Vec<usize> =
+            p.parts.iter().flatten().map(|c| c.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "sizes {sizes:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one row per core")]
+    fn too_few_rows_panics() {
+        let mut rng = Rng::new(5);
+        let _ = Partition::build(5, 3, 2, Strategy::Contiguous, &mut rng);
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("striped"), Some(Strategy::Striped));
+        assert_eq!(Strategy::parse("SHUFFLED"), Some(Strategy::Shuffled));
+        assert_eq!(Strategy::parse("x"), None);
+    }
+}

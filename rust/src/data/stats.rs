@@ -1,0 +1,120 @@
+//! Dataset statistics — regenerates the paper's Table 1 columns
+//! (n, d, nnz, file size) plus extras the analysis cares about
+//! (density, nnz/row distribution, label balance).
+
+use super::dataset::Dataset;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub nnz_per_row_mean: f64,
+    pub nnz_per_row_max: usize,
+    pub positive_fraction: f64,
+    /// Estimated LIBSVM file size in bytes (what Table 1's last column
+    /// reports): label + ~14 bytes per nnz ("idx:val ").
+    pub est_file_bytes: u64,
+}
+
+impl DatasetStats {
+    pub fn compute(ds: &Dataset) -> DatasetStats {
+        let n = ds.n();
+        let nnz = ds.x.nnz();
+        let mut max_row = 0usize;
+        for i in 0..n {
+            max_row = max_row.max(ds.x.row(i).nnz());
+        }
+        let pos = ds.y.iter().filter(|&&y| y > 0.0).count();
+        DatasetStats {
+            name: ds.name.clone(),
+            n,
+            d: ds.d(),
+            nnz,
+            density: ds.x.density(),
+            nnz_per_row_mean: if n == 0 { 0.0 } else { nnz as f64 / n as f64 },
+            nnz_per_row_max: max_row,
+            positive_fraction: if n == 0 { 0.0 } else { pos as f64 / n as f64 },
+            est_file_bytes: (n as u64) * 3 + (nnz as u64) * 14,
+        }
+    }
+
+    /// Human-readable size like Table 1's "1.2 GB".
+    pub fn human_size(&self) -> String {
+        let b = self.est_file_bytes as f64;
+        if b >= 1e9 {
+            format!("{:.1} GB", b / 1e9)
+        } else if b >= 1e6 {
+            format!("{:.1} MB", b / 1e6)
+        } else if b >= 1e3 {
+            format!("{:.1} KB", b / 1e3)
+        } else {
+            format!("{b:.0} B")
+        }
+    }
+
+    /// One row of the Table-1-style report.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<14} {:>10} {:>10} {:>12} {:>10.6} {:>8.1} {:>9}",
+            self.name,
+            self.n,
+            self.d,
+            self.nnz,
+            self.density,
+            self.nnz_per_row_mean,
+            self.human_size()
+        )
+    }
+
+    pub fn table_header() -> String {
+        format!(
+            "{:<14} {:>10} {:>10} {:>12} {:>10} {:>8} {:>9}",
+            "dataset", "n", "d", "nnz", "density", "nnz/row", "size"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::util::Rng;
+
+    #[test]
+    fn stats_tiny() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let s = DatasetStats::compute(&ds);
+        assert_eq!(s.n, 200);
+        assert_eq!(s.d, 50);
+        assert!(s.nnz > 0);
+        assert!((s.density - s.nnz as f64 / (200.0 * 50.0)).abs() < 1e-12);
+        assert!(s.positive_fraction > 0.0 && s.positive_fraction < 1.0);
+        assert!(s.nnz_per_row_max >= s.nnz_per_row_mean as usize);
+    }
+
+    #[test]
+    fn human_sizes() {
+        let mut s = DatasetStats::compute(&Preset::Tiny.generate(&mut Rng::new(1)));
+        s.est_file_bytes = 500;
+        assert_eq!(s.human_size(), "500 B");
+        s.est_file_bytes = 2_500;
+        assert_eq!(s.human_size(), "2.5 KB");
+        s.est_file_bytes = 3_000_000;
+        assert_eq!(s.human_size(), "3.0 MB");
+        s.est_file_bytes = 4_200_000_000;
+        assert_eq!(s.human_size(), "4.2 GB");
+    }
+
+    #[test]
+    fn table_formatting() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let s = DatasetStats::compute(&ds);
+        let header = DatasetStats::table_header();
+        let row = s.table_row();
+        assert!(header.contains("dataset"));
+        assert!(row.contains("tiny"));
+    }
+}

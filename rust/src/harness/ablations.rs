@@ -1,0 +1,124 @@
+//! Ablation studies for the design choices DESIGN.md §6 calls out:
+//!
+//! * **merge policy** — oldest-first (paper) vs newest-first pick of
+//!   the `S` updates to merge;
+//! * **locks** — lock-free CAS adds (paper/PassCoDe-Atomic) vs racy
+//!   wild writes (PassCoDe-Wild); a mutex variant is approximated by
+//!   `R = 1` (serialized updates have exactly a global lock's
+//!   semantics without its overhead);
+//! * **σ scaling** — σ = νS (paper-safe) vs νK (over-damped) vs a
+//!   deliberately unsafe small σ.
+
+use crate::config::{Algorithm, ExpConfig, SigmaPolicy};
+use crate::coordinator::hybrid::{run_with, ProtocolOpts};
+use crate::coordinator::MergePolicy;
+use crate::metrics::Trace;
+
+use super::paper_cfg;
+
+/// Merge-policy ablation: same config, two policies. Run under a
+/// straggler — on a homogeneous cluster updates barely queue, so the
+/// pick order cannot matter; with a slow node the newest-first policy
+/// starves the straggler's queued updates.
+pub fn merge_policy(dataset: &str, rounds: usize) -> anyhow::Result<Vec<Trace>> {
+    let mut cfg = paper_cfg(dataset, 4, 2);
+    cfg.s_barrier = 2;
+    cfg.gamma = 4;
+    cfg.max_rounds = rounds;
+    cfg.gap_threshold = 1e-8;
+    cfg.stragglers = vec![1.0, 1.0, 1.0, 3.0];
+    let data = super::load_dataset(&cfg)?;
+    let mut out = Vec::new();
+    for (policy, name) in
+        [(MergePolicy::OldestFirst, "oldest-first"), (MergePolicy::NewestFirst, "newest-first")]
+    {
+        let opts = ProtocolOpts {
+            label: format!("Hybrid-DCA/{name}"),
+            sync_allreduce: false,
+            policy,
+        };
+        out.push(run_with(&data, &cfg, &opts)?.trace);
+    }
+    Ok(out)
+}
+
+/// Atomic vs wild ablation (PassCoDe-style, single node, R cores).
+pub fn locks(dataset: &str, r: usize, rounds: usize) -> anyhow::Result<Vec<Trace>> {
+    let mut cfg = paper_cfg(dataset, 1, r);
+    cfg.s_barrier = 1;
+    cfg.max_rounds = rounds;
+    cfg.gap_threshold = 1e-8;
+    let data = super::load_dataset(&cfg)?;
+    let mut out = Vec::new();
+    for (wild, _name) in [(false, "atomic"), (true, "wild")] {
+        let mut c = cfg.clone();
+        c.wild = wild;
+        out.push(crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace);
+    }
+    // Serialized (R=1) stands in for the mutex variant.
+    let mut c = cfg.clone();
+    c.r_cores = 1;
+    let mut tr = crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace;
+    tr.label = "PassCoDe-serialized(R=1)".into();
+    out.push(tr);
+    Ok(out)
+}
+
+/// σ-scaling ablation.
+pub fn sigma(dataset: &str, rounds: usize) -> anyhow::Result<Vec<Trace>> {
+    let mut cfg = paper_cfg(dataset, 4, 2);
+    cfg.s_barrier = 2;
+    cfg.gamma = 4;
+    cfg.max_rounds = rounds;
+    cfg.gap_threshold = 1e-8;
+    let data = super::load_dataset(&cfg)?;
+    let mut out = Vec::new();
+    for (policy, name) in [
+        (SigmaPolicy::NuS, "sigma=νS(safe)"),
+        (SigmaPolicy::NuK, "sigma=νK(damped)"),
+        (SigmaPolicy::Fixed(0.25), "sigma=0.25(unsafe)"),
+    ] {
+        let mut c: ExpConfig = cfg.clone();
+        c.sigma = policy;
+        let opts = ProtocolOpts {
+            label: format!("Hybrid-DCA/{name}"),
+            sync_allreduce: false,
+            policy: MergePolicy::OldestFirst,
+        };
+        out.push(run_with(&data, &c, &opts)?.trace);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_policy_both_run() {
+        let traces = merge_policy("tiny", 10).unwrap();
+        assert_eq!(traces.len(), 2);
+        for t in &traces {
+            assert!(t.final_gap().unwrap() < 1.0);
+        }
+    }
+
+    #[test]
+    fn locks_three_variants() {
+        let traces = locks("tiny", 4, 10).unwrap();
+        assert_eq!(traces.len(), 3);
+        assert_eq!(traces[0].label, "PassCoDe");
+        assert_eq!(traces[1].label, "PassCoDe-Wild");
+        assert_eq!(traces[2].label, "PassCoDe-serialized(R=1)");
+    }
+
+    #[test]
+    fn sigma_safe_beats_unsafe_eventually() {
+        let traces = sigma("tiny", 25).unwrap();
+        assert_eq!(traces.len(), 3);
+        let safe = traces[0].best_gap().unwrap();
+        // Damped converges too, just slower per round.
+        let damped = traces[1].best_gap().unwrap();
+        assert!(safe < 0.5 && damped < 0.9, "safe {safe}, damped {damped}");
+    }
+}

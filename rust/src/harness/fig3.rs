@@ -1,0 +1,124 @@
+//! Figure 3 — duality gap vs rounds (top row) and vs time (bottom row)
+//! for Baseline, CoCoA+, PassCoDe, and Hybrid-DCA on three datasets,
+//! with the total worker cores `p × t` equal across the parallel
+//! solvers (paper: 16; quick mode: 8).
+//!
+//! Paper setup: λ = 10⁻⁴, H = 40000, ν = 1, σ ∈ {K, S}; Hybrid uses
+//! `S = p, Γ = 1` (synchronous global updates) for this figure.
+
+use crate::config::Algorithm;
+use crate::metrics::Trace;
+
+use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+
+/// One dataset's sweep result.
+pub struct Fig3Result {
+    pub dataset: String,
+    pub threshold: f64,
+    pub traces: Vec<Trace>,
+}
+
+/// Per-dataset gap thresholds (the paper's §6.2 values:
+/// 10⁻⁴ / 10⁻⁵ / 10⁻¹ for rcv1 / webspam / kddb).
+pub fn threshold_for(dataset: &str) -> f64 {
+    match dataset {
+        "rcv1-s" => 1e-4,
+        "webspam-s" => 1e-5,
+        "kddb-s" => 1e-1,
+        "splicesite-s" => 1e-6, // Fig 7's headline gap
+        _ => 1e-4,
+    }
+}
+
+/// Run the four solvers on one dataset with `p×t` worker cores.
+pub fn run_dataset(dataset: &str, p: usize, t: usize, max_rounds: usize) -> anyhow::Result<Fig3Result> {
+    let threshold = threshold_for(dataset);
+    let mut cfg = paper_cfg(dataset, p, t);
+    cfg.max_rounds = max_rounds;
+    cfg.gap_threshold = threshold / 10.0; // run a bit past the threshold
+    let data = super::load_dataset(&cfg)?;
+
+    let mut traces = Vec::new();
+
+    // Baseline: 1 core, rounds of H updates.
+    {
+        let mut c = cfg.clone();
+        c.k_nodes = 1;
+        c.r_cores = 1;
+        c.s_barrier = 1;
+        traces.push(crate::coordinator::run_algorithm(Algorithm::Baseline, &data, &c)?.trace);
+    }
+    // CoCoA+: p×t single-core nodes (equal total cores; the paper's
+    // CoCoA+ rows use 1 core per node, so p·t nodes).
+    {
+        let mut c = cfg.clone();
+        c.k_nodes = p * t;
+        c.r_cores = 1;
+        c.s_barrier = c.k_nodes;
+        traces.push(crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace);
+    }
+    // PassCoDe: one node, p×t cores.
+    {
+        let mut c = cfg.clone();
+        c.k_nodes = 1;
+        c.s_barrier = 1;
+        c.r_cores = p * t;
+        traces.push(crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace);
+    }
+    // Hybrid-DCA: p nodes × t cores, S = p, Γ = 1 (Fig 3 setting).
+    {
+        let mut c = cfg.clone();
+        c.s_barrier = p;
+        c.gamma = 1;
+        traces.push(crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace);
+    }
+
+    Ok(Fig3Result { dataset: dataset.into(), threshold, traces })
+}
+
+/// Full driver: all datasets, print + CSV.
+pub fn run_and_print(mode: QuickFull) -> anyhow::Result<()> {
+    let (datasets, p, t, rounds): (&[&str], usize, usize, usize) = match mode {
+        QuickFull::Quick => (&["rcv1-s"], 4, 2, 30),
+        QuickFull::Full => (&["rcv1-s", "webspam-s", "kddb-s"], 8, 2, 250),
+    };
+    println!("== Figure 3: duality gap vs rounds and vs time (p×t = {}) ==", p * t);
+    let mut all = Vec::new();
+    for ds in datasets {
+        let res = run_dataset(ds, p, t, rounds)?;
+        println!("\n-- dataset {} (threshold {:.0e}) --", res.dataset, res.threshold);
+        print_threshold_table(&res.traces, res.threshold);
+        for mut tr in res.traces {
+            tr.label = format!("{}/{}", res.dataset, tr.label);
+            all.push(tr);
+        }
+    }
+    save_traces("fig3_convergence", &all)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_quick_tiny() {
+        // Smoke the full driver machinery on the tiny preset.
+        let res = run_dataset("tiny", 2, 2, 10).unwrap();
+        assert_eq!(res.traces.len(), 4);
+        let labels: Vec<&str> = res.traces.iter().map(|t| t.label.as_str()).collect();
+        assert!(labels.contains(&"Baseline"));
+        assert!(labels.contains(&"CoCoA+"));
+        assert!(labels.contains(&"PassCoDe"));
+        assert!(labels.contains(&"Hybrid-DCA"));
+        // All four make real progress from the α=0 gap of ≈1. (Relative
+        // ordering is only meaningful on the full-size presets — on
+        // `tiny`, n=200, the sequential baseline solves the problem in a
+        // couple of epochs; the bench asserts the paper's ordering on
+        // rcv1-s.)
+        for t in &res.traces {
+            let g = t.final_gap().unwrap();
+            assert!(g < 0.1, "{}: gap {g}", t.label);
+        }
+    }
+}

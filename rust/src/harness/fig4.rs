@@ -1,0 +1,208 @@
+//! Figure 4 — speedup(p, t) of each parallel/distributed solver over
+//! the sequential Baseline, measured as the ratio of time-to-threshold.
+//!
+//! Paper setup: thresholds 10⁻⁴/10⁻⁵/10⁻¹ per dataset; PassCoDe sweeps
+//! cores on one node; CoCoA+ sweeps nodes (1 core each); Hybrid-DCA
+//! sweeps p ∈ {2,4,8,16} × t ∈ {2,4,8,16,24} with p·t ≤ 144.
+//! Time here is **virtual** cluster time (DESIGN.md §3: the testbed has
+//! one physical core, so parallel wall-clock is meaningless; the
+//! virtual clock models the paper's queueing structure).
+
+use crate::config::Algorithm;
+
+use super::{paper_cfg, QuickFull};
+
+/// One measured speedup point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeedupPoint {
+    pub solver: String,
+    pub p: usize,
+    pub t: usize,
+    /// Virtual time to reach the threshold (None = never reached).
+    pub time_to_threshold: Option<f64>,
+    /// Baseline virtual time / this solver's virtual time.
+    pub speedup: Option<f64>,
+}
+
+/// The sweep grid.
+pub struct Fig4Grid {
+    pub dataset: String,
+    pub threshold: f64,
+    pub p_values: Vec<usize>,
+    pub t_values: Vec<usize>,
+    pub max_cores: usize,
+    pub max_rounds: usize,
+}
+
+impl Fig4Grid {
+    pub fn new(mode: QuickFull, dataset: &str) -> Self {
+        match mode {
+            QuickFull::Quick => Fig4Grid {
+                dataset: dataset.into(),
+                threshold: super::fig3::threshold_for(dataset),
+                p_values: vec![2, 4],
+                t_values: vec![2, 4],
+                max_cores: 16,
+                max_rounds: 60,
+            },
+            QuickFull::Full => Fig4Grid {
+                dataset: dataset.into(),
+                threshold: super::fig3::threshold_for(dataset),
+                p_values: vec![2, 4, 8, 16],
+                t_values: vec![2, 4, 8],
+                max_cores: 144,
+                max_rounds: 150,
+            },
+        }
+    }
+}
+
+/// Run the whole grid. Returns (baseline time, points).
+pub fn run_grid(grid: &Fig4Grid) -> anyhow::Result<(f64, Vec<SpeedupPoint>)> {
+    let mut cfg = paper_cfg(&grid.dataset, 1, 1);
+    cfg.max_rounds = grid.max_rounds;
+    cfg.gap_threshold = grid.threshold;
+    let data = super::load_dataset(&cfg)?;
+
+    // Baseline reference. Give it proportionally more rounds: it applies
+    // H updates/round where parallel solvers apply p·t·H.
+    let base_time = {
+        let mut c = cfg.clone();
+        c.k_nodes = 1;
+        c.r_cores = 1;
+        c.s_barrier = 1;
+        c.max_rounds = grid.max_rounds * grid.max_cores;
+        c.eval_every = 8;
+        let tr = crate::coordinator::run_algorithm(Algorithm::Baseline, &data, &c)?.trace;
+        tr.virt_time_to_gap(grid.threshold)
+            .ok_or_else(|| anyhow::anyhow!("baseline never reached threshold {}", grid.threshold))?
+    };
+
+    let mut points = Vec::new();
+
+    // PassCoDe: single node, t cores (t sweep includes the larger values).
+    for &t in grid.t_values.iter().chain(grid.p_values.iter()) {
+        let mut c = cfg.clone();
+        c.k_nodes = 1;
+        c.s_barrier = 1;
+        c.r_cores = t;
+        let tr = crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace;
+        let ttt = tr.virt_time_to_gap(grid.threshold);
+        points.push(SpeedupPoint {
+            solver: "PassCoDe".into(),
+            p: 1,
+            t,
+            time_to_threshold: ttt,
+            speedup: ttt.map(|x| base_time / x),
+        });
+    }
+
+    // CoCoA+: p nodes × 1 core.
+    for &p in &grid.p_values {
+        let mut c = cfg.clone();
+        c.k_nodes = p;
+        c.r_cores = 1;
+        c.s_barrier = p;
+        let tr = crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace;
+        let ttt = tr.virt_time_to_gap(grid.threshold);
+        points.push(SpeedupPoint {
+            solver: "CoCoA+".into(),
+            p,
+            t: 1,
+            time_to_threshold: ttt,
+            speedup: ttt.map(|x| base_time / x),
+        });
+    }
+
+    // Hybrid-DCA: p × t grid under the core cap.
+    for &p in &grid.p_values {
+        for &t in &grid.t_values {
+            if p * t > grid.max_cores {
+                continue;
+            }
+            let mut c = cfg.clone();
+            c.k_nodes = p;
+            c.r_cores = t;
+            c.s_barrier = p;
+            c.gamma = 1;
+            let tr = crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace;
+            let ttt = tr.virt_time_to_gap(grid.threshold);
+            points.push(SpeedupPoint {
+                solver: "Hybrid-DCA".into(),
+                p,
+                t,
+                time_to_threshold: ttt,
+                speedup: ttt.map(|x| base_time / x),
+            });
+        }
+    }
+
+    Ok((base_time, points))
+}
+
+/// Print the figure's series and write the CSV.
+pub fn run_and_print(mode: QuickFull) -> anyhow::Result<()> {
+    let dataset = "rcv1-s";
+    let grid = Fig4Grid::new(mode, dataset);
+    println!(
+        "== Figure 4: speedup over Baseline on {} (threshold {:.0e}, virtual time) ==",
+        grid.dataset, grid.threshold
+    );
+    let (base_time, points) = run_grid(&grid)?;
+    println!("baseline time-to-threshold: {base_time:.4}s (virtual)\n");
+    println!("{:<12} {:>4} {:>4} {:>14} {:>10}", "solver", "p", "t", "time(s)", "speedup");
+    for pt in &points {
+        println!(
+            "{:<12} {:>4} {:>4} {:>14} {:>10}",
+            pt.solver,
+            pt.p,
+            pt.t,
+            pt.time_to_threshold.map(|x| format!("{x:.4}")).unwrap_or_else(|| "—".into()),
+            pt.speedup.map(|x| format!("{x:.1}×")).unwrap_or_else(|| "—".into()),
+        );
+    }
+    // CSV.
+    let path = super::results_dir().join("fig4_speedup.csv");
+    std::fs::create_dir_all(super::results_dir())?;
+    let mut out = String::from("solver,p,t,time_to_threshold,speedup\n");
+    for pt in &points {
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            pt.solver,
+            pt.p,
+            pt.t,
+            pt.time_to_threshold.map(|x| x.to_string()).unwrap_or_default(),
+            pt.speedup.map(|x| x.to_string()).unwrap_or_default()
+        ));
+    }
+    std::fs::write(&path, out)?;
+    println!("\n# series written to {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_grid_tiny() {
+        let grid = Fig4Grid {
+            dataset: "tiny".into(),
+            threshold: 5e-2,
+            p_values: vec![2],
+            t_values: vec![2],
+            max_cores: 8,
+            max_rounds: 40,
+        };
+        let (base_time, points) = run_grid(&grid).unwrap();
+        assert!(base_time > 0.0);
+        assert!(!points.is_empty());
+        // Hybrid with 4 virtual cores should beat the 1-core baseline.
+        let hybrid = points
+            .iter()
+            .find(|p| p.solver == "Hybrid-DCA" && p.p == 2 && p.t == 2)
+            .unwrap();
+        let sp = hybrid.speedup.expect("hybrid reached threshold");
+        assert!(sp > 1.0, "speedup {sp}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure 5 — effect of the bounded-barrier size `S ∈ {2,3,4,6,8}` with
+//! `Γ = 10` fixed, on `p = 8` nodes × `t = 8` cores.
+//!
+//! Paper finding: with `S < p/2` only a minority of workers contribute
+//! per round and the gap stalls above a level; `S ≥ p/2` reaches the
+//! full-barrier quality, and small S buys shorter rounds that are
+//! eventually eaten by needing more rounds. We reproduce the sweep on
+//! the homogeneous cluster and — as an extension the paper motivates
+//! but could not run (§6.3: "useful for HPC platforms with
+//! heterogeneous nodes, unlike ours") — under a straggler profile.
+
+use crate::config::Algorithm;
+use crate::metrics::Trace;
+use crate::sim::StragglerProfile;
+
+use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+
+/// Run the S sweep; returns one trace per S value.
+pub fn run_sweep(
+    dataset: &str,
+    p: usize,
+    t: usize,
+    s_values: &[usize],
+    gamma: usize,
+    max_rounds: usize,
+    profile: StragglerProfile,
+) -> anyhow::Result<Vec<Trace>> {
+    let mut cfg = paper_cfg(dataset, p, t);
+    cfg.max_rounds = max_rounds;
+    cfg.gamma = gamma;
+    cfg.gap_threshold = 1e-7; // run the full horizon; stalls are the point
+    cfg.stragglers = profile.multipliers(p);
+    if profile == StragglerProfile::Homogeneous {
+        cfg.stragglers.clear();
+    }
+    let data = super::load_dataset(&cfg)?;
+    let mut traces = Vec::new();
+    for &s in s_values {
+        let mut c = cfg.clone();
+        c.s_barrier = s;
+        let mut tr = crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace;
+        tr.label = format!("S={s}");
+        traces.push(tr);
+    }
+    Ok(traces)
+}
+
+pub fn run_and_print(mode: QuickFull) -> anyhow::Result<()> {
+    let (p, t, s_values, rounds): (usize, usize, Vec<usize>, usize) = match mode {
+        QuickFull::Quick => (4, 2, vec![1, 2, 4], 30),
+        QuickFull::Full => (8, 8, vec![2, 3, 4, 6, 8], 120),
+    };
+    println!("== Figure 5: effect of S (p={p}, t={t}, Γ=10) ==");
+    let homog = run_sweep("rcv1-s", p, t, &s_values, 10, rounds, StragglerProfile::Homogeneous)?;
+    println!("\nhomogeneous cluster (paper's setting):");
+    print_threshold_table(&homog, super::fig3::threshold_for("rcv1-s"));
+
+    let mut strag = run_sweep("rcv1-s", p, t, &s_values, 10, rounds, StragglerProfile::OneSlow)?;
+    println!("\none-slow straggler profile (paper §6.3 motivation):");
+    print_threshold_table(&strag, super::fig3::threshold_for("rcv1-s"));
+
+    let mut all = homog;
+    for tr in all.iter_mut() {
+        tr.label = format!("homog/{}", tr.label);
+    }
+    for tr in strag.iter_mut() {
+        tr.label = format!("one-slow/{}", tr.label);
+    }
+    all.append(&mut strag);
+    save_traces("fig5_barrier_s", &all)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn s_sweep_runs_tiny() {
+        let traces =
+            run_sweep("tiny", 3, 2, &[1, 3], 10, 15, StragglerProfile::Homogeneous).unwrap();
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].label, "S=1");
+        // Both make progress.
+        for t in &traces {
+            assert!(t.final_gap().unwrap() < 1.0, "{}: {:?}", t.label, t.final_gap());
+        }
+    }
+
+    #[test]
+    fn straggler_bounded_barrier_is_faster_per_round() {
+        // With a 4× straggler, S=1 rounds shouldn't wait for it: virtual
+        // time per round must be smaller than S=K's.
+        let fast = run_sweep("tiny", 3, 2, &[1], 10, 10, StragglerProfile::OneSlow).unwrap();
+        let slow = run_sweep("tiny", 3, 2, &[3], 10, 10, StragglerProfile::OneSlow).unwrap();
+        let vt_fast = fast[0].points.last().unwrap().virt_secs / fast[0].points.len() as f64;
+        let vt_slow = slow[0].points.last().unwrap().virt_secs / slow[0].points.len() as f64;
+        assert!(
+            vt_fast < vt_slow,
+            "S=1 per-round vtime {vt_fast} should beat S=K {vt_slow}"
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Figure 7 — the big dataset (splicesite, 280 GB in the paper):
+//! Hybrid-DCA (16 nodes × 8 cores) vs CoCoA+ (16 nodes), plus the
+//! §6.5 variant CoCoA+ treating all 128 cores as distributed nodes.
+//! PassCoDe cannot run at all: the dataset does not fit on one node.
+//!
+//! Paper headline: CoCoA+ takes > 300 s to reach a 10⁻⁶ duality gap on
+//! 16 nodes; Hybrid-DCA takes ≈ 30 s — a ~10× gap this harness's
+//! virtual-clock reproduction should land near.
+
+use crate::config::Algorithm;
+use crate::metrics::Trace;
+
+use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+
+pub struct Fig7Result {
+    pub traces: Vec<Trace>,
+    pub threshold: f64,
+    /// Hybrid vs CoCoA+ time-to-threshold ratio (the headline ~10×).
+    pub hybrid_vs_cocoa: Option<f64>,
+}
+
+pub fn run(dataset: &str, p: usize, t: usize, h: usize, max_rounds: usize, threshold: f64) -> anyhow::Result<Fig7Result> {
+    let mut cfg = paper_cfg(dataset, p, t);
+    cfg.h_local = h; // paper uses H = 10000 for Fig 7 (scaled here)
+    cfg.max_rounds = max_rounds;
+    cfg.gap_threshold = threshold;
+    cfg.eval_every = 5;
+    let data = super::load_dataset(&cfg)?;
+
+    let mut traces = Vec::new();
+
+    // CoCoA+ on p nodes.
+    {
+        let mut c = cfg.clone();
+        c.r_cores = 1;
+        c.s_barrier = p;
+        // CoCoA+ applies p·H updates/round vs Hybrid's p·t·H; match the
+        // paper (same H per node per round — CoCoA+ simply has no cores).
+        traces.push(crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace);
+    }
+    // CoCoA+ with all p·t cores as nodes (§6.5 variant).
+    {
+        let c = cfg.clone();
+        let mut tr = crate::coordinator::cocoa::run_cores_as_nodes(&data, &c)?.trace;
+        tr.label = format!("CoCoA+({}-cores-as-nodes)", p * t);
+        traces.push(tr);
+    }
+    // Hybrid-DCA p × t.
+    {
+        let mut c = cfg.clone();
+        c.s_barrier = p;
+        c.gamma = 1;
+        traces.push(crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace);
+    }
+
+    let cocoa_t = traces[0].virt_time_to_gap(threshold);
+    let hybrid_t = traces[2].virt_time_to_gap(threshold);
+    let ratio = match (cocoa_t, hybrid_t) {
+        (Some(c), Some(h)) if h > 0.0 => Some(c / h),
+        _ => None,
+    };
+    Ok(Fig7Result { traces, threshold, hybrid_vs_cocoa: ratio })
+}
+
+pub fn run_and_print(mode: QuickFull) -> anyhow::Result<()> {
+    let (dataset, p, t, h, rounds, threshold): (&str, usize, usize, usize, usize, f64) = match mode
+    {
+        QuickFull::Quick => ("rcv1-s", 4, 2, 256, 40, 1e-3),
+        // H = 32 preserves the paper's local-progress ratio
+        // H/n_k ≈ 3.5% per core per round (their H = 10000 on
+        // n_k ≈ 289k), which is what generates the ~10× headline:
+        // Hybrid's 8 cores cover 8× more of the partition per
+        // equally-priced (communication-dominated) round.
+        QuickFull::Full => ("splicesite-s", 16, 8, 32, 1500, 1e-6),
+    };
+    println!("== Figure 7: big dataset {dataset} (p={p}, t={t}, H={h}) ==");
+    let res = run(dataset, p, t, h, rounds, threshold)?;
+    print_threshold_table(&res.traces, res.threshold);
+    match res.hybrid_vs_cocoa {
+        Some(r) => println!(
+            "\nHybrid-DCA is {r:.1}× faster than CoCoA+ to gap ≤ {:.0e} \
+             (paper: ~10× — 30 s vs >300 s)",
+            res.threshold
+        ),
+        None => println!("\n(one of the solvers did not reach the threshold)"),
+    }
+    save_traces("fig7_big", &res.traces)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_quick_shape() {
+        let res = run("tiny", 2, 2, 128, 25, 5e-2).unwrap();
+        assert_eq!(res.traces.len(), 3);
+        // Hybrid should not be slower than CoCoA+ in virtual time when
+        // it uses t× more cores.
+        if let Some(r) = res.hybrid_vs_cocoa {
+            assert!(r > 0.8, "hybrid/cocoa ratio {r}");
+        }
+    }
+}

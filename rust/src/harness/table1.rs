@@ -1,0 +1,82 @@
+//! Table 1 — dataset statistics (n, d, nnz, size) for every preset,
+//! with the paper's originals alongside for the scale-down record.
+
+use crate::data::{synth::ALL_PRESETS, DatasetStats};
+
+/// Paper's Table 1 rows (for the printed comparison).
+pub const PAPER_TABLE1: [(&str, u64, u64, u64, &str); 4] = [
+    ("rcv1", 677_399, 47_236, 49_556_258, "1.2 GB"),
+    ("webspam", 280_000, 16_609_143, 1_045_051_224, "20 GB"),
+    ("kddb", 19_264_097, 29_890_095, 566_345_888, "5.1 GB"),
+    ("splicesite", 4_627_840, 11_725_480, 15_383_587_858, "280 GB"),
+];
+
+/// Compute stats for all presets.
+pub fn compute_all(seed: u64) -> Vec<DatasetStats> {
+    ALL_PRESETS
+        .iter()
+        .map(|p| DatasetStats::compute(&super::gen_preset(*p, seed)))
+        .collect()
+}
+
+/// Regenerate and print Table 1.
+pub fn run_and_print() -> anyhow::Result<()> {
+    println!("== Table 1: datasets (paper originals vs synthetic presets) ==\n");
+    println!("paper originals:");
+    println!(
+        "{:<14} {:>12} {:>12} {:>16} {:>9}",
+        "dataset", "n", "d", "nnz", "size"
+    );
+    for (name, n, d, nnz, size) in PAPER_TABLE1 {
+        println!("{name:<14} {n:>12} {d:>12} {nnz:>16} {size:>9}");
+    }
+    println!("\nsynthetic presets (this repo):");
+    println!("{}", DatasetStats::table_header());
+    let stats = compute_all(42);
+    for s in &stats {
+        println!("{}", s.table_row());
+    }
+    // Scale record: nnz ratio vs paper for matched presets.
+    println!("\nscale-down factors (paper nnz / preset nnz):");
+    for (paper, preset_name) in
+        [("rcv1", "rcv1-s"), ("webspam", "webspam-s"), ("kddb", "kddb-s"), ("splicesite", "splicesite-s")]
+    {
+        let p = PAPER_TABLE1.iter().find(|r| r.0 == paper).unwrap();
+        if let Some(s) = stats.iter().find(|s| s.name == preset_name) {
+            println!("  {:<12} {:>8.0}×", paper, p.3 as f64 / s.nnz as f64);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_presets_have_stats() {
+        let stats = compute_all(1);
+        assert_eq!(stats.len(), ALL_PRESETS.len());
+        for s in &stats {
+            assert!(s.nnz > 0, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn presets_preserve_shape_statistics() {
+        // n:d ratios within 3× of the paper's (the preserved invariant).
+        let stats = compute_all(2);
+        for (paper_name, preset_name) in
+            [("rcv1", "rcv1-s"), ("webspam", "webspam-s"), ("kddb", "kddb-s"), ("splicesite", "splicesite-s")]
+        {
+            let p = PAPER_TABLE1.iter().find(|r| r.0 == paper_name).unwrap();
+            let s = stats.iter().find(|s| s.name == preset_name).unwrap();
+            let paper_ratio = p.1 as f64 / p.2 as f64;
+            let ours = s.n as f64 / s.d as f64;
+            assert!(
+                ours / paper_ratio < 3.0 && paper_ratio / ours < 3.0,
+                "{preset_name}: n:d {ours:.3} vs paper {paper_ratio:.3}"
+            );
+        }
+    }
+}

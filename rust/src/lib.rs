@@ -1,0 +1,57 @@
+//! # Hybrid-DCA
+//!
+//! A full reproduction of *“Hybrid-DCA: A Double Asynchronous Approach
+//! for Stochastic Dual Coordinate Ascent”* (Pal, Xu, Yang, Rajasekaran,
+//! Bi; 2016) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   a master with a bounded barrier (`S`) and bounded delay (`Γ`)
+//!   merging asynchronous updates from `K` worker nodes, each of which
+//!   runs `R` lock-free core-threads of stochastic dual coordinate
+//!   ascent (Algorithms 1–2), plus every substrate the experiments
+//!   need (sparse data, losses, baselines, metrics, simulation, CLI).
+//! * **Layer 2 (python/compile/model.py)** — the block dual-step and
+//!   objective computation written in JAX, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (Gram tile,
+//!   matvec, objective tile) called from Layer 2.
+//!
+//! Rust executes the AOT artifacts through the PJRT CPU client
+//! ([`runtime`]); Python never runs on the solve path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use hybrid_dca::prelude::*;
+//!
+//! let mut rng = Rng::new(42);
+//! let data = Preset::Tiny.generate(&mut rng);
+//! let mut cfg = ExpConfig::default();
+//! cfg.k_nodes = 4;
+//! cfg.r_cores = 2;
+//! cfg.s_barrier = 3;
+//! cfg.gamma = 2;
+//! let report = coordinator::hybrid::run(&data, &cfg).unwrap();
+//! println!("final gap = {:?}", report.trace.final_gap());
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod loss;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+
+/// Most-used items in one import.
+pub mod prelude {
+    pub use crate::config::{Algorithm, ExpConfig, SigmaPolicy};
+    pub use crate::coordinator;
+    pub use crate::data::{CsrMatrix, Dataset, Partition, Preset, Strategy};
+    pub use crate::loss::{Hinge, Logistic, Loss, LossKind, SquaredHinge};
+    pub use crate::metrics::{objectives, Objectives, Trace, TracePoint};
+    pub use crate::util::Rng;
+}

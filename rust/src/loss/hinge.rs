@@ -1,0 +1,160 @@
+//! Hinge loss `φ(z; y) = max(0, 1 − yz)` — the loss the paper's
+//! experiments use (§6: "We evaluated for hinge loss").
+//!
+//! Conjugate: with the signed dual `a = α·y`,
+//! `φ*(−α) = −a` for `a ∈ [0, 1]`, `+∞` otherwise, so the dual
+//! contribution is `−φ*(−α) = a`.
+//!
+//! Coordinate step (closed form, Fan et al. 2008): maximizing
+//! `f(ε) = (a+δ) − m·ε − (q/2)ε²` with `ε = y·δ` gives
+//! `a_new = clip(a + (1 − y·m)/q, 0, 1)`.
+
+use super::Loss;
+use crate::util::clip;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Hinge;
+
+impl Loss for Hinge {
+    #[inline]
+    fn primal(&self, z: f64, y: f64) -> f64 {
+        (1.0 - y * z).max(0.0)
+    }
+
+    #[inline]
+    fn dual_value(&self, alpha: f64, y: f64) -> f64 {
+        let a = alpha * y;
+        if (0.0..=1.0).contains(&a) {
+            a
+        } else {
+            f64::NEG_INFINITY
+        }
+    }
+
+    #[inline]
+    fn feasible(&self, alpha: f64, y: f64) -> bool {
+        let a = alpha * y;
+        (0.0..=1.0).contains(&a)
+    }
+
+    #[inline]
+    fn coordinate_step(&self, alpha: f64, y: f64, margin: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let a = alpha * y;
+        let a_new = clip(a + (1.0 - y * margin) / q, 0.0, 1.0);
+        a_new * y
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        None // hinge is not smooth; Theorem 7 applies (L-Lipschitz).
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    #[inline]
+    fn primal_subgradient_dual(&self, z: f64, y: f64) -> f64 {
+        // −u ∈ ∂φ(z): ∂φ = −y on the active branch, 0 otherwise, any
+        // point of [−y·1, 0] at the kink. Return the standard choice.
+        if y * z < 1.0 {
+            y
+        } else {
+            0.0
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "hinge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::brute_force_step;
+    use crate::util::Rng;
+
+    #[test]
+    fn primal_values() {
+        let h = Hinge;
+        assert_eq!(h.primal(2.0, 1.0), 0.0);
+        assert_eq!(h.primal(0.0, 1.0), 1.0);
+        assert_eq!(h.primal(-1.0, 1.0), 2.0);
+        assert_eq!(h.primal(-2.0, -1.0), 0.0);
+        assert_eq!(h.primal(1.0, -1.0), 2.0);
+    }
+
+    #[test]
+    fn dual_domain() {
+        let h = Hinge;
+        assert_eq!(h.dual_value(0.5, 1.0), 0.5);
+        assert_eq!(h.dual_value(-0.5, -1.0), 0.5);
+        assert!(h.feasible(0.0, 1.0));
+        assert!(h.feasible(1.0, 1.0));
+        assert!(!h.feasible(1.1, 1.0));
+        assert!(!h.feasible(-0.1, 1.0));
+        assert_eq!(h.dual_value(2.0, 1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn step_closed_form_simple() {
+        let h = Hinge;
+        // α=0, y=1, margin 0, q=1 → a_new = clip(0 + 1/1) = 1.
+        assert_eq!(h.coordinate_step(0.0, 1.0, 0.0, 1.0), 1.0);
+        // Saturation at 0: margin large.
+        assert_eq!(h.coordinate_step(0.0, 1.0, 10.0, 1.0), 0.0);
+        // Negative label mirrors.
+        assert_eq!(h.coordinate_step(0.0, -1.0, 0.0, 1.0), -1.0);
+    }
+
+    #[test]
+    fn step_matches_brute_force() {
+        let h = Hinge;
+        let mut rng = Rng::new(31);
+        for _ in 0..300 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let a0 = rng.next_f64();
+            let alpha = a0 * y;
+            let m = rng.next_gaussian() * 2.0;
+            let q = 0.1 + rng.next_f64() * 5.0;
+            let exact = h.coordinate_step(alpha, y, m, q);
+            let brute = brute_force_step(&h, alpha, y, m, q, -1.0, 1.0);
+            assert!(
+                (exact - brute).abs() < 1e-3,
+                "exact {exact} vs brute {brute} (α={alpha}, y={y}, m={m}, q={q})"
+            );
+        }
+    }
+
+    #[test]
+    fn step_never_decreases_subobjective() {
+        let h = Hinge;
+        let mut rng = Rng::new(33);
+        for _ in 0..500 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let alpha = rng.next_f64() * y;
+            let m = rng.next_gaussian() * 2.0;
+            let q = 0.1 + rng.next_f64() * 5.0;
+            let f = |a: f64| h.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha).powi(2);
+            let a_new = h.coordinate_step(alpha, y, m, q);
+            assert!(h.feasible(a_new, y));
+            assert!(f(a_new) >= f(alpha) - 1e-12);
+        }
+    }
+
+    #[test]
+    fn subgradient_is_dual_feasible() {
+        let h = Hinge;
+        for &(z, y) in &[(0.0, 1.0), (2.0, 1.0), (0.5, -1.0), (-3.0, -1.0)] {
+            let u = h.primal_subgradient_dual(z, y);
+            assert!(h.feasible(u, y), "u={u} infeasible for y={y}");
+        }
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(Hinge.lipschitz(), 1.0);
+        assert!(Hinge.smoothness().is_none());
+    }
+}

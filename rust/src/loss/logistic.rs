@@ -1,0 +1,206 @@
+//! Logistic loss `φ(z; y) = log(1 + e^{−yz})`.
+//!
+//! Conjugate: with `a = α·y ∈ (0, 1)`,
+//! `φ*(−α) = a·log a + (1−a)·log(1−a)` (negative binary entropy), so the
+//! dual contribution is the entropy `H(a)`. The loss is 4-smooth
+//! (φ″ ≤ 1/4 ⇒ 1/μ = 1/4… careful: φ is (1/4)-smooth, i.e. μ = 4);
+//! we report `smoothness() = 1/4` as the `1/μ` constant used by
+//! Theorem 6 with μ = 4.
+//!
+//! The coordinate step has no closed form; we run a guarded Newton
+//! iteration on the signed dual `t = a + δ ∈ (0,1)` maximizing
+//! `f(t) = H(t) − y·m·(t−a) − (q/2)(t−a)²` (Yu, Huang & Lin, 2011,
+//! the method the paper cites for logistic subproblems).
+
+use super::Loss;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Logistic {
+    /// Newton iteration cap.
+    pub max_iters: usize,
+    /// Gradient tolerance for early exit.
+    pub tol: f64,
+}
+
+impl Default for Logistic {
+    fn default() -> Self {
+        Self { max_iters: 50, tol: 1e-12 }
+    }
+}
+
+const EPS: f64 = 1e-12;
+
+#[inline]
+fn entropy(t: f64) -> f64 {
+    // −t·ln t − (1−t)·ln(1−t), continuous extension at 0/1.
+    let h = |x: f64| if x <= 0.0 { 0.0 } else { -x * x.ln() };
+    h(t) + h(1.0 - t)
+}
+
+impl Loss for Logistic {
+    #[inline]
+    fn primal(&self, z: f64, y: f64) -> f64 {
+        // Numerically stable log(1 + e^{−yz}).
+        let t = -y * z;
+        if t > 35.0 {
+            t
+        } else if t < -35.0 {
+            0.0
+        } else {
+            (1.0 + t.exp()).ln()
+        }
+    }
+
+    #[inline]
+    fn dual_value(&self, alpha: f64, y: f64) -> f64 {
+        let a = alpha * y;
+        if (0.0..=1.0).contains(&a) {
+            entropy(a)
+        } else {
+            f64::NEG_INFINITY
+        }
+    }
+
+    #[inline]
+    fn feasible(&self, alpha: f64, y: f64) -> bool {
+        let a = alpha * y;
+        (0.0..=1.0).contains(&a)
+    }
+
+    fn coordinate_step(&self, alpha: f64, y: f64, margin: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let a = (alpha * y).clamp(EPS, 1.0 - EPS);
+        let ym = y * margin;
+        // Maximize f(t) = H(t) − ym(t−a) − q/2 (t−a)².
+        // f'(t) = ln((1−t)/t) − ym − q(t−a);  f''(t) = −1/(t(1−t)) − q.
+        let mut t = a;
+        for _ in 0..self.max_iters {
+            let g = ((1.0 - t) / t).ln() - ym - q * (t - a);
+            if g.abs() < self.tol {
+                break;
+            }
+            let h = -1.0 / (t * (1.0 - t)) - q;
+            let mut step = -g / h;
+            // Guard: keep t strictly inside (0,1); damp if overshooting.
+            let mut t_new = t + step;
+            let mut guard = 0;
+            while (t_new <= EPS || t_new >= 1.0 - EPS) && guard < 60 {
+                step *= 0.5;
+                t_new = t + step;
+                guard += 1;
+            }
+            if guard >= 60 {
+                t_new = t_new.clamp(EPS, 1.0 - EPS);
+            }
+            if (t_new - t).abs() < 1e-16 {
+                t = t_new;
+                break;
+            }
+            t = t_new;
+        }
+        t * y
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(0.25) // φ is (1/4)-smooth.
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0 // |φ'| = |−y·s(−yz)| ≤ 1.
+    }
+
+    #[inline]
+    fn primal_subgradient_dual(&self, z: f64, y: f64) -> f64 {
+        // φ'(z) = −y·σ(−yz); u = y·σ(−yz) ∈ y·(0,1).
+        let t = -y * z;
+        let s = if t > 35.0 {
+            1.0
+        } else if t < -35.0 {
+            0.0
+        } else {
+            1.0 / (1.0 + (-t).exp())
+        };
+        y * s
+    }
+
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn primal_stable_extremes() {
+        let l = Logistic::default();
+        assert!((l.primal(0.0, 1.0) - 2f64.ln()).abs() < 1e-12);
+        assert!((l.primal(100.0, 1.0) - 0.0).abs() < 1e-12);
+        assert!((l.primal(-100.0, 1.0) - 100.0).abs() < 1e-9);
+        assert!(l.primal(50.0, -1.0) >= 49.0);
+    }
+
+    #[test]
+    fn dual_is_entropy() {
+        let l = Logistic::default();
+        assert!((l.dual_value(0.5, 1.0) - 2f64.ln()).abs() < 1e-12);
+        assert_eq!(l.dual_value(0.0, 1.0), 0.0);
+        assert_eq!(l.dual_value(1.0, 1.0), 0.0);
+        assert_eq!(l.dual_value(1.5, 1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn newton_step_maximizes() {
+        let l = Logistic::default();
+        let mut rng = Rng::new(51);
+        for _ in 0..300 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let a0 = 0.01 + 0.98 * rng.next_f64();
+            let alpha = a0 * y;
+            let m = rng.next_gaussian() * 2.0;
+            let q = 0.1 + rng.next_f64() * 5.0;
+            let a_new = l.coordinate_step(alpha, y, m, q);
+            assert!(l.feasible(a_new, y));
+            let f = |a: f64| l.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha).powi(2);
+            // Newton result must beat a fine grid to tolerance.
+            let mut best = f64::NEG_INFINITY;
+            for k in 1..2000 {
+                let t = k as f64 / 2000.0;
+                best = best.max(f(t * y));
+            }
+            assert!(
+                f(a_new) >= best - 1e-6,
+                "Newton f={} vs grid best {best} (α={alpha}, y={y}, m={m}, q={q})",
+                f(a_new)
+            );
+        }
+    }
+
+    #[test]
+    fn newton_stationarity() {
+        let l = Logistic::default();
+        let mut rng = Rng::new(53);
+        for _ in 0..200 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let alpha = (0.01 + 0.98 * rng.next_f64()) * y;
+            let m = rng.next_gaussian();
+            let q = 0.5 + rng.next_f64();
+            let a_new = l.coordinate_step(alpha, y, m, q) * y;
+            let a0 = alpha * y;
+            let g = ((1.0 - a_new) / a_new).ln() - y * m - q * (a_new - a0);
+            assert!(g.abs() < 1e-6, "gradient at solution = {g}");
+        }
+    }
+
+    #[test]
+    fn subgradient_feasible_and_sigmoid() {
+        let l = Logistic::default();
+        for &(z, y) in &[(0.0, 1.0), (3.0, 1.0), (-3.0, -1.0), (100.0, 1.0)] {
+            let u = l.primal_subgradient_dual(z, y);
+            assert!(l.feasible(u, y), "u={u}");
+        }
+        assert!((l.primal_subgradient_dual(0.0, 1.0) - 0.5).abs() < 1e-12);
+    }
+}

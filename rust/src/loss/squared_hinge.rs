@@ -1,0 +1,160 @@
+//! Squared hinge loss `φ(z; y) = max(0, 1 − yz)²` (L2-SVM).
+//!
+//! Conjugate: with `a = α·y ≥ 0`, `φ*(−α) = −a + a²/4`, so the dual
+//! contribution is `a − a²/4`. The loss is 2-smooth (φ″ ≤ 2, μ = 1/2),
+//! so Theorem 6's linear rate applies.
+//!
+//! Coordinate step (closed form): maximize
+//! `f(δ) = (a+δ) − (a+δ)²/4 − y·m·δ − (q/2)δ²` over `a+δ ≥ 0` →
+//! `a_new = max(0, (a/2 + q·a + 1 − y·m) / (q + 1/2))`, derived from
+//! `f′(δ) = 1 − (a+δ)/2 − y·m − q·δ = 0`.
+
+use super::Loss;
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SquaredHinge;
+
+impl Loss for SquaredHinge {
+    #[inline]
+    fn primal(&self, z: f64, y: f64) -> f64 {
+        let t = (1.0 - y * z).max(0.0);
+        t * t
+    }
+
+    #[inline]
+    fn dual_value(&self, alpha: f64, y: f64) -> f64 {
+        let a = alpha * y;
+        if a >= 0.0 {
+            a - 0.25 * a * a
+        } else {
+            f64::NEG_INFINITY
+        }
+    }
+
+    #[inline]
+    fn feasible(&self, alpha: f64, y: f64) -> bool {
+        alpha * y >= 0.0
+    }
+
+    #[inline]
+    fn coordinate_step(&self, alpha: f64, y: f64, margin: f64, q: f64) -> f64 {
+        debug_assert!(q > 0.0);
+        let a = alpha * y;
+        // Solve 1 − (a+δ)/2 − y·m − qδ = 0 for δ, then a_new = a + δ.
+        let delta = (1.0 - y * margin - 0.5 * a) / (q + 0.5);
+        let a_new = (a + delta).max(0.0);
+        a_new * y
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(2.0) // (1/μ)-smooth with 1/μ = 2.
+    }
+
+    fn lipschitz(&self) -> f64 {
+        // Not globally Lipschitz; on the unit-margin ball |φ'| ≤ 2(1+|z|).
+        // Solvers never use this for squared hinge (smooth path taken);
+        // return the local bound at |z| ≤ 1 for completeness.
+        4.0
+    }
+
+    #[inline]
+    fn primal_subgradient_dual(&self, z: f64, y: f64) -> f64 {
+        // φ'(z) = −2y·max(0, 1−yz); −u = φ' → u = 2y·max(0, 1−yz).
+        2.0 * y * (1.0 - y * z).max(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "squared_hinge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::brute_force_step;
+    use crate::util::Rng;
+
+    #[test]
+    fn primal_values() {
+        let h = SquaredHinge;
+        assert_eq!(h.primal(1.0, 1.0), 0.0);
+        assert_eq!(h.primal(0.0, 1.0), 1.0);
+        assert_eq!(h.primal(-1.0, 1.0), 4.0);
+    }
+
+    #[test]
+    fn dual_values_and_domain() {
+        let h = SquaredHinge;
+        assert_eq!(h.dual_value(0.0, 1.0), 0.0);
+        assert_eq!(h.dual_value(2.0, 1.0), 1.0); // a=2: 2 − 1 = 1 (max)
+        assert!(h.feasible(5.0, 1.0));
+        assert!(!h.feasible(-0.1, 1.0));
+        assert_eq!(h.dual_value(-1.0, 1.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn step_matches_brute_force() {
+        let h = SquaredHinge;
+        let mut rng = Rng::new(41);
+        for _ in 0..300 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let a0 = rng.next_f64() * 3.0;
+            let alpha = a0 * y;
+            let m = rng.next_gaussian() * 2.0;
+            let q = 0.1 + rng.next_f64() * 5.0;
+            let exact = h.coordinate_step(alpha, y, m, q);
+            // Grid-search the signed dual a = α·y over a range wide
+            // enough to contain the unconstrained optimum.
+            let a_cap = 8.0 + 2.0 * (exact * y).abs();
+            let f = |a: f64| {
+                h.dual_value(a * y, y) - m * (a * y - alpha) - 0.5 * q * (a * y - alpha).powi(2)
+            };
+            let mut best = 0.0;
+            let mut bestv = f64::NEG_INFINITY;
+            for k in 0..=80_000 {
+                let a = a_cap * k as f64 / 80_000.0;
+                let v = f(a);
+                if v > bestv {
+                    bestv = v;
+                    best = a;
+                }
+            }
+            let brute = best * y;
+            let _ = brute_force_step; // generic oracle unused here (domain is one-sided)
+            assert!(
+                (exact - brute).abs() < 2e-3 * (1.0 + exact.abs()),
+                "exact {exact} vs brute {brute} (α={alpha}, y={y}, m={m}, q={q})"
+            );
+        }
+    }
+
+    #[test]
+    fn step_never_decreases_subobjective() {
+        let h = SquaredHinge;
+        let mut rng = Rng::new(43);
+        for _ in 0..500 {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let alpha = rng.next_f64() * 2.0 * y;
+            let m = rng.next_gaussian() * 2.0;
+            let q = 0.1 + rng.next_f64() * 5.0;
+            let f = |a: f64| h.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha).powi(2);
+            let a_new = h.coordinate_step(alpha, y, m, q);
+            assert!(h.feasible(a_new, y));
+            assert!(f(a_new) >= f(alpha) - 1e-12, "f({a_new}) < f({alpha})");
+        }
+    }
+
+    #[test]
+    fn smooth_constants() {
+        assert_eq!(SquaredHinge.smoothness(), Some(2.0));
+    }
+
+    #[test]
+    fn subgradient_feasible() {
+        let h = SquaredHinge;
+        for &(z, y) in &[(0.0, 1.0), (2.0, 1.0), (0.5, -1.0)] {
+            let u = h.primal_subgradient_dual(z, y);
+            assert!(h.feasible(u, y));
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! `hybrid-dca` — command-line launcher for the Hybrid-DCA system.
+//!
+//! Subcommands:
+//!
+//! * `train`     — run one algorithm on a dataset, print the trace.
+//! * `gen-data`  — write a synthetic preset as a LIBSVM file.
+//! * `stats`     — dataset statistics (Table 1 columns).
+//! * `bench`     — regenerate a paper table/figure (table1, fig3…fig7).
+//! * `artifacts` — list/verify the AOT artifacts.
+
+use hybrid_dca::cli::{self, FlagSpec};
+use hybrid_dca::config::{Algorithm, ExpConfig, SigmaPolicy};
+use hybrid_dca::data::{libsvm, DatasetStats, Preset, Strategy};
+use hybrid_dca::loss::LossKind;
+use hybrid_dca::metrics::trace::write_csv_file;
+use hybrid_dca::util::{logging, Rng};
+use hybrid_dca::{coordinator, harness};
+
+fn main() {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match real_main(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn real_main(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "stats" => cmd_stats(rest),
+        "bench" => cmd_bench(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try 'help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "hybrid-dca — double asynchronous stochastic dual coordinate ascent\n\n\
+         Subcommands:\n\
+         \x20 train      run one solver (Baseline | CoCoA+ | PassCoDe | Hybrid-DCA)\n\
+         \x20 gen-data   write a synthetic preset as a LIBSVM file\n\
+         \x20 stats      dataset statistics (Table 1)\n\
+         \x20 bench      regenerate a paper table/figure (table1, fig3..fig7)\n\
+         \x20 artifacts  list/verify the AOT artifacts\n\n\
+         Use '<subcommand> --help' for flags."
+    );
+}
+
+fn train_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::value("config", "", "TOML config file (flags override it)"),
+        FlagSpec::value("algo", "hybrid", "baseline|cocoa+|passcode|hybrid"),
+        FlagSpec::value("dataset", "tiny", "preset name (tiny|rcv1-s|webspam-s|kddb-s|splicesite-s)"),
+        FlagSpec::value("data", "", "LIBSVM file path (overrides --dataset)"),
+        FlagSpec::value("loss", "hinge", "hinge|squared_hinge|logistic"),
+        FlagSpec::value("lambda", "1e-4", "regularization λ"),
+        FlagSpec::value("nodes", "4", "worker nodes K"),
+        FlagSpec::value("cores", "2", "cores per node R"),
+        FlagSpec::value("h", "512", "local iterations per core per round H"),
+        FlagSpec::value("s", "0", "bounded barrier S (0 = K)"),
+        FlagSpec::value("gamma", "1", "bounded delay Γ"),
+        FlagSpec::value("nu", "1.0", "aggregation parameter ν"),
+        FlagSpec::value("sigma", "auto", "sigma policy: auto(νS)|k(νK)|<number>"),
+        FlagSpec::value("rounds", "100", "max global rounds"),
+        FlagSpec::value("threshold", "1e-6", "stop when duality gap below"),
+        FlagSpec::value("eval-every", "1", "evaluate gap every N rounds"),
+        FlagSpec::value("seed", "42", "root RNG seed"),
+        FlagSpec::value("partition", "shuffled", "contiguous|striped|shuffled"),
+        FlagSpec::value("stragglers", "", "profile: none|one-slow|ramp|half-slow"),
+        FlagSpec::value("csv", "", "write trace CSV to this path"),
+        FlagSpec::switch("wild", "use racy (PassCoDe-Wild) updates"),
+        FlagSpec::switch("help", "show help"),
+    ]
+}
+
+fn parse_train_cfg(args: &cli::Args) -> anyhow::Result<(Algorithm, ExpConfig)> {
+    let algo = Algorithm::parse(args.get("algo").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown --algo"))?;
+    // Contract: with --config, the file is the single source of the
+    // experiment parameters (only --algo and --csv still apply); without
+    // it, the flags below define everything.
+    let config_path = args.get("config").unwrap();
+    if !config_path.is_empty() {
+        let cfg = ExpConfig::from_file(config_path)?;
+        return Ok((algo, cfg));
+    }
+    let mut cfg = ExpConfig::default();
+    cfg.dataset = args.get("dataset").unwrap().to_string();
+    let data = args.get("data").unwrap();
+    if !data.is_empty() {
+        cfg.data_path = Some(data.to_string());
+    }
+    cfg.loss = LossKind::parse(args.get("loss").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown --loss"))?;
+    cfg.lambda = args.get_parse("lambda")?;
+    cfg.k_nodes = args.get_parse("nodes")?;
+    cfg.r_cores = args.get_parse("cores")?;
+    cfg.h_local = args.get_parse("h")?;
+    let s: usize = args.get_parse("s")?;
+    cfg.s_barrier = if s == 0 { cfg.k_nodes } else { s };
+    cfg.gamma = args.get_parse("gamma")?;
+    cfg.nu = args.get_parse("nu")?;
+    cfg.sigma = SigmaPolicy::parse(args.get("sigma").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --sigma"))?;
+    cfg.max_rounds = args.get_parse("rounds")?;
+    cfg.gap_threshold = args.get_parse("threshold")?;
+    cfg.eval_every = args.get_parse("eval-every")?;
+    cfg.seed = args.get_parse("seed")?;
+    cfg.partition = Strategy::parse(args.get("partition").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --partition"))?;
+    let straggler = args.get("stragglers").unwrap();
+    if !straggler.is_empty() {
+        let profile = hybrid_dca::sim::StragglerProfile::parse(straggler)
+            .ok_or_else(|| anyhow::anyhow!("unknown straggler profile '{straggler}'"))?;
+        cfg.stragglers = profile.multipliers(cfg.k_nodes);
+    }
+    cfg.wild = args.flag("wild");
+    cfg.validate()?;
+    Ok((algo, cfg))
+}
+
+fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
+    let specs = train_specs();
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("train", "run one solver", &specs));
+        return Ok(());
+    }
+    let (algo, cfg) = parse_train_cfg(&args)?;
+    let data = harness::load_dataset(&cfg)?;
+    println!(
+        "# {} on {} (n={}, d={}, nnz={}) λ={} K={} R={} S={} Γ={} H={}",
+        algo.name(),
+        data.name,
+        data.n(),
+        data.d(),
+        data.x.nnz(),
+        cfg.lambda,
+        cfg.k_nodes,
+        cfg.r_cores,
+        cfg.s_barrier,
+        cfg.gamma,
+        cfg.h_local
+    );
+    let report = coordinator::run_algorithm(algo, &data, &cfg)?;
+    println!("round      wall(s)      virt(s)          gap");
+    for p in &report.trace.points {
+        println!(
+            "{:>5} {:>12.4} {:>12.6} {:>12.4e}",
+            p.round, p.wall_secs, p.virt_secs, p.gap
+        );
+    }
+    println!(
+        "# finished: rounds={} updates={} vtime={:.6}s cert-gap={:.4e}",
+        report.rounds,
+        report.total_updates,
+        report.vtime,
+        report.certificate_gap(&data, &cfg)
+    );
+    let csv = args.get("csv").unwrap();
+    if !csv.is_empty() {
+        write_csv_file(std::path::Path::new(csv), &[report.trace.clone()])?;
+        println!("# trace written to {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::value("preset", "tiny", "synthetic preset name"),
+        FlagSpec::value("seed", "42", "RNG seed"),
+        FlagSpec::required("out", "output LIBSVM path"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("gen-data", "write a synthetic preset", &specs));
+        return Ok(());
+    }
+    let preset = Preset::parse(args.get("preset").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("unknown preset"))?;
+    let seed: u64 = args.get_parse("seed")?;
+    let ds = preset.generate(&mut Rng::new(seed ^ 0xDA7A));
+    let out = args.get("out").unwrap();
+    libsvm::write_file(out, &ds)?;
+    println!("wrote {} ({} rows, {} nnz)", out, ds.n(), ds.x.nnz());
+    Ok(())
+}
+
+fn cmd_stats(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::value("preset", "", "one preset (default: all)"),
+        FlagSpec::value("data", "", "LIBSVM file instead of presets"),
+        FlagSpec::value("seed", "42", "RNG seed"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("stats", "dataset statistics (Table 1)", &specs));
+        return Ok(());
+    }
+    let seed: u64 = args.get_parse("seed")?;
+    println!("{}", DatasetStats::table_header());
+    let file = args.get("data").unwrap();
+    if !file.is_empty() {
+        let ds = libsvm::read_file(file, 0)?;
+        println!("{}", DatasetStats::compute(&ds).table_row());
+        return Ok(());
+    }
+    let one = args.get("preset").unwrap();
+    let presets: Vec<Preset> = if one.is_empty() {
+        hybrid_dca::data::synth::ALL_PRESETS.to_vec()
+    } else {
+        vec![Preset::parse(one).ok_or_else(|| anyhow::anyhow!("unknown preset"))?]
+    };
+    for p in presets {
+        let ds = p.generate(&mut Rng::new(seed ^ 0xDA7A));
+        println!("{}", DatasetStats::compute(&ds).table_row());
+    }
+    Ok(())
+}
+
+fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
+    let which = argv.first().map(|s| s.as_str()).unwrap_or("");
+    match which {
+        "table1" => harness::table1::run_and_print(),
+        "fig3" => harness::fig3::run_and_print(harness::QuickFull::Quick),
+        "fig4" => harness::fig4::run_and_print(harness::QuickFull::Quick),
+        "fig5" => harness::fig5::run_and_print(harness::QuickFull::Quick),
+        "fig6" => harness::fig6::run_and_print(harness::QuickFull::Quick),
+        "fig7" => harness::fig7::run_and_print(harness::QuickFull::Quick),
+        other => anyhow::bail!(
+            "unknown bench '{other}'; expected table1|fig3|fig4|fig5|fig6|fig7 \
+             (full sweeps: cargo bench --bench <name>)"
+        ),
+    }
+}
+
+fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::value("dir", "", "artifacts directory (default: ./artifacts)"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("artifacts", "list/verify AOT artifacts", &specs));
+        return Ok(());
+    }
+    let dir = {
+        let d = args.get("dir").unwrap();
+        if d.is_empty() {
+            hybrid_dca::runtime::default_artifacts_dir()
+        } else {
+            std::path::PathBuf::from(d)
+        }
+    };
+    if !hybrid_dca::runtime::Runtime::available(&dir) {
+        anyhow::bail!(
+            "no manifest at {} — run `make artifacts` first",
+            dir.join("manifest.toml").display()
+        );
+    }
+    let rt = hybrid_dca::runtime::Runtime::load(&dir)?;
+    println!("artifacts in {} (compiled OK):", dir.display());
+    for name in rt.names() {
+        let a = rt.get(name).unwrap();
+        println!(
+            "  {:<28} kind={:<10} B={:<4} D={:<6} dtype={}",
+            name,
+            a.meta.kind.as_str(),
+            a.meta.b,
+            a.meta.d,
+            a.meta.dtype
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Objective evaluation and experiment traces.
+//!
+//! * [`Objectives`] — primal `P(w)`, dual `D(α)` and duality gap
+//!   `P(w(α)) − D(α)`, the paper's convergence measure (§6: "The duality
+//!   gap is measured as P(v) − D(α)").
+//! * [`TracePoint`] / [`Trace`] — the (round, wall-time, virtual-time,
+//!   gap) series every figure plots, with CSV export for the bench
+//!   harness.
+
+pub mod trace;
+
+pub use trace::{Trace, TracePoint};
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::util::norm_sq;
+
+/// Primal/dual objective values for one state `(α, v)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    pub primal: f64,
+    pub dual: f64,
+    pub gap: f64,
+}
+
+/// Evaluate `P(w) = (1/n) Σ φ(x_iᵀw; y_i) + (λ/2)‖w‖²`.
+pub fn primal_objective(data: &Dataset, loss: &dyn Loss, w: &[f64], lambda: f64) -> f64 {
+    assert_eq!(w.len(), data.d());
+    let n = data.n() as f64;
+    let mut loss_sum = 0.0;
+    for i in 0..data.n() {
+        let z = data.x.row(i).dot_dense(w);
+        loss_sum += loss.primal(z, data.y[i]);
+    }
+    loss_sum / n + 0.5 * lambda * norm_sq(w)
+}
+
+/// Evaluate `D(α) = (1/n) Σ (−φ*(−α_i)) − (λ/2)‖v‖²` where the caller
+/// supplies `v = (1/λn) X α` (possibly the *estimate* shared across
+/// nodes, exactly as the paper measures it).
+pub fn dual_objective(data: &Dataset, loss: &dyn Loss, alpha: &[f64], v: &[f64], lambda: f64) -> f64 {
+    assert_eq!(alpha.len(), data.n());
+    assert_eq!(v.len(), data.d());
+    let n = data.n() as f64;
+    let mut sum = 0.0;
+    for i in 0..data.n() {
+        sum += loss.dual_value(alpha[i], data.y[i]);
+    }
+    sum / n - 0.5 * lambda * norm_sq(v)
+}
+
+/// Recompute `v = (1/λn) X α` exactly from the dual variables.
+pub fn exact_v(data: &Dataset, alpha: &[f64], lambda: f64) -> Vec<f64> {
+    let scale = 1.0 / (lambda * data.n() as f64);
+    let mut v = data.x.matvec_t(alpha);
+    for x in v.iter_mut() {
+        *x *= scale;
+    }
+    v
+}
+
+/// Full objective triple at `(α, v)`. Pass `v = exact_v(..)` for the
+/// certificate gap, or the shared estimate for the paper's measured gap.
+pub fn objectives(
+    data: &Dataset,
+    loss: &dyn Loss,
+    alpha: &[f64],
+    v: &[f64],
+    lambda: f64,
+) -> Objectives {
+    let primal = primal_objective(data, loss, v, lambda);
+    let dual = dual_objective(data, loss, alpha, v, lambda);
+    Objectives { primal, dual, gap: primal - dual }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::loss::Hinge;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_alpha_objectives() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let alpha = vec![0.0; ds.n()];
+        let v = exact_v(&ds, &alpha, 1e-2);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let o = objectives(&ds, &Hinge, &alpha, &v, 1e-2);
+        // P(0) = 1 (all hinge losses = 1), D(0) = 0, gap = 1.
+        assert!((o.primal - 1.0).abs() < 1e-12);
+        assert_eq!(o.dual, 0.0);
+        assert!((o.gap - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weak_duality_random_states() {
+        // P(w(α)) ≥ D(α) for any feasible α (weak duality).
+        let ds = Preset::Tiny.generate(&mut Rng::new(2));
+        let mut rng = Rng::new(3);
+        let lambda = 1e-2;
+        for _ in 0..50 {
+            let alpha: Vec<f64> =
+                ds.y.iter().map(|&y| rng.next_f64() * y).collect();
+            let v = exact_v(&ds, &alpha, lambda);
+            let o = objectives(&ds, &Hinge, &alpha, &v, lambda);
+            assert!(o.gap >= -1e-9, "gap {} < 0", o.gap);
+        }
+    }
+
+    #[test]
+    fn exact_v_matches_definition() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(4));
+        let mut rng = Rng::new(5);
+        let alpha: Vec<f64> = (0..ds.n()).map(|_| rng.next_gaussian()).collect();
+        let lambda = 0.5;
+        let v = exact_v(&ds, &alpha, lambda);
+        // Check one coordinate by brute force.
+        let mut v0 = 0.0;
+        for i in 0..ds.n() {
+            let r = ds.x.row(i);
+            for (&j, &x) in r.indices.iter().zip(r.values.iter()) {
+                if j == 0 {
+                    v0 += alpha[i] * x;
+                }
+            }
+        }
+        v0 /= lambda * ds.n() as f64;
+        assert!((v[0] - v0).abs() < 1e-12);
+    }
+}

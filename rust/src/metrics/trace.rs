@@ -1,0 +1,162 @@
+//! Convergence traces: the (round, time, gap) series behind every figure.
+
+use std::io::Write;
+
+/// One evaluation point along a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracePoint {
+    /// Global round index `t` (communication round for distributed
+    /// algorithms; epoch of `H` updates for single-node ones — exactly
+    /// Figure 3's x-axis convention).
+    pub round: usize,
+    /// Measured wall-clock seconds since the run started.
+    pub wall_secs: f64,
+    /// Simulated cluster seconds (virtual clock; see `sim`).
+    pub virt_secs: f64,
+    /// Duality gap `P(v) − D(α)`.
+    pub gap: f64,
+    /// Primal objective.
+    pub primal: f64,
+    /// Dual objective.
+    pub dual: f64,
+    /// Cumulative coordinate updates applied so far.
+    pub updates: u64,
+}
+
+/// A named series of trace points for one algorithm/configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// First round index whose gap falls below `threshold`, if any.
+    pub fn rounds_to_gap(&self, threshold: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.gap <= threshold).map(|p| p.round)
+    }
+
+    /// First virtual time at which the gap falls below `threshold`.
+    pub fn virt_time_to_gap(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.gap <= threshold).map(|p| p.virt_secs)
+    }
+
+    /// First wall time at which the gap falls below `threshold`.
+    pub fn wall_time_to_gap(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.gap <= threshold).map(|p| p.wall_secs)
+    }
+
+    /// Final (smallest achieved) gap.
+    pub fn final_gap(&self) -> Option<f64> {
+        self.points.last().map(|p| p.gap)
+    }
+
+    /// Best gap over the run (asynchronous algorithms are not monotone).
+    pub fn best_gap(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.gap).fold(None, |acc, g| {
+            Some(match acc {
+                None => g,
+                Some(b) => b.min(g),
+            })
+        })
+    }
+
+    pub fn csv_header() -> &'static str {
+        "label,round,wall_secs,virt_secs,gap,primal,dual,updates"
+    }
+
+    pub fn write_csv<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        for p in &self.points {
+            writeln!(
+                w,
+                "{},{},{:.6},{:.6},{:.12e},{:.12e},{:.12e},{}",
+                self.label, p.round, p.wall_secs, p.virt_secs, p.gap, p.primal, p.dual, p.updates
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Write several traces to one CSV file (with header).
+pub fn write_csv_file(path: &std::path::Path, traces: &[Trace]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", Trace::csv_header())?;
+    for t in traces {
+        t.write_csv(&mut f)?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(round: usize, gap: f64, virt: f64) -> TracePoint {
+        TracePoint {
+            round,
+            wall_secs: virt / 2.0,
+            virt_secs: virt,
+            gap,
+            primal: 1.0,
+            dual: 1.0 - gap,
+            updates: round as u64 * 100,
+        }
+    }
+
+    #[test]
+    fn thresholds() {
+        let mut t = Trace::new("x");
+        t.push(pt(0, 1.0, 0.0));
+        t.push(pt(1, 0.1, 1.0));
+        t.push(pt(2, 0.01, 2.0));
+        assert_eq!(t.rounds_to_gap(0.5), Some(1));
+        assert_eq!(t.virt_time_to_gap(0.05), Some(2.0));
+        assert_eq!(t.wall_time_to_gap(0.05), Some(1.0));
+        assert_eq!(t.rounds_to_gap(1e-9), None);
+        assert_eq!(t.final_gap(), Some(0.01));
+    }
+
+    #[test]
+    fn best_gap_non_monotone() {
+        let mut t = Trace::new("x");
+        t.push(pt(0, 0.5, 0.0));
+        t.push(pt(1, 0.05, 1.0));
+        t.push(pt(2, 0.2, 2.0));
+        assert_eq!(t.best_gap(), Some(0.05));
+        assert_eq!(t.final_gap(), Some(0.2));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Trace::new("algo");
+        t.push(pt(0, 1.0, 0.0));
+        let mut buf = Vec::new();
+        t.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert!(s.starts_with("algo,0,"));
+        assert_eq!(s.lines().count(), 1);
+    }
+
+    #[test]
+    fn csv_file_write() {
+        let mut t = Trace::new("a");
+        t.push(pt(0, 1.0, 0.0));
+        let path = std::env::temp_dir().join("hybrid_dca_trace_test.csv");
+        write_csv_file(&path, &[t]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with(Trace::csv_header()));
+        std::fs::remove_file(&path).ok();
+    }
+}

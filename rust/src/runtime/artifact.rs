@@ -1,0 +1,152 @@
+//! Artifact manifest: the `manifest.toml` contract between
+//! `python/compile/aot.py` (writer) and the Rust runtime (reader).
+//!
+//! ```toml
+//! [block_step_b16_d64]
+//! file = "block_step_b16_d64.hlo.txt"
+//! kind = "block_step"
+//! b = 16
+//! d = 64
+//! dtype = "f32"
+//! ```
+
+use std::path::Path;
+
+use crate::config::toml;
+
+/// What a module computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Block dual-coordinate step (Gram + scan + Δv).
+    BlockStep,
+    /// Primal/dual objective partial sums over a tile.
+    GapTile,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<ArtifactKind> {
+        match s {
+            "block_step" => Some(ArtifactKind::BlockStep),
+            "gap_tile" => Some(ArtifactKind::GapTile),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ArtifactKind::BlockStep => "block_step",
+            ArtifactKind::GapTile => "gap_tile",
+        }
+    }
+}
+
+/// Metadata for one artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// Block size (rows per tile).
+    pub b: usize,
+    /// Feature dimension of the tile.
+    pub d: usize,
+    pub dtype: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let doc = toml::parse(text)?;
+        let mut entries = Vec::new();
+        for (table, kv) in &doc.tables {
+            if table.is_empty() {
+                anyhow::ensure!(kv.is_empty(), "manifest keys must live inside tables");
+                continue;
+            }
+            let get_str = |key: &str| -> anyhow::Result<&str> {
+                kv.get(key)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("[{table}]: missing/invalid '{key}'"))
+            };
+            let get_usize = |key: &str| -> anyhow::Result<usize> {
+                kv.get(key)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("[{table}]: missing/invalid '{key}'"))
+            };
+            let kind_s = get_str("kind")?;
+            let kind = ArtifactKind::parse(kind_s)
+                .ok_or_else(|| anyhow::anyhow!("[{table}]: unknown kind '{kind_s}'"))?;
+            entries.push(ArtifactMeta {
+                name: table.clone(),
+                file: get_str("file")?.to_string(),
+                kind,
+                b: get_usize("b")?,
+                d: get_usize("d")?,
+                dtype: get_str("dtype")?.to_string(),
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest has no artifacts");
+        Ok(Manifest { entries })
+    }
+
+    /// Read and parse from a file.
+    pub fn read(path: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[block_step_b16_d64]
+file = "block_step_b16_d64.hlo.txt"
+kind = "block_step"
+b = 16
+d = 64
+dtype = "f32"
+
+[gap_tile_b16_d64]
+file = "gap_tile_b16_d64.hlo.txt"
+kind = "gap_tile"
+b = 16
+d = 64
+dtype = "f32"
+"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let bs = m.entries.iter().find(|e| e.kind == ArtifactKind::BlockStep).unwrap();
+        assert_eq!(bs.b, 16);
+        assert_eq!(bs.d, 64);
+        assert_eq!(bs.file, "block_step_b16_d64.hlo.txt");
+        assert_eq!(bs.dtype, "f32");
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [ArtifactKind::BlockStep, ArtifactKind::GapTile] {
+            assert_eq!(ArtifactKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(ArtifactKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Manifest::parse("").is_err());
+        assert!(Manifest::parse("[x]\nkind = \"bogus\"\nfile = \"f\"\nb = 1\nd = 1\ndtype = \"f32\"\n").is_err());
+        assert!(Manifest::parse("[x]\nfile = \"f\"\n").is_err());
+        assert!(Manifest::parse("toplevel = 1\n").is_err());
+    }
+}

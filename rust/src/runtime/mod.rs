@@ -1,0 +1,263 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust.
+//!
+//! Interchange format is **HLO text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+//! xla_extension 0.5.1 bundled with the `xla` crate rejects; the text
+//! parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md).
+//!
+//! Artifacts live in `artifacts/` next to a `manifest.toml` describing
+//! each module's kind and shapes (the manifest reuses our TOML-subset
+//! parser — both sides of the interchange are ours).
+
+pub mod artifact;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled, executable artifact.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime holding all compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+    pub dir: PathBuf,
+}
+
+/// Outputs of one block-step execution (mirrors
+/// [`crate::solver::block::BlockOutput`] in f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockStepOut {
+    pub alpha_new: Vec<f32>,
+    pub eps: Vec<f32>,
+    pub delta_v: Vec<f32>,
+}
+
+/// Outputs of one objective-tile execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GapTileOut {
+    /// `Σ_j max(0, 1 − y_j·(x_jᵀv))` over the tile.
+    pub hinge_sum: f32,
+    /// `Σ_j α_j·y_j` over the tile (hinge dual contribution).
+    pub dual_sum: f32,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `dir/manifest.toml` and compile it
+    /// on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::read(&dir.join("manifest.toml"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        for meta in manifest.entries {
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {}: {e:?}", meta.name))?;
+            artifacts.insert(meta.name.clone(), Artifact { meta, exe });
+        }
+        Ok(Runtime { client, artifacts, dir })
+    }
+
+    /// Does an artifacts directory look loadable?
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.toml").is_file()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Find the block-step artifact for a given (B, D) shape.
+    pub fn find_block_step(&self, b: usize, d: usize) -> Option<&Artifact> {
+        self.artifacts.values().find(|a| {
+            a.meta.kind == ArtifactKind::BlockStep && a.meta.b == b && a.meta.d == d
+        })
+    }
+
+    /// Find the objective-tile artifact for a given (B, D) shape.
+    pub fn find_gap_tile(&self, b: usize, d: usize) -> Option<&Artifact> {
+        self.artifacts.values().find(|a| {
+            a.meta.kind == ArtifactKind::GapTile && a.meta.b == b && a.meta.d == d
+        })
+    }
+
+    /// Execute a block dual step:
+    /// inputs `x[B,D], y[B], α[B], v[D]` + scalars `1/(λn)`, `σ`.
+    pub fn block_step(
+        &self,
+        art: &Artifact,
+        x: &[f32],
+        y: &[f32],
+        alpha: &[f32],
+        v: &[f32],
+        inv_lambda_n: f32,
+        sigma: f32,
+    ) -> anyhow::Result<BlockStepOut> {
+        let (b, d) = (art.meta.b, art.meta.d);
+        anyhow::ensure!(x.len() == b * d, "x shape");
+        anyhow::ensure!(y.len() == b && alpha.len() == b, "y/α shape");
+        anyhow::ensure!(v.len() == d, "v shape");
+        let lit_x = xla::Literal::vec1(x)
+            .reshape(&[b as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+        let lit_y = xla::Literal::vec1(y);
+        let lit_a = xla::Literal::vec1(alpha);
+        let lit_v = xla::Literal::vec1(v);
+        let lit_sc = xla::Literal::scalar(inv_lambda_n);
+        let lit_sg = xla::Literal::scalar(sigma);
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[lit_x, lit_y, lit_a, lit_v, lit_sc, lit_sg])
+            .map_err(|e| anyhow::anyhow!("execute block_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        Ok(BlockStepOut {
+            alpha_new: parts[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            eps: parts[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            delta_v: parts[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// Execute an objective tile: inputs `x[B,D], y[B], α[B], v[D]`.
+    pub fn gap_tile(
+        &self,
+        art: &Artifact,
+        x: &[f32],
+        y: &[f32],
+        alpha: &[f32],
+        v: &[f32],
+    ) -> anyhow::Result<GapTileOut> {
+        let (b, d) = (art.meta.b, art.meta.d);
+        anyhow::ensure!(x.len() == b * d && y.len() == b && alpha.len() == b && v.len() == d);
+        let lit_x = xla::Literal::vec1(x)
+            .reshape(&[b as i64, d as i64])
+            .map_err(|e| anyhow::anyhow!("reshape x: {e:?}"))?;
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&[
+                lit_x,
+                xla::Literal::vec1(y),
+                xla::Literal::vec1(alpha),
+                xla::Literal::vec1(v),
+            ])
+            .map_err(|e| anyhow::anyhow!("execute gap_tile: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 2, "expected 2 outputs");
+        Ok(GapTileOut {
+            hinge_sum: parts[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            dual_sum: parts[1].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+}
+
+impl Runtime {
+    /// Upload a host array to a device-resident buffer. Perf (§Perf
+    /// L2/L3 boundary): the dominant cost of a small `block_step` call
+    /// is host→device staging of the `B×D` tile; callers whose tiles
+    /// are static across calls (the block solver's X and y) upload them
+    /// once and use [`Runtime::block_step_buffered`].
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("upload: {e:?}"))
+    }
+
+    /// Block step with pre-uploaded `x`/`y` buffers; only `α`, `v` and
+    /// the scalars are staged per call.
+    pub fn block_step_buffered(
+        &self,
+        art: &Artifact,
+        x_buf: &xla::PjRtBuffer,
+        y_buf: &xla::PjRtBuffer,
+        alpha: &[f32],
+        v: &[f32],
+        inv_lambda_n: f32,
+        sigma: f32,
+    ) -> anyhow::Result<BlockStepOut> {
+        let (b, d) = (art.meta.b, art.meta.d);
+        anyhow::ensure!(alpha.len() == b && v.len() == d, "α/v shape");
+        let a_buf = self.upload(alpha, &[b])?;
+        let v_buf = self.upload(v, &[d])?;
+        let sc_buf = self.upload(&[inv_lambda_n], &[])?;
+        let sg_buf = self.upload(&[sigma], &[])?;
+        let result = art
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[x_buf, y_buf, &a_buf, &v_buf, &sc_buf, &sg_buf])
+            .map_err(|e| anyhow::anyhow!("execute_b block_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        Ok(BlockStepOut {
+            alpha_new: parts[0].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            eps: parts[1].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            delta_v: parts[2].to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// Gap tile with pre-uploaded `x`/`y` buffers.
+    pub fn gap_tile_buffered(
+        &self,
+        art: &Artifact,
+        x_buf: &xla::PjRtBuffer,
+        y_buf: &xla::PjRtBuffer,
+        alpha: &[f32],
+        v: &[f32],
+    ) -> anyhow::Result<GapTileOut> {
+        let (b, d) = (art.meta.b, art.meta.d);
+        anyhow::ensure!(alpha.len() == b && v.len() == d, "α/v shape");
+        let a_buf = self.upload(alpha, &[b])?;
+        let v_buf = self.upload(v, &[d])?;
+        let result = art
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[x_buf, y_buf, &a_buf, &v_buf])
+            .map_err(|e| anyhow::anyhow!("execute_b gap_tile: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 2, "expected 2 outputs");
+        Ok(GapTileOut {
+            hinge_sum: parts[0].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            dual_sum: parts[1].get_first_element::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+        })
+    }
+}
+
+/// Conventional artifacts directory (crate root / artifacts).
+pub fn default_artifacts_dir() -> PathBuf {
+    // CARGO_MANIFEST_DIR points at the crate root in tests/benches;
+    // fall back to ./artifacts for installed binaries.
+    if let Ok(dir) = std::env::var("HYBRID_DCA_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest_dir = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    Path::new(&manifest_dir).join("artifacts")
+}

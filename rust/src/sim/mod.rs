@@ -1,0 +1,223 @@
+//! Cluster simulation: virtual clock, compute/network cost model, and
+//! straggler (heterogeneity) profiles.
+//!
+//! **Why a virtual clock** (DESIGN.md §3): the paper's speedup and
+//! S/Γ experiments (Figs 4–6) measure wall time on a 16-node × 24-core
+//! cluster. This machine has one physical core, so real wall-clock
+//! measurements of the threaded run measure *serialization*, not the
+//! cluster. Instead, every worker carries a virtual timestamp advanced
+//! by a costed model of its work:
+//!
+//! * one coordinate update on point `i` costs
+//!   `cost_per_nnz · nnz(x_i)` seconds on its core, scaled by the
+//!   node's straggler multiplier;
+//! * a node's round compute time is the **max over its R cores** (cores
+//!   run in parallel within a node);
+//! * each point-to-point message costs `net_latency`; CoCoA+'s
+//!   all-reduce costs `2·net_latency·⌈log₂K + 1⌉` (tree reduction);
+//! * the master's merge happens at the max timestamp of the merged
+//!   updates (it had to wait for the last of them).
+//!
+//! The quantity this reproduces is exactly the queueing structure that
+//! drives the paper's results: bounded barrier `S` ⇒ the master waits
+//! for the S-th fastest worker instead of the slowest; bounded delay
+//! `Γ` ⇒ slow workers cannot fall arbitrarily far behind. Real wall
+//! time is *also* recorded in every trace for completeness.
+
+use crate::data::Dataset;
+
+/// Compute/network cost model (virtual seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Seconds per nonzero touched by one coordinate update. An update
+    /// reads `x_i` twice (dot + axpy); the constant absorbs that.
+    pub cost_per_nnz: f64,
+    /// Fixed latency per point-to-point message.
+    pub net_latency: f64,
+    /// Seconds per vector element transferred. The paper's messages are
+    /// whole `Δv ∈ R^d` / `v ∈ R^d` vectors (§5), so bandwidth matters:
+    /// for rcv1 (d = 47k) a message is ~376 KB ≈ 3 ms at 1 Gb/s, about
+    /// 0.2× the round compute — the default reproduces that ratio at
+    /// our scaled-down d.
+    pub net_per_elem: f64,
+}
+
+impl CostModel {
+    pub fn new(cost_per_nnz: f64, net_latency: f64, net_per_elem: f64) -> Self {
+        Self { cost_per_nnz, net_latency, net_per_elem }
+    }
+
+    /// Virtual cost of one coordinate update on data point `i`.
+    #[inline]
+    pub fn update_cost(&self, nnz: usize) -> f64 {
+        self.cost_per_nnz * nnz as f64
+    }
+
+    /// Cost of one point-to-point message carrying a d-vector.
+    #[inline]
+    pub fn msg_cost(&self, d: usize) -> f64 {
+        self.net_latency + self.net_per_elem * d as f64
+    }
+
+    /// Cost of a synchronous all-reduce of a d-vector across `k` nodes:
+    /// ring all-reduce — latency `2·⌈log₂k⌉` hops plus bandwidth
+    /// `2·d·(k−1)/k` element transfers (the standard MPI model).
+    pub fn allreduce_cost(&self, k: usize, d: usize) -> f64 {
+        if k <= 1 {
+            return 0.0;
+        }
+        let hops = (k as f64).log2().ceil().max(1.0);
+        2.0 * hops * self.net_latency
+            + 2.0 * d as f64 * self.net_per_elem * (k as f64 - 1.0) / k as f64
+    }
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self { cost_per_nnz: 1e-7, net_latency: 1e-4, net_per_elem: 1e-6 }
+    }
+}
+
+/// Per-update cost lookup table for one dataset (precomputed nnz).
+#[derive(Debug, Clone)]
+pub struct UpdateCosts {
+    costs: Vec<f64>,
+}
+
+impl UpdateCosts {
+    pub fn precompute(data: &Dataset, model: &CostModel) -> Self {
+        let costs = (0..data.n())
+            .map(|i| model.update_cost(data.x.row(i).nnz()))
+            .collect();
+        Self { costs }
+    }
+
+    #[inline]
+    pub fn cost(&self, i: usize) -> f64 {
+        self.costs[i]
+    }
+}
+
+/// Named heterogeneity profiles for the straggler experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StragglerProfile {
+    /// All nodes equal (the paper's Hornet cluster).
+    Homogeneous,
+    /// One node 4× slower (the classic straggler).
+    OneSlow,
+    /// Slowdowns ramp linearly from 1× to 3× across nodes.
+    LinearRamp,
+    /// Alternate 1× / 2× (half the fleet slow).
+    HalfSlow,
+}
+
+impl StragglerProfile {
+    pub fn parse(s: &str) -> Option<StragglerProfile> {
+        match s.to_ascii_lowercase().as_str() {
+            "homogeneous" | "none" => Some(StragglerProfile::Homogeneous),
+            "one-slow" | "oneslow" => Some(StragglerProfile::OneSlow),
+            "linear-ramp" | "ramp" => Some(StragglerProfile::LinearRamp),
+            "half-slow" | "halfslow" => Some(StragglerProfile::HalfSlow),
+            _ => None,
+        }
+    }
+
+    /// Expand to per-node multipliers.
+    pub fn multipliers(self, k: usize) -> Vec<f64> {
+        match self {
+            StragglerProfile::Homogeneous => vec![1.0; k],
+            StragglerProfile::OneSlow => {
+                let mut v = vec![1.0; k];
+                if k > 0 {
+                    v[k - 1] = 4.0;
+                }
+                v
+            }
+            StragglerProfile::LinearRamp => (0..k)
+                .map(|i| {
+                    if k <= 1 {
+                        1.0
+                    } else {
+                        1.0 + 2.0 * i as f64 / (k - 1) as f64
+                    }
+                })
+                .collect(),
+            StragglerProfile::HalfSlow => (0..k).map(|i| if i % 2 == 1 { 2.0 } else { 1.0 }).collect(),
+        }
+    }
+}
+
+/// Resolve config stragglers: explicit list wins, else homogeneous.
+pub fn resolve_stragglers(explicit: &[f64], k: usize) -> Vec<f64> {
+    if explicit.is_empty() {
+        vec![1.0; k]
+    } else {
+        assert_eq!(explicit.len(), k, "straggler list length");
+        explicit.to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::util::Rng;
+
+    #[test]
+    fn update_costs_scale_with_nnz() {
+        let m = CostModel::new(1e-6, 1e-3, 0.0);
+        assert!((m.update_cost(10) - 1e-5).abs() < 1e-18);
+        assert!(m.update_cost(100) > m.update_cost(10));
+    }
+
+    #[test]
+    fn msg_cost_scales_with_dimension() {
+        let m = CostModel::new(0.0, 1e-4, 1e-6);
+        assert!((m.msg_cost(0) - 1e-4).abs() < 1e-15);
+        assert!((m.msg_cost(1000) - (1e-4 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_grows_logarithmically() {
+        let m = CostModel::default();
+        let c2 = m.allreduce_cost(2, 100);
+        let c16 = m.allreduce_cost(16, 100);
+        assert!(c16 > c2);
+        assert!(c16 < 8.0 * c2, "log not linear");
+    }
+
+    #[test]
+    fn precomputed_costs_match() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let m = CostModel::default();
+        let u = UpdateCosts::precompute(&ds, &m);
+        for i in (0..ds.n()).step_by(17) {
+            assert_eq!(u.cost(i), m.update_cost(ds.x.row(i).nnz()));
+        }
+    }
+
+    #[test]
+    fn profiles() {
+        assert_eq!(StragglerProfile::Homogeneous.multipliers(3), vec![1.0, 1.0, 1.0]);
+        let one = StragglerProfile::OneSlow.multipliers(4);
+        assert_eq!(one, vec![1.0, 1.0, 1.0, 4.0]);
+        let ramp = StragglerProfile::LinearRamp.multipliers(3);
+        assert_eq!(ramp, vec![1.0, 2.0, 3.0]);
+        let half = StragglerProfile::HalfSlow.multipliers(4);
+        assert_eq!(half, vec![1.0, 2.0, 1.0, 2.0]);
+        assert_eq!(StragglerProfile::parse("ramp"), Some(StragglerProfile::LinearRamp));
+        assert_eq!(StragglerProfile::parse("x"), None);
+    }
+
+    #[test]
+    fn resolve_explicit_or_default() {
+        assert_eq!(resolve_stragglers(&[], 3), vec![1.0; 3]);
+        assert_eq!(resolve_stragglers(&[1.0, 2.0], 2), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "straggler list length")]
+    fn resolve_wrong_length_panics() {
+        resolve_stragglers(&[1.0], 3);
+    }
+}

@@ -1,0 +1,334 @@
+//! The asynchronous multi-core local subproblem solver — Algorithm 1's
+//! inner loop (lines 4–9), PassCoDe-style (Hsieh et al. 2015).
+//!
+//! A worker node owns a data partition `I_k`, logically divided into
+//! `R` disjoint shards `I_{k,r}`, one per core. During a round each
+//! core performs `H` stochastic coordinate updates on its shard:
+//!
+//! 1. pick a random `i ∈ I_{k,r}`;
+//! 2. read the margin `m = x_iᵀ v` from the node's **shared** `v`
+//!    (lock-free relaxed atomic loads — reads may be staler than γ
+//!    updates, Assumption 1);
+//! 3. solve the 1-D perturbed subproblem (Eq. 6) for the new `α_i`
+//!    (cores own their shard's α exclusively, so no synchronization);
+//! 4. apply `v ← v + (1/λn) ε x_i` with lock-free CAS adds
+//!    (or racy "wild" stores when configured).
+//!
+//! At the end of the round the worker computes `Δv = v − v_old`, sends
+//! it to the master, receives the merged `v`, and commits
+//! `α ← α + ν·δ` ([`LocalSolver::commit`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::sim::UpdateCosts;
+use crate::solver::StepParams;
+use crate::util::{AtomicF64Vec, Rng};
+
+/// Per-core shard: global indices plus the core-owned dual variables.
+#[derive(Debug)]
+pub struct CoreShard {
+    /// Global row ids owned by this core (I_{k,r}).
+    pub idx: Vec<usize>,
+    /// α at the start of the current round (committed values).
+    pub alpha_start: Vec<f64>,
+    /// Live α (= α_start + δ accumulated this round).
+    pub alpha_cur: Vec<f64>,
+    /// Independent RNG stream for this core.
+    pub rng: Rng,
+}
+
+impl CoreShard {
+    fn new(idx: Vec<usize>, rng: Rng) -> Self {
+        let n = idx.len();
+        Self { idx, alpha_start: vec![0.0; n], alpha_cur: vec![0.0; n], rng }
+    }
+}
+
+/// Statistics from one local round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundStats {
+    /// Coordinate updates applied (= R · H).
+    pub updates: u64,
+    /// Virtual compute seconds per core (caller takes the max for the
+    /// node's round time — cores run in parallel on a real node).
+    pub core_secs: Vec<f64>,
+}
+
+impl RoundStats {
+    /// Node round time = slowest core.
+    pub fn node_secs(&self) -> f64 {
+        self.core_secs.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// The per-node local solver state.
+pub struct LocalSolver {
+    pub shards: Vec<CoreShard>,
+    /// The node's shared primal estimate `v` (atomic, lock-free).
+    pub v: AtomicF64Vec,
+    params: StepParams,
+    wild: bool,
+}
+
+impl LocalSolver {
+    /// Build from per-core index cells (the node's slice of a
+    /// [`Partition`](crate::data::Partition)).
+    pub fn new(
+        cells: Vec<Vec<usize>>,
+        dim: usize,
+        params: StepParams,
+        wild: bool,
+        rng: &mut Rng,
+    ) -> Self {
+        let shards = cells.into_iter().map(|idx| CoreShard::new(idx, rng.fork())).collect();
+        Self { shards, v: AtomicF64Vec::zeros(dim), params, wild }
+    }
+
+    pub fn r_cores(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Update σ (used when ablations change σ between phases).
+    pub fn set_sigma(&mut self, sigma: f64) {
+        self.params.sigma = sigma;
+    }
+
+    /// Run one round: every core performs `h` asynchronous updates.
+    /// Cores run as real OS threads when `R > 1` (exercising the atomic
+    /// races), or inline when `R == 1`.
+    pub fn run_round(
+        &mut self,
+        data: &Dataset,
+        loss: &dyn Loss,
+        norms: &[f64],
+        costs: &UpdateCosts,
+        h: usize,
+    ) -> RoundStats {
+        let params = self.params;
+        // Perf (§Perf L3): with a single core-thread there are no
+        // concurrent writers, so the racy load+store path is *exact*
+        // and saves the CAS (lock cmpxchg) on every touched nonzero —
+        // this is the hot path of Baseline, CoCoA+, and every R=1 node.
+        let wild = self.wild || self.shards.len() == 1;
+        let v = &self.v;
+        let updates = AtomicU64::new(0);
+        let mut core_secs = vec![0.0; self.shards.len()];
+        if self.shards.len() == 1 {
+            let secs = run_core(
+                &mut self.shards[0],
+                data,
+                loss,
+                norms,
+                costs,
+                v,
+                &params,
+                wild,
+                h,
+                &updates,
+            );
+            core_secs[0] = secs;
+        } else {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for shard in self.shards.iter_mut() {
+                    let updates = &updates;
+                    handles.push(scope.spawn(move || {
+                        run_core(shard, data, loss, norms, costs, v, &params, wild, h, updates)
+                    }));
+                }
+                for (r, hnd) in handles.into_iter().enumerate() {
+                    core_secs[r] = hnd.join().expect("core thread panicked");
+                }
+            });
+        }
+        RoundStats { updates: updates.load(Ordering::Relaxed), core_secs }
+    }
+
+    /// Commit the round: `α ← α_start + ν·δ` (Algorithm 1 line 12) and
+    /// reset the round baseline.
+    pub fn commit(&mut self, nu: f64) {
+        for shard in self.shards.iter_mut() {
+            for j in 0..shard.idx.len() {
+                let delta = shard.alpha_cur[j] - shard.alpha_start[j];
+                let committed = shard.alpha_start[j] + nu * delta;
+                shard.alpha_start[j] = committed;
+                shard.alpha_cur[j] = committed;
+            }
+        }
+    }
+
+    /// Scatter this node's committed α into a global dense vector.
+    pub fn scatter_alpha(&self, global: &mut [f64]) {
+        for shard in &self.shards {
+            for (j, &i) in shard.idx.iter().enumerate() {
+                global[i] = shard.alpha_start[j];
+            }
+        }
+    }
+
+    /// Total µ-partition size (n_k).
+    pub fn n_local(&self) -> usize {
+        self.shards.iter().map(|s| s.idx.len()).sum()
+    }
+}
+
+/// One core's H updates. Returns virtual compute seconds.
+#[allow(clippy::too_many_arguments)]
+fn run_core(
+    shard: &mut CoreShard,
+    data: &Dataset,
+    loss: &dyn Loss,
+    norms: &[f64],
+    costs: &UpdateCosts,
+    v: &AtomicF64Vec,
+    params: &StepParams,
+    wild: bool,
+    h: usize,
+    updates: &AtomicU64,
+) -> f64 {
+    let mut secs = 0.0;
+    let len = shard.idx.len();
+    if len == 0 {
+        return 0.0;
+    }
+    // In-round updates enter the live v at σ·(1/λn): the subproblem
+    // Q_k^σ penalizes the accumulated δ through (λσ/2)‖(1/λn)Xδ‖², so
+    // its margin gradient is x_iᵀ(v_frozen + (σ/λn)Xδ). (The paper's
+    // Algorithm 1 line 9 writes the unscaled update; solving the stated
+    // subproblem — as Ma et al.'s LocalSDCA does — requires the σ
+    // factor, and without it the ν-weighted merge oscillates. Δv is
+    // un-scaled back to (1/λn)Xδ before sending; see the worker.)
+    let v_scale = params.v_scale() * params.sigma;
+    for _ in 0..h {
+        let j = shard.rng.next_below(len);
+        // SAFETY: partition validation guarantees idx entries < n.
+        let i = unsafe { *shard.idx.get_unchecked(j) };
+        let row = unsafe { data.x.row_unchecked(i) };
+        let ns = unsafe { *norms.get_unchecked(i) };
+        if ns == 0.0 {
+            continue;
+        }
+        let m = v.sparse_dot(row.indices, row.values);
+        let y = unsafe { *data.y.get_unchecked(i) };
+        let q = params.q(ns);
+        let a_old = unsafe { *shard.alpha_cur.get_unchecked(j) };
+        let a_new = loss.coordinate_step(a_old, y, m, q);
+        let eps = a_new - a_old;
+        if eps != 0.0 {
+            shard.alpha_cur[j] = a_new;
+            if wild {
+                v.sparse_axpy_wild(eps * v_scale, row.indices, row.values);
+            } else {
+                v.sparse_axpy(eps * v_scale, row.indices, row.values);
+            }
+        }
+        secs += costs.cost(i);
+    }
+    updates.fetch_add(h as u64, Ordering::Relaxed);
+    secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::loss::Hinge;
+    use crate::metrics::{dual_objective, exact_v};
+    use crate::sim::CostModel;
+
+    fn setup(r: usize) -> (Dataset, LocalSolver, Vec<f64>, UpdateCosts) {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let n = ds.n();
+        let mut rng = Rng::new(2);
+        let part = crate::data::Partition::build(n, 1, r, crate::data::Strategy::Contiguous, &mut rng);
+        let params = StepParams { lambda: 1e-2, n, sigma: 1.0 };
+        let solver = LocalSolver::new(part.parts[0].clone(), ds.d(), params, false, &mut rng);
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        (ds, solver, norms, costs)
+    }
+
+    #[test]
+    fn single_core_round_makes_progress() {
+        let (ds, mut s, norms, costs) = setup(1);
+        let stats = s.run_round(&ds, &Hinge, &norms, &costs, 500);
+        assert_eq!(stats.updates, 500);
+        s.commit(1.0);
+        let mut alpha = vec![0.0; ds.n()];
+        s.scatter_alpha(&mut alpha);
+        let v = exact_v(&ds, &alpha, 1e-2);
+        let d = dual_objective(&ds, &Hinge, &alpha, &v, 1e-2);
+        assert!(d > 0.0, "dual did not improve: {d}");
+    }
+
+    #[test]
+    fn multi_core_v_consistency_after_commit_nu1() {
+        // With ν = 1 the committed α must reproduce the live v exactly
+        // (atomic adds lose nothing).
+        let (ds, mut s, norms, costs) = setup(4);
+        for _ in 0..3 {
+            s.run_round(&ds, &Hinge, &norms, &costs, 200);
+            s.commit(1.0);
+        }
+        let mut alpha = vec![0.0; ds.n()];
+        s.scatter_alpha(&mut alpha);
+        let v_exact = exact_v(&ds, &alpha, 1e-2);
+        let v_live = s.v.snapshot();
+        for (a, b) in v_live.iter().zip(v_exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "v drift: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn commit_scales_delta_by_nu() {
+        let (ds, mut s, norms, costs) = setup(1);
+        s.run_round(&ds, &Hinge, &norms, &costs, 100);
+        // Capture live alphas before commit.
+        let live: Vec<f64> = s.shards[0].alpha_cur.clone();
+        s.commit(0.5);
+        for (j, &committed) in s.shards[0].alpha_start.iter().enumerate() {
+            let expected = 0.5 * live[j]; // started from 0
+            assert!((committed - expected).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn node_secs_is_max_core() {
+        let stats = RoundStats { updates: 10, core_secs: vec![1.0, 3.0, 2.0] };
+        assert_eq!(stats.node_secs(), 3.0);
+    }
+
+    #[test]
+    fn wild_mode_still_converges_roughly() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(3));
+        let n = ds.n();
+        let mut rng = Rng::new(4);
+        let part =
+            crate::data::Partition::build(n, 1, 4, crate::data::Strategy::Contiguous, &mut rng);
+        let params = StepParams { lambda: 1e-2, n, sigma: 1.0 };
+        let mut s = LocalSolver::new(part.parts[0].clone(), ds.d(), params, true, &mut rng);
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        for _ in 0..5 {
+            s.run_round(&ds, &Hinge, &norms, &costs, 500);
+            s.commit(1.0);
+            // Resync live v from committed α (wild mode drifts).
+            let mut alpha = vec![0.0; n];
+            s.scatter_alpha(&mut alpha);
+            s.v.copy_from(&exact_v(&ds, &alpha, 1e-2));
+        }
+        let mut alpha = vec![0.0; n];
+        s.scatter_alpha(&mut alpha);
+        let v = exact_v(&ds, &alpha, 1e-2);
+        let o = crate::metrics::objectives(&ds, &Hinge, &alpha, &v, 1e-2);
+        assert!(o.gap < 0.5, "wild diverged: gap {}", o.gap);
+    }
+
+    #[test]
+    fn n_local_counts() {
+        let (_, s, _, _) = setup(3);
+        assert_eq!(s.n_local(), 200);
+    }
+}

@@ -1,0 +1,94 @@
+//! Dual coordinate ascent solvers.
+//!
+//! * [`sdca`] — sequential stochastic DCA (Hsieh et al. 2008), the
+//!   paper's *Baseline*.
+//! * [`local`] — the multi-core asynchronous local subproblem solver
+//!   each worker node runs (Algorithm 1's inner loop; PassCoDe-style
+//!   lock-free atomics).
+//! * [`block`] — block (mini-batch locally-sequential) dual step, the
+//!   Rust oracle for the L1/L2 XLA path (see DESIGN.md
+//!   §Hardware-Adaptation).
+
+pub mod block;
+pub mod local;
+pub mod sdca;
+pub mod xla_dense;
+
+use crate::loss::Loss;
+
+/// Parameters of the per-coordinate subproblem step shared by all
+/// solvers.
+///
+/// The single-variable maximization (paper Eq. 6) is
+/// `argmax_ε  −φ*(−(α_i+ε)) − m·ε − (q/2)ε²` with margin `m = x_iᵀu`
+/// and curvature `q = σ·‖x_i‖² / (λn)`; `σ = 1` recovers the exact
+/// (unperturbed) dual used by the sequential baseline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepParams {
+    pub lambda: f64,
+    /// Global number of data points `n` (the dual is scaled by 1/n
+    /// globally, even for local subproblems — paper Eq. 4).
+    pub n: usize,
+    /// Subproblem scaling σ (Eq. 5; `ν·S` for Hybrid-DCA).
+    pub sigma: f64,
+}
+
+impl StepParams {
+    /// Curvature `q_i` for a data point with squared norm `‖x_i‖²`.
+    #[inline(always)]
+    pub fn q(&self, norm_sq: f64) -> f64 {
+        self.sigma * norm_sq / (self.lambda * self.n as f64)
+    }
+
+    /// Scale factor applied to `ε·x_i` when updating `v = (1/λn)Xα`.
+    #[inline(always)]
+    pub fn v_scale(&self) -> f64 {
+        1.0 / (self.lambda * self.n as f64)
+    }
+}
+
+/// One exact coordinate step against a dense `v`; returns `ε` (the
+/// dual increment) and applies nothing. Shared helper for the
+/// sequential paths.
+#[inline]
+pub fn coordinate_epsilon(
+    loss: &dyn Loss,
+    alpha_i: f64,
+    y_i: f64,
+    margin: f64,
+    norm_sq: f64,
+    params: &StepParams,
+) -> f64 {
+    if norm_sq == 0.0 {
+        return 0.0; // empty row: no step possible
+    }
+    let q = params.q(norm_sq);
+    loss.coordinate_step(alpha_i, y_i, margin, q) - alpha_i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::Hinge;
+
+    #[test]
+    fn q_and_scale() {
+        let p = StepParams { lambda: 0.1, n: 100, sigma: 2.0 };
+        assert!((p.q(1.0) - 2.0 / 10.0).abs() < 1e-15);
+        assert!((p.v_scale() - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn epsilon_zero_for_empty_row() {
+        let p = StepParams { lambda: 0.1, n: 10, sigma: 1.0 };
+        assert_eq!(coordinate_epsilon(&Hinge, 0.0, 1.0, 0.0, 0.0, &p), 0.0);
+    }
+
+    #[test]
+    fn epsilon_moves_toward_bound() {
+        let p = StepParams { lambda: 0.1, n: 10, sigma: 1.0 };
+        // margin 0 ⇒ hinge step to the cap a=1.
+        let eps = coordinate_epsilon(&Hinge, 0.0, 1.0, 0.0, 1.0, &p);
+        assert!(eps > 0.0 && eps <= 1.0);
+    }
+}

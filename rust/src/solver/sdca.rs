@@ -1,0 +1,175 @@
+//! Sequential stochastic dual coordinate ascent — the paper's
+//! *Baseline* (an implementation of DCA, Hsieh et al. 2008).
+//!
+//! One "round" = `H` coordinate updates (Figure 3 top row counts one
+//! round of Baseline as `H` local updates), after which the caller may
+//! evaluate objectives. The dual objective is non-decreasing under
+//! exact steps — a property test relies on this.
+
+use crate::data::Dataset;
+use crate::loss::Loss;
+use crate::sim::UpdateCosts;
+use crate::solver::{coordinate_epsilon, StepParams};
+use crate::util::Rng;
+
+/// Sequential solver state.
+pub struct Sdca<'d> {
+    pub data: &'d Dataset,
+    pub alpha: Vec<f64>,
+    /// Dense `v = (1/λn) X α`, maintained incrementally.
+    pub v: Vec<f64>,
+    norms: Vec<f64>,
+    params: StepParams,
+    rng: Rng,
+    /// Cumulative coordinate updates applied.
+    pub updates: u64,
+    /// Cumulative virtual compute seconds.
+    pub virt_secs: f64,
+    costs: UpdateCosts,
+}
+
+impl<'d> Sdca<'d> {
+    pub fn new(
+        data: &'d Dataset,
+        lambda: f64,
+        rng: Rng,
+        cost_model: &crate::sim::CostModel,
+    ) -> Self {
+        let params = StepParams { lambda, n: data.n(), sigma: 1.0 };
+        Self {
+            alpha: vec![0.0; data.n()],
+            v: vec![0.0; data.d()],
+            norms: data.x.row_norms_sq(),
+            params,
+            rng,
+            updates: 0,
+            virt_secs: 0.0,
+            costs: UpdateCosts::precompute(data, cost_model),
+            data,
+        }
+    }
+
+    /// Apply one exact coordinate update at a random index.
+    #[inline]
+    pub fn step(&mut self, loss: &dyn Loss) {
+        let i = self.rng.next_below(self.data.n());
+        self.step_at(loss, i);
+    }
+
+    /// Apply one exact coordinate update at index `i`.
+    #[inline]
+    pub fn step_at(&mut self, loss: &dyn Loss, i: usize) {
+        let row = self.data.x.row(i);
+        let m = row.dot_dense(&self.v);
+        let eps = coordinate_epsilon(loss, self.alpha[i], self.data.y[i], m, self.norms[i], &self.params);
+        if eps != 0.0 {
+            self.alpha[i] += eps;
+            let scale = eps * self.params.v_scale();
+            for (&j, &x) in row.indices.iter().zip(row.values.iter()) {
+                self.v[j as usize] += scale * x;
+            }
+        }
+        self.updates += 1;
+        self.virt_secs += self.costs.cost(i);
+    }
+
+    /// Run `h` updates (one Baseline "round").
+    pub fn run_round(&mut self, loss: &dyn Loss, h: usize) {
+        for _ in 0..h {
+            self.step(loss);
+        }
+    }
+
+    /// Current objectives measured against the maintained `v`.
+    pub fn objectives(&self, loss: &dyn Loss) -> crate::metrics::Objectives {
+        crate::metrics::objectives(self.data, loss, &self.alpha, &self.v, self.params.lambda)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::loss::{Hinge, Logistic, SquaredHinge};
+    use crate::metrics::exact_v;
+    use crate::sim::CostModel;
+
+    fn solver(data: &Dataset, lambda: f64) -> Sdca<'_> {
+        Sdca::new(data, lambda, Rng::new(123), &CostModel::default())
+    }
+
+    #[test]
+    fn dual_objective_never_decreases() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let mut s = solver(&ds, 1e-2);
+        let loss = Hinge;
+        let mut prev = s.objectives(&loss).dual;
+        for _ in 0..20 {
+            s.run_round(&loss, 50);
+            let d = s.objectives(&loss).dual;
+            assert!(d >= prev - 1e-12, "dual decreased {prev} -> {d}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn v_stays_consistent_with_alpha() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(2));
+        let mut s = solver(&ds, 1e-2);
+        s.run_round(&Hinge, 500);
+        let v_exact = exact_v(&ds, &s.alpha, 1e-2);
+        for (a, b) in s.v.iter().zip(v_exact.iter()) {
+            assert!((a - b).abs() < 1e-9, "drift {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn converges_on_tiny() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(3));
+        let mut s = solver(&ds, 1e-2);
+        let loss = Hinge;
+        for _ in 0..100 {
+            s.run_round(&loss, 200);
+            if s.objectives(&loss).gap < 1e-6 {
+                return;
+            }
+        }
+        panic!("did not reach gap 1e-6: {}", s.objectives(&loss).gap);
+    }
+
+    #[test]
+    fn converges_smooth_losses() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(4));
+        for loss in [&SquaredHinge as &dyn Loss, &Logistic::default() as &dyn Loss] {
+            let mut s = solver(&ds, 1e-2);
+            for _ in 0..150 {
+                s.run_round(loss, 200);
+                if s.objectives(loss).gap < 1e-5 {
+                    break;
+                }
+            }
+            let gap = s.objectives(loss).gap;
+            assert!(gap < 1e-5, "{}: gap {gap}", loss.name());
+        }
+    }
+
+    #[test]
+    fn counters_advance() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(5));
+        let mut s = solver(&ds, 1e-2);
+        s.run_round(&Hinge, 10);
+        assert_eq!(s.updates, 10);
+        assert!(s.virt_secs > 0.0);
+    }
+
+    #[test]
+    fn alpha_stays_feasible() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(6));
+        let mut s = solver(&ds, 1e-3);
+        let loss = Hinge;
+        s.run_round(&loss, 1000);
+        for (i, &a) in s.alpha.iter().enumerate() {
+            assert!(loss.feasible(a, ds.y[i]), "α[{i}]={a} infeasible");
+        }
+    }
+}

@@ -1,0 +1,238 @@
+//! Lock-free shared `f64` vector — the heart of the PassCoDe-style local
+//! solver (paper §3.1, Algorithm 1 line 9).
+//!
+//! The paper maintains the shared primal estimate `v ∈ R^d` in each node's
+//! shared memory and has every core-thread apply
+//! `v ← v + (1/λn) ε x_i` with *atomic memory operations instead of
+//! costly locks* (Hsieh et al. 2015). Rust has no `AtomicF64`; we store
+//! the bits in `AtomicU64` and implement `fetch_add` as a CAS loop.
+//!
+//! Two write modes mirror the paper's discussion:
+//!
+//! * [`AtomicF64Vec::add`] — the lock-free *atomic* mode: a
+//!   compare-exchange loop that never loses an update (PassCoDe-Atomic).
+//! * [`AtomicF64Vec::add_wild`] — the *wild* mode (PassCoDe-Wild): a
+//!   racy read-modify-write expressed as relaxed load + relaxed store.
+//!   Concurrent writers may overwrite each other; the paper shows the
+//!   algorithm still converges to a nearby solution. (In Rust we must
+//!   still use atomic instructions to avoid UB — what is "wild" is the
+//!   loss of read-modify-write atomicity, which is exactly the race the
+//!   paper describes.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fixed-size vector of `f64` supporting concurrent lock-free updates.
+pub struct AtomicF64Vec {
+    data: Vec<AtomicU64>,
+}
+
+impl AtomicF64Vec {
+    /// Zero-initialized vector of length `len`.
+    pub fn zeros(len: usize) -> Self {
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(AtomicU64::new(0f64.to_bits()));
+        }
+        Self { data }
+    }
+
+    /// Build from an existing slice.
+    pub fn from_slice(xs: &[f64]) -> Self {
+        Self {
+            data: xs.iter().map(|&x| AtomicU64::new(x.to_bits())).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Relaxed atomic load of one element. Relaxed is sufficient: the
+    /// algorithm tolerates bounded-staleness reads by design
+    /// (Assumption 1, bounded delay γ).
+    #[inline(always)]
+    pub fn load(&self, i: usize) -> f64 {
+        f64::from_bits(self.data[i].load(Ordering::Relaxed))
+    }
+
+    /// Lock-free `v[i] += delta` via CAS loop (never loses an update).
+    #[inline(always)]
+    pub fn add(&self, i: usize, delta: f64) {
+        let cell = &self.data[i];
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Racy "wild" add: relaxed load + independent relaxed store.
+    /// Concurrent adds to the same index may be lost (but never torn).
+    #[inline(always)]
+    pub fn add_wild(&self, i: usize, delta: f64) {
+        let cell = &self.data[i];
+        let cur = f64::from_bits(cell.load(Ordering::Relaxed));
+        cell.store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomic store.
+    #[inline]
+    pub fn store(&self, i: usize, value: f64) {
+        self.data[i].store(value.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Snapshot the whole vector into a `Vec<f64>`. Not linearizable
+    /// across elements — callers use this only at quiescent points
+    /// (between rounds), matching the algorithm's barrier semantics.
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.data
+            .iter()
+            .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Overwrite the whole vector from a slice (quiescent points only).
+    pub fn copy_from(&self, xs: &[f64]) {
+        assert_eq!(xs.len(), self.data.len());
+        for (c, &x) in self.data.iter().zip(xs) {
+            c.store(x.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Set every element to zero.
+    pub fn fill_zero(&self) {
+        let z = 0f64.to_bits();
+        for c in &self.data {
+            c.store(z, Ordering::Relaxed);
+        }
+    }
+
+    /// Sparse dot product `Σ_j vals[j] * v[idx[j]]` with relaxed loads.
+    /// This is the hot read in the coordinate step: `x_iᵀ v`.
+    #[inline]
+    pub fn sparse_dot(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        debug_assert_eq!(idx.len(), vals.len());
+        let mut acc = 0.0;
+        for (&j, &x) in idx.iter().zip(vals.iter()) {
+            acc += x * self.load(j as usize);
+        }
+        acc
+    }
+
+    /// Sparse axpy `v[idx[j]] += a * vals[j]` using the CAS add.
+    #[inline]
+    pub fn sparse_axpy(&self, a: f64, idx: &[u32], vals: &[f64]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        for (&j, &x) in idx.iter().zip(vals.iter()) {
+            self.add(j as usize, a * x);
+        }
+    }
+
+    /// Sparse axpy in wild (racy) mode.
+    #[inline]
+    pub fn sparse_axpy_wild(&self, a: f64, idx: &[u32], vals: &[f64]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        for (&j, &x) in idx.iter().zip(vals.iter()) {
+            self.add_wild(j as usize, a * x);
+        }
+    }
+}
+
+impl std::fmt::Debug for AtomicF64Vec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicF64Vec(len={})", self.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn basic_ops() {
+        let v = AtomicF64Vec::zeros(4);
+        v.add(0, 1.5);
+        v.add(0, 2.5);
+        v.store(1, -3.0);
+        assert_eq!(v.load(0), 4.0);
+        assert_eq!(v.load(1), -3.0);
+        assert_eq!(v.snapshot(), vec![4.0, -3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_slice_and_copy_from() {
+        let v = AtomicF64Vec::from_slice(&[1.0, 2.0]);
+        assert_eq!(v.snapshot(), vec![1.0, 2.0]);
+        v.copy_from(&[5.0, 6.0]);
+        assert_eq!(v.snapshot(), vec![5.0, 6.0]);
+        v.fill_zero();
+        assert_eq!(v.snapshot(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_ops() {
+        let v = AtomicF64Vec::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let idx = [0u32, 2];
+        let vals = [10.0, 100.0];
+        assert_eq!(v.sparse_dot(&idx, &vals), 10.0 + 300.0);
+        v.sparse_axpy(2.0, &idx, &vals);
+        assert_eq!(v.snapshot(), vec![21.0, 2.0, 203.0, 4.0]);
+    }
+
+    /// The core guarantee: concurrent CAS adds lose nothing, matching the
+    /// serial sum exactly in the absence of rounding ambiguity (we use
+    /// integers stored as f64 so fp addition is exact).
+    #[test]
+    fn concurrent_adds_sum_exactly() {
+        let v = Arc::new(AtomicF64Vec::zeros(8));
+        let threads = 4;
+        let per_thread = 10_000;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let v = Arc::clone(&v);
+                std::thread::spawn(move || {
+                    for k in 0..per_thread {
+                        v.add(k % 8, 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: f64 = v.snapshot().iter().sum();
+        assert_eq!(total, (threads * per_thread) as f64);
+    }
+
+    /// Wild mode may lose updates under contention but must never tear:
+    /// every observed value is a valid partial sum (an integer here).
+    #[test]
+    fn wild_adds_no_tearing() {
+        let v = Arc::new(AtomicF64Vec::zeros(1));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let v = Arc::clone(&v);
+                std::thread::spawn(move || {
+                    for _ in 0..5_000 {
+                        v.add_wild(0, 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let x = v.load(0);
+        assert!(x > 0.0 && x <= 20_000.0 && x.fract() == 0.0, "x={x}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! deterministic RNG, lock-free atomic f64 vectors, timers/statistics,
+//! a leveled logger, and a miniature property-testing framework.
+
+pub mod atomic_vec;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use atomic_vec::AtomicF64Vec;
+pub use rng::Rng;
+pub use timer::{measure, Stats, Stopwatch};
+
+/// Dense dot product (used on snapshots / dense vectors).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum()
+}
+
+/// `y += a * x` over dense slices.
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// Clamp helper matching the paper's projection `clip(a, 0, 1)`.
+#[inline]
+pub fn clip(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_linalg() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert_eq!(norm_sq(&a), 14.0);
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(&mut y, 2.0, &a);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn clip_bounds() {
+        assert_eq!(clip(-0.5, 0.0, 1.0), 0.0);
+        assert_eq!(clip(0.5, 0.0, 1.0), 0.5);
+        assert_eq!(clip(1.5, 0.0, 1.0), 1.0);
+    }
+}

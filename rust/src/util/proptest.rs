@@ -1,0 +1,165 @@
+//! A miniature property-based testing framework (the `proptest` crate is
+//! unavailable offline). It supports:
+//!
+//! * random case generation from a deterministic [`Rng`](super::rng::Rng),
+//! * configurable case counts via `HYBRID_DCA_PROPTEST_CASES`,
+//! * greedy shrinking of failing inputs through a user-supplied shrinker,
+//! * replayable failures (the failing seed is printed).
+//!
+//! Usage:
+//! ```ignore
+//! check("partition covers", 256, gen, shrink, |case| { ...; Ok(()) });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Number of cases to run (env-overridable).
+pub fn default_cases(fallback: usize) -> usize {
+    std::env::var("HYBRID_DCA_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(fallback)
+}
+
+/// Run `prop` against `cases` random inputs drawn by `gen`. On failure,
+/// repeatedly apply `shrink` (which proposes a list of smaller candidate
+/// inputs) keeping any candidate that still fails, then panic with the
+/// minimal reproduction.
+pub fn check<T, G, S, P>(name: &str, cases: usize, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> PropResult,
+{
+    let seed = std::env::var("HYBRID_DCA_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    let mut rng = Rng::new(seed);
+    for case_idx in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case {case_idx}/{cases}):\n  \
+                 minimal input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience shrinker for a `Vec<T>`: tries removing halves, then
+/// single elements, then shrinking individual elements.
+pub fn shrink_vec<T: Clone>(xs: &[T], shrink_elem: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 0 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+        if n > 1 {
+            for i in 0..n.min(8) {
+                let mut v = xs.to_vec();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        for i in 0..n.min(8) {
+            for e in shrink_elem(&xs[i]) {
+                let mut v = xs.to_vec();
+                v[i] = e;
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+/// Shrink a usize towards zero.
+pub fn shrink_usize(x: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(0);
+        out.push(x / 2);
+        out.push(x - 1);
+        out.dedup();
+    }
+    out
+}
+
+/// Shrink an f64 towards 0 and ±1.
+pub fn shrink_f64(x: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    if x != 0.0 {
+        out.push(0.0);
+        out.push(x / 2.0);
+        if x.abs() > 1.0 {
+            out.push(x.signum());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check(
+            "always true",
+            64,
+            |r| r.next_below(100),
+            |_| vec![],
+            |_| {
+                **counter.borrow_mut() += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 0")]
+    fn failing_property_shrinks_to_minimum() {
+        // Property "x > 0" fails for any x; shrinker drives it to 0.
+        check(
+            "x > 0",
+            16,
+            |r| r.next_below(1000) + 1,
+            |&x| shrink_usize(x),
+            |&x| if x > usize::MAX - 1 { Ok(()) } else { Err(format!("x={x} not huge")) },
+        );
+    }
+
+    #[test]
+    fn shrink_helpers() {
+        assert!(shrink_usize(0).is_empty());
+        assert_eq!(shrink_usize(10)[0], 0);
+        assert!(shrink_f64(0.0).is_empty());
+        assert!(shrink_f64(8.0).contains(&4.0));
+        let v = shrink_vec(&[1, 2, 3, 4], |&e| shrink_usize(e));
+        assert!(v.iter().any(|c| c.len() == 2));
+    }
+}

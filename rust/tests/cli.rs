@@ -1,0 +1,180 @@
+//! CLI smoke tests: run the built binary end-to-end (train, gen-data,
+//! stats) through a subprocess, checking output and exit codes.
+
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_hybrid-dca")
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin()).args(args).output().expect("spawn binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_and_usage() {
+    let (stdout, _, ok) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("Subcommands"));
+    let (stdout, _, ok) = run(&["help"]);
+    assert!(ok);
+    assert!(stdout.contains("train"));
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn train_hybrid_tiny() {
+    let (stdout, stderr, ok) = run(&[
+        "train",
+        "--algo",
+        "hybrid",
+        "--dataset",
+        "tiny",
+        "--lambda",
+        "0.01",
+        "--nodes",
+        "3",
+        "--cores",
+        "2",
+        "--s",
+        "2",
+        "--gamma",
+        "2",
+        "--h",
+        "128",
+        "--rounds",
+        "20",
+        "--threshold",
+        "1e-3",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("Hybrid-DCA on tiny"), "{stdout}");
+    assert!(stdout.contains("# finished"), "{stdout}");
+}
+
+#[test]
+fn train_all_algorithms_quick() {
+    for algo in ["baseline", "cocoa+", "passcode"] {
+        let (stdout, stderr, ok) = run(&[
+            "train", "--algo", algo, "--dataset", "tiny", "--lambda", "0.01", "--nodes", "2",
+            "--cores", "2", "--h", "64", "--rounds", "5", "--threshold", "1e-9",
+        ]);
+        assert!(ok, "{algo} failed: {stderr}");
+        assert!(stdout.contains("# finished"), "{algo}: {stdout}");
+    }
+}
+
+#[test]
+fn train_writes_csv() {
+    let csv = std::env::temp_dir().join("hybrid_dca_cli_trace.csv");
+    let csv_s = csv.to_str().unwrap();
+    let (_, stderr, ok) = run(&[
+        "train", "--dataset", "tiny", "--lambda", "0.01", "--h", "64", "--rounds", "3",
+        "--threshold", "1e-9", "--csv", csv_s,
+    ]);
+    assert!(ok, "{stderr}");
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.starts_with("label,round"));
+    assert!(content.lines().count() >= 3);
+    std::fs::remove_file(&csv).ok();
+}
+
+#[test]
+fn gen_data_and_stats_roundtrip() {
+    let path = std::env::temp_dir().join("hybrid_dca_cli_gen.svm");
+    let path_s = path.to_str().unwrap();
+    let (stdout, stderr, ok) = run(&["gen-data", "--preset", "tiny", "--out", path_s]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("wrote"));
+    let (stdout, stderr, ok) = run(&["stats", "--data", path_s]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("dataset"));
+    // Train on the generated file.
+    let (stdout, stderr, ok) = run(&[
+        "train", "--data", path_s, "--lambda", "0.01", "--h", "64", "--rounds", "5",
+        "--threshold", "1e-9",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("# finished"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stats_all_presets() {
+    let (stdout, stderr, ok) = run(&["stats", "--preset", "tiny"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("tiny"));
+}
+
+#[test]
+fn bad_flags_rejected() {
+    let (_, stderr, ok) = run(&["train", "--algo", "bogus"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown --algo"), "{stderr}");
+    let (_, stderr, ok) = run(&["train", "--nodes", "0"]);
+    assert!(!ok, "{stderr}");
+    let (_, stderr, ok) = run(&["train", "--bogus-flag", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag"), "{stderr}");
+}
+
+#[test]
+fn straggler_profile_flag() {
+    let (stdout, stderr, ok) = run(&[
+        "train", "--dataset", "tiny", "--lambda", "0.01", "--nodes", "3", "--s", "2",
+        "--stragglers", "one-slow", "--h", "64", "--rounds", "5", "--threshold", "1e-9",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("# finished"));
+}
+
+#[test]
+fn artifacts_subcommand() {
+    let dir = hybrid_dca::runtime::default_artifacts_dir();
+    if hybrid_dca::runtime::Runtime::available(&dir) {
+        let (stdout, stderr, ok) = run(&["artifacts"]);
+        assert!(ok, "{stderr}");
+        assert!(stdout.contains("block_step"), "{stdout}");
+    } else {
+        let (_, stderr, ok) = run(&["artifacts"]);
+        assert!(!ok);
+        assert!(stderr.contains("make artifacts"), "{stderr}");
+    }
+}
+
+#[test]
+fn train_from_config_file() {
+    let path = std::env::temp_dir().join("hybrid_dca_cli_cfg.toml");
+    std::fs::write(
+        &path,
+        "dataset = \"tiny\"\nlambda = 0.01\n[cluster]\nk = 2\nr = 2\n[master]\ns = 2\ngamma = 1\n\
+         [solver]\nh = 64\n[run]\nmax_rounds = 5\ngap_threshold = 1e-9\n",
+    )
+    .unwrap();
+    let (stdout, stderr, ok) = run(&["train", "--config", path.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("K=2 R=2"), "{stdout}");
+    assert!(stdout.contains("# finished"));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn bad_config_file_rejected() {
+    let path = std::env::temp_dir().join("hybrid_dca_cli_badcfg.toml");
+    std::fs::write(&path, "bogus_key = 1\n").unwrap();
+    let (_, stderr, ok) = run(&["train", "--config", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("bogus_key"), "{stderr}");
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,115 @@
+//! End-to-end convergence of every solver on synthetic presets, plus
+//! the XLA block solver when artifacts are available.
+
+use hybrid_dca::config::{Algorithm, ExpConfig};
+use hybrid_dca::data::Preset;
+use hybrid_dca::harness;
+use hybrid_dca::util::Rng;
+
+fn cfg_for(dataset: &str) -> ExpConfig {
+    let mut cfg = harness::paper_cfg(dataset, 4, 2);
+    cfg.s_barrier = 3;
+    cfg.gamma = 3;
+    cfg.h_local = 256;
+    cfg.max_rounds = 150;
+    cfg.gap_threshold = 1e-4;
+    cfg
+}
+
+#[test]
+fn all_algorithms_converge_on_tiny() {
+    let data = harness::gen_preset(Preset::Tiny, 42);
+    for algo in [
+        Algorithm::Baseline,
+        Algorithm::CocoaPlus,
+        Algorithm::PassCoDe,
+        Algorithm::HybridDca,
+    ] {
+        let cfg = cfg_for("tiny");
+        let report = hybrid_dca::coordinator::run_algorithm(algo, &data, &cfg).unwrap();
+        let gap = report.trace.best_gap().unwrap();
+        assert!(gap <= 1e-4, "{}: best gap {gap}", algo.name());
+        // The certificate (exact-v) gap agrees within the asynchronous
+        // measurement slack.
+        let cert = report.certificate_gap(&data, &cfg);
+        assert!(cert <= 1e-2, "{}: certificate gap {cert}", algo.name());
+    }
+}
+
+#[test]
+fn hybrid_converges_on_rcv1s_preset() {
+    let data = harness::gen_preset(Preset::RcvS, 42);
+    let mut cfg = cfg_for("rcv1-s");
+    cfg.h_local = 512;
+    cfg.max_rounds = 60;
+    cfg.gap_threshold = 1e-3;
+    let report =
+        hybrid_dca::coordinator::run_algorithm(Algorithm::HybridDca, &data, &cfg).unwrap();
+    let gap = report.trace.final_gap().unwrap();
+    assert!(gap <= 1e-3, "gap {gap} after {} rounds", report.rounds);
+}
+
+#[test]
+fn hybrid_with_stragglers_and_loose_gamma_still_converges() {
+    let data = harness::gen_preset(Preset::Tiny, 7);
+    let mut cfg = cfg_for("tiny");
+    cfg.k_nodes = 4;
+    cfg.s_barrier = 2;
+    cfg.gamma = 10;
+    cfg.stragglers = vec![1.0, 1.0, 2.0, 6.0];
+    let report =
+        hybrid_dca::coordinator::run_algorithm(Algorithm::HybridDca, &data, &cfg).unwrap();
+    let gap = report.trace.best_gap().unwrap();
+    assert!(gap <= 1e-3, "gap {gap}");
+}
+
+#[test]
+fn logistic_and_squared_hinge_converge_via_hybrid() {
+    use hybrid_dca::loss::LossKind;
+    let data = harness::gen_preset(Preset::Tiny, 11);
+    for loss in [LossKind::SquaredHinge, LossKind::Logistic] {
+        let mut cfg = cfg_for("tiny");
+        cfg.loss = loss;
+        cfg.gap_threshold = 1e-3;
+        let report =
+            hybrid_dca::coordinator::run_algorithm(Algorithm::HybridDca, &data, &cfg).unwrap();
+        let gap = report.trace.best_gap().unwrap();
+        assert!(gap <= 1e-3, "{loss:?}: gap {gap}");
+    }
+}
+
+#[test]
+fn xla_block_solver_converges_when_artifacts_present() {
+    let dir = hybrid_dca::runtime::default_artifacts_dir();
+    if !hybrid_dca::runtime::Runtime::available(&dir) {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return;
+    }
+    let rt = hybrid_dca::runtime::Runtime::load(&dir).unwrap();
+    // Dense-ish dataset that fits the largest artifact (D ≤ 512).
+    let mut rng = Rng::new(5);
+    let data = hybrid_dca::data::synth::generate(
+        &hybrid_dca::data::SynthSpec {
+            name: "xla-dense".into(),
+            n: 256,
+            d: 384,
+            nnz_per_row: 48,
+            feature_skew: 0.3,
+            label_noise: 0.05,
+            separator_density: 0.3,
+            topics: 0,
+            topic_mix: 0.0,
+        },
+        &mut rng,
+    );
+    let lambda = 2.0 / 256.0;
+    let mut solver = hybrid_dca::solver::xla_dense::XlaDenseSolver::new(&rt, &data, lambda).unwrap();
+    let trace = solver.solve(40, 1e-3).unwrap();
+    let gap = trace.final_gap().unwrap();
+    assert!(gap <= 1e-3, "XLA solver gap {gap}");
+    // The duals it produced certify a similar gap through the f64 path.
+    let alpha = solver.alpha();
+    let v = hybrid_dca::metrics::exact_v(&data, &alpha, lambda);
+    let o = hybrid_dca::metrics::objectives(&data, &hybrid_dca::loss::Hinge, &alpha, &v, lambda);
+    assert!(o.gap <= 5e-3, "certificate {}", o.gap);
+}

@@ -1,0 +1,102 @@
+//! Special-case equivalences the paper claims (Fig. 1b): the hybrid
+//! framework *generalizes* the existing algorithms.
+//!
+//! * `S = K, Γ = 1, R = 1, σ = νK` ⇒ CoCoA+ — trajectories must match
+//!   exactly (same RNG streams, same merge pattern).
+//! * `K = 1, R = r` with σ = 1 behaves like PassCoDe up to the round
+//!   commit boundary.
+//! * `K = 1, R = 1, σ = 1, ν = 1` ⇒ plain sequential SDCA on the same
+//!   sampling sequence reaches the same optimum.
+
+use hybrid_dca::config::{Algorithm, ExpConfig, SigmaPolicy};
+use hybrid_dca::data::{Preset, Strategy};
+use hybrid_dca::harness;
+
+fn base() -> ExpConfig {
+    let mut cfg = harness::paper_cfg("tiny", 4, 1);
+    cfg.h_local = 128;
+    cfg.max_rounds = 12;
+    cfg.gap_threshold = 1e-12; // run all rounds
+    cfg.partition = Strategy::Contiguous;
+    cfg
+}
+
+#[test]
+fn hybrid_sk_gamma1_equals_cocoa_trajectory() {
+    let data = harness::gen_preset(Preset::Tiny, 42);
+    let mut cfg = base();
+    cfg.s_barrier = cfg.k_nodes;
+    cfg.gamma = 1;
+    cfg.sigma = SigmaPolicy::NuK; // CoCoA+'s σ
+    let hybrid = hybrid_dca::coordinator::hybrid::run(&data, &cfg).unwrap();
+    let cocoa = hybrid_dca::coordinator::cocoa::run(&data, &cfg).unwrap();
+    assert_eq!(hybrid.trace.points.len(), cocoa.trace.points.len());
+    for (a, b) in hybrid.trace.points.iter().zip(&cocoa.trace.points) {
+        assert!(
+            (a.gap - b.gap).abs() < 1e-9 * (1.0 + a.gap.abs()),
+            "round {}: hybrid gap {} vs cocoa {}",
+            a.round,
+            a.gap,
+            b.gap
+        );
+    }
+    // Final duals match coordinate-wise.
+    for (i, (x, y)) in hybrid.alpha.iter().zip(&cocoa.alpha).enumerate() {
+        assert!((x - y).abs() < 1e-12, "α[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn hybrid_k1_matches_passcode_family() {
+    // K = 1 hybrid is PassCoDe with a commit boundary every H·R updates;
+    // both must converge to the same optimum (same final gap region).
+    let data = harness::gen_preset(Preset::Tiny, 43);
+    let mut cfg = base();
+    cfg.k_nodes = 1;
+    cfg.s_barrier = 1;
+    cfg.r_cores = 2;
+    cfg.sigma = SigmaPolicy::Fixed(1.0);
+    cfg.max_rounds = 60;
+    cfg.gap_threshold = 1e-5;
+    let hybrid = hybrid_dca::coordinator::hybrid::run(&data, &cfg).unwrap();
+    let passcode =
+        hybrid_dca::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &cfg).unwrap();
+    let hg = hybrid.trace.best_gap().unwrap();
+    let pg = passcode.trace.best_gap().unwrap();
+    assert!(hg <= 1e-5, "hybrid(K=1) gap {hg}");
+    assert!(pg <= 1e-5, "passcode gap {pg}");
+}
+
+#[test]
+fn hybrid_fully_sequential_corner_matches_baseline_optimum() {
+    let data = harness::gen_preset(Preset::Tiny, 44);
+    let mut cfg = base();
+    cfg.k_nodes = 1;
+    cfg.s_barrier = 1;
+    cfg.r_cores = 1;
+    cfg.sigma = SigmaPolicy::Fixed(1.0);
+    cfg.max_rounds = 80;
+    cfg.gap_threshold = 1e-6;
+    let hybrid = hybrid_dca::coordinator::hybrid::run(&data, &cfg).unwrap();
+    let baseline =
+        hybrid_dca::coordinator::run_algorithm(Algorithm::Baseline, &data, &cfg).unwrap();
+    // Same optimum: dual objectives agree to 1e-4 at termination.
+    let hd = hybrid.trace.points.last().unwrap().dual;
+    let bd = baseline.trace.points.last().unwrap().dual;
+    assert!((hd - bd).abs() < 1e-3, "dual {hd} vs {bd}");
+}
+
+#[test]
+fn nu_half_still_converges_but_slower_per_round() {
+    let data = harness::gen_preset(Preset::Tiny, 45);
+    let mut cfg = base();
+    cfg.s_barrier = cfg.k_nodes;
+    cfg.max_rounds = 30;
+    let full = hybrid_dca::coordinator::hybrid::run(&data, &cfg).unwrap();
+    cfg.nu = 0.5;
+    let half = hybrid_dca::coordinator::hybrid::run(&data, &cfg).unwrap();
+    let fg = full.trace.final_gap().unwrap();
+    let hg = half.trace.final_gap().unwrap();
+    assert!(hg < 0.9, "ν=0.5 made no progress: {hg}");
+    assert!(fg <= hg * 1.2, "ν=1 ({fg}) should not trail ν=0.5 ({hg}) badly");
+}

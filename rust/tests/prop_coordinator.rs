@@ -1,0 +1,210 @@
+//! Property tests over the coordinator protocol (Algorithm 2), using
+//! the in-crate shrinking property runner (`util::proptest`).
+//!
+//! Invariants checked across randomized (K, R, S, Γ, H, stragglers):
+//!  1. every merge contains exactly `S` distinct workers;
+//!  2. every worker update is merged at most once (none duplicated);
+//!  3. freshness counters never exceed Γ + 1;
+//!  4. merge virtual times are non-decreasing;
+//!  5. with ν=1 and S=K, the final master `v` equals `(1/λn)Xα`.
+
+use hybrid_dca::config::ExpConfig;
+use hybrid_dca::coordinator::hybrid;
+use hybrid_dca::data::Preset;
+use hybrid_dca::harness;
+use hybrid_dca::util::proptest::{check, default_cases};
+use hybrid_dca::util::Rng;
+
+#[derive(Clone, Debug)]
+struct ProtoCase {
+    k: usize,
+    r: usize,
+    s: usize,
+    gamma: usize,
+    h: usize,
+    rounds: usize,
+    straggle_last: f64,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> ProtoCase {
+    let k = rng.next_range(1, 5);
+    ProtoCase {
+        k,
+        r: rng.next_range(1, 3),
+        s: rng.next_range(1, k),
+        gamma: rng.next_range(1, 4),
+        h: rng.next_range(20, 120),
+        rounds: rng.next_range(3, 12),
+        straggle_last: 1.0 + rng.next_f64() * 5.0,
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_case(c: &ProtoCase) -> Vec<ProtoCase> {
+    let mut out = Vec::new();
+    if c.rounds > 3 {
+        out.push(ProtoCase { rounds: c.rounds / 2, ..c.clone() });
+    }
+    if c.k > 1 {
+        let k = c.k - 1;
+        out.push(ProtoCase { k, s: c.s.min(k), ..c.clone() });
+    }
+    if c.h > 20 {
+        out.push(ProtoCase { h: c.h / 2, ..c.clone() });
+    }
+    if c.r > 1 {
+        out.push(ProtoCase { r: 1, ..c.clone() });
+    }
+    out
+}
+
+fn run_case(c: &ProtoCase) -> Result<hybrid_dca::coordinator::RunReport, String> {
+    let data = harness::gen_preset(Preset::Tiny, 42);
+    let mut cfg = ExpConfig::default();
+    cfg.lambda = 1e-2;
+    cfg.k_nodes = c.k;
+    cfg.r_cores = c.r;
+    cfg.s_barrier = c.s;
+    cfg.gamma = c.gamma;
+    cfg.h_local = c.h;
+    cfg.max_rounds = c.rounds;
+    cfg.gap_threshold = 1e-15; // never stop early
+    cfg.seed = c.seed;
+    let mut strag = vec![1.0; c.k];
+    strag[c.k - 1] = c.straggle_last;
+    cfg.stragglers = strag;
+    hybrid::run(&data, &cfg).map_err(|e| format!("run failed: {e}"))
+}
+
+#[test]
+fn prop_barrier_and_uniqueness() {
+    check(
+        "merge barrier & uniqueness",
+        default_cases(24),
+        gen_case,
+        shrink_case,
+        |c| {
+            let report = run_case(c)?;
+            let mut seen = std::collections::HashSet::new();
+            for ev in &report.events {
+                if ev.merged.len() != c.s {
+                    return Err(format!(
+                        "round {}: merged {} != S={}",
+                        ev.round,
+                        ev.merged.len(),
+                        c.s
+                    ));
+                }
+                let distinct: std::collections::HashSet<_> =
+                    ev.merged.iter().map(|(w, _)| *w).collect();
+                if distinct.len() != c.s {
+                    return Err(format!("round {}: non-distinct workers", ev.round));
+                }
+                for &(w, lr) in &ev.merged {
+                    if !seen.insert((w, lr)) {
+                        return Err(format!("update ({w},{lr}) merged twice"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_staleness_bounded() {
+    // The master blocks on unheard workers at Γ and priority-merges
+    // over-stale pending updates; with up to K pending and S merged per
+    // round, the provable bound is Γ + ⌈K/S⌉.
+    check(
+        "staleness ≤ Γ + ⌈K/S⌉",
+        default_cases(24),
+        gen_case,
+        shrink_case,
+        |c| {
+            let report = run_case(c)?;
+            let bound = c.gamma + c.k.div_ceil(c.s);
+            for ev in &report.events {
+                for (w, &g) in ev.gamma_after.iter().enumerate() {
+                    if g > bound {
+                        return Err(format!(
+                            "round {}: worker {w} staleness {g} > {bound}",
+                            ev.round
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_virtual_time_monotone() {
+    check(
+        "virtual time monotone",
+        default_cases(24),
+        gen_case,
+        shrink_case,
+        |c| {
+            let report = run_case(c)?;
+            let mut prev = -1.0;
+            for ev in &report.events {
+                if ev.vtime < prev {
+                    return Err(format!("vtime {} < {prev}", ev.vtime));
+                }
+                prev = ev.vtime;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_v_alpha_consistency_sync() {
+    // ν = 1, S = K ⇒ master's v == (1/λn)·X·α_final.
+    check(
+        "v/α consistency at S=K",
+        default_cases(16),
+        |rng| {
+            let mut c = gen_case(rng);
+            c.s = c.k;
+            c.gamma = 1;
+            c
+        },
+        shrink_case,
+        |c| {
+            let report = run_case(c)?;
+            let data = harness::gen_preset(Preset::Tiny, 42);
+            let v_exact = hybrid_dca::metrics::exact_v(&data, &report.alpha, 1e-2);
+            for (j, (a, b)) in report.v.iter().zip(&v_exact).enumerate() {
+                if (a - b).abs() > 1e-8 {
+                    return Err(format!("v[{j}]: {a} vs exact {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_alpha_feasible_always() {
+    check(
+        "final α dual-feasible",
+        default_cases(24),
+        gen_case,
+        shrink_case,
+        |c| {
+            let report = run_case(c)?;
+            let data = harness::gen_preset(Preset::Tiny, 42);
+            for (i, &a) in report.alpha.iter().enumerate() {
+                let ay = a * data.y[i];
+                if !(-1e-9..=1.0 + 1e-9).contains(&ay) {
+                    return Err(format!("α[{i}]·y = {ay} outside [0,1]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,235 @@
+//! Property tests on solver-level invariants: partitioning, atomic
+//! vector exactness, weak duality, sequential dual monotonicity, and
+//! block-step equivalence.
+
+use hybrid_dca::data::{Partition, Preset, Strategy};
+use hybrid_dca::harness;
+use hybrid_dca::loss::{Hinge, Loss};
+use hybrid_dca::metrics::{exact_v, objectives};
+use hybrid_dca::solver::block::{block_step, sequential_oracle, BlockInput};
+use hybrid_dca::solver::sdca::Sdca;
+use hybrid_dca::solver::StepParams;
+use hybrid_dca::util::proptest::{check, default_cases};
+use hybrid_dca::util::{AtomicF64Vec, Rng};
+
+#[test]
+fn prop_partition_exact_cover() {
+    check(
+        "partition exact cover",
+        default_cases(64),
+        |rng| {
+            let k = rng.next_range(1, 6);
+            let r = rng.next_range(1, 6);
+            let n = rng.next_range(k * r, k * r * 40);
+            let strat = match rng.next_below(3) {
+                0 => Strategy::Contiguous,
+                1 => Strategy::Striped,
+                _ => Strategy::Shuffled,
+            };
+            (n, k, r, strat, rng.next_u64())
+        },
+        |&(n, k, r, s, seed)| {
+            let mut out = Vec::new();
+            if n > k * r {
+                out.push((k * r, k, r, s, seed));
+            }
+            if k > 1 {
+                out.push((n, k - 1, r, s, seed));
+            }
+            if r > 1 {
+                out.push((n, k, r - 1, s, seed));
+            }
+            out
+        },
+        |&(n, k, r, strat, seed)| {
+            let mut rng = Rng::new(seed);
+            let p = Partition::build(n, k, r, strat, &mut rng);
+            p.validate(n).map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn prop_atomic_vec_sums_exact() {
+    check(
+        "atomic adds sum exactly",
+        default_cases(12),
+        |rng| {
+            (
+                rng.next_range(1, 16),        // dim
+                rng.next_range(2, 4),         // threads
+                rng.next_range(100, 2000),    // adds per thread
+                rng.next_u64(),
+            )
+        },
+        |&(d, t, n, s)| {
+            let mut v = Vec::new();
+            if n > 100 {
+                v.push((d, t, n / 2, s));
+            }
+            if t > 2 {
+                v.push((d, t - 1, n, s));
+            }
+            v
+        },
+        |&(dim, threads, adds, _seed)| {
+            let v = std::sync::Arc::new(AtomicF64Vec::zeros(dim));
+            std::thread::scope(|sc| {
+                for t in 0..threads {
+                    let v = std::sync::Arc::clone(&v);
+                    sc.spawn(move || {
+                        for i in 0..adds {
+                            v.add((t + i) % dim, 1.0);
+                        }
+                    });
+                }
+            });
+            let total: f64 = v.snapshot().iter().sum();
+            let expect = (threads * adds) as f64;
+            if total == expect {
+                Ok(())
+            } else {
+                Err(format!("sum {total} != {expect}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_weak_duality() {
+    // P(w(α)) ≥ D(α) for every feasible α.
+    let data = harness::gen_preset(Preset::Tiny, 3);
+    check(
+        "weak duality",
+        default_cases(64),
+        |rng| {
+            let alpha: Vec<f64> =
+                data.y.iter().map(|&y| rng.next_f64() * y).collect();
+            let lambda = 10f64.powf(-3.0 + 3.0 * rng.next_f64());
+            (alpha, lambda)
+        },
+        |(alpha, lambda)| {
+            let mut out = Vec::new();
+            out.push((alpha.iter().map(|_| 0.0).collect(), *lambda));
+            out.push((alpha.clone(), lambda * 2.0));
+            out
+        },
+        |(alpha, lambda)| {
+            let v = exact_v(&data, alpha, *lambda);
+            let o = objectives(&data, &Hinge, alpha, &v, *lambda);
+            if o.gap >= -1e-9 {
+                Ok(())
+            } else {
+                Err(format!("gap {} < 0", o.gap))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sequential_dual_monotone() {
+    let data = harness::gen_preset(Preset::Tiny, 5);
+    check(
+        "sequential dual monotone",
+        default_cases(16),
+        |rng| (rng.next_u64(), rng.next_range(50, 400)),
+        |&(s, n)| if n > 50 { vec![(s, n / 2)] } else { vec![] },
+        |&(seed, steps)| {
+            let mut solver =
+                Sdca::new(&data, 1e-2, Rng::new(seed), &hybrid_dca::sim::CostModel::default());
+            let mut prev = f64::NEG_INFINITY;
+            for chunk in 0..4 {
+                solver.run_round(&Hinge, steps / 4 + 1);
+                let d = solver.objectives(&Hinge).dual;
+                if d < prev - 1e-12 {
+                    return Err(format!("chunk {chunk}: dual {d} < {prev}"));
+                }
+                prev = d;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_block_step_equals_sequential_oracle() {
+    check(
+        "block ≡ sequential oracle",
+        default_cases(48),
+        |rng| {
+            let b = rng.next_range(1, 12);
+            let d = rng.next_range(4, 32);
+            let x: Vec<f64> = (0..b * d)
+                .map(|_| if rng.next_bool(0.5) { rng.next_gaussian() } else { 0.0 })
+                .collect();
+            let y: Vec<f64> =
+                (0..b).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+            let alpha: Vec<f64> = (0..b).map(|i| rng.next_f64() * y[i]).collect();
+            let v: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.5).collect();
+            let sigma = 0.5 + rng.next_f64() * 3.5;
+            (BlockInputWrap { x, b, d, y, alpha, v }, sigma)
+        },
+        |_| vec![],
+        |(w, sigma)| {
+            let input = BlockInput {
+                x: w.x.clone(),
+                b: w.b,
+                d: w.d,
+                y: w.y.clone(),
+                alpha: w.alpha.clone(),
+                v: w.v.clone(),
+            };
+            let params = StepParams { lambda: 1e-2, n: 300, sigma: *sigma };
+            let a = block_step(&input, &Hinge, &params);
+            let o = sequential_oracle(&input, &Hinge, &params);
+            for (i, (x, y)) in a.eps.iter().zip(&o.eps).enumerate() {
+                if (x - y).abs() > 1e-9 {
+                    return Err(format!("eps[{i}]: {x} vs {y}"));
+                }
+            }
+            for (i, (x, y)) in a.delta_v.iter().zip(&o.delta_v).enumerate() {
+                if (x - y).abs() > 1e-9 {
+                    return Err(format!("dv[{i}]: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct BlockInputWrap {
+    x: Vec<f64>,
+    b: usize,
+    d: usize,
+    y: Vec<f64>,
+    alpha: Vec<f64>,
+    v: Vec<f64>,
+}
+
+#[test]
+fn prop_coordinate_step_feasible_and_improving() {
+    check(
+        "1-D step feasible & improving",
+        default_cases(256),
+        |rng| {
+            let y = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+            let alpha = rng.next_f64() * y;
+            let m = rng.next_gaussian() * 3.0;
+            let q = 0.05 + rng.next_f64() * 10.0;
+            (alpha, y, m, q)
+        },
+        |_| vec![],
+        |&(alpha, y, m, q)| {
+            let a_new = Hinge.coordinate_step(alpha, y, m, q);
+            if !Hinge.feasible(a_new, y) {
+                return Err(format!("infeasible {a_new}"));
+            }
+            let f = |a: f64| Hinge.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha) * (a - alpha);
+            if f(a_new) < f(alpha) - 1e-12 {
+                return Err(format!("objective decreased: {} -> {}", f(alpha), f(a_new)));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,167 @@
+//! Integration: the three layers compose.
+//!
+//! Loads the AOT artifacts (`make artifacts`), executes the block dual
+//! step and the objective tile through the PJRT CPU client, and checks
+//! the numerics against the pure-Rust oracle (`solver::block`) and the
+//! metrics module. Skips (with a loud message) if artifacts are absent.
+
+use hybrid_dca::loss::Hinge;
+use hybrid_dca::runtime::{default_artifacts_dir, Runtime};
+use hybrid_dca::solver::block::{block_step, BlockInput};
+use hybrid_dca::solver::StepParams;
+use hybrid_dca::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !Runtime::available(&dir) {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts` to enable the XLA round-trip tests",
+            dir.display()
+        );
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts must compile"))
+}
+
+fn random_case(rng: &mut Rng, b: usize, d: usize) -> BlockInput {
+    let x: Vec<f64> = (0..b * d)
+        .map(|_| if rng.next_bool(0.4) { rng.next_gaussian() * 0.5 } else { 0.0 })
+        .collect();
+    let y: Vec<f64> = (0..b).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let alpha: Vec<f64> = (0..b).map(|i| rng.next_f64() * y[i]).collect();
+    let v: Vec<f64> = (0..d).map(|_| rng.next_gaussian() * 0.3).collect();
+    BlockInput { x, b, d, y, alpha, v }
+}
+
+fn to_f32(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+#[test]
+fn block_step_artifact_matches_rust_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2024);
+    let mut tested = 0;
+    for meta_name in rt.names() {
+        let art = rt.get(meta_name).unwrap();
+        if art.meta.kind != hybrid_dca::runtime::ArtifactKind::BlockStep {
+            continue;
+        }
+        let (b, d) = (art.meta.b, art.meta.d);
+        let params = StepParams { lambda: 1e-2, n: 500, sigma: 2.0 };
+        for _ in 0..5 {
+            let input = random_case(&mut rng, b, d);
+            let expect = block_step(&input, &Hinge, &params);
+            let out = rt
+                .block_step(
+                    art,
+                    &to_f32(&input.x),
+                    &to_f32(&input.y),
+                    &to_f32(&input.alpha),
+                    &to_f32(&input.v),
+                    params.v_scale() as f32,
+                    params.sigma as f32,
+                )
+                .expect("execute");
+            assert_eq!(out.alpha_new.len(), b);
+            assert_eq!(out.delta_v.len(), d);
+            for (j, (xla, oracle)) in out.eps.iter().zip(&expect.eps).enumerate() {
+                assert!(
+                    (*xla as f64 - oracle).abs() < 2e-4,
+                    "{meta_name} eps[{j}]: xla {xla} vs oracle {oracle}"
+                );
+            }
+            for (j, (xla, oracle)) in out.delta_v.iter().zip(&expect.delta_v).enumerate() {
+                assert!(
+                    (*xla as f64 - oracle).abs() < 2e-4,
+                    "{meta_name} dv[{j}]: xla {xla} vs oracle {oracle}"
+                );
+            }
+            tested += 1;
+        }
+    }
+    assert!(tested > 0, "no block_step artifacts found");
+}
+
+#[test]
+fn gap_tile_artifact_matches_metrics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2025);
+    let mut tested = 0;
+    for meta_name in rt.names() {
+        let art = rt.get(meta_name).unwrap();
+        if art.meta.kind != hybrid_dca::runtime::ArtifactKind::GapTile {
+            continue;
+        }
+        let (b, d) = (art.meta.b, art.meta.d);
+        let input = random_case(&mut rng, b, d);
+        let out = rt
+            .gap_tile(art, &to_f32(&input.x), &to_f32(&input.y), &to_f32(&input.alpha), &to_f32(&input.v))
+            .expect("execute");
+        // Oracle: hinge losses + dual contributions.
+        let mut hinge_sum = 0.0f64;
+        let mut dual_sum = 0.0f64;
+        for j in 0..b {
+            let m: f64 = input.x[j * d..(j + 1) * d]
+                .iter()
+                .zip(&input.v)
+                .map(|(a, c)| a * c)
+                .sum();
+            hinge_sum += (1.0 - input.y[j] * m).max(0.0);
+            dual_sum += input.alpha[j] * input.y[j];
+        }
+        assert!(
+            (out.hinge_sum as f64 - hinge_sum).abs() < 1e-3 * (1.0 + hinge_sum),
+            "{meta_name}: hinge {} vs {hinge_sum}",
+            out.hinge_sum
+        );
+        assert!(
+            (out.dual_sum as f64 - dual_sum).abs() < 1e-3 * (1.0 + dual_sum.abs()),
+            "{meta_name}: dual {} vs {dual_sum}",
+            out.dual_sum
+        );
+        tested += 1;
+    }
+    assert!(tested > 0, "no gap_tile artifacts found");
+}
+
+/// End-to-end: run repeated block steps through the artifact and check
+/// the dual objective improves (a miniature solve on dense data).
+#[test]
+fn xla_block_solver_improves_dual() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let Some(art) = rt.find_block_step(16, 64) else {
+        eprintln!("SKIP: no 16x64 block_step artifact");
+        return;
+    };
+    let (b, d) = (16usize, 64usize);
+    let mut rng = Rng::new(7);
+    // A tiny dense dataset of exactly one block.
+    let input = random_case(&mut rng, b, d);
+    let params = StepParams { lambda: 1e-2, n: b, sigma: 1.0 };
+    let mut alpha = vec![0.0f32; b];
+    let mut v = vec![0.0f32; d];
+    let x32 = to_f32(&input.x);
+    let y32 = to_f32(&input.y);
+
+    let dual = |alpha: &[f32], v: &[f32]| -> f64 {
+        let asum: f64 = alpha.iter().zip(&y32).map(|(&a, &y)| (a * y) as f64).sum();
+        let vnorm: f64 = v.iter().map(|&x| (x * x) as f64).sum();
+        asum / b as f64 - 0.5 * params.lambda * vnorm
+    };
+
+    let mut prev = dual(&alpha, &v);
+    for _ in 0..10 {
+        let out = rt
+            .block_step(art, &x32, &y32, &alpha, &v, params.v_scale() as f32, 1.0)
+            .expect("execute");
+        alpha = out.alpha_new;
+        for (vv, dv) in v.iter_mut().zip(&out.delta_v) {
+            *vv += dv;
+        }
+        let now = dual(&alpha, &v);
+        assert!(now >= prev - 1e-5, "dual decreased {prev} -> {now}");
+        prev = now;
+    }
+    assert!(prev > 0.0, "dual never improved: {prev}");
+}
