@@ -9,18 +9,17 @@
 //!
 //! Run: `cargo run --release --example heterogeneous`
 
-use hybrid_dca::config::Algorithm;
 use hybrid_dca::harness;
 
 fn main() -> anyhow::Result<()> {
     let preset = "rcv1-s";
     let (k, r) = (6usize, 2usize);
     let threshold = 1e-3;
-    let mut cfg = harness::paper_cfg(preset, k, r);
-    cfg.max_rounds = 80;
-    cfg.gap_threshold = threshold / 10.0;
-    cfg.stragglers = vec![1.0, 1.0, 1.0, 1.0, 1.0, 6.0];
-    let data = harness::load_dataset(&cfg)?;
+    let base = harness::paper_session(preset, k, r)
+        .rounds(80)
+        .gap_threshold(threshold / 10.0)
+        .stragglers(vec![1.0, 1.0, 1.0, 1.0, 1.0, 6.0]);
+    let data = base.clone().build()?.load_dataset()?;
     println!(
         "== straggler study on {} (K={k}, R={r}, node 5 is 6× slower) ==\n",
         data.name
@@ -38,10 +37,8 @@ fn main() -> anyhow::Result<()> {
         (k / 2, 2), // aggressive barrier, tight freshness
         (k / 2, 10),
     ] {
-        let mut c = cfg.clone();
-        c.s_barrier = s;
-        c.gamma = gamma;
-        let report = hybrid_dca::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?;
+        let session = base.clone().barrier(s).delay(gamma).build()?;
+        let report = session.run("hybrid-dca", &data)?;
         let label = format!("S={s} Γ={gamma}");
         let ttt = report.trace.virt_time_to_gap(threshold);
         println!(

@@ -1,11 +1,14 @@
 //! Quickstart: the smallest end-to-end run of the library.
 //!
 //! 1. Generate a tiny synthetic dataset.
-//! 2. Train a hinge-loss SVM with Hybrid-DCA on a simulated 4-node ×
-//!    2-core cluster (bounded barrier S=3, bounded delay Γ=2).
-//! 3. Print the duality-gap trace and the final model quality.
-//! 4. If AOT artifacts are present (`make artifacts`), run the same
-//!    problem through the XLA block solver — the full L1/L2/L3 stack.
+//! 2. Describe the experiment with the typed `Session` builder: a
+//!    hinge-loss SVM on a simulated 4-node × 2-core cluster (bounded
+//!    barrier S=3, bounded delay Γ=2).
+//! 3. Train through the `SolverEngine` registry, watching the
+//!    duality-gap trace *live* through a streaming `Observer`.
+//! 4. If AOT artifacts are present (`make artifacts` + the
+//!    `xla-runtime` feature), run the same problem through the XLA
+//!    block solver — the full L1/L2/L3 stack.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -17,28 +20,30 @@ fn main() -> anyhow::Result<()> {
     let data = Preset::Tiny.generate(&mut rng);
     println!("dataset: {} (n={}, d={}, nnz={})", data.name, data.n(), data.d(), data.x.nnz());
 
-    // 2. Configure the cluster.
-    let mut cfg = ExpConfig::default();
-    cfg.lambda = 1e-2;
-    cfg.k_nodes = 4;
-    cfg.r_cores = 2;
-    cfg.s_barrier = 3; // merge as soon as 3 of 4 workers report
-    cfg.gamma = 2; //     but never let anyone lag more than 2 rounds
-    cfg.h_local = 256;
-    cfg.max_rounds = 50;
-    cfg.gap_threshold = 1e-5;
+    // 2. Describe the experiment. `build()` validates every paper
+    // constraint (S ≤ K, Γ ≥ 1, ν ∈ (0,1], σ ≥ νS, …) and names the
+    // violated one on error.
+    let session = Session::builder()
+        .lambda(1e-2)
+        .cluster(4, 2) // K = 4 nodes × R = 2 cores
+        .barrier(3) //    merge as soon as 3 of 4 workers report
+        .delay(2) //      but never let anyone lag more than 2 rounds
+        .local_iters(256)
+        .rounds(50)
+        .gap_threshold(1e-5)
+        .build()?;
 
-    // 3. Train.
-    let report = coordinator::hybrid::run(&data, &cfg)?;
-    println!("\nround    virt-time(s)        gap");
-    for p in &report.trace.points {
-        println!("{:>5} {:>14.6} {:>10.3e}", p.round, p.virt_secs, p.gap);
-    }
+    // 3. Train, streaming the trace as it happens. Any engine in the
+    // registry works here: "baseline", "cocoa+", "passcode", or
+    // "hybrid-dca" — or one you registered yourself.
+    println!("\nstreaming trace (round / virt-time / gap):");
+    let mut live = hybrid_dca::session::PrintObserver::new();
+    let report = session.run_observed("hybrid-dca", &data, &mut live)?;
     println!(
         "\nconverged in {} global rounds, {} coordinate updates, certificate gap {:.3e}",
         report.rounds,
         report.total_updates,
-        report.certificate_gap(&data, &cfg)
+        report.certificate_gap(&data, &session.to_exp_config())
     );
 
     // 4. Training accuracy of the learned model.
@@ -47,21 +52,31 @@ fn main() -> anyhow::Result<()> {
         .count();
     println!("training accuracy: {:.1}%", 100.0 * correct as f64 / data.n() as f64);
 
-    // 5. The XLA path (optional).
-    let dir = hybrid_dca::runtime::default_artifacts_dir();
-    if hybrid_dca::runtime::Runtime::available(&dir) {
-        println!("\n-- XLA block solver (PJRT artifacts) --");
-        let rt = hybrid_dca::runtime::Runtime::load(&dir)?;
-        let mut solver = hybrid_dca::solver::xla_dense::XlaDenseSolver::new(&rt, &data, cfg.lambda)?;
-        let (b, d) = solver.shape();
-        println!("using block_step artifact B={b} D={d}");
-        let trace = solver.solve(30, 1e-5)?;
-        for p in trace.points.iter().step_by(5) {
-            println!("epoch {:>3}  gap {:.3e}", p.round, p.gap);
+    // 5. The XLA path (optional, feature-gated).
+    #[cfg(feature = "xla-runtime")]
+    {
+        let dir = hybrid_dca::runtime::default_artifacts_dir();
+        if hybrid_dca::runtime::Runtime::available(&dir) {
+            println!("\n-- XLA block solver (PJRT artifacts) --");
+            let rt = hybrid_dca::runtime::Runtime::load(&dir)?;
+            let mut solver = hybrid_dca::solver::xla_dense::XlaDenseSolver::new(
+                &rt,
+                &data,
+                session.problem.lambda,
+            )?;
+            let (b, d) = solver.shape();
+            println!("using block_step artifact B={b} D={d}");
+            let trace = solver.solve(30, 1e-5)?;
+            for p in trace.points.iter().step_by(5) {
+                println!("epoch {:>3}  gap {:.3e}", p.round, p.gap);
+            }
+            println!("final gap through XLA: {:.3e}", trace.final_gap().unwrap());
+        } else {
+            println!("\n(no AOT artifacts found — run `make artifacts` to exercise the XLA path)");
         }
-        println!("final gap through XLA: {:.3e}", trace.final_gap().unwrap());
-    } else {
-        println!("\n(no AOT artifacts found — run `make artifacts` to exercise the XLA path)");
     }
+    #[cfg(not(feature = "xla-runtime"))]
+    println!("\n(build with --features xla-runtime to exercise the XLA path)");
+
     Ok(())
 }

@@ -4,9 +4,12 @@
 //! comparison (Figure 3 / Figure 7 shape): Hybrid-DCA beats CoCoA+ on
 //! wall/virtual time and scales past PassCoDe's single node.
 //!
+//! Every solver runs through the `Session` builder and the
+//! `SolverEngine` registry — the four engines are points in one
+//! configuration space, differing only in cluster shape.
+//!
 //! Run: `cargo run --release --example svm_cluster [-- <preset>]`
 
-use hybrid_dca::config::Algorithm;
 use hybrid_dca::harness;
 
 fn main() -> anyhow::Result<()> {
@@ -14,17 +17,18 @@ fn main() -> anyhow::Result<()> {
     let (p, t) = (8usize, 2usize);
     let threshold = hybrid_dca::harness::fig3::threshold_for(&preset);
 
-    let mut cfg = harness::paper_cfg(&preset, p, t);
-    cfg.max_rounds = 80;
-    cfg.gap_threshold = threshold / 10.0;
-    let data = harness::load_dataset(&cfg)?;
+    let base = harness::paper_session(&preset, p, t)
+        .rounds(80)
+        .gap_threshold(threshold / 10.0);
+    let session = base.clone().build()?;
+    let data = session.load_dataset()?;
     println!(
         "== {} : n={} d={} nnz={} λ={:.2e}, cluster {}×{} ==",
         data.name,
         data.n(),
         data.d(),
         data.x.nnz(),
-        cfg.lambda,
+        session.problem.lambda,
         p,
         t
     );
@@ -32,38 +36,23 @@ fn main() -> anyhow::Result<()> {
     let mut traces = Vec::new();
     // Baseline (sequential, 1 core).
     {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.r_cores = 1;
-        c.s_barrier = 1;
-        c.max_rounds = 200;
-        let r = hybrid_dca::coordinator::run_algorithm(Algorithm::Baseline, &data, &c)?;
-        traces.push(r.trace);
+        let s = base.clone().cluster(1, 1).barrier(1).rounds(200).build()?;
+        traces.push(s.run("baseline", &data)?.trace);
     }
     // CoCoA+ on p·t single-core nodes.
     {
-        let mut c = cfg.clone();
-        c.k_nodes = p * t;
-        c.r_cores = 1;
-        c.s_barrier = c.k_nodes;
-        let r = hybrid_dca::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?;
-        traces.push(r.trace);
+        let s = base.clone().cluster(p * t, 1).barrier(p * t).build()?;
+        traces.push(s.run("cocoa+", &data)?.trace);
     }
     // PassCoDe on one p·t-core node.
     {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.s_barrier = 1;
-        c.r_cores = p * t;
-        let r = hybrid_dca::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?;
-        traces.push(r.trace);
+        let s = base.clone().cluster(1, p * t).barrier(1).build()?;
+        traces.push(s.run("passcode", &data)?.trace);
     }
     // Hybrid-DCA (S = p, Γ = 1 — the Fig 3 setting).
     {
-        let mut c = cfg.clone();
-        c.s_barrier = p;
-        c.gamma = 1;
-        let r = hybrid_dca::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?;
+        let s = base.clone().barrier(p).delay(1).build()?;
+        let r = s.run("hybrid-dca", &data)?;
         // Report model quality from the hybrid run.
         let correct = (0..data.n())
             .filter(|&i| data.x.row(i).dot_dense(&r.v) * data.y[i] > 0.0)

@@ -95,6 +95,15 @@ fn main() -> anyhow::Result<()> {
     }
 
     // XLA block step (per-update throughput through PJRT).
+    #[cfg(feature = "xla-runtime")]
+    xla_rows()?;
+    #[cfg(not(feature = "xla-runtime"))]
+    println!("(skipping XLA rows — build with --features xla-runtime)");
+    Ok(())
+}
+
+#[cfg(feature = "xla-runtime")]
+fn xla_rows() -> anyhow::Result<()> {
     let dir = hybrid_dca::runtime::default_artifacts_dir();
     if hybrid_dca::runtime::Runtime::available(&dir) {
         let rt = hybrid_dca::runtime::Runtime::load(&dir)?;

@@ -11,6 +11,26 @@ use crate::data::partition::Strategy;
 use crate::loss::LossKind;
 use toml::Document;
 
+/// Merge-order policy for the master's bounded-barrier pick (paper:
+/// oldest first; ablation: newest first). Lives in the config layer so
+/// both [`ExpConfig`] and the session builder can carry it; the
+/// coordinator re-exports it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergePolicy {
+    OldestFirst,
+    NewestFirst,
+}
+
+impl MergePolicy {
+    pub fn parse(s: &str) -> Option<MergePolicy> {
+        match s.to_ascii_lowercase().as_str() {
+            "oldest" | "oldest-first" | "oldestfirst" => Some(MergePolicy::OldestFirst),
+            "newest" | "newest-first" | "newestfirst" => Some(MergePolicy::NewestFirst),
+            _ => None,
+        }
+    }
+}
+
 /// How the subproblem scaling parameter σ is chosen.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum SigmaPolicy {
@@ -31,11 +51,19 @@ impl SigmaPolicy {
         }
     }
 
+    /// Parse a policy name or explicit value. A fixed σ must be a
+    /// positive finite number — σ ≤ 0 breaks the subproblem curvature
+    /// `q = σ‖x‖²/(λn)` (Eq. 5), so it is rejected here at parse time
+    /// rather than deferred to [`ExpConfig::validate`].
     pub fn parse(s: &str) -> Option<SigmaPolicy> {
         match s.to_ascii_lowercase().as_str() {
             "nus" | "s" | "auto" => Some(SigmaPolicy::NuS),
             "nuk" | "k" => Some(SigmaPolicy::NuK),
-            other => other.parse::<f64>().ok().map(SigmaPolicy::Fixed),
+            other => other
+                .parse::<f64>()
+                .ok()
+                .filter(|v| v.is_finite() && *v > 0.0)
+                .map(SigmaPolicy::Fixed),
         }
     }
 }
@@ -105,6 +133,8 @@ pub struct ExpConfig {
     pub s_barrier: usize,
     /// Bounded-delay Γ (≥ 1).
     pub gamma: usize,
+    /// Merge-order policy (paper: oldest first).
+    pub merge_policy: MergePolicy,
 
     // Run control
     pub max_rounds: usize,
@@ -140,6 +170,7 @@ impl Default for ExpConfig {
             wild: false,
             s_barrier: 4,
             gamma: 1,
+            merge_policy: MergePolicy::OldestFirst,
             max_rounds: 100,
             gap_threshold: 1e-6,
             eval_every: 1,
@@ -255,9 +286,19 @@ impl ExpConfig {
             "solver.nu" | "nu" => self.nu = need_f64()?,
             "solver.sigma" | "sigma" => {
                 self.sigma = match val {
-                    Value::Str(s) => SigmaPolicy::parse(s)
-                        .ok_or_else(|| anyhow::anyhow!("unknown sigma policy '{s}'"))?,
-                    _ => SigmaPolicy::Fixed(need_f64()?),
+                    Value::Str(s) => SigmaPolicy::parse(s).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "sigma must be 'auto' (νS), 'k' (νK), or a positive number; got '{s}'"
+                        )
+                    })?,
+                    _ => {
+                        let v = need_f64()?;
+                        anyhow::ensure!(
+                            v.is_finite() && v > 0.0,
+                            "fixed σ must be a positive finite number (got {v})"
+                        );
+                        SigmaPolicy::Fixed(v)
+                    }
                 }
             }
             "solver.wild" | "wild" => {
@@ -265,6 +306,11 @@ impl ExpConfig {
             }
             "master.s" | "s_barrier" => self.s_barrier = need_usize()?,
             "master.gamma" | "gamma" => self.gamma = need_usize()?,
+            "master.policy" | "merge_policy" => {
+                let s = need_str()?;
+                self.merge_policy = MergePolicy::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown merge policy '{s}'"))?
+            }
             "run.max-rounds" | "run.max_rounds" | "max_rounds" => self.max_rounds = need_usize()?,
             "run.gap-threshold" | "run.gap_threshold" | "gap_threshold" => {
                 self.gap_threshold = need_f64()?
@@ -319,6 +365,31 @@ mod tests {
         assert_eq!(SigmaPolicy::parse("K"), Some(SigmaPolicy::NuK));
         assert_eq!(SigmaPolicy::parse("3.5"), Some(SigmaPolicy::Fixed(3.5)));
         assert_eq!(SigmaPolicy::parse("bogus"), None);
+        // Non-positive / non-finite fixed σ rejected at parse time.
+        assert_eq!(SigmaPolicy::parse("0"), None);
+        assert_eq!(SigmaPolicy::parse("-2.5"), None);
+        assert_eq!(SigmaPolicy::parse("nan"), None);
+        assert_eq!(SigmaPolicy::parse("inf"), None);
+    }
+
+    #[test]
+    fn merge_policy_parse() {
+        assert_eq!(MergePolicy::parse("oldest-first"), Some(MergePolicy::OldestFirst));
+        assert_eq!(MergePolicy::parse("Newest"), Some(MergePolicy::NewestFirst));
+        assert_eq!(MergePolicy::parse("fifo"), None);
+    }
+
+    #[test]
+    fn non_positive_sigma_rejected_in_toml() {
+        let doc = toml::parse("sigma = -1.0\n").unwrap();
+        let mut cfg = ExpConfig::default();
+        assert!(cfg.apply_document(&doc).is_err());
+        let doc = toml::parse("sigma = \"-1.0\"\n").unwrap();
+        assert!(cfg.apply_document(&doc).is_err());
+        // Non-finite numerics are rejected like the string path rejects
+        // "inf"/"nan".
+        let doc = toml::parse("sigma = inf\n").unwrap();
+        assert!(cfg.apply_document(&doc).is_err());
     }
 
     #[test]
@@ -371,6 +442,7 @@ wild = true
 [master]
 s = 6
 gamma = 10
+policy = "newest-first"
 
 [run]
 max_rounds = 50
@@ -395,6 +467,7 @@ cost_per_nnz = 1e-7
         assert!(cfg.wild);
         assert_eq!(cfg.s_barrier, 6);
         assert_eq!(cfg.gamma, 10);
+        assert_eq!(cfg.merge_policy, MergePolicy::NewestFirst);
         assert_eq!(cfg.stragglers.len(), 8);
         assert_eq!(cfg.sigma_value(), 0.5 * 8.0);
     }

@@ -4,6 +4,8 @@
 use crate::config::ExpConfig;
 use crate::data::Dataset;
 use crate::metrics::{Trace, TracePoint};
+use crate::session::observer::{EvalEvent, RoundEvent};
+use crate::session::RunCtx;
 use crate::sim::CostModel;
 use crate::solver::sdca::Sdca;
 use crate::util::{Rng, Stopwatch};
@@ -12,6 +14,12 @@ use super::RunReport;
 
 /// Run sequential DCA for up to `max_rounds` rounds of `H` updates.
 pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
+    run_ctx(data, &RunCtx::silent(cfg))
+}
+
+/// Engine entry point: run with the context's config and observer.
+pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    let cfg = ctx.cfg;
     cfg.validate()?;
     let loss = cfg.loss.build();
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
@@ -20,7 +28,7 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
     let sw = Stopwatch::start();
 
     let o0 = solver.objectives(&*loss);
-    trace.push(TracePoint {
+    let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
         virt_secs: 0.0,
@@ -28,15 +36,28 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
         primal: o0.primal,
         dual: o0.dual,
         updates: 0,
-    });
+    };
+    trace.push(p0.clone());
+    let initial_stop = ctx.observer.on_eval(&EvalEvent { point: p0 }).is_break();
 
     let mut rounds = 0;
     for t in 1..=cfg.max_rounds {
+        if initial_stop {
+            break;
+        }
         solver.run_round(&*loss, cfg.h_local);
         rounds = t;
-        if t % cfg.eval_every == 0 || t == cfg.max_rounds {
+        let mut stop = ctx
+            .observer
+            .on_round(&RoundEvent {
+                round: t,
+                vtime: solver.virt_secs,
+                updates: solver.updates,
+            })
+            .is_break();
+        if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
             let o = solver.objectives(&*loss);
-            trace.push(TracePoint {
+            let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
                 virt_secs: solver.virt_secs,
@@ -44,10 +65,17 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
                 primal: o.primal,
                 dual: o.dual,
                 updates: solver.updates,
-            });
-            if o.gap <= cfg.gap_threshold {
-                break;
+            };
+            trace.push(point.clone());
+            if ctx.observer.on_eval(&EvalEvent { point }).is_break() {
+                stop = true;
             }
+            if o.gap <= cfg.gap_threshold {
+                stop = true;
+            }
+        }
+        if stop {
+            break;
         }
     }
 

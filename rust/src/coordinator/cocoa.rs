@@ -15,14 +15,29 @@
 
 use crate::config::{ExpConfig, SigmaPolicy};
 use crate::data::Dataset;
+use crate::session::observer::ObserverHandle;
+use crate::session::RunCtx;
 
-use super::hybrid::{run_with, ProtocolOpts};
+use super::hybrid::{run_with, run_with_obs, ProtocolOpts};
 use super::master::MergePolicy;
 use super::RunReport;
 
 /// Run CoCoA+ with `cfg.k_nodes` nodes (1 core each — the paper's §6.1
 /// "CoCoA+ uses only 1 core per node").
 pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
+    run_obs(data, cfg, &ObserverHandle::silent())
+}
+
+/// Engine entry point: run with the context's config and observer.
+pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    run_obs(data, ctx.cfg, &ctx.observer)
+}
+
+fn run_obs(
+    data: &Dataset,
+    cfg: &ExpConfig,
+    obs: &ObserverHandle<'_>,
+) -> anyhow::Result<RunReport> {
     let mut sync_cfg = cfg.clone();
     sync_cfg.r_cores = 1;
     sync_cfg.s_barrier = sync_cfg.k_nodes;
@@ -33,7 +48,7 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
         sync_allreduce: true,
         policy: MergePolicy::OldestFirst,
     };
-    run_with(data, &sync_cfg, &opts)
+    run_with_obs(data, &sync_cfg, &opts, obs)
 }
 
 /// The paper's §6.5 variant: run CoCoA+ treating every core as a

@@ -7,6 +7,8 @@ use std::sync::mpsc;
 
 use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
+use crate::session::observer::ObserverHandle;
+use crate::session::RunCtx;
 use crate::sim::{resolve_stragglers, CostModel, UpdateCosts};
 use crate::util::Rng;
 
@@ -36,9 +38,17 @@ impl Default for ProtocolOpts {
     }
 }
 
-/// Run Hybrid-DCA with the default protocol options.
+/// Run Hybrid-DCA with the default protocol options (the merge policy
+/// comes from `cfg.merge_policy`).
 pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
-    run_with(data, cfg, &ProtocolOpts::default())
+    let opts = ProtocolOpts { policy: cfg.merge_policy, ..ProtocolOpts::default() };
+    run_with(data, cfg, &opts)
+}
+
+/// Engine entry point: run with the context's config and observer.
+pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    let opts = ProtocolOpts { policy: ctx.cfg.merge_policy, ..ProtocolOpts::default() };
+    run_with_obs(data, ctx.cfg, &opts, &ctx.observer)
 }
 
 /// Run the double-asynchronous protocol with explicit options.
@@ -46,6 +56,16 @@ pub fn run_with(
     data: &Dataset,
     cfg: &ExpConfig,
     opts: &ProtocolOpts,
+) -> anyhow::Result<RunReport> {
+    run_with_obs(data, cfg, opts, &ObserverHandle::silent())
+}
+
+/// Run with explicit options, streaming events to `obs`.
+pub fn run_with_obs(
+    data: &Dataset,
+    cfg: &ExpConfig,
+    opts: &ProtocolOpts,
+    obs: &ObserverHandle<'_>,
 ) -> anyhow::Result<RunReport> {
     cfg.validate()?;
     data.validate()?;
@@ -140,6 +160,7 @@ pub fn run_with(
             data,
             &*loss,
             &opts.label,
+            obs,
         ));
 
         for h in handles {

@@ -35,9 +35,12 @@ use std::sync::mpsc::{Receiver, Sender};
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::metrics::{Trace, TracePoint};
+use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
 use crate::util::{axpy, norm_sq, Stopwatch};
 
 use super::messages::{MasterReply, WorkerMsg};
+
+pub use crate::config::MergePolicy;
 
 /// Event record for one global merge — consumed by the property tests
 /// (barrier size, uniqueness, staleness bounds).
@@ -53,13 +56,6 @@ pub struct MergeEvent {
     pub vtime: f64,
     /// Global rounds each merged update waited in `P` before merging.
     pub queue_wait: Vec<usize>,
-}
-
-/// Merge-order policy (paper: oldest first; ablation: newest first).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MergePolicy {
-    OldestFirst,
-    NewestFirst,
 }
 
 /// Master configuration.
@@ -134,6 +130,11 @@ struct Pending {
 ///
 /// The caller must drop its own clone of the worker-side `Sender` so
 /// that `rx` disconnects when all workers exit (shutdown drain).
+///
+/// `obs` streams merge/round/eval events to the caller's observer; a
+/// `Break` from any callback stops the run through the normal
+/// termination path (workers are drained and replied `terminate`).
+#[allow(clippy::too_many_arguments)]
 pub fn run_master(
     cfg: &MasterCfg,
     rx: &Receiver<WorkerMsg>,
@@ -141,6 +142,7 @@ pub fn run_master(
     data: &Dataset,
     loss: &dyn Loss,
     label: &str,
+    obs: &ObserverHandle<'_>,
 ) -> MasterOutcome {
     let k = cfg.k_nodes;
     assert_eq!(txs.len(), k);
@@ -170,7 +172,7 @@ pub fn run_master(
 
     // Initial point (α = 0, v = 0).
     let o0 = crate::metrics::objectives(data, loss, &vec![0.0; data.n()], &v, cfg.lambda);
-    trace.push(TracePoint {
+    let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
         virt_secs: 0.0,
@@ -178,11 +180,13 @@ pub fn run_master(
         primal: o0.primal,
         dual: o0.dual,
         updates: 0,
-    });
+    };
+    trace.push(p0.clone());
+    let initial_stop = obs.on_eval(&EvalEvent { point: p0 }).is_break();
 
     let mut t = 0usize;
     let mut disconnected = false;
-    'rounds: while t < cfg.max_rounds {
+    'rounds: while t < cfg.max_rounds && !initial_stop {
         // ---- conservative DES step 1: hold one message per in-flight
         // worker so the next virtual arrival is known exactly ----
         while computing_count > 0 {
@@ -264,21 +268,29 @@ pub fn run_master(
         }
         t += 1;
 
-        events.push(MergeEvent {
+        let merge_ev = MergeEvent {
             round: t,
             merged: merged_ids,
             gamma_after: gamma_k.clone(),
             vtime,
             queue_wait,
-        });
+        };
+        // Stream the merge and round to the observer before deciding
+        // whether to evaluate; a Break stops the run like a reached
+        // gap threshold would.
+        let mut observer_stop = obs.on_merge(&merge_ev).is_break();
+        events.push(merge_ev);
+        observer_stop |= obs
+            .on_round(&RoundEvent { round: t, vtime, updates: total_updates })
+            .is_break();
 
         // ---- evaluate + stopping decision ----
-        let mut stop = t >= cfg.max_rounds;
+        let mut stop = t >= cfg.max_rounds || observer_stop;
         if t % cfg.eval_every == 0 || stop {
             let primal = crate::metrics::primal_objective(data, loss, &v, cfg.lambda);
             let dual = dual_sums.iter().sum::<f64>() / n - 0.5 * cfg.lambda * norm_sq(&v);
             let gap = primal - dual;
-            trace.push(TracePoint {
+            let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
                 virt_secs: vtime,
@@ -286,7 +298,11 @@ pub fn run_master(
                 primal,
                 dual,
                 updates: total_updates,
-            });
+            };
+            trace.push(point.clone());
+            if obs.on_eval(&EvalEvent { point }).is_break() {
+                stop = true;
+            }
             if gap <= cfg.gap_threshold {
                 stop = true;
             }

@@ -7,8 +7,11 @@
 //!   `S = K, Γ = 1, R = 1`, all-reduce cost model, σ = νK).
 //! * [`passcode`] — the PassCoDe baseline (single node, `K = 1`).
 //! * [`baseline`] — sequential DCA.
-//! * [`run_algorithm`] — one entry point for all four (Figure 3's
-//!   solver set).
+//!
+//! The public entry point is the [`crate::session`] layer: a typed
+//! [`Session`](crate::session::Session) run through the
+//! [`SolverEngine`](crate::session::SolverEngine) registry. The
+//! [`run_algorithm`] enum dispatcher is kept as a deprecated shim.
 
 pub mod baseline;
 pub mod cocoa;
@@ -56,20 +59,26 @@ impl RunReport {
 }
 
 /// Dispatch an algorithm by enum (Figure 3's four solvers).
+///
+/// Deprecated shim kept for source compatibility: it forwards to the
+/// [`SolverEngine`](crate::session::SolverEngine) registry with no
+/// observer attached, which is exactly the old behavior.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a `session::Session` (or call `session::resolve(name)`) instead; \
+            this shim forwards to the engine registry"
+)]
 pub fn run_algorithm(
     algo: Algorithm,
     data: &Dataset,
     cfg: &ExpConfig,
 ) -> anyhow::Result<RunReport> {
-    match algo {
-        Algorithm::Baseline => baseline::run(data, cfg),
-        Algorithm::CocoaPlus => cocoa::run(data, cfg),
-        Algorithm::PassCoDe => passcode::run(data, cfg),
-        Algorithm::HybridDca => hybrid::run(data, cfg),
-    }
+    let engine = crate::session::resolve(crate::session::canonical_name(algo))?;
+    engine.run(data, &crate::session::RunCtx::silent(cfg))
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::data::synth::Preset;

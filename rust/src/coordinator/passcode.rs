@@ -10,6 +10,8 @@
 use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
 use crate::metrics::{Trace, TracePoint};
+use crate::session::observer::{EvalEvent, RoundEvent};
+use crate::session::RunCtx;
 use crate::sim::{CostModel, UpdateCosts};
 use crate::solver::local::LocalSolver;
 use crate::solver::StepParams;
@@ -19,6 +21,12 @@ use super::RunReport;
 
 /// Run PassCoDe with `cfg.r_cores` cores on the whole dataset.
 pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
+    run_ctx(data, &RunCtx::silent(cfg))
+}
+
+/// Engine entry point: run with the context's config and observer.
+pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    let cfg = ctx.cfg;
     cfg.validate()?;
     let loss = cfg.loss.build();
     let mut rng = Rng::new(cfg.seed);
@@ -40,7 +48,7 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
     let mut alpha = vec![0.0; data.n()];
 
     let o0 = crate::metrics::objectives(data, &*loss, &alpha, &vec![0.0; data.d()], cfg.lambda);
-    trace.push(TracePoint {
+    let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
         virt_secs: 0.0,
@@ -48,20 +56,29 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
         primal: o0.primal,
         dual: o0.dual,
         updates: 0,
-    });
+    };
+    trace.push(p0.clone());
+    let initial_stop = ctx.observer.on_eval(&EvalEvent { point: p0 }).is_break();
 
     let mut rounds = 0;
     for t in 1..=cfg.max_rounds {
+        if initial_stop {
+            break;
+        }
         let stats = solver.run_round(data, &*loss, &norms, &costs, cfg.h_local);
         solver.commit(1.0); // ν = 1: α_cur is the truth
         total_updates += stats.updates;
         vtime += stats.node_secs();
         rounds = t;
-        if t % cfg.eval_every == 0 || t == cfg.max_rounds {
+        let mut stop = ctx
+            .observer
+            .on_round(&RoundEvent { round: t, vtime, updates: total_updates })
+            .is_break();
+        if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
             solver.scatter_alpha(&mut alpha);
             let v = solver.v.snapshot();
             let o = crate::metrics::objectives(data, &*loss, &alpha, &v, cfg.lambda);
-            trace.push(TracePoint {
+            let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
                 virt_secs: vtime,
@@ -69,10 +86,17 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
                 primal: o.primal,
                 dual: o.dual,
                 updates: total_updates,
-            });
-            if o.gap <= cfg.gap_threshold {
-                break;
+            };
+            trace.push(point.clone());
+            if ctx.observer.on_eval(&EvalEvent { point }).is_break() {
+                stop = true;
             }
+            if o.gap <= cfg.gap_threshold {
+                stop = true;
+            }
+        }
+        if stop {
+            break;
         }
     }
 

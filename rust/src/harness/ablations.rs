@@ -9,56 +9,51 @@
 //! * **σ scaling** — σ = νS (paper-safe) vs νK (over-damped) vs a
 //!   deliberately unsafe small σ.
 
-use crate::config::{Algorithm, ExpConfig, SigmaPolicy};
-use crate::coordinator::hybrid::{run_with, ProtocolOpts};
+use crate::config::SigmaPolicy;
 use crate::coordinator::MergePolicy;
 use crate::metrics::Trace;
 
-use super::paper_cfg;
+use super::paper_session;
 
 /// Merge-policy ablation: same config, two policies. Run under a
 /// straggler — on a homogeneous cluster updates barely queue, so the
 /// pick order cannot matter; with a slow node the newest-first policy
 /// starves the straggler's queued updates.
 pub fn merge_policy(dataset: &str, rounds: usize) -> anyhow::Result<Vec<Trace>> {
-    let mut cfg = paper_cfg(dataset, 4, 2);
-    cfg.s_barrier = 2;
-    cfg.gamma = 4;
-    cfg.max_rounds = rounds;
-    cfg.gap_threshold = 1e-8;
-    cfg.stragglers = vec![1.0, 1.0, 1.0, 3.0];
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(dataset, 4, 2)
+        .barrier(2)
+        .delay(4)
+        .rounds(rounds)
+        .gap_threshold(1e-8)
+        .stragglers(vec![1.0, 1.0, 1.0, 3.0]);
+    let data = base.clone().build()?.load_dataset()?;
     let mut out = Vec::new();
     for (policy, name) in
         [(MergePolicy::OldestFirst, "oldest-first"), (MergePolicy::NewestFirst, "newest-first")]
     {
-        let opts = ProtocolOpts {
-            label: format!("Hybrid-DCA/{name}"),
-            sync_allreduce: false,
-            policy,
-        };
-        out.push(run_with(&data, &cfg, &opts)?.trace);
+        let session = base.clone().merge_policy(policy).build()?;
+        let mut tr = session.run("hybrid-dca", &data)?.trace;
+        tr.label = format!("Hybrid-DCA/{name}");
+        out.push(tr);
     }
     Ok(out)
 }
 
 /// Atomic vs wild ablation (PassCoDe-style, single node, R cores).
 pub fn locks(dataset: &str, r: usize, rounds: usize) -> anyhow::Result<Vec<Trace>> {
-    let mut cfg = paper_cfg(dataset, 1, r);
-    cfg.s_barrier = 1;
-    cfg.max_rounds = rounds;
-    cfg.gap_threshold = 1e-8;
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(dataset, 1, r)
+        .barrier(1)
+        .rounds(rounds)
+        .gap_threshold(1e-8);
+    let data = base.clone().build()?.load_dataset()?;
     let mut out = Vec::new();
-    for (wild, _name) in [(false, "atomic"), (true, "wild")] {
-        let mut c = cfg.clone();
-        c.wild = wild;
-        out.push(crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace);
+    for wild in [false, true] {
+        let session = base.clone().wild(wild).build()?;
+        out.push(session.run("passcode", &data)?.trace);
     }
     // Serialized (R=1) stands in for the mutex variant.
-    let mut c = cfg.clone();
-    c.r_cores = 1;
-    let mut tr = crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace;
+    let session = base.clone().cluster(1, 1).barrier(1).build()?;
+    let mut tr = session.run("passcode", &data)?.trace;
     tr.label = "PassCoDe-serialized(R=1)".into();
     out.push(tr);
     Ok(out)
@@ -66,26 +61,24 @@ pub fn locks(dataset: &str, r: usize, rounds: usize) -> anyhow::Result<Vec<Trace
 
 /// σ-scaling ablation.
 pub fn sigma(dataset: &str, rounds: usize) -> anyhow::Result<Vec<Trace>> {
-    let mut cfg = paper_cfg(dataset, 4, 2);
-    cfg.s_barrier = 2;
-    cfg.gamma = 4;
-    cfg.max_rounds = rounds;
-    cfg.gap_threshold = 1e-8;
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(dataset, 4, 2)
+        .barrier(2)
+        .delay(4)
+        .rounds(rounds)
+        .gap_threshold(1e-8);
+    let data = base.clone().build()?.load_dataset()?;
     let mut out = Vec::new();
     for (policy, name) in [
         (SigmaPolicy::NuS, "sigma=νS(safe)"),
         (SigmaPolicy::NuK, "sigma=νK(damped)"),
         (SigmaPolicy::Fixed(0.25), "sigma=0.25(unsafe)"),
     ] {
-        let mut c: ExpConfig = cfg.clone();
-        c.sigma = policy;
-        let opts = ProtocolOpts {
-            label: format!("Hybrid-DCA/{name}"),
-            sync_allreduce: false,
-            policy: MergePolicy::OldestFirst,
-        };
-        out.push(run_with(&data, &c, &opts)?.trace);
+        // The Fixed(0.25) point is deliberately below the Eq. 5 safe
+        // region — that divergence is what the ablation studies.
+        let session = base.clone().sigma(policy).allow_unsafe_sigma().build()?;
+        let mut tr = session.run("hybrid-dca", &data)?.trace;
+        tr.label = format!("Hybrid-DCA/{name}");
+        out.push(tr);
     }
     Ok(out)
 }

@@ -6,10 +6,9 @@
 //! Paper setup: λ = 10⁻⁴, H = 40000, ν = 1, σ ∈ {K, S}; Hybrid uses
 //! `S = p, Γ = 1` (synchronous global updates) for this figure.
 
-use crate::config::Algorithm;
 use crate::metrics::Trace;
 
-use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+use super::{paper_session, print_threshold_table, save_traces, QuickFull};
 
 /// One dataset's sweep result.
 pub struct Fig3Result {
@@ -33,45 +32,50 @@ pub fn threshold_for(dataset: &str) -> f64 {
 /// Run the four solvers on one dataset with `p×t` worker cores.
 pub fn run_dataset(dataset: &str, p: usize, t: usize, max_rounds: usize) -> anyhow::Result<Fig3Result> {
     let threshold = threshold_for(dataset);
-    let mut cfg = paper_cfg(dataset, p, t);
-    cfg.max_rounds = max_rounds;
-    cfg.gap_threshold = threshold / 10.0; // run a bit past the threshold
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(dataset, p, t)
+        .rounds(max_rounds)
+        .gap_threshold(threshold / 10.0); // run a bit past the threshold
+    let data = base.clone().build()?.load_dataset()?;
 
     let mut traces = Vec::new();
 
     // Baseline: 1 core, rounds of H updates.
-    {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.r_cores = 1;
-        c.s_barrier = 1;
-        traces.push(crate::coordinator::run_algorithm(Algorithm::Baseline, &data, &c)?.trace);
-    }
+    traces.push(
+        base.clone()
+            .cluster(1, 1)
+            .barrier(1)
+            .build()?
+            .run("baseline", &data)?
+            .trace,
+    );
     // CoCoA+: p×t single-core nodes (equal total cores; the paper's
     // CoCoA+ rows use 1 core per node, so p·t nodes).
-    {
-        let mut c = cfg.clone();
-        c.k_nodes = p * t;
-        c.r_cores = 1;
-        c.s_barrier = c.k_nodes;
-        traces.push(crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace);
-    }
+    traces.push(
+        base.clone()
+            .cluster(p * t, 1)
+            .barrier(p * t)
+            .build()?
+            .run("cocoa+", &data)?
+            .trace,
+    );
     // PassCoDe: one node, p×t cores.
-    {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.s_barrier = 1;
-        c.r_cores = p * t;
-        traces.push(crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace);
-    }
+    traces.push(
+        base.clone()
+            .cluster(1, p * t)
+            .barrier(1)
+            .build()?
+            .run("passcode", &data)?
+            .trace,
+    );
     // Hybrid-DCA: p nodes × t cores, S = p, Γ = 1 (Fig 3 setting).
-    {
-        let mut c = cfg.clone();
-        c.s_barrier = p;
-        c.gamma = 1;
-        traces.push(crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace);
-    }
+    traces.push(
+        base.clone()
+            .barrier(p)
+            .delay(1)
+            .build()?
+            .run("hybrid-dca", &data)?
+            .trace,
+    );
 
     Ok(Fig3Result { dataset: dataset.into(), threshold, traces })
 }

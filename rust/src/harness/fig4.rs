@@ -8,9 +8,7 @@
 //! one physical core, so parallel wall-clock is meaningless; the
 //! virtual clock models the paper's queueing structure).
 
-use crate::config::Algorithm;
-
-use super::{paper_cfg, QuickFull};
+use super::{paper_session, QuickFull};
 
 /// One measured speedup point.
 #[derive(Debug, Clone, PartialEq)]
@@ -59,21 +57,22 @@ impl Fig4Grid {
 
 /// Run the whole grid. Returns (baseline time, points).
 pub fn run_grid(grid: &Fig4Grid) -> anyhow::Result<(f64, Vec<SpeedupPoint>)> {
-    let mut cfg = paper_cfg(&grid.dataset, 1, 1);
-    cfg.max_rounds = grid.max_rounds;
-    cfg.gap_threshold = grid.threshold;
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(&grid.dataset, 1, 1)
+        .rounds(grid.max_rounds)
+        .gap_threshold(grid.threshold);
+    let data = base.clone().build()?.load_dataset()?;
 
     // Baseline reference. Give it proportionally more rounds: it applies
     // H updates/round where parallel solvers apply p·t·H.
     let base_time = {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.r_cores = 1;
-        c.s_barrier = 1;
-        c.max_rounds = grid.max_rounds * grid.max_cores;
-        c.eval_every = 8;
-        let tr = crate::coordinator::run_algorithm(Algorithm::Baseline, &data, &c)?.trace;
+        let session = base
+            .clone()
+            .cluster(1, 1)
+            .barrier(1)
+            .rounds(grid.max_rounds * grid.max_cores)
+            .eval_every(8)
+            .build()?;
+        let tr = session.run("baseline", &data)?.trace;
         tr.virt_time_to_gap(grid.threshold)
             .ok_or_else(|| anyhow::anyhow!("baseline never reached threshold {}", grid.threshold))?
     };
@@ -82,11 +81,8 @@ pub fn run_grid(grid: &Fig4Grid) -> anyhow::Result<(f64, Vec<SpeedupPoint>)> {
 
     // PassCoDe: single node, t cores (t sweep includes the larger values).
     for &t in grid.t_values.iter().chain(grid.p_values.iter()) {
-        let mut c = cfg.clone();
-        c.k_nodes = 1;
-        c.s_barrier = 1;
-        c.r_cores = t;
-        let tr = crate::coordinator::run_algorithm(Algorithm::PassCoDe, &data, &c)?.trace;
+        let session = base.clone().cluster(1, t).barrier(1).build()?;
+        let tr = session.run("passcode", &data)?.trace;
         let ttt = tr.virt_time_to_gap(grid.threshold);
         points.push(SpeedupPoint {
             solver: "PassCoDe".into(),
@@ -99,11 +95,8 @@ pub fn run_grid(grid: &Fig4Grid) -> anyhow::Result<(f64, Vec<SpeedupPoint>)> {
 
     // CoCoA+: p nodes × 1 core.
     for &p in &grid.p_values {
-        let mut c = cfg.clone();
-        c.k_nodes = p;
-        c.r_cores = 1;
-        c.s_barrier = p;
-        let tr = crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace;
+        let session = base.clone().cluster(p, 1).barrier(p).build()?;
+        let tr = session.run("cocoa+", &data)?.trace;
         let ttt = tr.virt_time_to_gap(grid.threshold);
         points.push(SpeedupPoint {
             solver: "CoCoA+".into(),
@@ -120,12 +113,8 @@ pub fn run_grid(grid: &Fig4Grid) -> anyhow::Result<(f64, Vec<SpeedupPoint>)> {
             if p * t > grid.max_cores {
                 continue;
             }
-            let mut c = cfg.clone();
-            c.k_nodes = p;
-            c.r_cores = t;
-            c.s_barrier = p;
-            c.gamma = 1;
-            let tr = crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace;
+            let session = base.clone().cluster(p, t).barrier(p).delay(1).build()?;
+            let tr = session.run("hybrid-dca", &data)?.trace;
             let ttt = tr.virt_time_to_gap(grid.threshold);
             points.push(SpeedupPoint {
                 solver: "Hybrid-DCA".into(),

@@ -9,11 +9,10 @@
 //! but could not run (§6.3: "useful for HPC platforms with
 //! heterogeneous nodes, unlike ours") — under a straggler profile.
 
-use crate::config::Algorithm;
 use crate::metrics::Trace;
 use crate::sim::StragglerProfile;
 
-use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+use super::{paper_session, print_threshold_table, save_traces, QuickFull};
 
 /// Run the S sweep; returns one trace per S value.
 pub fn run_sweep(
@@ -25,20 +24,18 @@ pub fn run_sweep(
     max_rounds: usize,
     profile: StragglerProfile,
 ) -> anyhow::Result<Vec<Trace>> {
-    let mut cfg = paper_cfg(dataset, p, t);
-    cfg.max_rounds = max_rounds;
-    cfg.gamma = gamma;
-    cfg.gap_threshold = 1e-7; // run the full horizon; stalls are the point
-    cfg.stragglers = profile.multipliers(p);
-    if profile == StragglerProfile::Homogeneous {
-        cfg.stragglers.clear();
+    let mut base = paper_session(dataset, p, t)
+        .rounds(max_rounds)
+        .delay(gamma)
+        .gap_threshold(1e-7); // run the full horizon; stalls are the point
+    if profile != StragglerProfile::Homogeneous {
+        base = base.stragglers(profile.multipliers(p));
     }
-    let data = super::load_dataset(&cfg)?;
+    let data = base.clone().build()?.load_dataset()?;
     let mut traces = Vec::new();
     for &s in s_values {
-        let mut c = cfg.clone();
-        c.s_barrier = s;
-        let mut tr = crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace;
+        let session = base.clone().barrier(s).build()?;
+        let mut tr = session.run("hybrid-dca", &data)?.trace;
         tr.label = format!("S={s}");
         traces.push(tr);
     }

@@ -8,12 +8,11 @@
 //! counters every round), and add the heterogeneous extension where Γ
 //! matters.
 
-use crate::config::Algorithm;
 use crate::coordinator::RunReport;
 use crate::metrics::Trace;
 use crate::sim::StragglerProfile;
 
-use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+use super::{paper_session, print_threshold_table, save_traces, QuickFull};
 
 /// Result of one Γ setting: trace + observed staleness statistics.
 pub struct GammaResult {
@@ -49,20 +48,18 @@ pub fn run_sweep(
     max_rounds: usize,
     profile: StragglerProfile,
 ) -> anyhow::Result<Vec<GammaResult>> {
-    let mut cfg = paper_cfg(dataset, p, t);
-    cfg.max_rounds = max_rounds;
-    cfg.s_barrier = s;
-    cfg.gap_threshold = 1e-7;
-    cfg.stragglers = profile.multipliers(p);
-    if profile == StragglerProfile::Homogeneous {
-        cfg.stragglers.clear();
+    let mut base = paper_session(dataset, p, t)
+        .rounds(max_rounds)
+        .barrier(s)
+        .gap_threshold(1e-7);
+    if profile != StragglerProfile::Homogeneous {
+        base = base.stragglers(profile.multipliers(p));
     }
-    let data = super::load_dataset(&cfg)?;
+    let data = base.clone().build()?.load_dataset()?;
     let mut out = Vec::new();
     for &g in gamma_values {
-        let mut c = cfg.clone();
-        c.gamma = g;
-        let report = crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?;
+        let session = base.clone().delay(g).build()?;
+        let report = session.run("hybrid-dca", &data)?;
         let (max_staleness, mean_staleness) = staleness_stats(&report);
         let mut trace = report.trace;
         trace.label = format!("Γ={g}");

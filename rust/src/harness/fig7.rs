@@ -7,10 +7,9 @@
 //! 16 nodes; Hybrid-DCA takes ≈ 30 s — a ~10× gap this harness's
 //! virtual-clock reproduction should land near.
 
-use crate::config::Algorithm;
 use crate::metrics::Trace;
 
-use super::{paper_cfg, print_threshold_table, save_traces, QuickFull};
+use super::{paper_session, print_threshold_table, save_traces, QuickFull};
 
 pub struct Fig7Result {
     pub traces: Vec<Trace>,
@@ -20,37 +19,33 @@ pub struct Fig7Result {
 }
 
 pub fn run(dataset: &str, p: usize, t: usize, h: usize, max_rounds: usize, threshold: f64) -> anyhow::Result<Fig7Result> {
-    let mut cfg = paper_cfg(dataset, p, t);
-    cfg.h_local = h; // paper uses H = 10000 for Fig 7 (scaled here)
-    cfg.max_rounds = max_rounds;
-    cfg.gap_threshold = threshold;
-    cfg.eval_every = 5;
-    let data = super::load_dataset(&cfg)?;
+    let base = paper_session(dataset, p, t)
+        .local_iters(h) // paper uses H = 10000 for Fig 7 (scaled here)
+        .rounds(max_rounds)
+        .gap_threshold(threshold)
+        .eval_every(5);
+    let data = base.clone().build()?.load_dataset()?;
 
     let mut traces = Vec::new();
 
     // CoCoA+ on p nodes.
     {
-        let mut c = cfg.clone();
-        c.r_cores = 1;
-        c.s_barrier = p;
         // CoCoA+ applies p·H updates/round vs Hybrid's p·t·H; match the
         // paper (same H per node per round — CoCoA+ simply has no cores).
-        traces.push(crate::coordinator::run_algorithm(Algorithm::CocoaPlus, &data, &c)?.trace);
+        let session = base.clone().cluster(p, 1).barrier(p).build()?;
+        traces.push(session.run("cocoa+", &data)?.trace);
     }
     // CoCoA+ with all p·t cores as nodes (§6.5 variant).
     {
-        let c = cfg.clone();
+        let c = base.clone().build()?.to_exp_config();
         let mut tr = crate::coordinator::cocoa::run_cores_as_nodes(&data, &c)?.trace;
         tr.label = format!("CoCoA+({}-cores-as-nodes)", p * t);
         traces.push(tr);
     }
     // Hybrid-DCA p × t.
     {
-        let mut c = cfg.clone();
-        c.s_barrier = p;
-        c.gamma = 1;
-        traces.push(crate::coordinator::run_algorithm(Algorithm::HybridDca, &data, &c)?.trace);
+        let session = base.clone().barrier(p).delay(1).build()?;
+        traces.push(session.run("hybrid-dca", &data)?.trace);
     }
 
     let cocoa_t = traces[0].virt_time_to_gap(threshold);

@@ -16,6 +16,7 @@ pub mod table1;
 use crate::config::ExpConfig;
 use crate::data::{synth, Dataset, Preset};
 use crate::metrics::Trace;
+use crate::session::{Session, SessionBuilder};
 use crate::util::Rng;
 
 /// Sweep size: `Quick` for CLI smoke / CI, `Full` for `cargo bench`.
@@ -98,6 +99,22 @@ pub fn paper_cfg(dataset: &str, p: usize, t: usize) -> ExpConfig {
     cfg
 }
 
+/// The same standard setup as [`paper_cfg`], as a [`SessionBuilder`]
+/// ready for per-figure overrides (`.barrier(s)`, `.delay(g)`, …).
+pub fn paper_session(dataset: &str, p: usize, t: usize) -> SessionBuilder {
+    Session::builder()
+        .dataset(dataset)
+        .lambda(paper_lambda(dataset))
+        .cluster(p, t)
+        .barrier(p)
+        .delay(1)
+        .local_iters(512)
+        .nu(1.0)
+        .rounds(100)
+        .gap_threshold(1e-6)
+        .eval_every(1)
+}
+
 /// Results directory (crate-root/results).
 pub fn results_dir() -> std::path::PathBuf {
     let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
@@ -158,6 +175,12 @@ mod tests {
     #[test]
     fn paper_cfg_valid() {
         paper_cfg("rcv1-s", 4, 2).validate().unwrap();
+    }
+
+    #[test]
+    fn paper_session_matches_paper_cfg() {
+        let session = paper_session("rcv1-s", 4, 2).build().unwrap();
+        assert_eq!(session.to_exp_config(), paper_cfg("rcv1-s", 4, 2));
     }
 
     #[test]

@@ -15,22 +15,32 @@
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (Gram tile,
 //!   matvec, objective tile) called from Layer 2.
 //!
-//! Rust executes the AOT artifacts through the PJRT CPU client
-//! ([`runtime`]); Python never runs on the solve path.
+//! With the `xla-runtime` feature, Rust executes the AOT artifacts
+//! through the PJRT CPU client ([`runtime`]); Python never runs on the
+//! solve path.
 //!
 //! ## Quickstart
+//!
+//! The public API is the [`session`] layer: a typed [`session::Session`]
+//! built from validated sub-configs, run through a pluggable
+//! [`session::SolverEngine`] registry, streaming progress to a
+//! [`session::Observer`].
 //!
 //! ```no_run
 //! use hybrid_dca::prelude::*;
 //!
 //! let mut rng = Rng::new(42);
 //! let data = Preset::Tiny.generate(&mut rng);
-//! let mut cfg = ExpConfig::default();
-//! cfg.k_nodes = 4;
-//! cfg.r_cores = 2;
-//! cfg.s_barrier = 3;
-//! cfg.gamma = 2;
-//! let report = coordinator::hybrid::run(&data, &cfg).unwrap();
+//! let session = Session::builder()
+//!     .lambda(1e-2)
+//!     .cluster(4, 2) // K nodes × R cores
+//!     .barrier(3)    // merge as soon as S = 3 workers report
+//!     .delay(2)      // but never let anyone lag more than Γ = 2 rounds
+//!     .rounds(50)
+//!     .gap_threshold(1e-5)
+//!     .build()
+//!     .unwrap();
+//! let report = session.run("hybrid-dca", &data).unwrap();
 //! println!("final gap = {:?}", report.trace.final_gap());
 //! ```
 
@@ -41,7 +51,9 @@ pub mod data;
 pub mod harness;
 pub mod loss;
 pub mod metrics;
+#[cfg(feature = "xla-runtime")]
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod solver;
 pub mod util;
@@ -50,8 +62,13 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::{Algorithm, ExpConfig, SigmaPolicy};
     pub use crate::coordinator;
+    pub use crate::coordinator::{MergePolicy, RunReport};
     pub use crate::data::{CsrMatrix, Dataset, Partition, Preset, Strategy};
     pub use crate::loss::{Hinge, Logistic, Loss, LossKind, SquaredHinge};
     pub use crate::metrics::{objectives, Objectives, Trace, TracePoint};
+    pub use crate::session::{
+        EvalEvent, Observer, ObserverHandle, RoundEvent, RunCtx, Session, SessionBuilder,
+        SolverEngine,
+    };
     pub use crate::util::Rng;
 }

@@ -11,10 +11,10 @@
 use hybrid_dca::cli::{self, FlagSpec};
 use hybrid_dca::config::{Algorithm, ExpConfig, SigmaPolicy};
 use hybrid_dca::data::{libsvm, DatasetStats, Preset, Strategy};
+use hybrid_dca::harness;
 use hybrid_dca::loss::LossKind;
-use hybrid_dca::metrics::trace::write_csv_file;
+use hybrid_dca::session::{self, Chain, CsvStreamObserver, PrintObserver, Session};
 use hybrid_dca::util::{logging, Rng};
-use hybrid_dca::{coordinator, harness};
 
 fn main() {
     logging::init_from_env();
@@ -143,6 +143,10 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
     let (algo, cfg) = parse_train_cfg(&args)?;
+    // The typed session API is the execution path; the flat config is
+    // only the CLI-flag surface.
+    let session = Session::from_exp_config(&cfg)?;
+    let engine_name = session::canonical_name(algo);
     let data = harness::load_dataset(&cfg)?;
     println!(
         "# {} on {} (n={}, d={}, nnz={}) λ={} K={} R={} S={} Γ={} H={}",
@@ -158,14 +162,32 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         cfg.gamma,
         cfg.h_local
     );
-    let report = coordinator::run_algorithm(algo, &data, &cfg)?;
-    println!("round      wall(s)      virt(s)          gap");
-    for p in &report.trace.points {
-        println!(
-            "{:>5} {:>12.4} {:>12.6} {:>12.4e}",
-            p.round, p.wall_secs, p.virt_secs, p.gap
+    // Stream the trace live (and incrementally to CSV when requested)
+    // instead of dumping it after the run.
+    let csv = args.get("csv").unwrap().to_string();
+    let report = if csv.is_empty() {
+        let mut obs = PrintObserver::new();
+        session.run_observed(engine_name, &data, &mut obs)?
+    } else {
+        let file = std::io::BufWriter::new(
+            std::fs::File::create(&csv)
+                .map_err(|e| anyhow::anyhow!("create {csv}: {e}"))?,
         );
-    }
+        // Same label the driver will put on the trace (PassCoDe is the
+        // only engine whose label varies, on the wild switch).
+        let label = if algo == Algorithm::PassCoDe && cfg.wild {
+            "PassCoDe-Wild"
+        } else {
+            algo.name()
+        };
+        let mut obs = Chain(PrintObserver::new(), CsvStreamObserver::new(file, label)?);
+        let report = session.run_observed(engine_name, &data, &mut obs)?;
+        if let Some(e) = obs.1.error.take() {
+            anyhow::bail!("writing trace CSV {csv}: {e}");
+        }
+        println!("# trace streamed to {csv}");
+        report
+    };
     println!(
         "# finished: rounds={} updates={} vtime={:.6}s cert-gap={:.4e}",
         report.rounds,
@@ -173,11 +195,6 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         report.vtime,
         report.certificate_gap(&data, &cfg)
     );
-    let csv = args.get("csv").unwrap();
-    if !csv.is_empty() {
-        write_csv_file(std::path::Path::new(csv), &[report.trace.clone()])?;
-        println!("# trace written to {csv}");
-    }
     Ok(())
 }
 
@@ -252,6 +269,15 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
     }
 }
 
+#[cfg(not(feature = "xla-runtime"))]
+fn cmd_artifacts(_argv: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "this binary was built without the `xla-runtime` feature; \
+         rebuild with `cargo build --release --features xla-runtime`"
+    )
+}
+
+#[cfg(feature = "xla-runtime")]
 fn cmd_artifacts(argv: &[String]) -> anyhow::Result<()> {
     let specs = vec![
         FlagSpec::value("dir", "", "artifacts directory (default: ./artifacts)"),

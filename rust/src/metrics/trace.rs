@@ -23,6 +23,20 @@ pub struct TracePoint {
     pub updates: u64,
 }
 
+impl TracePoint {
+    /// One CSV row in the [`Trace::csv_header`] schema — shared by the
+    /// batch writer below and the streaming
+    /// `session::CsvStreamObserver` so the two cannot drift apart.
+    pub fn write_csv_row<W: Write>(&self, w: &mut W, label: &str) -> std::io::Result<()> {
+        writeln!(
+            w,
+            "{},{},{:.6},{:.6},{:.12e},{:.12e},{:.12e},{}",
+            label, self.round, self.wall_secs, self.virt_secs, self.gap, self.primal, self.dual,
+            self.updates
+        )
+    }
+}
+
 /// A named series of trace points for one algorithm/configuration.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
@@ -75,11 +89,7 @@ impl Trace {
 
     pub fn write_csv<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         for p in &self.points {
-            writeln!(
-                w,
-                "{},{},{:.6},{:.6},{:.12e},{:.12e},{:.12e},{}",
-                self.label, p.round, p.wall_secs, p.virt_secs, p.gap, p.primal, p.dual, p.updates
-            )?;
+            p.write_csv_row(w, &self.label)?;
         }
         Ok(())
     }

@@ -1,0 +1,224 @@
+//! The pluggable solver-engine surface: an object-safe [`SolverEngine`]
+//! trait plus a process-wide registry, so new coordination schemes (a
+//! delayed-gradient variant, importance sampling, …) plug in without
+//! touching any dispatcher.
+//!
+//! The paper's four solvers (Baseline, CoCoA+, PassCoDe, Hybrid-DCA)
+//! are pre-registered; [`engine`] resolves them by canonical name or
+//! any [`Algorithm`] alias (`"cocoa"`, `"hybrid"`, …).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::config::{Algorithm, ExpConfig};
+use crate::coordinator::RunReport;
+use crate::data::Dataset;
+
+use super::observer::{Observer, ObserverHandle};
+
+/// Everything an engine needs besides the dataset: the validated
+/// (flattened) experiment config and the caller's streaming observer.
+///
+/// `cfg` is the engine-facing view of a [`Session`](super::Session) —
+/// engines consume the flattened form so the coordinator internals stay
+/// agnostic of the typed builder layer.
+pub struct RunCtx<'a> {
+    pub cfg: &'a ExpConfig,
+    pub observer: ObserverHandle<'a>,
+}
+
+impl<'a> RunCtx<'a> {
+    pub fn new(cfg: &'a ExpConfig, obs: &'a mut dyn Observer) -> Self {
+        Self { cfg, observer: ObserverHandle::new(obs) }
+    }
+
+    /// A context that observes nothing (the deprecated-shim path).
+    pub fn silent(cfg: &'a ExpConfig) -> Self {
+        Self { cfg, observer: ObserverHandle::silent() }
+    }
+}
+
+/// An object-safe solver engine: one coordination scheme end to end.
+///
+/// Implementations must be stateless across runs (`&self`) and safe to
+/// share between threads; per-run state belongs in the run itself.
+pub trait SolverEngine: Send + Sync {
+    /// Canonical registry name (lowercase by convention).
+    fn name(&self) -> &str;
+
+    /// Run to completion (gap threshold, round budget, or observer
+    /// break) and return the final report.
+    fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport>;
+}
+
+type Registry = RwLock<BTreeMap<String, Arc<dyn SolverEngine>>>;
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| {
+        let mut m: BTreeMap<String, Arc<dyn SolverEngine>> = BTreeMap::new();
+        let builtins: [Arc<dyn SolverEngine>; 4] = [
+            Arc::new(BaselineEngine),
+            Arc::new(CocoaPlusEngine),
+            Arc::new(PassCoDeEngine),
+            Arc::new(HybridDcaEngine),
+        ];
+        for e in builtins {
+            m.insert(e.name().to_string(), e);
+        }
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) an engine under its canonical name. Returns
+/// the engine previously registered under that name, if any.
+pub fn register_engine(engine: Arc<dyn SolverEngine>) -> Option<Arc<dyn SolverEngine>> {
+    let key = engine.name().to_ascii_lowercase();
+    registry().write().expect("engine registry poisoned").insert(key, engine)
+}
+
+/// Look up an engine by canonical name or [`Algorithm`] alias
+/// (case-insensitive): `"hybrid"`, `"hybrid-dca"`, `"cocoa"`, …
+pub fn engine(name: &str) -> Option<Arc<dyn SolverEngine>> {
+    let reg = registry().read().expect("engine registry poisoned");
+    let key = name.to_ascii_lowercase();
+    if let Some(e) = reg.get(&key) {
+        return Some(Arc::clone(e));
+    }
+    // Fall back to the legacy enum's aliases for the builtins.
+    let canonical = Algorithm::parse(name)?;
+    reg.get(canonical_name(canonical)).map(Arc::clone)
+}
+
+/// Resolve an engine or fail with the list of registered names.
+pub fn resolve(name: &str) -> anyhow::Result<Arc<dyn SolverEngine>> {
+    engine(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown solver engine '{}' (registered: {})",
+            name,
+            engine_names().join(", ")
+        )
+    })
+}
+
+/// Names of all registered engines, sorted.
+pub fn engine_names() -> Vec<String> {
+    registry().read().expect("engine registry poisoned").keys().cloned().collect()
+}
+
+/// Canonical registry key for a legacy [`Algorithm`] variant.
+pub fn canonical_name(algo: Algorithm) -> &'static str {
+    match algo {
+        Algorithm::Baseline => "baseline",
+        Algorithm::CocoaPlus => "cocoa+",
+        Algorithm::PassCoDe => "passcode",
+        Algorithm::HybridDca => "hybrid-dca",
+    }
+}
+
+// ---- the four built-in engines ----
+
+/// Sequential DCA (Hsieh et al. 2008) — the paper's *Baseline*.
+struct BaselineEngine;
+
+impl SolverEngine for BaselineEngine {
+    fn name(&self) -> &str {
+        "baseline"
+    }
+
+    fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+        crate::coordinator::baseline::run_ctx(data, ctx)
+    }
+}
+
+/// CoCoA+ (Ma et al. 2015): synchronous all-reduce, 1 core per node.
+struct CocoaPlusEngine;
+
+impl SolverEngine for CocoaPlusEngine {
+    fn name(&self) -> &str {
+        "cocoa+"
+    }
+
+    fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+        crate::coordinator::cocoa::run_ctx(data, ctx)
+    }
+}
+
+/// PassCoDe (Hsieh et al. 2015): single node, R async cores.
+struct PassCoDeEngine;
+
+impl SolverEngine for PassCoDeEngine {
+    fn name(&self) -> &str {
+        "passcode"
+    }
+
+    fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+        crate::coordinator::passcode::run_ctx(data, ctx)
+    }
+}
+
+/// The paper's double-asynchronous solver.
+struct HybridDcaEngine;
+
+impl SolverEngine for HybridDcaEngine {
+    fn name(&self) -> &str {
+        "hybrid-dca"
+    }
+
+    fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+        crate::coordinator::hybrid::run_ctx(data, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Trace;
+
+    #[test]
+    fn builtins_registered() {
+        for name in ["baseline", "cocoa+", "passcode", "hybrid-dca"] {
+            assert!(engine(name).is_some(), "{name} missing");
+        }
+        assert!(engine_names().len() >= 4);
+    }
+
+    #[test]
+    fn alias_lookup() {
+        for alias in ["Hybrid-DCA", "hybrid", "cocoa", "CoCoA+", "dca", "sdca"] {
+            assert!(engine(alias).is_some(), "{alias} unresolved");
+        }
+        assert!(engine("sgd").is_none());
+        assert!(resolve("sgd").is_err());
+    }
+
+    #[test]
+    fn custom_engine_plugs_in() {
+        struct Echo;
+        impl SolverEngine for Echo {
+            fn name(&self) -> &str {
+                "echo-test"
+            }
+            fn run(&self, data: &Dataset, _ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+                Ok(RunReport {
+                    label: "echo".into(),
+                    trace: Trace::new("echo"),
+                    events: Vec::new(),
+                    alpha: vec![0.0; data.n()],
+                    v: vec![0.0; data.d()],
+                    rounds: 0,
+                    vtime: 0.0,
+                    total_updates: 0,
+                    worker_rounds: Vec::new(),
+                })
+            }
+        }
+        assert!(register_engine(Arc::new(Echo)).is_none());
+        let e = resolve("echo-test").unwrap();
+        let data = crate::data::synth::Preset::Tiny.generate(&mut crate::util::Rng::new(1));
+        let cfg = ExpConfig::default();
+        let report = e.run(&data, &RunCtx::silent(&cfg)).unwrap();
+        assert_eq!(report.label, "echo");
+    }
+}

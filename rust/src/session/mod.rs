@@ -1,0 +1,651 @@
+//! The public solver API: typed sessions, pluggable engines, streaming
+//! observers.
+//!
+//! The paper's contribution is a *family* of coordination schemes —
+//! Baseline, PassCoDe, CoCoA+, and Hybrid-DCA are points in one
+//! configuration space (cluster shape × merge policy). This module
+//! makes that space the API:
+//!
+//! * [`Session`] — a validated experiment description, decomposed into
+//!   the paper's natural sub-configs ([`ProblemSpec`], [`ClusterShape`],
+//!   [`LocalCfg`], [`MasterCfg`], [`RunControl`], [`SimCfg`]) and built
+//!   through [`SessionBuilder`] with errors that name the violated
+//!   paper constraint (S ≤ K, Γ ≥ 1, σ ≥ νS, …).
+//! * [`SolverEngine`] — an object-safe trait + registry
+//!   ([`register_engine`], [`engine`]) so new algorithms plug in
+//!   without touching any dispatcher.
+//! * [`Observer`] — streaming callbacks (`on_round` / `on_merge` /
+//!   `on_eval` → [`std::ops::ControlFlow`]) threaded through the
+//!   coordinator so callers can watch convergence live, log traces
+//!   incrementally, and early-stop.
+//!
+//! ```no_run
+//! use hybrid_dca::prelude::*;
+//!
+//! let data = Preset::Tiny.generate(&mut Rng::new(42));
+//! let session = Session::builder()
+//!     .lambda(1e-2)
+//!     .cluster(4, 2)
+//!     .barrier(3)
+//!     .delay(2)
+//!     .build()
+//!     .unwrap();
+//! let report = session.run("hybrid-dca", &data).unwrap();
+//! # let _ = report;
+//! ```
+
+mod engine;
+pub mod observer;
+
+pub use engine::{
+    canonical_name, engine, engine_names, register_engine, resolve, RunCtx, SolverEngine,
+};
+pub use observer::{
+    Chain, CsvStreamObserver, EarlyStop, EvalEvent, NullObserver, Observer, ObserverHandle,
+    PrintObserver, RoundEvent,
+};
+
+use crate::config::{ExpConfig, MergePolicy, SigmaPolicy};
+use crate::coordinator::RunReport;
+use crate::data::{Dataset, Strategy};
+use crate::loss::LossKind;
+
+/// Which data the session runs on (preset name or LIBSVM path) and the
+/// root RNG seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSpec {
+    /// Synthetic preset name; ignored when `path` is set.
+    pub dataset: String,
+    /// LIBSVM file path (overrides `dataset`).
+    pub path: Option<String>,
+    pub seed: u64,
+}
+
+/// The optimization problem: loss φ and regularization λ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProblemSpec {
+    pub loss: LossKind,
+    pub lambda: f64,
+}
+
+/// The simulated cluster: K nodes × R cores, data partition, and
+/// optional per-node straggler multipliers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterShape {
+    pub k_nodes: usize,
+    pub r_cores: usize,
+    pub partition: Strategy,
+    /// Per-node slowdown multipliers (empty = homogeneous 1.0).
+    pub stragglers: Vec<f64>,
+}
+
+/// The local solver (Algorithm 1): H iterations per core per round,
+/// aggregation ν, subproblem scaling σ, and the wild/atomic switch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LocalCfg {
+    pub h_local: usize,
+    pub nu: f64,
+    pub sigma: SigmaPolicy,
+    pub wild: bool,
+}
+
+/// The master (Algorithm 2): bounded barrier S, bounded delay Γ, and
+/// the merge-order policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MasterCfg {
+    pub s_barrier: usize,
+    pub gamma: usize,
+    pub policy: MergePolicy,
+}
+
+/// Run control: round budget, stopping gap, and evaluation cadence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunControl {
+    pub max_rounds: usize,
+    pub gap_threshold: f64,
+    pub eval_every: usize,
+}
+
+/// The virtual-clock cost model (DESIGN.md §3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimCfg {
+    pub net_latency: f64,
+    pub net_per_elem: f64,
+    pub cost_per_nnz: f64,
+}
+
+/// A validated experiment description — the typed replacement for the
+/// monolithic [`ExpConfig`]. Construct through [`Session::builder`];
+/// every instance has passed the paper's parameter constraints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Session {
+    pub data: DataSpec,
+    pub problem: ProblemSpec,
+    pub cluster: ClusterShape,
+    pub local: LocalCfg,
+    pub master: MasterCfg,
+    pub control: RunControl,
+    pub sim: SimCfg,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Lift a legacy flat config into a typed session. Accepts exactly
+    /// what [`ExpConfig::validate`] accepts (including deliberately
+    /// unsafe fixed σ, which ablations use).
+    pub fn from_exp_config(cfg: &ExpConfig) -> anyhow::Result<Session> {
+        let mut b = Session::builder()
+            .dataset(&cfg.dataset)
+            .seed(cfg.seed)
+            .loss(cfg.loss)
+            .lambda(cfg.lambda)
+            .cluster(cfg.k_nodes, cfg.r_cores)
+            .partition(cfg.partition)
+            .stragglers(cfg.stragglers.clone())
+            .local_iters(cfg.h_local)
+            .nu(cfg.nu)
+            .sigma(cfg.sigma)
+            .allow_unsafe_sigma()
+            .wild(cfg.wild)
+            .barrier(cfg.s_barrier)
+            .delay(cfg.gamma)
+            .merge_policy(cfg.merge_policy)
+            .rounds(cfg.max_rounds)
+            .gap_threshold(cfg.gap_threshold)
+            .eval_every(cfg.eval_every)
+            .net_latency(cfg.net_latency)
+            .net_per_elem(cfg.net_per_elem)
+            .cost_per_nnz(cfg.cost_per_nnz);
+        if let Some(p) = &cfg.data_path {
+            b = b.data_path(p);
+        }
+        b.build()
+    }
+
+    /// Flatten back to the engine-facing legacy config. Round-trips:
+    /// `Session::from_exp_config(&c)?.to_exp_config() == c` for any
+    /// valid `c`.
+    pub fn to_exp_config(&self) -> ExpConfig {
+        ExpConfig {
+            dataset: self.data.dataset.clone(),
+            data_path: self.data.path.clone(),
+            seed: self.data.seed,
+            loss: self.problem.loss,
+            lambda: self.problem.lambda,
+            k_nodes: self.cluster.k_nodes,
+            r_cores: self.cluster.r_cores,
+            partition: self.cluster.partition,
+            h_local: self.local.h_local,
+            nu: self.local.nu,
+            sigma: self.local.sigma,
+            wild: self.local.wild,
+            s_barrier: self.master.s_barrier,
+            gamma: self.master.gamma,
+            merge_policy: self.master.policy,
+            max_rounds: self.control.max_rounds,
+            gap_threshold: self.control.gap_threshold,
+            eval_every: self.control.eval_every,
+            stragglers: self.cluster.stragglers.clone(),
+            net_latency: self.sim.net_latency,
+            net_per_elem: self.sim.net_per_elem,
+            cost_per_nnz: self.sim.cost_per_nnz,
+        }
+    }
+
+    /// Run an engine from the registry with no observer.
+    pub fn run(&self, engine_name: &str, data: &Dataset) -> anyhow::Result<RunReport> {
+        let engine = engine::resolve(engine_name)?;
+        let cfg = self.to_exp_config();
+        engine.run(data, &RunCtx::silent(&cfg))
+    }
+
+    /// Run an engine from the registry, streaming progress to `obs`.
+    pub fn run_observed(
+        &self,
+        engine_name: &str,
+        data: &Dataset,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<RunReport> {
+        let engine = engine::resolve(engine_name)?;
+        let cfg = self.to_exp_config();
+        engine.run(data, &RunCtx::new(&cfg, obs))
+    }
+
+    /// Resolve the session's dataset (preset or LIBSVM file).
+    pub fn load_dataset(&self) -> anyhow::Result<Dataset> {
+        crate::harness::load_dataset(&self.to_exp_config())
+    }
+}
+
+/// Builder for [`Session`] with the paper's defaults; `build()`
+/// validates every constraint and names the one violated.
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    data: DataSpec,
+    problem: ProblemSpec,
+    cluster: ClusterShape,
+    local: LocalCfg,
+    master: MasterCfg,
+    control: RunControl,
+    sim: SimCfg,
+    allow_unsafe_sigma: bool,
+    /// Whether `barrier()` was called; only a *default* barrier tracks
+    /// the cluster size in `cluster()`.
+    barrier_explicit: bool,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        let d = ExpConfig::default();
+        Self {
+            data: DataSpec { dataset: d.dataset, path: d.data_path, seed: d.seed },
+            problem: ProblemSpec { loss: d.loss, lambda: d.lambda },
+            cluster: ClusterShape {
+                k_nodes: d.k_nodes,
+                r_cores: d.r_cores,
+                partition: d.partition,
+                stragglers: d.stragglers,
+            },
+            local: LocalCfg { h_local: d.h_local, nu: d.nu, sigma: d.sigma, wild: d.wild },
+            master: MasterCfg {
+                s_barrier: d.s_barrier,
+                gamma: d.gamma,
+                policy: d.merge_policy,
+            },
+            control: RunControl {
+                max_rounds: d.max_rounds,
+                gap_threshold: d.gap_threshold,
+                eval_every: d.eval_every,
+            },
+            sim: SimCfg {
+                net_latency: d.net_latency,
+                net_per_elem: d.net_per_elem,
+                cost_per_nnz: d.cost_per_nnz,
+            },
+            allow_unsafe_sigma: false,
+            barrier_explicit: false,
+        }
+    }
+}
+
+impl SessionBuilder {
+    // ---- data ----
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.data.dataset = name.to_string();
+        self
+    }
+
+    pub fn data_path(mut self, path: &str) -> Self {
+        self.data.path = Some(path.to_string());
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.data.seed = seed;
+        self
+    }
+
+    // ---- problem ----
+    pub fn loss(mut self, loss: LossKind) -> Self {
+        self.problem.loss = loss;
+        self
+    }
+
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.problem.lambda = lambda;
+        self
+    }
+
+    // ---- cluster shape ----
+    /// K worker nodes × R cores per node. The *default* barrier
+    /// follows the cluster down (so `cluster(2, 1)` alone is valid);
+    /// an explicitly set `barrier()` is never silently changed —
+    /// `build()` reports the S ≤ K violation instead.
+    pub fn cluster(mut self, k_nodes: usize, r_cores: usize) -> Self {
+        self.cluster.k_nodes = k_nodes;
+        self.cluster.r_cores = r_cores;
+        if !self.barrier_explicit {
+            self.master.s_barrier = self.master.s_barrier.min(k_nodes.max(1));
+        }
+        self
+    }
+
+    pub fn partition(mut self, strategy: Strategy) -> Self {
+        self.cluster.partition = strategy;
+        self
+    }
+
+    /// Per-node slowdown multipliers (one per node, each ≥ 1.0); an
+    /// empty vec means a homogeneous cluster.
+    pub fn stragglers(mut self, multipliers: Vec<f64>) -> Self {
+        self.cluster.stragglers = multipliers;
+        self
+    }
+
+    // ---- local solver (Algorithm 1) ----
+    /// Local iterations per core per round (the paper's H).
+    pub fn local_iters(mut self, h: usize) -> Self {
+        self.local.h_local = h;
+        self
+    }
+
+    /// Aggregation parameter ν ∈ (0, 1].
+    pub fn nu(mut self, nu: f64) -> Self {
+        self.local.nu = nu;
+        self
+    }
+
+    pub fn sigma(mut self, sigma: SigmaPolicy) -> Self {
+        self.local.sigma = sigma;
+        self
+    }
+
+    /// Explicit σ (ablations). Values below the Eq. 5 safe region νS
+    /// are rejected by `build()` unless [`Self::allow_unsafe_sigma`].
+    pub fn sigma_fixed(mut self, sigma: f64) -> Self {
+        self.local.sigma = SigmaPolicy::Fixed(sigma);
+        self
+    }
+
+    /// Permit a fixed σ below νS (divergence ablations).
+    pub fn allow_unsafe_sigma(mut self) -> Self {
+        self.allow_unsafe_sigma = true;
+        self
+    }
+
+    /// Racy (PassCoDe-Wild) updates instead of lock-free atomics.
+    pub fn wild(mut self, wild: bool) -> Self {
+        self.local.wild = wild;
+        self
+    }
+
+    // ---- master (Algorithm 2) ----
+    /// Bounded-barrier size S: merge as soon as S of K workers report.
+    pub fn barrier(mut self, s: usize) -> Self {
+        self.master.s_barrier = s;
+        self.barrier_explicit = true;
+        self
+    }
+
+    /// Bounded delay Γ: no worker's update may go unmerged for more
+    /// than Γ global rounds.
+    pub fn delay(mut self, gamma: usize) -> Self {
+        self.master.gamma = gamma;
+        self
+    }
+
+    pub fn merge_policy(mut self, policy: MergePolicy) -> Self {
+        self.master.policy = policy;
+        self
+    }
+
+    // ---- run control ----
+    pub fn rounds(mut self, max_rounds: usize) -> Self {
+        self.control.max_rounds = max_rounds;
+        self
+    }
+
+    pub fn gap_threshold(mut self, threshold: f64) -> Self {
+        self.control.gap_threshold = threshold;
+        self
+    }
+
+    /// Evaluate objectives every `n` rounds (n ≥ 1).
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.control.eval_every = n;
+        self
+    }
+
+    // ---- simulation ----
+    pub fn net_latency(mut self, secs: f64) -> Self {
+        self.sim.net_latency = secs;
+        self
+    }
+
+    pub fn net_per_elem(mut self, secs: f64) -> Self {
+        self.sim.net_per_elem = secs;
+        self
+    }
+
+    pub fn cost_per_nnz(mut self, secs: f64) -> Self {
+        self.sim.cost_per_nnz = secs;
+        self
+    }
+
+    /// Validate every paper constraint and produce the session. Errors
+    /// name the violated constraint and where it comes from.
+    pub fn build(self) -> anyhow::Result<Session> {
+        let Self {
+            data,
+            problem,
+            cluster,
+            local,
+            master,
+            control,
+            sim,
+            allow_unsafe_sigma,
+            barrier_explicit: _,
+        } = self;
+
+        anyhow::ensure!(
+            problem.lambda > 0.0,
+            "ProblemSpec: regularization λ must be > 0 (got {})",
+            problem.lambda
+        );
+        anyhow::ensure!(cluster.k_nodes >= 1, "ClusterShape: K must be ≥ 1 (got 0 nodes)");
+        anyhow::ensure!(cluster.r_cores >= 1, "ClusterShape: R must be ≥ 1 (got 0 cores)");
+        if !cluster.stragglers.is_empty() {
+            anyhow::ensure!(
+                cluster.stragglers.len() == cluster.k_nodes,
+                "ClusterShape: stragglers must have one multiplier per node \
+                 ({} multipliers for K={} nodes)",
+                cluster.stragglers.len(),
+                cluster.k_nodes
+            );
+            anyhow::ensure!(
+                cluster.stragglers.iter().all(|&s| s >= 1.0),
+                "ClusterShape: straggler multipliers are slowdowns and must be ≥ 1.0"
+            );
+        }
+
+        anyhow::ensure!(
+            local.h_local >= 1,
+            "LocalCfg: H must be ≥ 1 (Algorithm 1 runs H local iterations per core)"
+        );
+        anyhow::ensure!(
+            local.nu > 0.0 && local.nu <= 1.0,
+            "LocalCfg: aggregation ν must be in (0, 1] (Lemma 3.2, Ma et al. 2015b; got {})",
+            local.nu
+        );
+
+        anyhow::ensure!(
+            (1..=cluster.k_nodes).contains(&master.s_barrier),
+            "MasterCfg: bounded barrier must satisfy 1 ≤ S ≤ K (Algorithm 2; got S={}, K={})",
+            master.s_barrier,
+            cluster.k_nodes
+        );
+        anyhow::ensure!(
+            master.gamma >= 1,
+            "MasterCfg: bounded delay must satisfy Γ ≥ 1 (Algorithm 2; got Γ=0)"
+        );
+
+        let sigma = local.sigma.value(local.nu, master.s_barrier, cluster.k_nodes);
+        anyhow::ensure!(sigma > 0.0, "LocalCfg: σ must be > 0 (got σ={sigma})");
+        if let SigmaPolicy::Fixed(v) = local.sigma {
+            let safe = local.nu * master.s_barrier as f64;
+            anyhow::ensure!(
+                allow_unsafe_sigma || v >= safe,
+                "LocalCfg: fixed σ={v} is below the safe region σ ≥ νS = {safe} \
+                 (Eq. 5 with Lemma 3.2's choice); call allow_unsafe_sigma() \
+                 if this is a deliberate divergence ablation"
+            );
+        }
+
+        anyhow::ensure!(
+            control.max_rounds >= 1,
+            "RunControl: max_rounds must be ≥ 1 (got 0)"
+        );
+        anyhow::ensure!(
+            control.gap_threshold > 0.0,
+            "RunControl: gap_threshold must be > 0 (got {})",
+            control.gap_threshold
+        );
+        anyhow::ensure!(
+            control.eval_every >= 1,
+            "RunControl: eval_every must be ≥ 1 (got 0 — the trace would never be sampled)"
+        );
+
+        anyhow::ensure!(
+            sim.net_latency >= 0.0 && sim.net_per_elem >= 0.0 && sim.cost_per_nnz >= 0.0,
+            "SimCfg: virtual-clock costs must be ≥ 0"
+        );
+
+        let session = Session { data, problem, cluster, local, master, control, sim };
+        // Drift backstop: the checks above are the named-subconfig
+        // versions of `ExpConfig::validate`; delegating the flattened
+        // config back through it guarantees a built Session is never
+        // more permissive than what the engines accept, even if a
+        // constraint is later added only to `validate`.
+        session.to_exp_config().validate()?;
+        Ok(session)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builder_is_valid() {
+        let s = Session::builder().build().unwrap();
+        assert_eq!(s.cluster.k_nodes, 4);
+        assert_eq!(s.master.s_barrier, 4);
+    }
+
+    #[test]
+    fn readme_builder_shape() {
+        let s = Session::builder()
+            .cluster(16, 8)
+            .barrier(4)
+            .delay(2)
+            .build()
+            .unwrap();
+        assert_eq!(s.cluster.k_nodes, 16);
+        assert_eq!(s.cluster.r_cores, 8);
+        assert_eq!(s.master.s_barrier, 4);
+        assert_eq!(s.master.gamma, 2);
+    }
+
+    #[test]
+    fn barrier_above_k_rejected_with_named_constraint() {
+        let err = Session::builder().cluster(4, 2).barrier(5).build().unwrap_err();
+        assert!(err.to_string().contains("1 ≤ S ≤ K"), "{err}");
+    }
+
+    #[test]
+    fn gamma_zero_rejected() {
+        let err = Session::builder().delay(0).build().unwrap_err();
+        assert!(err.to_string().contains("Γ ≥ 1"), "{err}");
+    }
+
+    #[test]
+    fn nu_out_of_range_rejected() {
+        for bad in [0.0, -0.5, 1.5] {
+            let err = Session::builder().nu(bad).build().unwrap_err();
+            assert!(err.to_string().contains("(0, 1]"), "{err}");
+        }
+    }
+
+    #[test]
+    fn unsafe_fixed_sigma_needs_opt_in() {
+        // νS = 4 by default; σ = 0.25 is in the divergence region.
+        let err = Session::builder().sigma_fixed(0.25).build().unwrap_err();
+        assert!(err.to_string().contains("σ ≥ νS"), "{err}");
+        let s = Session::builder()
+            .sigma_fixed(0.25)
+            .allow_unsafe_sigma()
+            .build()
+            .unwrap();
+        assert_eq!(s.local.sigma, SigmaPolicy::Fixed(0.25));
+        // Non-positive σ is rejected even with the opt-in.
+        let err = Session::builder()
+            .sigma_fixed(-1.0)
+            .allow_unsafe_sigma()
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("σ must be > 0"), "{err}");
+    }
+
+    #[test]
+    fn straggler_length_mismatch_rejected() {
+        let err = Session::builder()
+            .cluster(4, 1)
+            .stragglers(vec![1.0, 2.0])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("one multiplier per node"), "{err}");
+    }
+
+    #[test]
+    fn straggler_below_one_rejected() {
+        let err = Session::builder()
+            .cluster(2, 1)
+            .stragglers(vec![1.0, 0.5])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("≥ 1.0"), "{err}");
+    }
+
+    #[test]
+    fn eval_every_zero_rejected() {
+        let err = Session::builder().eval_every(0).build().unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "{err}");
+    }
+
+    #[test]
+    fn zero_rounds_rejected() {
+        let err = Session::builder().rounds(0).build().unwrap_err();
+        assert!(err.to_string().contains("max_rounds"), "{err}");
+    }
+
+    #[test]
+    fn lambda_zero_rejected() {
+        let err = Session::builder().lambda(0.0).build().unwrap_err();
+        assert!(err.to_string().contains("λ"), "{err}");
+    }
+
+    #[test]
+    fn exp_config_round_trip() {
+        let mut cfg = ExpConfig::default();
+        cfg.dataset = "rcv1-s".into();
+        cfg.lambda = 1e-3;
+        cfg.k_nodes = 6;
+        cfg.r_cores = 3;
+        cfg.s_barrier = 4;
+        cfg.gamma = 7;
+        cfg.merge_policy = MergePolicy::NewestFirst;
+        cfg.sigma = SigmaPolicy::Fixed(0.5); // unsafe: from_exp_config must accept
+        cfg.stragglers = vec![1.0, 1.0, 2.0, 1.0, 4.0, 1.0];
+        cfg.eval_every = 3;
+        let session = Session::from_exp_config(&cfg).unwrap();
+        assert_eq!(session.to_exp_config(), cfg);
+    }
+
+    #[test]
+    fn default_barrier_follows_cluster_down() {
+        // No explicit barrier(): the default S adapts to a smaller K.
+        let s = Session::builder().cluster(2, 1).build().unwrap();
+        assert_eq!(s.master.s_barrier, 2);
+    }
+
+    #[test]
+    fn explicit_barrier_is_never_silently_clamped() {
+        // barrier(4) then cluster(2, 1): the S > K violation must be
+        // reported, not papered over.
+        let err = Session::builder().barrier(4).cluster(2, 1).build().unwrap_err();
+        assert!(err.to_string().contains("1 ≤ S ≤ K"), "{err}");
+    }
+}

@@ -1,0 +1,316 @@
+//! Streaming observers: watch a run as it happens instead of waiting
+//! for the final [`RunReport`](crate::coordinator::RunReport).
+//!
+//! Engines call back on three channels, every one of which can stop
+//! the run by returning [`ControlFlow::Break`]:
+//!
+//! * [`Observer::on_round`] — after every global round (communication
+//!   round for distributed engines, `H`-update epoch for single-node
+//!   ones);
+//! * [`Observer::on_merge`] — after every master merge (Algorithm 2's
+//!   `v ← v + νΣΔv`; distributed engines only);
+//! * [`Observer::on_eval`] — whenever objectives are evaluated (the
+//!   `eval_every` cadence), with the full [`TracePoint`].
+//!
+//! A `Break` is honored at the next stopping point: the engine winds
+//! down exactly as if the gap threshold had been reached, so the
+//! returned report is complete and internally consistent.
+
+use std::io::Write;
+use std::ops::ControlFlow;
+use std::sync::Mutex;
+
+use crate::coordinator::MergeEvent;
+use crate::metrics::TracePoint;
+
+/// Per-round progress (cheap; emitted even between evaluations).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundEvent {
+    /// Global round just completed (1-based).
+    pub round: usize,
+    /// Virtual cluster time at the end of the round.
+    pub vtime: f64,
+    /// Cumulative coordinate updates merged so far.
+    pub updates: u64,
+}
+
+/// An objective evaluation along the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalEvent {
+    /// The trace point just recorded (round, times, gap, objectives).
+    pub point: TracePoint,
+}
+
+/// Streaming callback surface for a solver run.
+///
+/// All methods default to "keep going"; implement only what you need.
+pub trait Observer {
+    fn on_round(&mut self, _ev: &RoundEvent) -> ControlFlow<()> {
+        ControlFlow::Continue(())
+    }
+
+    fn on_merge(&mut self, _ev: &MergeEvent) -> ControlFlow<()> {
+        ControlFlow::Continue(())
+    }
+
+    fn on_eval(&mut self, _ev: &EvalEvent) -> ControlFlow<()> {
+        ControlFlow::Continue(())
+    }
+}
+
+/// Shared handle the engines thread through the coordinator layers.
+///
+/// Wraps the caller's `&mut dyn Observer` behind a `Mutex` so the
+/// driver (which owns worker threads) can hold it by shared reference;
+/// callbacks only ever fire from the coordinating thread.
+pub struct ObserverHandle<'a> {
+    inner: Mutex<Option<&'a mut dyn Observer>>,
+}
+
+impl<'a> ObserverHandle<'a> {
+    pub fn new(obs: &'a mut dyn Observer) -> Self {
+        Self { inner: Mutex::new(Some(obs)) }
+    }
+
+    /// A handle that observes nothing and never stops the run.
+    pub fn silent() -> Self {
+        Self { inner: Mutex::new(None) }
+    }
+
+    pub fn on_round(&self, ev: &RoundEvent) -> ControlFlow<()> {
+        match self.inner.lock().expect("observer poisoned").as_mut() {
+            Some(obs) => obs.on_round(ev),
+            None => ControlFlow::Continue(()),
+        }
+    }
+
+    pub fn on_merge(&self, ev: &MergeEvent) -> ControlFlow<()> {
+        match self.inner.lock().expect("observer poisoned").as_mut() {
+            Some(obs) => obs.on_merge(ev),
+            None => ControlFlow::Continue(()),
+        }
+    }
+
+    pub fn on_eval(&self, ev: &EvalEvent) -> ControlFlow<()> {
+        match self.inner.lock().expect("observer poisoned").as_mut() {
+            Some(obs) => obs.on_eval(ev),
+            None => ControlFlow::Continue(()),
+        }
+    }
+}
+
+/// Observes nothing (the engines' default).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}
+
+/// Prints each evaluation as a table row while the solver runs —
+/// the CLI's live trace.
+#[derive(Debug, Default)]
+pub struct PrintObserver {
+    printed_header: bool,
+}
+
+impl PrintObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Observer for PrintObserver {
+    fn on_eval(&mut self, ev: &EvalEvent) -> ControlFlow<()> {
+        if !self.printed_header {
+            println!("round      wall(s)      virt(s)          gap");
+            self.printed_header = true;
+        }
+        let p = &ev.point;
+        println!(
+            "{:>5} {:>12.4} {:>12.6} {:>12.4e}",
+            p.round, p.wall_secs, p.virt_secs, p.gap
+        );
+        ControlFlow::Continue(())
+    }
+}
+
+/// Streams evaluation points to a CSV sink incrementally (same schema
+/// as [`Trace::csv_header`](crate::metrics::Trace::csv_header)), so a
+/// long run's trace survives a crash or an early stop.
+pub struct CsvStreamObserver<W: Write> {
+    w: W,
+    label: String,
+    /// First write error, if any (the run is stopped when one occurs).
+    pub error: Option<std::io::Error>,
+}
+
+impl<W: Write> CsvStreamObserver<W> {
+    /// Write the header immediately; rows follow per evaluation.
+    pub fn new(mut w: W, label: impl Into<String>) -> std::io::Result<Self> {
+        writeln!(w, "{}", crate::metrics::Trace::csv_header())?;
+        Ok(Self { w, label: label.into(), error: None })
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+}
+
+impl<W: Write> Observer for CsvStreamObserver<W> {
+    fn on_eval(&mut self, ev: &EvalEvent) -> ControlFlow<()> {
+        let res = ev
+            .point
+            .write_csv_row(&mut self.w, &self.label)
+            .and_then(|_| self.w.flush());
+        match res {
+            Ok(()) => ControlFlow::Continue(()),
+            Err(e) => {
+                self.error = Some(e);
+                ControlFlow::Break(())
+            }
+        }
+    }
+}
+
+/// Early-stopping conditions evaluated on the streaming channels.
+#[derive(Debug, Clone, Default)]
+pub struct EarlyStop {
+    gap_below: Option<f64>,
+    after_rounds: Option<usize>,
+    after_merges: Option<usize>,
+    merges_seen: usize,
+}
+
+impl EarlyStop {
+    /// Stop once an evaluation reports a gap ≤ `g`.
+    pub fn at_gap(g: f64) -> Self {
+        Self { gap_below: Some(g), ..Self::default() }
+    }
+
+    /// Stop once `n` global rounds have completed.
+    pub fn after_rounds(n: usize) -> Self {
+        Self { after_rounds: Some(n), ..Self::default() }
+    }
+
+    /// Stop once `n` master merges have been observed.
+    pub fn after_merges(n: usize) -> Self {
+        Self { after_merges: Some(n), ..Self::default() }
+    }
+}
+
+impl Observer for EarlyStop {
+    fn on_round(&mut self, ev: &RoundEvent) -> ControlFlow<()> {
+        match self.after_rounds {
+            Some(n) if ev.round >= n => ControlFlow::Break(()),
+            _ => ControlFlow::Continue(()),
+        }
+    }
+
+    fn on_merge(&mut self, _ev: &MergeEvent) -> ControlFlow<()> {
+        self.merges_seen += 1;
+        match self.after_merges {
+            Some(n) if self.merges_seen >= n => ControlFlow::Break(()),
+            _ => ControlFlow::Continue(()),
+        }
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent) -> ControlFlow<()> {
+        match self.gap_below {
+            Some(g) if ev.point.gap <= g => ControlFlow::Break(()),
+            _ => ControlFlow::Continue(()),
+        }
+    }
+}
+
+/// Fan out to two observers; the run stops if either asks to.
+pub struct Chain<A: Observer, B: Observer>(pub A, pub B);
+
+impl<A: Observer, B: Observer> Observer for Chain<A, B> {
+    fn on_round(&mut self, ev: &RoundEvent) -> ControlFlow<()> {
+        let a = self.0.on_round(ev);
+        let b = self.1.on_round(ev);
+        if a.is_break() || b.is_break() {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    }
+
+    fn on_merge(&mut self, ev: &MergeEvent) -> ControlFlow<()> {
+        let a = self.0.on_merge(ev);
+        let b = self.1.on_merge(ev);
+        if a.is_break() || b.is_break() {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent) -> ControlFlow<()> {
+        let a = self.0.on_eval(ev);
+        let b = self.1.on_eval(ev);
+        if a.is_break() || b.is_break() {
+            ControlFlow::Break(())
+        } else {
+            ControlFlow::Continue(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(round: usize, gap: f64) -> TracePoint {
+        TracePoint {
+            round,
+            wall_secs: 0.0,
+            virt_secs: round as f64,
+            gap,
+            primal: 1.0,
+            dual: 1.0 - gap,
+            updates: 10 * round as u64,
+        }
+    }
+
+    #[test]
+    fn early_stop_at_gap() {
+        let mut obs = EarlyStop::at_gap(1e-3);
+        assert!(obs.on_eval(&EvalEvent { point: point(1, 1e-2) }).is_continue());
+        assert!(obs.on_eval(&EvalEvent { point: point(2, 1e-4) }).is_break());
+    }
+
+    #[test]
+    fn early_stop_after_rounds() {
+        let mut obs = EarlyStop::after_rounds(3);
+        for r in 1..3 {
+            assert!(obs
+                .on_round(&RoundEvent { round: r, vtime: 0.0, updates: 0 })
+                .is_continue());
+        }
+        assert!(obs.on_round(&RoundEvent { round: 3, vtime: 0.0, updates: 0 }).is_break());
+    }
+
+    #[test]
+    fn csv_stream_writes_rows() {
+        let buf: Vec<u8> = Vec::new();
+        let mut obs = CsvStreamObserver::new(buf, "x").unwrap();
+        assert!(obs.on_eval(&EvalEvent { point: point(0, 1.0) }).is_continue());
+        let s = String::from_utf8(obs.into_inner()).unwrap();
+        assert!(s.starts_with(crate::metrics::Trace::csv_header()));
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.lines().nth(1).unwrap().starts_with("x,0,"));
+    }
+
+    #[test]
+    fn silent_handle_never_breaks() {
+        let h = ObserverHandle::silent();
+        assert!(h.on_round(&RoundEvent { round: 1, vtime: 0.0, updates: 0 }).is_continue());
+        assert!(h.on_eval(&EvalEvent { point: point(1, 0.5) }).is_continue());
+    }
+
+    #[test]
+    fn chain_breaks_if_either_breaks() {
+        let mut obs = Chain(NullObserver, EarlyStop::after_rounds(1));
+        assert!(obs.on_round(&RoundEvent { round: 1, vtime: 0.0, updates: 0 }).is_break());
+    }
+}

@@ -12,6 +12,7 @@
 pub mod block;
 pub mod local;
 pub mod sdca;
+#[cfg(feature = "xla-runtime")]
 pub mod xla_dense;
 
 use crate::loss::Loss;

@@ -139,6 +139,7 @@ fn straggler_profile_flag() {
     assert!(stdout.contains("# finished"));
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn artifacts_subcommand() {
     let dir = hybrid_dca::runtime::default_artifacts_dir();
@@ -151,6 +152,14 @@ fn artifacts_subcommand() {
         assert!(!ok);
         assert!(stderr.contains("make artifacts"), "{stderr}");
     }
+}
+
+#[cfg(not(feature = "xla-runtime"))]
+#[test]
+fn artifacts_subcommand_reports_missing_feature() {
+    let (_, stderr, ok) = run(&["artifacts"]);
+    assert!(!ok);
+    assert!(stderr.contains("xla-runtime"), "{stderr}");
 }
 
 #[test]

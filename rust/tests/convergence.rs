@@ -1,9 +1,14 @@
 //! End-to-end convergence of every solver on synthetic presets, plus
 //! the XLA block solver when artifacts are available.
 
+// These tests intentionally exercise the deprecated `run_algorithm`
+// shim — they are the proof it keeps working.
+#![allow(deprecated)]
+
 use hybrid_dca::config::{Algorithm, ExpConfig};
 use hybrid_dca::data::Preset;
 use hybrid_dca::harness;
+#[cfg(feature = "xla-runtime")]
 use hybrid_dca::util::Rng;
 
 fn cfg_for(dataset: &str) -> ExpConfig {
@@ -78,6 +83,7 @@ fn logistic_and_squared_hinge_converge_via_hybrid() {
     }
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn xla_block_solver_converges_when_artifacts_present() {
     let dir = hybrid_dca::runtime::default_artifacts_dir();

@@ -8,6 +8,10 @@
 //! * `K = 1, R = 1, σ = 1, ν = 1` ⇒ plain sequential SDCA on the same
 //!   sampling sequence reaches the same optimum.
 
+// These tests intentionally exercise the deprecated `run_algorithm`
+// shim — they are the proof it keeps working.
+#![allow(deprecated)]
+
 use hybrid_dca::config::{Algorithm, ExpConfig, SigmaPolicy};
 use hybrid_dca::data::{Preset, Strategy};
 use hybrid_dca::harness;

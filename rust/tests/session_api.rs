@@ -1,0 +1,304 @@
+//! The session API's contract with the legacy surface:
+//!
+//! 1. **Round-trip semantics** (property test): a builder-constructed
+//!    [`Session`] produces byte-identical `RunReport.trace`s to the
+//!    equivalent [`ExpConfig`] run through the deprecated
+//!    `run_algorithm` shim, for all four engines on `Preset::Tiny`.
+//!    (`R = 1` keeps the intra-node interleaving deterministic — the
+//!    same restriction the equivalence suite uses.) Note the shim now
+//!    forwards to the same engines, so this guards the builder's
+//!    field mapping, run determinism, and silent-observer neutrality;
+//!    behavioral parity with the *pre-redesign* drivers is guarded by
+//!    the convergence/equivalence suites' threshold assertions.
+//! 2. **Streaming observers**: `on_eval` sees exactly the trace the
+//!    report ends with, and an observer `Break` early-stops a
+//!    Hybrid-DCA run mid-trace.
+
+#![allow(deprecated)] // the shim is the comparison oracle here
+
+use std::ops::ControlFlow;
+
+use hybrid_dca::config::{Algorithm, ExpConfig, MergePolicy, SigmaPolicy};
+use hybrid_dca::coordinator::run_algorithm;
+use hybrid_dca::data::Preset;
+use hybrid_dca::harness;
+use hybrid_dca::session::observer::{EvalEvent, RoundEvent};
+use hybrid_dca::session::{EarlyStop, Observer, Session};
+use hybrid_dca::util::proptest::{check, default_cases};
+use hybrid_dca::util::Rng;
+
+/// One random experiment shape (R = 1 for determinism).
+#[derive(Clone, Debug)]
+struct Case {
+    k: usize,
+    s: usize,
+    gamma: usize,
+    h: usize,
+    rounds: usize,
+    nu: f64,
+    sigma_k: bool,
+    seed: u64,
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let k = rng.next_range(1, 4);
+    Case {
+        k,
+        s: rng.next_range(1, k),
+        gamma: rng.next_range(1, 3),
+        h: rng.next_range(20, 100),
+        rounds: rng.next_range(2, 6),
+        nu: if rng.next_bool(0.5) { 1.0 } else { 0.5 },
+        sigma_k: rng.next_bool(0.5),
+        seed: rng.next_u64(),
+    }
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    if c.rounds > 2 {
+        out.push(Case { rounds: c.rounds - 1, ..c.clone() });
+    }
+    if c.k > 1 {
+        let k = c.k - 1;
+        out.push(Case { k, s: c.s.min(k), ..c.clone() });
+    }
+    if c.h > 20 {
+        out.push(Case { h: c.h / 2, ..c.clone() });
+    }
+    out
+}
+
+fn exp_config(c: &Case) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.seed = c.seed;
+    cfg.lambda = 1e-2;
+    cfg.k_nodes = c.k;
+    cfg.r_cores = 1;
+    cfg.s_barrier = c.s;
+    cfg.gamma = c.gamma;
+    cfg.h_local = c.h;
+    cfg.nu = c.nu;
+    cfg.sigma = if c.sigma_k { SigmaPolicy::NuK } else { SigmaPolicy::NuS };
+    cfg.max_rounds = c.rounds;
+    cfg.gap_threshold = 1e-12; // run the full budget
+    cfg
+}
+
+fn session(c: &Case) -> Session {
+    Session::builder()
+        .dataset("tiny")
+        .seed(c.seed)
+        .lambda(1e-2)
+        .cluster(c.k, 1)
+        .barrier(c.s)
+        .delay(c.gamma)
+        .local_iters(c.h)
+        .nu(c.nu)
+        .sigma(if c.sigma_k { SigmaPolicy::NuK } else { SigmaPolicy::NuS })
+        .rounds(c.rounds)
+        .gap_threshold(1e-12)
+        .build()
+        .expect("case is valid")
+}
+
+#[test]
+fn builder_sessions_round_trip_to_exp_config_semantics() {
+    let data = harness::gen_preset(Preset::Tiny, 42);
+    check(
+        "session == ExpConfig for all four engines",
+        default_cases(12),
+        gen_case,
+        shrink_case,
+        |c| {
+            let cfg = exp_config(c);
+            let sess = session(c);
+            if sess.to_exp_config() != cfg {
+                return Err("session does not flatten to the equivalent ExpConfig".into());
+            }
+            for (algo, engine) in [
+                (Algorithm::Baseline, "baseline"),
+                (Algorithm::CocoaPlus, "cocoa+"),
+                (Algorithm::PassCoDe, "passcode"),
+                (Algorithm::HybridDca, "hybrid-dca"),
+            ] {
+                let legacy = run_algorithm(algo, &data, &cfg)
+                    .map_err(|e| format!("{engine} legacy run: {e}"))?;
+                let new = sess
+                    .run(engine, &data)
+                    .map_err(|e| format!("{engine} session run: {e}"))?;
+                // Wall-clock differs between runs; everything the
+                // solver computes must not.
+                if legacy.trace.points.len() != new.trace.points.len() {
+                    return Err(format!(
+                        "{engine}: trace length {} vs {}",
+                        legacy.trace.points.len(),
+                        new.trace.points.len()
+                    ));
+                }
+                for (a, b) in legacy.trace.points.iter().zip(&new.trace.points) {
+                    if a.round != b.round
+                        || a.gap != b.gap
+                        || a.primal != b.primal
+                        || a.dual != b.dual
+                        || a.virt_secs != b.virt_secs
+                        || a.updates != b.updates
+                    {
+                        return Err(format!(
+                            "{engine}: round {} diverged (gap {} vs {})",
+                            a.round, a.gap, b.gap
+                        ));
+                    }
+                }
+                if legacy.alpha != new.alpha {
+                    return Err(format!("{engine}: final α diverged"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Collects every eval the engines stream out.
+#[derive(Default)]
+struct Collector {
+    evals: Vec<EvalEvent>,
+    rounds: Vec<usize>,
+}
+
+impl Observer for Collector {
+    fn on_round(&mut self, ev: &RoundEvent) -> ControlFlow<()> {
+        self.rounds.push(ev.round);
+        ControlFlow::Continue(())
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent) -> ControlFlow<()> {
+        self.evals.push(ev.clone());
+        ControlFlow::Continue(())
+    }
+}
+
+#[test]
+fn streamed_evals_match_final_trace() {
+    let data = harness::gen_preset(Preset::Tiny, 7);
+    for engine in ["baseline", "cocoa+", "passcode", "hybrid-dca"] {
+        let sess = Session::builder()
+            .lambda(1e-2)
+            .cluster(3, 1)
+            .barrier(2)
+            .delay(2)
+            .local_iters(64)
+            .rounds(6)
+            .eval_every(2)
+            .gap_threshold(1e-12)
+            .build()
+            .unwrap();
+        let mut collector = Collector::default();
+        let report = sess.run_observed(engine, &data, &mut collector).unwrap();
+        assert_eq!(
+            collector.evals.len(),
+            report.trace.points.len(),
+            "{engine}: streamed {} evals, trace has {}",
+            collector.evals.len(),
+            report.trace.points.len()
+        );
+        for (ev, p) in collector.evals.iter().zip(&report.trace.points) {
+            assert_eq!(&ev.point, p, "{engine}");
+        }
+        // Rounds streamed 1..=final.
+        assert_eq!(collector.rounds.first().copied(), Some(1), "{engine}");
+        assert_eq!(collector.rounds.last().copied(), Some(report.rounds), "{engine}");
+    }
+}
+
+#[test]
+fn observer_early_stops_hybrid_mid_trace() {
+    let data = harness::gen_preset(Preset::Tiny, 11);
+    let sess = Session::builder()
+        .lambda(1e-2)
+        .cluster(3, 2)
+        .barrier(2)
+        .delay(3)
+        .local_iters(100)
+        .rounds(50)
+        .gap_threshold(1e-12) // would run all 50 rounds on its own
+        .build()
+        .unwrap();
+    let mut stopper = EarlyStop::after_rounds(3);
+    let report = sess.run_observed("hybrid-dca", &data, &mut stopper).unwrap();
+    assert_eq!(report.rounds, 3, "observer should stop the run at round 3");
+    assert!(report.trace.points.len() >= 2, "mid-trace stop still yields a trace");
+    // The run wound down cleanly: every merge is a full barrier and
+    // all workers reported final state.
+    assert_eq!(report.worker_rounds.len(), 3);
+    for ev in &report.events {
+        assert_eq!(ev.merged.len(), 2);
+    }
+}
+
+#[test]
+fn observer_early_stops_on_gap() {
+    let data = harness::gen_preset(Preset::Tiny, 13);
+    let sess = Session::builder()
+        .lambda(1e-2)
+        .cluster(1, 1)
+        .barrier(1)
+        .local_iters(200)
+        .rounds(100)
+        .gap_threshold(1e-12)
+        .build()
+        .unwrap();
+    // Stop via the observer at a much looser gap than the session's.
+    let mut stopper = EarlyStop::at_gap(1e-2);
+    let report = sess.run_observed("baseline", &data, &mut stopper).unwrap();
+    assert!(report.rounds < 100, "gap-based observer stop before the budget");
+    assert!(report.trace.final_gap().unwrap() <= 1e-2);
+}
+
+#[test]
+fn unknown_engine_lists_registry() {
+    let data = harness::gen_preset(Preset::Tiny, 17);
+    let sess = Session::builder().build().unwrap();
+    let err = sess.run("sgd", &data).unwrap_err().to_string();
+    assert!(err.contains("unknown solver engine"), "{err}");
+    assert!(err.contains("hybrid-dca"), "{err}");
+}
+
+#[test]
+fn merge_policy_flows_through_session() {
+    // NewestFirst under a straggler produces a different merge pattern
+    // than OldestFirst — the policy must actually reach the master.
+    let data = harness::gen_preset(Preset::Tiny, 19);
+    let base = Session::builder()
+        .lambda(1e-2)
+        .cluster(3, 1)
+        .barrier(2)
+        .delay(5)
+        .local_iters(50)
+        .rounds(12)
+        .gap_threshold(1e-12)
+        .stragglers(vec![1.0, 1.0, 4.0]);
+    let oldest = base
+        .clone()
+        .merge_policy(MergePolicy::OldestFirst)
+        .build()
+        .unwrap()
+        .run("hybrid-dca", &data)
+        .unwrap();
+    let newest = base
+        .clone()
+        .merge_policy(MergePolicy::NewestFirst)
+        .build()
+        .unwrap()
+        .run("hybrid-dca", &data)
+        .unwrap();
+    let pattern = |r: &hybrid_dca::coordinator::RunReport| {
+        r.events.iter().map(|e| e.merged.clone()).collect::<Vec<_>>()
+    };
+    assert_ne!(
+        pattern(&oldest),
+        pattern(&newest),
+        "merge policy had no effect on the merge pattern"
+    );
+}

@@ -4,6 +4,7 @@
 //! step and the objective tile through the PJRT CPU client, and checks
 //! the numerics against the pure-Rust oracle (`solver::block`) and the
 //! metrics module. Skips (with a loud message) if artifacts are absent.
+#![cfg(feature = "xla-runtime")]
 
 use hybrid_dca::loss::Hinge;
 use hybrid_dca::runtime::{default_artifacts_dir, Runtime};
