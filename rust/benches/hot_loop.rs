@@ -1,25 +1,52 @@
 //! Bench: the L3 hot path in isolation — coordinate updates per second
 //! for the sequential step, the atomic local solver (1..R cores), and
 //! the XLA block step (when artifacts exist). This is the measurement
-//! harness behind EXPERIMENTS.md §Perf.
-//! `cargo bench --bench hot_loop`
+//! harness behind EXPERIMENTS.md §Perf and README §Perf.
+//!
+//! `cargo bench --bench hot_loop` prints the table **and appends a
+//! machine-readable run to `BENCH_hot_loop.json` at the repo root**, so
+//! every PR extends one perf trajectory instead of overwriting it.
+//! Label the run with `HYBRID_DCA_BENCH_LABEL=...`; set
+//! `HYBRID_DCA_BENCH=quick` for the CI smoke mode (tiny preset, no
+//! file write).
 
 use hybrid_dca::data::Preset;
-use hybrid_dca::harness;
+use hybrid_dca::harness::{self, QuickFull};
 use hybrid_dca::loss::Hinge;
 use hybrid_dca::sim::{CostModel, UpdateCosts};
 use hybrid_dca::solver::local::LocalSolver;
 use hybrid_dca::solver::sdca::Sdca;
 use hybrid_dca::solver::StepParams;
+use hybrid_dca::util::json::Json;
 use hybrid_dca::util::{measure, Rng, Stats};
 
+struct Row {
+    path: String,
+    p50_secs: f64,
+    updates_per_sec: f64,
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<26} {:>14} {:>16.0}",
+        r.path,
+        hybrid_dca::util::timer::fmt_duration(r.p50_secs),
+        r.updates_per_sec
+    );
+}
+
 fn main() -> anyhow::Result<()> {
-    let data = harness::gen_preset(Preset::RcvS, 42);
-    let lambda = harness::paper_lambda("rcv1-s");
+    let quick = QuickFull::from_env() == QuickFull::Quick;
+    let (preset, dataset_name, h) = if quick {
+        (Preset::Tiny, "tiny", 2_000usize)
+    } else {
+        (Preset::RcvS, "rcv1-s", 20_000usize)
+    };
+    let data = harness::gen_preset(preset, 42);
+    let lambda = harness::paper_lambda(dataset_name);
     let cost_model = CostModel::default();
     let norms = data.x.row_norms_sq();
     let costs = UpdateCosts::precompute(&data, &cost_model);
-    let h = 20_000usize;
 
     println!(
         "hot-path throughput on {} (n={}, d={}, nnz/row≈{:.0})\n",
@@ -30,17 +57,20 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{:<26} {:>14} {:>16}", "path", "p50 round", "updates/s");
 
+    let mut rows: Vec<Row> = Vec::new();
+
     // Sequential exact steps.
     {
         let mut solver = Sdca::new(&data, lambda, Rng::new(1), &cost_model);
         let samples = measure(1, 5, || solver.run_round(&Hinge, h));
         let st = Stats::from(&samples);
-        println!(
-            "{:<26} {:>14} {:>16.0}",
-            "sequential (Sdca)",
-            hybrid_dca::util::timer::fmt_duration(st.p50),
-            h as f64 / st.p50
-        );
+        let row = Row {
+            path: "sequential (Sdca)".into(),
+            p50_secs: st.p50,
+            updates_per_sec: h as f64 / st.p50,
+        };
+        print_row(&row);
+        rows.push(row);
     }
 
     // Local solver with R core-threads (real threads, atomic v).
@@ -61,12 +91,13 @@ fn main() -> anyhow::Result<()> {
             solver.commit(1.0);
         });
         let st = Stats::from(&samples);
-        println!(
-            "{:<26} {:>14} {:>16.0}",
-            format!("local atomic (R={r})"),
-            hybrid_dca::util::timer::fmt_duration(st.p50),
-            (h_per_core * r) as f64 / st.p50
-        );
+        let row = Row {
+            path: format!("local atomic (R={r})"),
+            p50_secs: st.p50,
+            updates_per_sec: (h_per_core * r) as f64 / st.p50,
+        };
+        print_row(&row);
+        rows.push(row);
     }
 
     // Wild (racy) updates.
@@ -86,12 +117,13 @@ fn main() -> anyhow::Result<()> {
             solver.commit(1.0);
         });
         let st = Stats::from(&samples);
-        println!(
-            "{:<26} {:>14} {:>16.0}",
-            "local wild (R=4)",
-            hybrid_dca::util::timer::fmt_duration(st.p50),
-            h as f64 / st.p50
-        );
+        let row = Row {
+            path: "local wild (R=4)".into(),
+            p50_secs: st.p50,
+            updates_per_sec: h as f64 / st.p50,
+        };
+        print_row(&row);
+        rows.push(row);
     }
 
     // XLA block step (per-update throughput through PJRT).
@@ -99,6 +131,81 @@ fn main() -> anyhow::Result<()> {
     xla_rows()?;
     #[cfg(not(feature = "xla-runtime"))]
     println!("(skipping XLA rows — build with --features xla-runtime)");
+
+    if quick {
+        println!("\n(quick mode: BENCH_hot_loop.json not written)");
+    } else {
+        let path = bench_json_path();
+        append_run(&path, dataset_name, h, &rows)?;
+        println!("\n# run appended to {}", path.display());
+    }
+    Ok(())
+}
+
+/// `BENCH_hot_loop.json` lives at the repo root (one directory above
+/// the crate) so the perf trajectory is visible next to ROADMAP.md.
+fn bench_json_path() -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root).join("..").join("BENCH_hot_loop.json")
+}
+
+/// Append this run to the committed trajectory, preserving earlier
+/// runs (the before/after record future PRs compare against). A file
+/// that exists but fails to parse is an error — never silently
+/// overwrite the history. Each run records its own dataset/h so old
+/// entries stay correctly labeled if the bench parameters change.
+fn append_run(
+    path: &std::path::Path,
+    dataset: &str,
+    h: usize,
+    rows: &[Row],
+) -> anyhow::Result<()> {
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = Json::parse(&text).map_err(|e| {
+                anyhow::anyhow!(
+                    "{} exists but is not valid JSON ({e}); refusing to overwrite the \
+                     perf trajectory — fix or remove the file first",
+                    path.display()
+                )
+            })?;
+            doc.get("runs")
+                .and_then(|r| r.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default()
+        }
+        Err(_) => Vec::new(),
+    };
+    let label =
+        std::env::var("HYBRID_DCA_BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("path".into(), Json::Str(r.path.clone())),
+                ("p50_secs".into(), Json::Num(r.p50_secs)),
+                ("updates_per_sec".into(), Json::Num(r.updates_per_sec)),
+            ])
+        })
+        .collect();
+    runs.push(Json::Obj(vec![
+        ("label".into(), Json::Str(label)),
+        ("dataset".into(), Json::Str(dataset.into())),
+        ("h".into(), Json::Num(h as f64)),
+        ("rows".into(), Json::Arr(row_objs)),
+    ]));
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("hot_loop".into())),
+        (
+            "units".into(),
+            Json::Obj(vec![
+                ("p50_secs".into(), Json::Str("seconds per round of h updates".into())),
+                ("updates_per_sec".into(), Json::Str("coordinate updates per second".into())),
+            ]),
+        ),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    std::fs::write(path, doc.to_pretty())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
     Ok(())
 }
 

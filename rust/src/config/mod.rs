@@ -151,6 +151,16 @@ pub struct ExpConfig {
     pub net_per_elem: f64,
     /// Simulated per-nnz compute cost (seconds, virtual).
     pub cost_per_nnz: f64,
+    /// Δv wire-format density threshold: a worker sends its round
+    /// delta as sparse (indices, values) pairs when the fraction of
+    /// touched coordinates is ≤ this, dense otherwise. 0 forces dense,
+    /// 1 forces sparse. The merged arithmetic is representation-blind;
+    /// the simulated message cost reflects the actual wire size, so
+    /// with `net_per_elem > 0` the virtual-clock schedule (arrival
+    /// order, merge picks) may differ between settings. Exact trace
+    /// equivalence holds when message cost is size-independent
+    /// (`net_per_elem = 0`).
+    pub delta_threshold: f64,
 }
 
 impl Default for ExpConfig {
@@ -182,6 +192,9 @@ impl Default for ExpConfig {
             net_latency: 1e-4,
             net_per_elem: 1e-6,
             cost_per_nnz: 1e-7,
+            // Sparse wire format costs 1.5 elems per touched coord, so
+            // it wins below density 2/3; 0.5 keeps headroom.
+            delta_threshold: 0.5,
         }
     }
 }
@@ -234,6 +247,11 @@ impl ExpConfig {
             self.net_latency >= 0.0 && self.cost_per_nnz >= 0.0 && self.net_per_elem >= 0.0,
             "negative costs"
         );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.delta_threshold),
+            "delta_threshold must be in [0, 1] (got {})",
+            self.delta_threshold
+        );
         Ok(())
     }
 
@@ -258,8 +276,10 @@ impl ExpConfig {
         use toml::Value;
         let need_f64 =
             || val.as_float().ok_or_else(|| anyhow::anyhow!("expected number, got {val:?}"));
-        let need_usize =
-            || val.as_usize().ok_or_else(|| anyhow::anyhow!("expected non-negative int, got {val:?}"));
+        let need_usize = || {
+            val.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("expected non-negative int, got {val:?}"))
+        };
         let need_str =
             || val.as_str().ok_or_else(|| anyhow::anyhow!("expected string, got {val:?}"));
         match dotted {
@@ -329,6 +349,9 @@ impl ExpConfig {
             }
             "sim.cost-per-nnz" | "sim.cost_per_nnz" | "cost_per_nnz" => {
                 self.cost_per_nnz = need_f64()?
+            }
+            "sim.delta-threshold" | "sim.delta_threshold" | "delta_threshold" => {
+                self.delta_threshold = need_f64()?
             }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
@@ -470,6 +493,22 @@ cost_per_nnz = 1e-7
         assert_eq!(cfg.merge_policy, MergePolicy::NewestFirst);
         assert_eq!(cfg.stragglers.len(), 8);
         assert_eq!(cfg.sigma_value(), 0.5 * 8.0);
+    }
+
+    #[test]
+    fn delta_threshold_validated_and_parsed() {
+        let mut c = ExpConfig::default();
+        c.delta_threshold = 1.5;
+        assert!(c.validate().is_err());
+        c.delta_threshold = -0.1;
+        assert!(c.validate().is_err());
+        c.delta_threshold = 1.0;
+        c.validate().unwrap();
+
+        let doc = toml::parse("[sim]\ndelta_threshold = 0.25\n").unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.delta_threshold, 0.25);
     }
 
     #[test]

@@ -107,7 +107,8 @@ pub fn parse(text: &str) -> anyhow::Result<Document> {
                 .ok_or_else(|| anyhow::anyhow!("line {}: unterminated table header", lineno + 1))?
                 .trim();
             anyhow::ensure!(
-                !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+                !name.is_empty()
+                    && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
                 "line {}: bad table name '{name}'",
                 lineno + 1
             );
@@ -120,7 +121,8 @@ pub fn parse(text: &str) -> anyhow::Result<Document> {
             .ok_or_else(|| anyhow::anyhow!("line {}: expected 'key = value'", lineno + 1))?;
         let key = key.trim();
         anyhow::ensure!(
-            !key.is_empty() && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            !key.is_empty()
+                && key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
             "line {}: bad key '{key}'",
             lineno + 1
         );

@@ -9,7 +9,7 @@ use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
 use crate::session::observer::ObserverHandle;
 use crate::session::RunCtx;
-use crate::sim::{resolve_stragglers, CostModel, UpdateCosts};
+use crate::sim::{resolve_stragglers, CostModel, SendCost, UpdateCosts};
 use crate::util::Rng;
 
 use super::master::{run_master, MasterCfg, MergePolicy};
@@ -81,15 +81,15 @@ pub fn run_with_obs(
     let stragglers = resolve_stragglers(&cfg.stragglers, k);
     let sigma = cfg.sigma_value();
 
-    // Communication model: point-to-point for Hybrid, tree all-reduce
-    // for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for the sync
-    // collective).
-    let (send_latency, merge_cost, reply_latency) = if opts.sync_allreduce {
+    // Communication model: point-to-point for Hybrid (billed by the
+    // actual wire size, so sparse Δv messages are cheaper), tree
+    // all-reduce for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for
+    // the sync collective; the collective always moves dense vectors).
+    let (send_cost, merge_cost, reply_latency) = if opts.sync_allreduce {
         let ar = cost_model.allreduce_cost(k, data.d());
-        (ar / 2.0, 0.0, ar / 2.0)
+        (SendCost::Fixed(ar / 2.0), 0.0, ar / 2.0)
     } else {
-        let m = cost_model.msg_cost(data.d());
-        (m, 0.0, m)
+        (SendCost::Sized(cost_model), 0.0, cost_model.msg_cost(data.d()))
     };
 
     let master_cfg = MasterCfg {
@@ -138,7 +138,8 @@ pub fn run_with_obs(
                 lambda: cfg.lambda,
                 wild: cfg.wild,
                 straggler: stragglers[w],
-                send_latency,
+                send_cost,
+                delta_threshold: cfg.delta_threshold,
             };
             let tx = tx_updates.clone();
             let rx = reply_rxs.remove(0);

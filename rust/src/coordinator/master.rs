@@ -36,7 +36,7 @@ use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::metrics::{Trace, TracePoint};
 use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
-use crate::util::{axpy, norm_sq, Stopwatch};
+use crate::util::{norm_sq, Stopwatch};
 
 use super::messages::{MasterReply, WorkerMsg};
 
@@ -253,7 +253,9 @@ pub fn run_master(
         let mut queue_wait = Vec::with_capacity(picked.len());
         for &w in &picked {
             let p = pending[w].take().expect("picked worker has a pending update");
-            axpy(&mut v, cfg.nu, &p.msg.delta_v);
+            // One add per coordinate whether the delta arrived dense or
+            // sparse — representations are merge-equivalent.
+            p.msg.delta_v.add_scaled_into(&mut v, cfg.nu);
             total_updates += p.msg.updates;
             merged_ids.push((w, p.msg.local_round));
             queue_wait.push(t - p.received_at);

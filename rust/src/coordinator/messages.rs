@@ -4,7 +4,85 @@
 //! over `std::sync::mpsc` channels between threads. The payload shapes
 //! are identical to the paper's: workers send `Δv ∈ R^d`, the master
 //! replies with the merged `v ∈ R^d` (§5 counts exactly these 2S
-//! transmissions per round).
+//! transmissions per round). The one refinement is the *wire format*
+//! of Δv: when a round touched few coordinates (short rounds on very
+//! sparse data — the rcv1/kddb regime), shipping the dense `R^d`
+//! vector wastes O(d) per message, so [`DeltaV`] carries either form
+//! behind one enum and both sides treat them identically.
+
+/// One round's accumulated `Δv`, dense or sparse. The two
+/// representations are numerically interchangeable — the sparse form
+/// lists exactly the touched coordinates, and every untouched dense
+/// entry is 0.0 — so merge results are identical under either
+/// (`tests/prop_kernels.rs` pins this).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeltaV {
+    /// Full `R^d` vector.
+    Dense(Vec<f64>),
+    /// Touched coordinates only; `indices` ascending, same length as
+    /// `values`.
+    Sparse { dim: usize, indices: Vec<u32>, values: Vec<f64> },
+}
+
+impl DeltaV {
+    /// Feature dimension `d` of the underlying vector.
+    pub fn dim(&self) -> usize {
+        match self {
+            DeltaV::Dense(dv) => dv.len(),
+            DeltaV::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Stored entries: `d` for dense, touched count for sparse.
+    pub fn nnz(&self) -> usize {
+        match self {
+            DeltaV::Dense(dv) => dv.len(),
+            DeltaV::Sparse { indices, .. } => indices.len(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, DeltaV::Sparse { .. })
+    }
+
+    /// `out += scale · Δv` — the master's merge step, one add per
+    /// coordinate under either representation.
+    pub fn add_scaled_into(&self, out: &mut [f64], scale: f64) {
+        match self {
+            DeltaV::Dense(dv) => crate::util::axpy(out, scale, dv),
+            DeltaV::Sparse { dim, indices, values } => {
+                assert_eq!(out.len(), *dim, "merge target dimension");
+                for (&j, &x) in indices.iter().zip(values.iter()) {
+                    out[j as usize] += scale * x;
+                }
+            }
+        }
+    }
+
+    /// Materialize as a dense vector (tests / cold paths).
+    pub fn to_dense(&self) -> Vec<f64> {
+        match self {
+            DeltaV::Dense(dv) => dv.clone(),
+            DeltaV::Sparse { dim, indices, values } => {
+                let mut out = vec![0.0; *dim];
+                for (&j, &x) in indices.iter().zip(values.iter()) {
+                    out[j as usize] = x;
+                }
+                out
+            }
+        }
+    }
+
+    /// f64-equivalent elements on the wire, for the virtual network
+    /// cost model: a dense message ships `d` values; a sparse one
+    /// ships a u32 index (half an f64) plus an f64 value per entry.
+    pub fn wire_elems(&self) -> f64 {
+        match self {
+            DeltaV::Dense(dv) => dv.len() as f64,
+            DeltaV::Sparse { indices, .. } => 1.5 * indices.len() as f64,
+        }
+    }
+}
 
 /// Worker → master: one round's accumulated update.
 #[derive(Debug, Clone)]
@@ -13,8 +91,9 @@ pub struct WorkerMsg {
     pub worker: usize,
     /// The worker's local round counter (monotone per worker).
     pub local_round: usize,
-    /// `Δv = v − v_old` accumulated over the round (Algorithm 1 line 10).
-    pub delta_v: Vec<f64>,
+    /// `Δv = v − v_old` accumulated over the round (Algorithm 1 line
+    /// 10), dense or sparse by the density threshold.
+    pub delta_v: DeltaV,
     /// `Σ_{i∈I_k} −φ*(−α_i)` over the worker's *committed* α — lets the
     /// master assemble `D(α)` without a synchronous gather (the paper
     /// defers gap computation for the same reason, §6.1).
@@ -22,7 +101,8 @@ pub struct WorkerMsg {
     /// Virtual time at which this message arrives at the master
     /// (send time + network latency).
     pub arrival_vtime: f64,
-    /// Coordinate updates performed in this round (R·H).
+    /// Coordinate updates performed in this round (≤ R·H; empty-row
+    /// draws excluded).
     pub updates: u64,
 }
 
@@ -56,5 +136,31 @@ mod tests {
         assert!(r.v.is_empty());
         assert_eq!(r.global_round, 7);
         assert_eq!(r.arrival_vtime, 1.5);
+    }
+
+    #[test]
+    fn delta_v_representations_merge_identically() {
+        let dense = DeltaV::Dense(vec![0.0, 2.0, 0.0, -1.5]);
+        let sparse = DeltaV::Sparse { dim: 4, indices: vec![1, 3], values: vec![2.0, -1.5] };
+        assert_eq!(dense.dim(), 4);
+        assert_eq!(sparse.dim(), 4);
+        assert_eq!(sparse.nnz(), 2);
+        assert!(sparse.is_sparse() && !dense.is_sparse());
+        assert_eq!(sparse.to_dense(), vec![0.0, 2.0, 0.0, -1.5]);
+
+        let mut a = vec![1.0, 1.0, 1.0, 1.0];
+        let mut b = a.clone();
+        dense.add_scaled_into(&mut a, 0.5);
+        sparse.add_scaled_into(&mut b, 0.5);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![1.0, 2.0, 1.0, 0.25]);
+    }
+
+    #[test]
+    fn wire_elems_counts_sparse_payload() {
+        let dense = DeltaV::Dense(vec![0.0; 100]);
+        assert_eq!(dense.wire_elems(), 100.0);
+        let sparse = DeltaV::Sparse { dim: 100, indices: vec![5, 9], values: vec![1.0, 2.0] };
+        assert_eq!(sparse.wire_elems(), 3.0); // 2 × (u32 + f64) = 2 × 1.5
     }
 }

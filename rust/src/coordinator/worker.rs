@@ -6,12 +6,12 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use crate::data::Dataset;
 use crate::loss::Loss;
-use crate::sim::UpdateCosts;
+use crate::sim::{SendCost, UpdateCosts};
 use crate::solver::local::LocalSolver;
 use crate::solver::StepParams;
 use crate::util::Rng;
 
-use super::messages::{MasterReply, WorkerMsg};
+use super::messages::{DeltaV, MasterReply, WorkerMsg};
 
 /// Worker configuration.
 #[derive(Debug, Clone)]
@@ -24,8 +24,13 @@ pub struct WorkerCfg {
     pub wild: bool,
     /// Virtual-clock slowdown multiplier for this node (≥ 1).
     pub straggler: f64,
-    /// Virtual latency of the send (worker → master message).
-    pub send_latency: f64,
+    /// Virtual cost model of the send (worker → master message).
+    pub send_cost: SendCost,
+    /// Δv density threshold: the round delta goes out sparse when the
+    /// touched-coordinate fraction is ≤ this (0 forces dense, 1 forces
+    /// sparse). The merged arithmetic is identical either way; the
+    /// simulated send cost tracks the actual wire size.
+    pub delta_threshold: f64,
 }
 
 /// Final state returned when the worker terminates.
@@ -61,14 +66,18 @@ pub fn run_worker(
 ) -> WorkerFinal {
     let params = StepParams { lambda: cfg.lambda, n: data.n(), sigma: cfg.sigma };
     let mut solver = LocalSolver::new(cells, data.d(), params, cfg.wild, &mut rng);
+    // Dirty-coordinate tracking replaces the O(d) snapshot + diff per
+    // round: Δv is read at the touched coordinates only.
+    solver.enable_delta_tracking();
+    // Mirror of the v each round starts from (v_old, Algorithm 1 line
+    // 3) — refreshed from the master's replies, never re-snapshotted.
+    let mut v_prev = vec![0.0f64; data.d()];
+    let d = data.d();
     let mut vtime = 0.0f64;
     let mut local_rounds = 0usize;
     let mut total_updates = 0u64;
 
     loop {
-        // v_old snapshot for Δv (Algorithm 1 line 3).
-        let v_old = solver.v.snapshot();
-
         // R cores × H iterations (lines 4–9).
         let stats = solver.run_round(data, loss, norms, costs, cfg.h_local);
         total_updates += stats.updates;
@@ -82,20 +91,40 @@ pub fn run_worker(
         solver.commit(cfg.nu);
         let dual_sum = local_dual_sum(&solver, data, loss);
 
-        // Δv = (v − v_old)/σ (line 10): the live v accumulated the
-        // round's updates at σ·(1/λn) (see `solver::local`); the wire
-        // format is the paper's Δv = (1/λn)·X·δ.
-        let v_now = solver.v.snapshot();
+        // Δv = (v − v_old)/σ (line 10) at the touched support: the live
+        // v accumulated the round's updates at σ·(1/λn) (see
+        // `solver::local`); the wire format is the paper's
+        // Δv = (1/λn)·X·δ. Both representations carry the same values —
+        // the threshold only picks the cheaper wire format.
+        let touched = solver.take_touched();
         let inv_sigma = 1.0 / cfg.sigma;
-        let delta_v: Vec<f64> =
-            v_now.iter().zip(&v_old).map(|(a, b)| (a - b) * inv_sigma).collect();
+        // Threshold 0 must force dense even on a zero-touch round
+        // (0 ≤ 0·d would otherwise pick sparse and skew a forced-dense
+        // cost baseline); threshold 1 always passes the fraction test.
+        let use_sparse = cfg.delta_threshold > 0.0
+            && (touched.len() as f64) <= cfg.delta_threshold * d as f64;
+        let delta_v = if use_sparse {
+            let values: Vec<f64> = touched
+                .iter()
+                .map(|&j| (solver.v.load(j as usize) - v_prev[j as usize]) * inv_sigma)
+                .collect();
+            DeltaV::Sparse { dim: d, indices: touched, values }
+        } else {
+            let mut dense = vec![0.0f64; d];
+            for &j in &touched {
+                let j = j as usize;
+                dense[j] = (solver.v.load(j) - v_prev[j]) * inv_sigma;
+            }
+            DeltaV::Dense(dense)
+        };
 
+        let send_cost = cfg.send_cost.cost(delta_v.wire_elems());
         let msg = WorkerMsg {
             worker: cfg.worker_id,
             local_round: local_rounds,
             delta_v,
             dual_sum,
-            arrival_vtime: vtime + cfg.send_latency,
+            arrival_vtime: vtime + send_cost,
             updates: stats.updates,
         };
         if tx.send(msg).is_err() {
@@ -114,6 +143,7 @@ pub fn run_worker(
         }
         vtime = reply.arrival_vtime.max(vtime);
         solver.v.copy_from(&reply.v);
+        v_prev.copy_from_slice(&reply.v);
         local_rounds += 1;
     }
 
@@ -176,7 +206,8 @@ mod tests {
             lambda: 1e-2,
             wild: false,
             straggler: 1.0,
-            send_latency: 1e-3,
+            send_cost: SendCost::Fixed(1e-3),
+            delta_threshold: 0.5,
         };
         let master = std::thread::spawn(move || {
             let mut v = Vec::new();
@@ -189,11 +220,9 @@ mod tests {
                 assert!(msg.arrival_vtime > vt);
                 vt = msg.arrival_vtime;
                 if v.is_empty() {
-                    v = vec![0.0; msg.delta_v.len()];
+                    v = vec![0.0; msg.delta_v.dim()];
                 }
-                for (a, b) in v.iter_mut().zip(&msg.delta_v) {
-                    *a += b;
-                }
+                msg.delta_v.add_scaled_into(&mut v, 1.0);
                 tx_m.send(MasterReply {
                     v: v.clone(),
                     arrival_vtime: vt + 1e-3,
@@ -224,5 +253,55 @@ mod tests {
         assert!(fin.vtime > 0.0);
         // Dual made progress: some α moved.
         assert!(fin.alpha.iter().any(|&(_, a)| a != 0.0));
+    }
+
+    /// `delta_threshold = 1` forces the sparse wire format; the values
+    /// must equal the dense reconstruction of the same round.
+    #[test]
+    fn forced_sparse_delta_carries_the_round() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(5));
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        let cells = {
+            let mut rng = Rng::new(6);
+            crate::data::Partition::build(ds.n(), 1, 1, crate::data::Strategy::Contiguous, &mut rng)
+                .parts[0]
+                .clone()
+        };
+        let (tx_w, rx_m) = mpsc::channel::<WorkerMsg>();
+        let (tx_m, rx_w) = mpsc::channel::<MasterReply>();
+        let cfg = WorkerCfg {
+            worker_id: 0,
+            h_local: 40,
+            nu: 1.0,
+            sigma: 1.0,
+            lambda: 1e-2,
+            wild: false,
+            straggler: 1.0,
+            send_cost: SendCost::Sized(CostModel::default()),
+            delta_threshold: 1.0, // always sparse
+        };
+        let master = std::thread::spawn(move || {
+            let msg = rx_m.recv().unwrap();
+            assert!(msg.delta_v.is_sparse());
+            assert!(msg.delta_v.nnz() > 0);
+            assert!(msg.delta_v.nnz() <= msg.delta_v.dim());
+            // Sparse values reconstruct v exactly (first round: v_old=0,
+            // ν=1 ⇒ Δv = live v).
+            let dense = msg.delta_v.to_dense();
+            tx_m.send(MasterReply::terminate_now(msg.arrival_vtime, 1)).unwrap();
+            dense
+        });
+        let fin = run_worker(&cfg, cells, &ds, &Hinge, &norms, &costs, tx_w, rx_w, Rng::new(7));
+        let dense = master.join().unwrap();
+        // Rebuild v from the committed α and compare.
+        let mut alpha = vec![0.0; ds.n()];
+        for (i, a) in &fin.alpha {
+            alpha[*i] = *a;
+        }
+        let v_exact = crate::metrics::exact_v(&ds, &alpha, 1e-2);
+        for (j, (a, b)) in dense.iter().zip(&v_exact).enumerate() {
+            assert!((a - b).abs() < 1e-9, "Δv[{j}]: {a} vs {b}");
+        }
     }
 }

@@ -30,7 +30,12 @@ pub fn threshold_for(dataset: &str) -> f64 {
 }
 
 /// Run the four solvers on one dataset with `p×t` worker cores.
-pub fn run_dataset(dataset: &str, p: usize, t: usize, max_rounds: usize) -> anyhow::Result<Fig3Result> {
+pub fn run_dataset(
+    dataset: &str,
+    p: usize,
+    t: usize,
+    max_rounds: usize,
+) -> anyhow::Result<Fig3Result> {
     let threshold = threshold_for(dataset);
     let base = paper_session(dataset, p, t)
         .rounds(max_rounds)

@@ -18,7 +18,14 @@ pub struct Fig7Result {
     pub hybrid_vs_cocoa: Option<f64>,
 }
 
-pub fn run(dataset: &str, p: usize, t: usize, h: usize, max_rounds: usize, threshold: f64) -> anyhow::Result<Fig7Result> {
+pub fn run(
+    dataset: &str,
+    p: usize,
+    t: usize,
+    h: usize,
+    max_rounds: usize,
+    threshold: f64,
+) -> anyhow::Result<Fig7Result> {
     let base = paper_session(dataset, p, t)
         .local_iters(h) // paper uses H = 10000 for Fig 7 (scaled here)
         .rounds(max_rounds)

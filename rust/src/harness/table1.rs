@@ -38,9 +38,12 @@ pub fn run_and_print() -> anyhow::Result<()> {
     }
     // Scale record: nnz ratio vs paper for matched presets.
     println!("\nscale-down factors (paper nnz / preset nnz):");
-    for (paper, preset_name) in
-        [("rcv1", "rcv1-s"), ("webspam", "webspam-s"), ("kddb", "kddb-s"), ("splicesite", "splicesite-s")]
-    {
+    for (paper, preset_name) in [
+        ("rcv1", "rcv1-s"),
+        ("webspam", "webspam-s"),
+        ("kddb", "kddb-s"),
+        ("splicesite", "splicesite-s"),
+    ] {
         let p = PAPER_TABLE1.iter().find(|r| r.0 == paper).unwrap();
         if let Some(s) = stats.iter().find(|s| s.name == preset_name) {
             println!("  {:<12} {:>8.0}×", paper, p.3 as f64 / s.nnz as f64);
@@ -66,9 +69,12 @@ mod tests {
     fn presets_preserve_shape_statistics() {
         // n:d ratios within 3× of the paper's (the preserved invariant).
         let stats = compute_all(2);
-        for (paper_name, preset_name) in
-            [("rcv1", "rcv1-s"), ("webspam", "webspam-s"), ("kddb", "kddb-s"), ("splicesite", "splicesite-s")]
-        {
+        for (paper_name, preset_name) in [
+            ("rcv1", "rcv1-s"),
+            ("webspam", "webspam-s"),
+            ("kddb", "kddb-s"),
+            ("splicesite", "splicesite-s"),
+        ] {
             let p = PAPER_TABLE1.iter().find(|r| r.0 == paper_name).unwrap();
             let s = stats.iter().find(|s| s.name == preset_name).unwrap();
             let paper_ratio = p.1 as f64 / p.2 as f64;

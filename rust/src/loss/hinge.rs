@@ -21,6 +21,10 @@ impl Loss for Hinge {
         (1.0 - y * z).max(0.0)
     }
 
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     #[inline]
     fn dual_value(&self, alpha: f64, y: f64) -> f64 {
         let a = alpha * y;

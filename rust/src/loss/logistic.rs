@@ -38,6 +38,10 @@ fn entropy(t: f64) -> f64 {
 }
 
 impl Loss for Logistic {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
     #[inline]
     fn primal(&self, z: f64, y: f64) -> f64 {
         // Numerically stable log(1 + e^{−yz}).

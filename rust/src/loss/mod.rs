@@ -37,6 +37,12 @@ pub trait Loss: Send + Sync + std::fmt::Debug {
     /// Primal loss `φ(z; y)` at margin `z = x_iᵀw`.
     fn primal(&self, z: f64, y: f64) -> f64;
 
+    /// Concrete-type escape hatch for the hot-path monomorphization in
+    /// [`crate::solver::kernels`]: the update kernels downcast to the
+    /// builtin losses once per round and run a fully static inner loop,
+    /// falling back to virtual dispatch for plugin losses.
+    fn as_any(&self) -> &dyn std::any::Any;
+
     /// Dual contribution `−φ*(−α)` (so larger is better). Returns
     /// `f64::NEG_INFINITY` outside the feasible domain.
     fn dual_value(&self, alpha: f64, y: f64) -> f64;

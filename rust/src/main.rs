@@ -66,7 +66,11 @@ fn train_specs() -> Vec<FlagSpec> {
     vec![
         FlagSpec::value("config", "", "TOML config file (flags override it)"),
         FlagSpec::value("algo", "hybrid", "baseline|cocoa+|passcode|hybrid"),
-        FlagSpec::value("dataset", "tiny", "preset name (tiny|rcv1-s|webspam-s|kddb-s|splicesite-s)"),
+        FlagSpec::value(
+            "dataset",
+            "tiny",
+            "preset name (tiny|rcv1-s|webspam-s|kddb-s|splicesite-s)",
+        ),
         FlagSpec::value("data", "", "LIBSVM file path (overrides --dataset)"),
         FlagSpec::value("loss", "hinge", "hinge|squared_hinge|logistic"),
         FlagSpec::value("lambda", "1e-4", "regularization λ"),

@@ -23,29 +23,107 @@ pub struct Objectives {
     pub gap: f64,
 }
 
-/// Evaluate `P(w) = (1/n) Σ φ(x_iᵀw; y_i) + (λ/2)‖w‖²`.
+/// Fixed row-chunk size for the objective sums. Partial sums are
+/// accumulated per chunk and folded in chunk order, so the result is
+/// bitwise-independent of how many threads ran the chunks.
+const EVAL_CHUNK: usize = 2048;
+
+/// Minimum rows before the evaluation fans out to threads (below this
+/// the spawn overhead dominates the O(nnz) scan).
+const EVAL_PAR_MIN_ROWS: usize = 4096;
+
+/// Sum `body(lo..hi)` over `[0, n)` in fixed [`EVAL_CHUNK`] chunks,
+/// fanning out to scoped threads for large `n` (§Perf: the duality-gap
+/// evaluation gates every `eval_every` rounds while all K·R solver
+/// cores sit at the barrier — it was the last serial O(n·nnz) scan).
+/// Chunk sums are folded in chunk order regardless of thread count, so
+/// sequential and parallel runs are bitwise identical.
+fn chunked_sum<F>(n: usize, body: F) -> f64
+where
+    F: Fn(std::ops::Range<usize>) -> f64 + Sync,
+{
+    if n == 0 {
+        return 0.0;
+    }
+    let chunks = n.div_ceil(EVAL_CHUNK);
+    let mut partials = vec![0.0f64; chunks];
+    let threads = if n >= EVAL_PAR_MIN_ROWS {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(chunks)
+    } else {
+        1
+    };
+    if threads <= 1 {
+        for (c, p) in partials.iter_mut().enumerate() {
+            let lo = c * EVAL_CHUNK;
+            *p = body(lo..(lo + EVAL_CHUNK).min(n));
+        }
+    } else {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let next = &next;
+                let body = &body;
+                handles.push(scope.spawn(move || {
+                    let mut local: Vec<(usize, f64)> = Vec::new();
+                    loop {
+                        let c = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if c >= chunks {
+                            break;
+                        }
+                        let lo = c * EVAL_CHUNK;
+                        local.push((c, body(lo..(lo + EVAL_CHUNK).min(n))));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                for (c, s) in h.join().expect("eval worker panicked") {
+                    partials[c] = s;
+                }
+            }
+        });
+    }
+    partials.iter().sum()
+}
+
+/// Evaluate `P(w) = (1/n) Σ φ(x_iᵀw; y_i) + (λ/2)‖w‖²` (row-parallel
+/// for large n; see [`chunked_sum`]).
 pub fn primal_objective(data: &Dataset, loss: &dyn Loss, w: &[f64], lambda: f64) -> f64 {
     assert_eq!(w.len(), data.d());
     let n = data.n() as f64;
-    let mut loss_sum = 0.0;
-    for i in 0..data.n() {
-        let z = data.x.row(i).dot_dense(w);
-        loss_sum += loss.primal(z, data.y[i]);
-    }
+    let loss_sum = chunked_sum(data.n(), |range| {
+        let mut s = 0.0;
+        for i in range {
+            let z = data.x.row(i).dot_dense(w);
+            s += loss.primal(z, data.y[i]);
+        }
+        s
+    });
     loss_sum / n + 0.5 * lambda * norm_sq(w)
 }
 
 /// Evaluate `D(α) = (1/n) Σ (−φ*(−α_i)) − (λ/2)‖v‖²` where the caller
 /// supplies `v = (1/λn) X α` (possibly the *estimate* shared across
-/// nodes, exactly as the paper measures it).
-pub fn dual_objective(data: &Dataset, loss: &dyn Loss, alpha: &[f64], v: &[f64], lambda: f64) -> f64 {
+/// nodes, exactly as the paper measures it). Row-parallel like
+/// [`primal_objective`].
+pub fn dual_objective(
+    data: &Dataset,
+    loss: &dyn Loss,
+    alpha: &[f64],
+    v: &[f64],
+    lambda: f64,
+) -> f64 {
     assert_eq!(alpha.len(), data.n());
     assert_eq!(v.len(), data.d());
     let n = data.n() as f64;
-    let mut sum = 0.0;
-    for i in 0..data.n() {
-        sum += loss.dual_value(alpha[i], data.y[i]);
-    }
+    let sum = chunked_sum(data.n(), |range| {
+        let mut s = 0.0;
+        for i in range {
+            s += loss.dual_value(alpha[i], data.y[i]);
+        }
+        s
+    });
     sum / n - 0.5 * lambda * norm_sq(v)
 }
 
@@ -106,6 +184,40 @@ mod tests {
             let o = objectives(&ds, &Hinge, &alpha, &v, lambda);
             assert!(o.gap >= -1e-9, "gap {} < 0", o.gap);
         }
+    }
+
+    /// The chunked (possibly parallel) sum is deterministic and agrees
+    /// with a plain serial accumulation: exercise n above the thread
+    /// fan-out threshold and a chunk-boundary remainder.
+    #[test]
+    fn chunked_objectives_deterministic_and_accurate() {
+        let mut rng = Rng::new(9);
+        let n = super::EVAL_PAR_MIN_ROWS + 137; // > threshold, ragged tail
+        let d = 40;
+        let x = crate::data::CsrMatrix::random(&mut rng, n, d, 6);
+        let y: Vec<f64> = (0..n).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+        let ds = crate::data::Dataset::new(x, y).with_name("par-eval");
+        let w: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+
+        let p1 = primal_objective(&ds, &Hinge, &w, 1e-2);
+        let p2 = primal_objective(&ds, &Hinge, &w, 1e-2);
+        assert_eq!(p1.to_bits(), p2.to_bits(), "evaluation not deterministic");
+
+        let mut serial = 0.0;
+        for i in 0..ds.n() {
+            serial += Hinge.primal(ds.x.row(i).dot_dense(&w), ds.y[i]);
+        }
+        let serial = serial / ds.n() as f64 + 0.5 * 1e-2 * crate::util::norm_sq(&w);
+        assert!(
+            (p1 - serial).abs() <= 1e-10 * (1.0 + serial.abs()),
+            "chunked {p1} vs serial {serial}"
+        );
+
+        let alpha: Vec<f64> = ds.y.iter().map(|&yy| 0.5 * yy).collect();
+        let v = exact_v(&ds, &alpha, 1e-2);
+        let d1 = dual_objective(&ds, &Hinge, &alpha, &v, 1e-2);
+        let d2 = dual_objective(&ds, &Hinge, &alpha, &v, 1e-2);
+        assert_eq!(d1.to_bits(), d2.to_bits());
     }
 
     #[test]

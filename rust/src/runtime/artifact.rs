@@ -145,7 +145,10 @@ dtype = "f32"
     #[test]
     fn parse_errors() {
         assert!(Manifest::parse("").is_err());
-        assert!(Manifest::parse("[x]\nkind = \"bogus\"\nfile = \"f\"\nb = 1\nd = 1\ndtype = \"f32\"\n").is_err());
+        assert!(Manifest::parse(
+            "[x]\nkind = \"bogus\"\nfile = \"f\"\nb = 1\nd = 1\ndtype = \"f32\"\n"
+        )
+        .is_err());
         assert!(Manifest::parse("[x]\nfile = \"f\"\n").is_err());
         assert!(Manifest::parse("toplevel = 1\n").is_err());
     }

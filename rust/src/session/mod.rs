@@ -106,12 +106,16 @@ pub struct RunControl {
     pub eval_every: usize,
 }
 
-/// The virtual-clock cost model (DESIGN.md §3).
+/// The virtual-clock cost model (DESIGN.md §3) plus the Δv wire
+/// format policy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimCfg {
     pub net_latency: f64,
     pub net_per_elem: f64,
     pub cost_per_nnz: f64,
+    /// Δv density threshold: send sparse when the touched-coordinate
+    /// fraction is ≤ this (0 forces dense, 1 forces sparse).
+    pub delta_threshold: f64,
 }
 
 /// A validated experiment description — the typed replacement for the
@@ -158,7 +162,8 @@ impl Session {
             .eval_every(cfg.eval_every)
             .net_latency(cfg.net_latency)
             .net_per_elem(cfg.net_per_elem)
-            .cost_per_nnz(cfg.cost_per_nnz);
+            .cost_per_nnz(cfg.cost_per_nnz)
+            .delta_threshold(cfg.delta_threshold);
         if let Some(p) = &cfg.data_path {
             b = b.data_path(p);
         }
@@ -192,6 +197,7 @@ impl Session {
             net_latency: self.sim.net_latency,
             net_per_elem: self.sim.net_per_elem,
             cost_per_nnz: self.sim.cost_per_nnz,
+            delta_threshold: self.sim.delta_threshold,
         }
     }
 
@@ -264,6 +270,7 @@ impl Default for SessionBuilder {
                 net_latency: d.net_latency,
                 net_per_elem: d.net_per_elem,
                 cost_per_nnz: d.cost_per_nnz,
+                delta_threshold: d.delta_threshold,
             },
             allow_unsafe_sigma: false,
             barrier_explicit: false,
@@ -415,6 +422,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Δv wire-format density threshold in [0, 1]: workers send their
+    /// round delta sparse when the touched fraction is ≤ this (0
+    /// forces dense, 1 forces sparse). The merged arithmetic is
+    /// identical either way; with `net_per_elem > 0` the virtual-clock
+    /// schedule reflects the (smaller) sparse wire size.
+    pub fn delta_threshold(mut self, threshold: f64) -> Self {
+        self.sim.delta_threshold = threshold;
+        self
+    }
+
     /// Validate every paper constraint and produce the session. Errors
     /// name the violated constraint and where it comes from.
     pub fn build(self) -> anyhow::Result<Session> {
@@ -501,6 +518,11 @@ impl SessionBuilder {
         anyhow::ensure!(
             sim.net_latency >= 0.0 && sim.net_per_elem >= 0.0 && sim.cost_per_nnz >= 0.0,
             "SimCfg: virtual-clock costs must be ≥ 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&sim.delta_threshold),
+            "SimCfg: delta_threshold is a density fraction and must be in [0, 1] (got {})",
+            sim.delta_threshold
         );
 
         let session = Session { data, problem, cluster, local, master, control, sim };
@@ -618,10 +640,21 @@ mod tests {
     }
 
     #[test]
+    fn delta_threshold_out_of_range_rejected() {
+        for bad in [-0.1, 1.5] {
+            let err = Session::builder().delta_threshold(bad).build().unwrap_err();
+            assert!(err.to_string().contains("delta_threshold"), "{err}");
+        }
+        let s = Session::builder().delta_threshold(1.0).build().unwrap();
+        assert_eq!(s.sim.delta_threshold, 1.0);
+    }
+
+    #[test]
     fn exp_config_round_trip() {
         let mut cfg = ExpConfig::default();
         cfg.dataset = "rcv1-s".into();
         cfg.lambda = 1e-3;
+        cfg.delta_threshold = 0.75;
         cfg.k_nodes = 6;
         cfg.r_cores = 3;
         cfg.s_barrier = 4;

@@ -56,7 +56,15 @@ impl CostModel {
     /// Cost of one point-to-point message carrying a d-vector.
     #[inline]
     pub fn msg_cost(&self, d: usize) -> f64 {
-        self.net_latency + self.net_per_elem * d as f64
+        self.msg_cost_elems(d as f64)
+    }
+
+    /// Cost of one point-to-point message carrying `elems`
+    /// f64-equivalent elements — sparse Δv messages ship fewer than
+    /// `d` (see [`DeltaV::wire_elems`](crate::coordinator::messages::DeltaV::wire_elems)).
+    #[inline]
+    pub fn msg_cost_elems(&self, elems: f64) -> f64 {
+        self.net_latency + self.net_per_elem * elems
     }
 
     /// Cost of a synchronous all-reduce of a d-vector across `k` nodes:
@@ -75,6 +83,29 @@ impl CostModel {
 impl Default for CostModel {
     fn default() -> Self {
         Self { cost_per_nnz: 1e-7, net_latency: 1e-4, net_per_elem: 1e-6 }
+    }
+}
+
+/// Virtual cost of the worker → master send. CoCoA+'s synchronous
+/// all-reduce charges a fixed per-round share regardless of payload;
+/// Hybrid-DCA's point-to-point messages are billed by their actual
+/// wire size, which is what makes the sparse Δv format pay off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SendCost {
+    /// Fixed per-message cost (all-reduce share).
+    Fixed(f64),
+    /// Billed by wire size through the cost model (point-to-point).
+    Sized(CostModel),
+}
+
+impl SendCost {
+    /// Cost of a message carrying `wire_elems` f64-equivalent elements.
+    #[inline]
+    pub fn cost(&self, wire_elems: f64) -> f64 {
+        match self {
+            SendCost::Fixed(c) => *c,
+            SendCost::Sized(m) => m.msg_cost_elems(wire_elems),
+        }
     }
 }
 
@@ -142,7 +173,9 @@ impl StragglerProfile {
                     }
                 })
                 .collect(),
-            StragglerProfile::HalfSlow => (0..k).map(|i| if i % 2 == 1 { 2.0 } else { 1.0 }).collect(),
+            StragglerProfile::HalfSlow => {
+                (0..k).map(|i| if i % 2 == 1 { 2.0 } else { 1.0 }).collect()
+            }
         }
     }
 }
@@ -175,6 +208,20 @@ mod tests {
         let m = CostModel::new(0.0, 1e-4, 1e-6);
         assert!((m.msg_cost(0) - 1e-4).abs() < 1e-15);
         assert!((m.msg_cost(1000) - (1e-4 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn send_cost_fixed_vs_sized() {
+        let m = CostModel::new(0.0, 1e-4, 1e-6);
+        let fixed = SendCost::Fixed(0.5);
+        assert_eq!(fixed.cost(10.0), 0.5);
+        assert_eq!(fixed.cost(1e6), 0.5);
+        let sized = SendCost::Sized(m);
+        assert!((sized.cost(1000.0) - (1e-4 + 1e-3)).abs() < 1e-12);
+        assert!(sized.cost(3.0) < sized.cost(1000.0));
+        // A sparse message with few touched coords is cheaper than the
+        // dense d-vector under the sized model.
+        assert!(sized.cost(1.5 * 20.0) < m.msg_cost(1000));
     }
 
     #[test]

@@ -18,11 +18,10 @@
 //! it to the master, receives the merged `v`, and commits
 //! `α ← α + ν·δ` ([`LocalSolver::commit`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::sim::UpdateCosts;
+use crate::solver::kernels::{self, CoreOut, DirtySet, LossKernel};
 use crate::solver::StepParams;
 use crate::util::{AtomicF64Vec, Rng};
 
@@ -37,20 +36,27 @@ pub struct CoreShard {
     pub alpha_cur: Vec<f64>,
     /// Independent RNG stream for this core.
     pub rng: Rng,
+    /// Dirty-coordinate tracker (the Δv support), enabled by
+    /// [`LocalSolver::enable_delta_tracking`]. Core-owned: no
+    /// synchronization on the hot path.
+    pub dirty: Option<DirtySet>,
 }
 
 impl CoreShard {
     fn new(idx: Vec<usize>, rng: Rng) -> Self {
         let n = idx.len();
-        Self { idx, alpha_start: vec![0.0; n], alpha_cur: vec![0.0; n], rng }
+        Self { idx, alpha_start: vec![0.0; n], alpha_cur: vec![0.0; n], rng, dirty: None }
     }
 }
 
 /// Statistics from one local round.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoundStats {
-    /// Coordinate updates applied (= R · H).
+    /// Coordinate updates applied (≤ R · H; empty-row draws excluded).
     pub updates: u64,
+    /// Draws that hit an empty row (`‖x_i‖² = 0`) and did no work.
+    /// Counted separately so updates/s is not inflated (ISSUE 4).
+    pub skipped: u64,
     /// Virtual compute seconds per core (caller takes the max for the
     /// node's round time — cores run in parallel on a real node).
     pub core_secs: Vec<f64>,
@@ -68,8 +74,14 @@ pub struct LocalSolver {
     pub shards: Vec<CoreShard>,
     /// The node's shared primal estimate `v` (atomic, lock-free).
     pub v: AtomicF64Vec,
+    dim: usize,
     params: StepParams,
     wild: bool,
+    /// Shape of the last dataset whose CSR invariants were verified
+    /// (n, d, nnz) — the unchecked kernels' release-mode guard,
+    /// amortized to one O(nnz) validation per dataset instead of per
+    /// round.
+    validated_shape: Option<(usize, usize, usize)>,
 }
 
 impl LocalSolver {
@@ -83,11 +95,31 @@ impl LocalSolver {
         rng: &mut Rng,
     ) -> Self {
         let shards = cells.into_iter().map(|idx| CoreShard::new(idx, rng.fork())).collect();
-        Self { shards, v: AtomicF64Vec::zeros(dim), params, wild }
+        Self { shards, v: AtomicF64Vec::zeros(dim), dim, params, wild, validated_shape: None }
     }
 
     pub fn r_cores(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Turn on per-core dirty-coordinate tracking so rounds record the
+    /// Δv support (required before [`Self::take_touched`]).
+    pub fn enable_delta_tracking(&mut self) {
+        for shard in self.shards.iter_mut() {
+            shard.dirty = Some(DirtySet::new(self.dim));
+        }
+    }
+
+    /// Union-and-clear of all shards' touched coordinates (ascending).
+    /// Panics if tracking was never enabled.
+    pub fn take_touched(&mut self) -> Vec<u32> {
+        let mut acc = DirtySet::new(self.dim);
+        for shard in self.shards.iter_mut() {
+            let dirty = shard.dirty.as_mut().expect("delta tracking not enabled");
+            acc.union(dirty);
+            dirty.clear();
+        }
+        acc.indices()
     }
 
     /// Update σ (used when ablations change σ between phases).
@@ -97,7 +129,8 @@ impl LocalSolver {
 
     /// Run one round: every core performs `h` asynchronous updates.
     /// Cores run as real OS threads when `R > 1` (exercising the atomic
-    /// races), or inline when `R == 1`.
+    /// races), or inline when `R == 1`. The loss is downcast once here
+    /// ([`LossKernel`]) so the inner loops are fully monomorphized.
     pub fn run_round(
         &mut self,
         data: &Dataset,
@@ -106,6 +139,16 @@ impl LocalSolver {
         costs: &UpdateCosts,
         h: usize,
     ) -> RoundStats {
+        // The unchecked kernels rely on CSR validity (feature indices
+        // < d). `CsrMatrix` fields are pub, so an invalid matrix from
+        // safe code must panic here — not corrupt memory inside the
+        // kernels. One O(nnz) validation per dataset (re-run only when
+        // the shape changes), amortized across all rounds.
+        let shape = (data.n(), data.d(), data.x.nnz());
+        if self.validated_shape != Some(shape) {
+            data.x.validate().expect("invalid CSR matrix");
+            self.validated_shape = Some(shape);
+        }
         let params = self.params;
         // Perf (§Perf L3): with a single core-thread there are no
         // concurrent writers, so the racy load+store path is *exact*
@@ -113,37 +156,34 @@ impl LocalSolver {
         // this is the hot path of Baseline, CoCoA+, and every R=1 node.
         let wild = self.wild || self.shards.len() == 1;
         let v = &self.v;
-        let updates = AtomicU64::new(0);
+        let kernel = LossKernel::of(loss);
         let mut core_secs = vec![0.0; self.shards.len()];
+        let mut updates = 0u64;
+        let mut skipped = 0u64;
         if self.shards.len() == 1 {
-            let secs = run_core(
-                &mut self.shards[0],
-                data,
-                loss,
-                norms,
-                costs,
-                v,
-                &params,
-                wild,
-                h,
-                &updates,
-            );
-            core_secs[0] = secs;
+            let shard = &mut self.shards[0];
+            let out = run_core_dispatch(&kernel, shard, data, norms, costs, v, &params, wild, h);
+            core_secs[0] = out.secs;
+            updates = out.applied;
+            skipped = out.skipped;
         } else {
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for shard in self.shards.iter_mut() {
-                    let updates = &updates;
+                    let kernel = &kernel;
                     handles.push(scope.spawn(move || {
-                        run_core(shard, data, loss, norms, costs, v, &params, wild, h, updates)
+                        run_core_dispatch(kernel, shard, data, norms, costs, v, &params, wild, h)
                     }));
                 }
                 for (r, hnd) in handles.into_iter().enumerate() {
-                    core_secs[r] = hnd.join().expect("core thread panicked");
+                    let out = hnd.join().expect("core thread panicked");
+                    core_secs[r] = out.secs;
+                    updates += out.applied;
+                    skipped += out.skipped;
                 }
             });
         }
-        RoundStats { updates: updates.load(Ordering::Relaxed), core_secs }
+        RoundStats { updates, skipped, core_secs }
     }
 
     /// Commit the round: `α ← α_start + ν·δ` (Algorithm 1 line 12) and
@@ -174,60 +214,31 @@ impl LocalSolver {
     }
 }
 
-/// One core's H updates. Returns virtual compute seconds.
+/// Monomorphizing dispatch into [`kernels::run_core`]: each concrete
+/// arm instantiates the update loop with static loss calls; plugin
+/// losses keep virtual dispatch.
 #[allow(clippy::too_many_arguments)]
-fn run_core(
+fn run_core_dispatch(
+    kernel: &LossKernel<'_>,
     shard: &mut CoreShard,
     data: &Dataset,
-    loss: &dyn Loss,
     norms: &[f64],
     costs: &UpdateCosts,
     v: &AtomicF64Vec,
     params: &StepParams,
     wild: bool,
     h: usize,
-    updates: &AtomicU64,
-) -> f64 {
-    let mut secs = 0.0;
-    let len = shard.idx.len();
-    if len == 0 {
-        return 0.0;
-    }
-    // In-round updates enter the live v at σ·(1/λn): the subproblem
-    // Q_k^σ penalizes the accumulated δ through (λσ/2)‖(1/λn)Xδ‖², so
-    // its margin gradient is x_iᵀ(v_frozen + (σ/λn)Xδ). (The paper's
-    // Algorithm 1 line 9 writes the unscaled update; solving the stated
-    // subproblem — as Ma et al.'s LocalSDCA does — requires the σ
-    // factor, and without it the ν-weighted merge oscillates. Δv is
-    // un-scaled back to (1/λn)Xδ before sending; see the worker.)
-    let v_scale = params.v_scale() * params.sigma;
-    for _ in 0..h {
-        let j = shard.rng.next_below(len);
-        // SAFETY: partition validation guarantees idx entries < n.
-        let i = unsafe { *shard.idx.get_unchecked(j) };
-        let row = unsafe { data.x.row_unchecked(i) };
-        let ns = unsafe { *norms.get_unchecked(i) };
-        if ns == 0.0 {
-            continue;
+) -> CoreOut {
+    match kernel {
+        LossKernel::Hinge(l) => kernels::run_core(shard, data, l, norms, costs, v, params, wild, h),
+        LossKernel::SquaredHinge(l) => {
+            kernels::run_core(shard, data, l, norms, costs, v, params, wild, h)
         }
-        let m = v.sparse_dot(row.indices, row.values);
-        let y = unsafe { *data.y.get_unchecked(i) };
-        let q = params.q(ns);
-        let a_old = unsafe { *shard.alpha_cur.get_unchecked(j) };
-        let a_new = loss.coordinate_step(a_old, y, m, q);
-        let eps = a_new - a_old;
-        if eps != 0.0 {
-            shard.alpha_cur[j] = a_new;
-            if wild {
-                v.sparse_axpy_wild(eps * v_scale, row.indices, row.values);
-            } else {
-                v.sparse_axpy(eps * v_scale, row.indices, row.values);
-            }
+        LossKernel::Logistic(l) => {
+            kernels::run_core(shard, data, l, norms, costs, v, params, wild, h)
         }
-        secs += costs.cost(i);
+        LossKernel::Dyn(l) => kernels::run_core(shard, data, *l, norms, costs, v, params, wild, h),
     }
-    updates.fetch_add(h as u64, Ordering::Relaxed);
-    secs
 }
 
 #[cfg(test)]
@@ -242,7 +253,8 @@ mod tests {
         let ds = Preset::Tiny.generate(&mut Rng::new(1));
         let n = ds.n();
         let mut rng = Rng::new(2);
-        let part = crate::data::Partition::build(n, 1, r, crate::data::Strategy::Contiguous, &mut rng);
+        let part =
+            crate::data::Partition::build(n, 1, r, crate::data::Strategy::Contiguous, &mut rng);
         let params = StepParams { lambda: 1e-2, n, sigma: 1.0 };
         let solver = LocalSolver::new(part.parts[0].clone(), ds.d(), params, false, &mut rng);
         let norms = ds.x.row_norms_sq();
@@ -296,8 +308,48 @@ mod tests {
 
     #[test]
     fn node_secs_is_max_core() {
-        let stats = RoundStats { updates: 10, core_secs: vec![1.0, 3.0, 2.0] };
+        let stats = RoundStats { updates: 10, skipped: 0, core_secs: vec![1.0, 3.0, 2.0] };
         assert_eq!(stats.node_secs(), 3.0);
+    }
+
+    #[test]
+    fn empty_row_draws_counted_as_skipped_not_updates() {
+        // Two rows, one empty: draws landing on the empty row must be
+        // counted in `skipped`, not `updates` (ISSUE 4 satellite — the
+        // old counter credited them as applied work).
+        let mut b = crate::data::CsrBuilder::new(4);
+        b.push_row(vec![(0, 1.0), (2, -1.0)]).unwrap();
+        b.push_row(vec![]).unwrap(); // empty row: ‖x‖² = 0
+        let ds = Dataset::new(b.finish(), vec![1.0, -1.0]).with_name("skiptest");
+        let mut rng = Rng::new(9);
+        let params = StepParams { lambda: 1e-2, n: ds.n(), sigma: 1.0 };
+        let mut s = LocalSolver::new(vec![vec![0, 1]], ds.d(), params, false, &mut rng);
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        let h = 200;
+        let stats = s.run_round(&ds, &Hinge, &norms, &costs, h);
+        assert_eq!(stats.updates + stats.skipped, h as u64);
+        assert!(stats.skipped > 0, "empty row never drawn with h={h}");
+        assert!(stats.updates > 0);
+    }
+
+    #[test]
+    fn dirty_tracking_covers_every_changed_coordinate() {
+        let (ds, mut s, norms, costs) = setup(1);
+        s.enable_delta_tracking();
+        let v_before = s.v.snapshot();
+        s.run_round(&ds, &Hinge, &norms, &costs, 300);
+        let v_after = s.v.snapshot();
+        let touched = s.take_touched();
+        let touched_set: std::collections::HashSet<u32> = touched.iter().copied().collect();
+        for (j, (a, b)) in v_before.iter().zip(&v_after).enumerate() {
+            if a != b {
+                assert!(touched_set.contains(&(j as u32)), "changed coord {j} not tracked");
+            }
+        }
+        assert!(!touched.is_empty());
+        // take_touched clears: a second call with no new work is empty.
+        assert!(s.take_touched().is_empty());
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! * [`block`] — block (mini-batch locally-sequential) dual step, the
 //!   Rust oracle for the L1/L2 XLA path (see DESIGN.md
 //!   §Hardware-Adaptation).
+//! * [`kernels`] — the monomorphized hot-path kernels and the
+//!   dirty-coordinate tracker behind the sparse Δv exchange (§Perf).
 
 pub mod block;
+pub mod kernels;
 pub mod local;
 pub mod sdca;
 #[cfg(feature = "xla-runtime")]
@@ -50,10 +53,12 @@ impl StepParams {
 
 /// One exact coordinate step against a dense `v`; returns `ε` (the
 /// dual increment) and applies nothing. Shared helper for the
-/// sequential paths.
+/// sequential paths. Generic over the loss so monomorphized callers
+/// (see [`kernels::LossKernel`]) pay no virtual call; `&dyn Loss`
+/// still works unchanged.
 #[inline]
-pub fn coordinate_epsilon(
-    loss: &dyn Loss,
+pub fn coordinate_epsilon<L: Loss + ?Sized>(
+    loss: &L,
     alpha_i: f64,
     y_i: f64,
     margin: f64,

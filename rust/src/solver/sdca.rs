@@ -9,6 +9,7 @@
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::sim::UpdateCosts;
+use crate::solver::kernels::{self, LossKernel};
 use crate::solver::{coordinate_epsilon, StepParams};
 use crate::util::Rng;
 
@@ -35,6 +36,12 @@ impl<'d> Sdca<'d> {
         rng: Rng,
         cost_model: &crate::sim::CostModel,
     ) -> Self {
+        // The unchecked step kernels rely on the CSR invariant
+        // (feature indices < d = v.len()). `CsrMatrix` fields are pub,
+        // so enforce it here — once per solver, O(nnz) like the norm
+        // precompute below — instead of trusting the caller (an invalid
+        // matrix would otherwise be UB, not a panic, in release).
+        data.x.validate().expect("invalid CSR matrix");
         let params = StepParams { lambda, n: data.n(), sigma: 1.0 };
         Self {
             alpha: vec![0.0; data.n()],
@@ -49,32 +56,50 @@ impl<'d> Sdca<'d> {
         }
     }
 
-    /// Apply one exact coordinate update at a random index.
+    /// Apply one exact coordinate update at a random index. Generic
+    /// over the loss: monomorphized callers pay no virtual call, and
+    /// `&dyn Loss` still works unchanged.
     #[inline]
-    pub fn step(&mut self, loss: &dyn Loss) {
+    pub fn step<L: Loss + ?Sized>(&mut self, loss: &L) {
         let i = self.rng.next_below(self.data.n());
         self.step_at(loss, i);
     }
 
     /// Apply one exact coordinate update at index `i`.
     #[inline]
-    pub fn step_at(&mut self, loss: &dyn Loss, i: usize) {
+    pub fn step_at<L: Loss + ?Sized>(&mut self, loss: &L, i: usize) {
         let row = self.data.x.row(i);
-        let m = row.dot_dense(&self.v);
-        let eps = coordinate_epsilon(loss, self.alpha[i], self.data.y[i], m, self.norms[i], &self.params);
+        // SAFETY: CSR validity (indices < d, pinned in `new`) and
+        // `v.len() == d` by construction.
+        let m = unsafe { kernels::sparse_dot_dense_unchecked(row.indices, row.values, &self.v) };
+        let eps =
+            coordinate_epsilon(loss, self.alpha[i], self.data.y[i], m, self.norms[i], &self.params);
         if eps != 0.0 {
             self.alpha[i] += eps;
             let scale = eps * self.params.v_scale();
-            for (&j, &x) in row.indices.iter().zip(row.values.iter()) {
-                self.v[j as usize] += scale * x;
-            }
+            // SAFETY: same bounds argument as the dot above.
+            unsafe {
+                kernels::sparse_axpy_dense_unchecked(scale, row.indices, row.values, &mut self.v)
+            };
         }
         self.updates += 1;
         self.virt_secs += self.costs.cost(i);
     }
 
-    /// Run `h` updates (one Baseline "round").
+    /// Run `h` updates (one Baseline "round"). The loss is downcast
+    /// once here so the whole round runs monomorphized
+    /// ([`LossKernel`]; ~one virtual call per round instead of per
+    /// update).
     pub fn run_round(&mut self, loss: &dyn Loss, h: usize) {
+        match LossKernel::of(loss) {
+            LossKernel::Hinge(l) => self.run_round_mono(&l, h),
+            LossKernel::SquaredHinge(l) => self.run_round_mono(&l, h),
+            LossKernel::Logistic(l) => self.run_round_mono(&l, h),
+            LossKernel::Dyn(l) => self.run_round_mono(l, h),
+        }
+    }
+
+    fn run_round_mono<L: Loss + ?Sized>(&mut self, loss: &L, h: usize) {
         for _ in 0..h {
             self.step(loss);
         }

@@ -61,6 +61,16 @@ impl AtomicF64Vec {
         f64::from_bits(self.data[i].load(Ordering::Relaxed))
     }
 
+    /// Relaxed load without the bounds check.
+    ///
+    /// # Safety
+    /// `i < self.len()` must hold.
+    #[inline(always)]
+    pub unsafe fn load_unchecked(&self, i: usize) -> f64 {
+        debug_assert!(i < self.len());
+        f64::from_bits(self.data.get_unchecked(i).load(Ordering::Relaxed))
+    }
+
     /// Lock-free `v[i] += delta` via CAS loop (never loses an update).
     #[inline(always)]
     pub fn add(&self, i: usize, delta: f64) {
@@ -145,6 +155,130 @@ impl AtomicF64Vec {
             self.add_wild(j as usize, a * x);
         }
     }
+
+    // ---- unchecked, 4-way-unrolled hot-path kernels (§Perf) ----
+    //
+    // The coordinate step touches every nonzero of `x_i` twice (dot +
+    // axpy); with bounds-checked element access each touch pays an
+    // index compare and branch. The `*_unchecked` variants drop those
+    // and unroll 4× so the loop overhead amortizes across iterations.
+    // Accumulation order is kept identical to the scalar references
+    // above, so for quiescent vectors the results are bitwise equal —
+    // `tests/prop_kernels.rs` pins that equivalence.
+
+    /// Unchecked, unrolled sparse dot `Σ_j vals[j] · v[idx[j]]` with
+    /// relaxed loads. Bitwise-identical to [`Self::sparse_dot`] (single
+    /// accumulator, same add order).
+    ///
+    /// # Safety
+    /// Every index in `idx` must be `< self.len()`, and
+    /// `idx.len() == vals.len()` must hold.
+    #[inline]
+    pub unsafe fn sparse_dot_unchecked(&self, idx: &[u32], vals: &[f64]) -> f64 {
+        debug_assert_eq!(idx.len(), vals.len());
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.len()));
+        let n = idx.len();
+        let mut acc = 0.0;
+        let mut k = 0;
+        while k + 4 <= n {
+            let v0 = self.load_unchecked(*idx.get_unchecked(k) as usize);
+            let v1 = self.load_unchecked(*idx.get_unchecked(k + 1) as usize);
+            let v2 = self.load_unchecked(*idx.get_unchecked(k + 2) as usize);
+            let v3 = self.load_unchecked(*idx.get_unchecked(k + 3) as usize);
+            acc += *vals.get_unchecked(k) * v0;
+            acc += *vals.get_unchecked(k + 1) * v1;
+            acc += *vals.get_unchecked(k + 2) * v2;
+            acc += *vals.get_unchecked(k + 3) * v3;
+            k += 4;
+        }
+        while k < n {
+            acc += *vals.get_unchecked(k) * self.load_unchecked(*idx.get_unchecked(k) as usize);
+            k += 1;
+        }
+        acc
+    }
+
+    /// Unchecked CAS add of one element (see [`Self::add`]).
+    ///
+    /// # Safety
+    /// `i < self.len()` must hold.
+    #[inline(always)]
+    pub unsafe fn add_unchecked(&self, i: usize, delta: f64) {
+        debug_assert!(i < self.len());
+        let cell = self.data.get_unchecked(i);
+        let mut cur = cell.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + delta).to_bits();
+            match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Unchecked racy add of one element (see [`Self::add_wild`]).
+    ///
+    /// # Safety
+    /// `i < self.len()` must hold.
+    #[inline(always)]
+    pub unsafe fn add_wild_unchecked(&self, i: usize, delta: f64) {
+        debug_assert!(i < self.len());
+        let cell = self.data.get_unchecked(i);
+        let cur = f64::from_bits(cell.load(Ordering::Relaxed));
+        cell.store((cur + delta).to_bits(), Ordering::Relaxed);
+    }
+
+    /// Unchecked, unrolled sparse axpy `v[idx[j]] += a · vals[j]` via
+    /// CAS adds. Element-wise identical to [`Self::sparse_axpy`].
+    ///
+    /// # Safety
+    /// Every index in `idx` must be `< self.len()`, and
+    /// `idx.len() == vals.len()` must hold.
+    #[inline]
+    pub unsafe fn sparse_axpy_unchecked(&self, a: f64, idx: &[u32], vals: &[f64]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.len()));
+        let n = idx.len();
+        let mut k = 0;
+        while k + 4 <= n {
+            self.add_unchecked(*idx.get_unchecked(k) as usize, a * *vals.get_unchecked(k));
+            self.add_unchecked(*idx.get_unchecked(k + 1) as usize, a * *vals.get_unchecked(k + 1));
+            self.add_unchecked(*idx.get_unchecked(k + 2) as usize, a * *vals.get_unchecked(k + 2));
+            self.add_unchecked(*idx.get_unchecked(k + 3) as usize, a * *vals.get_unchecked(k + 3));
+            k += 4;
+        }
+        while k < n {
+            self.add_unchecked(*idx.get_unchecked(k) as usize, a * *vals.get_unchecked(k));
+            k += 1;
+        }
+    }
+
+    /// Unchecked, unrolled sparse axpy in wild (racy) mode.
+    ///
+    /// # Safety
+    /// Every index in `idx` must be `< self.len()`, and
+    /// `idx.len() == vals.len()` must hold.
+    #[inline]
+    pub unsafe fn sparse_axpy_wild_unchecked(&self, a: f64, idx: &[u32], vals: &[f64]) {
+        debug_assert_eq!(idx.len(), vals.len());
+        debug_assert!(idx.iter().all(|&j| (j as usize) < self.len()));
+        let n = idx.len();
+        let mut k = 0;
+        while k + 4 <= n {
+            let (j0, j1) = (*idx.get_unchecked(k) as usize, *idx.get_unchecked(k + 1) as usize);
+            let (j2, j3) =
+                (*idx.get_unchecked(k + 2) as usize, *idx.get_unchecked(k + 3) as usize);
+            self.add_wild_unchecked(j0, a * *vals.get_unchecked(k));
+            self.add_wild_unchecked(j1, a * *vals.get_unchecked(k + 1));
+            self.add_wild_unchecked(j2, a * *vals.get_unchecked(k + 2));
+            self.add_wild_unchecked(j3, a * *vals.get_unchecked(k + 3));
+            k += 4;
+        }
+        while k < n {
+            self.add_wild_unchecked(*idx.get_unchecked(k) as usize, a * *vals.get_unchecked(k));
+            k += 1;
+        }
+    }
 }
 
 impl std::fmt::Debug for AtomicF64Vec {
@@ -212,6 +346,64 @@ mod tests {
         }
         let total: f64 = v.snapshot().iter().sum();
         assert_eq!(total, (threads * per_thread) as f64);
+    }
+
+    /// The unrolled/unchecked kernels are bitwise-faithful to their
+    /// scalar references on quiescent vectors, across remainder lengths
+    /// 0–3 of the 4-way unroll.
+    #[test]
+    fn unchecked_kernels_match_scalar_reference() {
+        let mut rng = crate::util::Rng::new(77);
+        for nnz in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 64, 65] {
+            let dim = 128;
+            let base: Vec<f64> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            let mut idx: Vec<u32> = crate::util::Rng::new(nnz as u64 + 1)
+                .sample_indices(dim, nnz.min(dim))
+                .into_iter()
+                .map(|j| j as u32)
+                .collect();
+            idx.sort_unstable();
+            let vals: Vec<f64> = idx.iter().map(|_| rng.next_gaussian()).collect();
+            let a = rng.next_gaussian();
+
+            let v = AtomicF64Vec::from_slice(&base);
+            let dot_ref = v.sparse_dot(&idx, &vals);
+            let dot_fast = unsafe { v.sparse_dot_unchecked(&idx, &vals) };
+            assert_eq!(dot_ref.to_bits(), dot_fast.to_bits(), "dot nnz={nnz}");
+
+            let v_ref = AtomicF64Vec::from_slice(&base);
+            let v_fast = AtomicF64Vec::from_slice(&base);
+            v_ref.sparse_axpy(a, &idx, &vals);
+            unsafe { v_fast.sparse_axpy_unchecked(a, &idx, &vals) };
+            assert_eq!(v_ref.snapshot(), v_fast.snapshot(), "axpy nnz={nnz}");
+
+            let w_ref = AtomicF64Vec::from_slice(&base);
+            let w_fast = AtomicF64Vec::from_slice(&base);
+            w_ref.sparse_axpy_wild(a, &idx, &vals);
+            unsafe { w_fast.sparse_axpy_wild_unchecked(a, &idx, &vals) };
+            assert_eq!(w_ref.snapshot(), w_fast.snapshot(), "wild axpy nnz={nnz}");
+        }
+    }
+
+    /// Unchecked CAS adds keep the lock-free no-lost-update guarantee.
+    #[test]
+    fn concurrent_unchecked_adds_sum_exactly() {
+        let v = Arc::new(AtomicF64Vec::zeros(4));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let v = Arc::clone(&v);
+                std::thread::spawn(move || {
+                    for k in 0..5_000 {
+                        unsafe { v.add_unchecked(k % 4, 1.0) };
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total: f64 = v.snapshot().iter().sum();
+        assert_eq!(total, 20_000.0);
     }
 
     /// Wild mode may lose updates under contention but must never tear:

@@ -3,6 +3,7 @@
 //! a leveled logger, and a miniature property-testing framework.
 
 pub mod atomic_vec;
+pub mod json;
 pub mod logging;
 pub mod proptest;
 pub mod rng;

@@ -109,7 +109,8 @@ fn xla_block_solver_converges_when_artifacts_present() {
         &mut rng,
     );
     let lambda = 2.0 / 256.0;
-    let mut solver = hybrid_dca::solver::xla_dense::XlaDenseSolver::new(&rt, &data, lambda).unwrap();
+    let mut solver =
+        hybrid_dca::solver::xla_dense::XlaDenseSolver::new(&rt, &data, lambda).unwrap();
     let trace = solver.solve(40, 1e-3).unwrap();
     let gap = trace.final_gap().unwrap();
     assert!(gap <= 1e-3, "XLA solver gap {gap}");

@@ -225,7 +225,9 @@ fn prop_coordinate_step_feasible_and_improving() {
             if !Hinge.feasible(a_new, y) {
                 return Err(format!("infeasible {a_new}"));
             }
-            let f = |a: f64| Hinge.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha) * (a - alpha);
+            let f = |a: f64| {
+                Hinge.dual_value(a, y) - m * (a - alpha) - 0.5 * q * (a - alpha) * (a - alpha)
+            };
             if f(a_new) < f(alpha) - 1e-12 {
                 return Err(format!("objective decreased: {} -> {}", f(alpha), f(a_new)));
             }

@@ -97,7 +97,13 @@ fn gap_tile_artifact_matches_metrics() {
         let (b, d) = (art.meta.b, art.meta.d);
         let input = random_case(&mut rng, b, d);
         let out = rt
-            .gap_tile(art, &to_f32(&input.x), &to_f32(&input.y), &to_f32(&input.alpha), &to_f32(&input.v))
+            .gap_tile(
+                art,
+                &to_f32(&input.x),
+                &to_f32(&input.y),
+                &to_f32(&input.alpha),
+                &to_f32(&input.v),
+            )
             .expect("execute");
         // Oracle: hinge losses + dual contributions.
         let mut hinge_sum = 0.0f64;
