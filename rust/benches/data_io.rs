@@ -1,0 +1,209 @@
+//! Bench: shard-store I/O throughput — LIBSVM-text pack (streaming,
+//! constant memory) and shard open/materialize, the two sides of the
+//! out-of-core pipeline.
+//!
+//! `cargo bench --bench data_io` prints the table **and appends a
+//! machine-readable run to `BENCH_data_io.json` at the repo root**
+//! (same trajectory discipline as `BENCH_hot_loop.json`). Label runs
+//! with `HYBRID_DCA_BENCH_LABEL=...`; `HYBRID_DCA_BENCH=quick` is the
+//! CI smoke mode (tiny preset, no file write).
+
+use hybrid_dca::data::{libsvm, Preset};
+use hybrid_dca::harness::{self, QuickFull};
+use hybrid_dca::store::{self, PackOptions};
+use hybrid_dca::util::json::Json;
+use hybrid_dca::util::{measure, Stats};
+
+struct Row {
+    path: String,
+    p50_secs: f64,
+    rows_per_sec: f64,
+    mb_per_sec: f64,
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<26} {:>14} {:>14.0} {:>12.1}",
+        r.path,
+        hybrid_dca::util::timer::fmt_duration(r.p50_secs),
+        r.rows_per_sec,
+        r.mb_per_sec
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = QuickFull::from_env() == QuickFull::Quick;
+    let (preset, dataset_name, shard_rows) = if quick {
+        (Preset::Tiny, "tiny", 64usize)
+    } else {
+        (Preset::RcvS, "rcv1-s", 2048usize)
+    };
+    let data = harness::gen_preset(preset, 42);
+
+    // Input text on disk, so pack measures real file I/O.
+    let tmp = std::env::temp_dir().join("hybrid_dca_bench_data_io");
+    std::fs::create_dir_all(&tmp)?;
+    let svm_path = tmp.join(format!("{dataset_name}.svm"));
+    libsvm::write_file(&svm_path, &data)?;
+    let svm_bytes = std::fs::metadata(&svm_path)?.len();
+    let store_dir = tmp.join(format!("{dataset_name}_store"));
+
+    println!(
+        "shard-store I/O on {} (n={}, nnz={}, text {:.1} MB, {} rows/shard)\n",
+        data.name,
+        data.n(),
+        data.x.nnz(),
+        svm_bytes as f64 / 1e6,
+        shard_rows
+    );
+    println!("{:<26} {:>14} {:>14} {:>12}", "path", "p50", "rows/s", "MB/s");
+
+    let mut rows_out: Vec<Row> = Vec::new();
+    let opts = PackOptions {
+        name: dataset_name.into(),
+        shard_rows,
+        min_dim: data.d(),
+        ..Default::default()
+    };
+
+    // Streaming pack: LIBSVM text → shards (bounded by one shard).
+    {
+        let samples = measure(1, 5, || {
+            std::fs::remove_dir_all(&store_dir).ok();
+            store::pack_file(&svm_path, &store_dir, &opts).expect("pack");
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "pack (text → shards)".into(),
+            p50_secs: st.p50,
+            rows_per_sec: data.n() as f64 / st.p50,
+            mb_per_sec: svm_bytes as f64 / 1e6 / st.p50,
+        };
+        print_row(&row);
+        rows_out.push(row);
+    }
+    let store_bytes: u64 = store::open(&store_dir)?
+        .manifest()
+        .shards
+        .iter()
+        .map(|s| s.bytes)
+        .sum();
+
+    // Lazy single-shard load (the per-node training path).
+    {
+        let sharded = store::open(&store_dir)?;
+        let shard0_rows = sharded.manifest().shards[0].rows();
+        let shard0_bytes = sharded.manifest().shards[0].bytes;
+        let samples = measure(1, 10, || {
+            let ds = sharded.load_shard(0).expect("shard 0");
+            assert_eq!(ds.n(), shard0_rows);
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "load one shard (decode)".into(),
+            p50_secs: st.p50,
+            rows_per_sec: shard0_rows as f64 / st.p50,
+            mb_per_sec: shard0_bytes as f64 / 1e6 / st.p50,
+        };
+        print_row(&row);
+        rows_out.push(row);
+    }
+
+    // Full open + materialize (the flat-engine bridge).
+    {
+        let samples = measure(1, 5, || {
+            let ds = store::open(&store_dir)
+                .and_then(|s| s.materialize())
+                .expect("materialize");
+            assert_eq!(ds.n(), data.n());
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "open + materialize".into(),
+            p50_secs: st.p50,
+            rows_per_sec: data.n() as f64 / st.p50,
+            mb_per_sec: store_bytes as f64 / 1e6 / st.p50,
+        };
+        print_row(&row);
+        rows_out.push(row);
+    }
+
+    std::fs::remove_dir_all(&tmp).ok();
+
+    if quick {
+        println!("\n(quick mode: BENCH_data_io.json not written)");
+    } else {
+        let path = bench_json_path();
+        append_run(&path, dataset_name, shard_rows, svm_bytes, &rows_out)?;
+        println!("\n# run appended to {}", path.display());
+    }
+    Ok(())
+}
+
+/// `BENCH_data_io.json` lives at the repo root, next to the other
+/// perf trajectories.
+fn bench_json_path() -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root).join("..").join("BENCH_data_io.json")
+}
+
+/// Append this run, preserving earlier runs. An existing-but-invalid
+/// file is an error — never silently overwrite the history.
+fn append_run(
+    path: &std::path::Path,
+    dataset: &str,
+    shard_rows: usize,
+    svm_bytes: u64,
+    rows: &[Row],
+) -> anyhow::Result<()> {
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = Json::parse(&text).map_err(|e| {
+                anyhow::anyhow!(
+                    "{} exists but is not valid JSON ({e}); refusing to overwrite the \
+                     perf trajectory — fix or remove the file first",
+                    path.display()
+                )
+            })?;
+            doc.get("runs")
+                .and_then(|r| r.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default()
+        }
+        Err(_) => Vec::new(),
+    };
+    let label =
+        std::env::var("HYBRID_DCA_BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("path".into(), Json::Str(r.path.clone())),
+                ("p50_secs".into(), Json::Num(r.p50_secs)),
+                ("rows_per_sec".into(), Json::Num(r.rows_per_sec)),
+                ("mb_per_sec".into(), Json::Num(r.mb_per_sec)),
+            ])
+        })
+        .collect();
+    runs.push(Json::Obj(vec![
+        ("label".into(), Json::Str(label)),
+        ("dataset".into(), Json::Str(dataset.into())),
+        ("shard_rows".into(), Json::Num(shard_rows as f64)),
+        ("text_bytes".into(), Json::Num(svm_bytes as f64)),
+        ("rows".into(), Json::Arr(row_objs)),
+    ]));
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("data_io".into())),
+        (
+            "units".into(),
+            Json::Obj(vec![
+                ("p50_secs".into(), Json::Str("seconds, median of 5".into())),
+                ("rows_per_sec".into(), Json::Str("dataset rows per second".into())),
+                ("mb_per_sec".into(), Json::Str("decimal MB per second".into())),
+            ]),
+        ),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    std::fs::write(path, doc.to_pretty())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(())
+}

@@ -109,6 +109,10 @@ pub struct ExpConfig {
     /// Synthetic preset name, or a LIBSVM path when `data_path` is set.
     pub dataset: String,
     pub data_path: Option<String>,
+    /// Shard-store directory (`store::pack` output). Mutually exclusive
+    /// with `data_path`; when set, the dataset loads from packed shards
+    /// and multi-node engines partition on shard boundaries.
+    pub store_path: Option<String>,
     pub seed: u64,
 
     // Problem
@@ -168,6 +172,7 @@ impl Default for ExpConfig {
         Self {
             dataset: "tiny".into(),
             data_path: None,
+            store_path: None,
             seed: 42,
             loss: LossKind::Hinge,
             lambda: 1e-4,
@@ -207,6 +212,11 @@ impl ExpConfig {
 
     /// Enforce parameter constraints.
     pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !(self.data_path.is_some() && self.store_path.is_some()),
+            "data_path and store_path are mutually exclusive (a LIBSVM file vs a \
+             packed shard store)"
+        );
         anyhow::ensure!(self.lambda > 0.0, "lambda must be > 0 (got {})", self.lambda);
         anyhow::ensure!(self.k_nodes >= 1, "k_nodes must be ≥ 1");
         anyhow::ensure!(self.r_cores >= 1, "r_cores must be ≥ 1");
@@ -285,6 +295,7 @@ impl ExpConfig {
         match dotted {
             "dataset" | "data.dataset" => self.dataset = need_str()?.to_string(),
             "data.path" | "data_path" => self.data_path = Some(need_str()?.to_string()),
+            "data.store" | "store_path" => self.store_path = Some(need_str()?.to_string()),
             "seed" | "data.seed" => {
                 self.seed = val
                     .as_int()
@@ -509,6 +520,19 @@ cost_per_nnz = 1e-7
         let mut cfg = ExpConfig::default();
         cfg.apply_document(&doc).unwrap();
         assert_eq!(cfg.delta_threshold, 0.25);
+    }
+
+    #[test]
+    fn store_path_parsed_and_exclusive() {
+        let doc = toml::parse("[data]\nstore = \"tiny_store\"\n").unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        assert_eq!(cfg.store_path.as_deref(), Some("tiny_store"));
+        cfg.validate().unwrap();
+        // A LIBSVM path and a shard store at once is ambiguous.
+        cfg.data_path = Some("x.svm".into());
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 
     #[test]

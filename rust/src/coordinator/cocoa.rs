@@ -25,18 +25,20 @@ use super::RunReport;
 /// Run CoCoA+ with `cfg.k_nodes` nodes (1 core each — the paper's §6.1
 /// "CoCoA+ uses only 1 core per node").
 pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
-    run_obs(data, cfg, &ObserverHandle::silent())
+    run_obs(data, cfg, &ObserverHandle::silent(), None)
 }
 
-/// Engine entry point: run with the context's config and observer.
+/// Engine entry point: run with the context's config, observer, and
+/// (for store-backed data) shard spans.
 pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
-    run_obs(data, ctx.cfg, &ctx.observer)
+    run_obs(data, ctx.cfg, &ctx.observer, ctx.shards.clone())
 }
 
 fn run_obs(
     data: &Dataset,
     cfg: &ExpConfig,
     obs: &ObserverHandle<'_>,
+    shards: Option<Vec<(usize, usize)>>,
 ) -> anyhow::Result<RunReport> {
     let mut sync_cfg = cfg.clone();
     sync_cfg.r_cores = 1;
@@ -47,6 +49,7 @@ fn run_obs(
         label: "CoCoA+".into(),
         sync_allreduce: true,
         policy: MergePolicy::OldestFirst,
+        shards,
     };
     run_with_obs(data, &sync_cfg, &opts, obs)
 }
@@ -74,6 +77,7 @@ pub fn run_cores_as_nodes(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<Run
         label: format!("CoCoA+({} cores-as-nodes)", flat_cfg.k_nodes),
         sync_allreduce: true,
         policy: MergePolicy::OldestFirst,
+        shards: None,
     };
     run_with(data, &flat_cfg, &opts)
 }

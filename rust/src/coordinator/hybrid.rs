@@ -26,6 +26,13 @@ pub struct ProtocolOpts {
     pub sync_allreduce: bool,
     /// Merge-order policy (ablation).
     pub policy: MergePolicy,
+    /// Shard row spans when the data came from a packed store: the
+    /// node partition is built with
+    /// [`Partition::from_shards`](crate::data::Partition::from_shards)
+    /// (node `k` owns whole shards in disk order, `cfg.partition` is
+    /// not consulted and the seed stream is untouched) instead of
+    /// [`Partition::build`].
+    pub shards: Option<Vec<(usize, usize)>>,
 }
 
 impl Default for ProtocolOpts {
@@ -34,6 +41,7 @@ impl Default for ProtocolOpts {
             label: "Hybrid-DCA".into(),
             sync_allreduce: false,
             policy: MergePolicy::OldestFirst,
+            shards: None,
         }
     }
 }
@@ -45,9 +53,14 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
     run_with(data, cfg, &opts)
 }
 
-/// Engine entry point: run with the context's config and observer.
+/// Engine entry point: run with the context's config, observer, and
+/// (for store-backed data) shard spans.
 pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
-    let opts = ProtocolOpts { policy: ctx.cfg.merge_policy, ..ProtocolOpts::default() };
+    let opts = ProtocolOpts {
+        policy: ctx.cfg.merge_policy,
+        shards: ctx.shards.clone(),
+        ..ProtocolOpts::default()
+    };
     run_with_obs(data, ctx.cfg, &opts, &ctx.observer)
 }
 
@@ -72,7 +85,27 @@ pub fn run_with_obs(
     let loss = cfg.loss.build();
     let k = cfg.k_nodes;
     let mut rng = Rng::new(cfg.seed);
-    let partition = Partition::build(data.n(), k, cfg.r_cores, cfg.partition, &mut rng);
+    // Store-backed data partitions on shard boundaries (I_k = node k's
+    // packed shards, in disk order — no rng consumed, matching what a
+    // Contiguous build leaves in the stream); in-memory data is sliced
+    // by the configured strategy. Spans come from the caller when the
+    // session already opened the store, else from `cfg.store_path`'s
+    // manifest — so every entry point (typed session, deprecated shim,
+    // harness) partitions a store-backed config identically.
+    let spans = match &opts.shards {
+        Some(s) => Some(s.clone()),
+        None => cfg
+            .store_path
+            .as_deref()
+            .map(|dir| {
+                crate::store::Manifest::load(std::path::Path::new(dir)).map(|m| m.spans())
+            })
+            .transpose()?,
+    };
+    let partition = match &spans {
+        Some(spans) => Partition::from_shards(data.n(), spans, k, cfg.r_cores)?,
+        None => Partition::build(data.n(), k, cfg.r_cores, cfg.partition, &mut rng),
+    };
     partition.validate(data.n()).expect("partition invariant");
 
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);

@@ -69,6 +69,19 @@ impl<'a> SparseRow<'a> {
     }
 }
 
+/// Sort row entries by feature index and reject duplicates — the row
+/// normalization shared by [`CsrBuilder::push_row`] and the shard
+/// packer's dim-deferred accumulator (`store::pack`). Both callers
+/// read the max index from the sorted tail *before* dropping explicit
+/// zeros, so the two ingestion paths stay bit-for-bit in lockstep.
+pub fn sort_row_entries(mut entries: Vec<(u32, f64)>) -> anyhow::Result<Vec<(u32, f64)>> {
+    entries.sort_unstable_by_key(|e| e.0);
+    for w in entries.windows(2) {
+        anyhow::ensure!(w[0].0 != w[1].0, "duplicate feature index {} in row", w[0].0);
+    }
+    Ok(entries)
+}
+
 /// Builder collecting rows incrementally.
 #[derive(Debug, Default)]
 pub struct CsrBuilder {
@@ -85,11 +98,8 @@ impl CsrBuilder {
 
     /// Push one row given (index, value) pairs; pairs are sorted and
     /// duplicate indices are rejected.
-    pub fn push_row(&mut self, mut entries: Vec<(u32, f64)>) -> anyhow::Result<()> {
-        entries.sort_unstable_by_key(|e| e.0);
-        for w in entries.windows(2) {
-            anyhow::ensure!(w[0].0 != w[1].0, "duplicate feature index {} in row", w[0].0);
-        }
+    pub fn push_row(&mut self, entries: Vec<(u32, f64)>) -> anyhow::Result<()> {
+        let entries = sort_row_entries(entries)?;
         if let Some(&(max_idx, _)) = entries.last() {
             anyhow::ensure!(
                 (max_idx as usize) < self.dim,

@@ -12,46 +12,115 @@ use std::path::Path;
 use super::csr::{CsrBuilder, CsrMatrix};
 use super::dataset::Dataset;
 
-/// Parse LIBSVM text from a reader. Labels are mapped to ±1: values
-/// `> 0` → +1, `<= 0` → −1 (matching LIBLINEAR's binary handling of
-/// {0,1} and {−1,+1} labelings).
-pub fn read<R: BufRead>(reader: R, min_dim: usize) -> anyhow::Result<Dataset> {
-    let mut rows: Vec<(f64, Vec<(u32, f64)>)> = Vec::new();
-    let mut max_idx = 0u32;
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
+/// One parsed LIBSVM line: the raw label (not yet mapped to ±1) plus
+/// 0-based `(index, value)` entries in file order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedRow {
+    pub label: f64,
+    pub entries: Vec<(u32, f64)>,
+}
+
+/// Streaming row iterator over LIBSVM text — the shared parsing core
+/// behind both [`read`] (buffer everything, build one CSR) and
+/// [`crate::store::pack`] (constant-memory shard conversion). Yields
+/// one `Result<ParsedRow>` per data line; comments and blank lines are
+/// skipped. Errors carry 1-based line numbers.
+pub struct RowIter<R: BufRead> {
+    lines: std::io::Lines<R>,
+    lineno: usize,
+}
+
+/// Iterate parsed rows of a LIBSVM reader without materializing the
+/// dataset.
+pub fn rows<R: BufRead>(reader: R) -> RowIter<R> {
+    RowIter { lines: reader.lines(), lineno: 0 }
+}
+
+impl<R: BufRead> Iterator for RowIter<R> {
+    type Item = anyhow::Result<ParsedRow>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            let line = match self.lines.next()? {
+                Ok(l) => l,
+                Err(e) => return Some(Err(e.into())),
+            };
+            self.lineno += 1;
+            match parse_line(&line, self.lineno) {
+                Ok(Some(row)) => return Some(Ok(row)),
+                Ok(None) => continue, // comment / blank
+                Err(e) => return Some(Err(e)),
+            }
         }
-        let mut parts = line.split_ascii_whitespace();
-        let label_tok = parts.next().unwrap();
-        let label: f64 = label_tok
+    }
+}
+
+/// Parse one LIBSVM line (`lineno` is 1-based, for error messages).
+/// Returns `None` for blank/comment lines. Non-finite labels and
+/// values (`inf`, `NaN` — which `f64::parse` happily accepts) are
+/// rejected: they would silently poison every downstream objective.
+fn parse_line(raw: &str, lineno: usize) -> anyhow::Result<Option<ParsedRow>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label_tok = parts.next().expect("non-empty line has a first token");
+    let label: f64 = label_tok
+        .parse()
+        .map_err(|e| anyhow::anyhow!("line {lineno}: bad label '{label_tok}': {e}"))?;
+    anyhow::ensure!(label.is_finite(), "line {lineno}: non-finite label '{label_tok}'");
+    let mut entries = Vec::new();
+    for tok in parts {
+        let (idx_s, val_s) = tok
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("line {lineno}: bad pair '{tok}'"))?;
+        let idx: u32 = idx_s
             .parse()
-            .map_err(|e| anyhow::anyhow!("line {}: bad label '{label_tok}': {e}", lineno + 1))?;
-        let mut entries = Vec::new();
-        for tok in parts {
-            let (idx_s, val_s) = tok
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("line {}: bad pair '{tok}'", lineno + 1))?;
-            let idx: u32 = idx_s
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad index '{idx_s}': {e}", lineno + 1))?;
-            anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
-            let val: f64 = val_s
-                .parse()
-                .map_err(|e| anyhow::anyhow!("line {}: bad value '{val_s}': {e}", lineno + 1))?;
-            max_idx = max_idx.max(idx);
-            entries.push((idx - 1, val));
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad index '{idx_s}': {e}"))?;
+        anyhow::ensure!(idx >= 1, "line {lineno}: LIBSVM indices are 1-based");
+        let val: f64 = val_s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad value '{val_s}': {e}"))?;
+        anyhow::ensure!(
+            val.is_finite(),
+            "line {lineno}: non-finite value '{val_s}' at index {idx}"
+        );
+        entries.push((idx - 1, val));
+    }
+    Ok(Some(ParsedRow { label, entries }))
+}
+
+/// Map a raw LIBSVM label to ±1: values `> 0` → +1, `<= 0` → −1
+/// (matching LIBLINEAR's binary handling of {0,1} and {−1,+1}
+/// labelings).
+#[inline]
+pub fn map_label(label: f64) -> f64 {
+    if label > 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Parse LIBSVM text from a reader into one in-memory dataset. Labels
+/// are mapped to ±1 via [`map_label`].
+pub fn read<R: BufRead>(reader: R, min_dim: usize) -> anyhow::Result<Dataset> {
+    let mut parsed: Vec<ParsedRow> = Vec::new();
+    let mut max_idx = 0u32;
+    for row in rows(reader) {
+        let row = row?;
+        if let Some(&(idx, _)) = row.entries.iter().max_by_key(|e| e.0) {
+            max_idx = max_idx.max(idx + 1);
         }
-        rows.push((label, entries));
+        parsed.push(row);
     }
     let dim = (max_idx as usize).max(min_dim);
     let mut b = CsrBuilder::new(dim.max(1));
-    let mut labels = Vec::with_capacity(rows.len());
-    for (label, entries) in rows {
-        labels.push(if label > 0.0 { 1.0 } else { -1.0 });
-        b.push_row(entries)?;
+    let mut labels = Vec::with_capacity(parsed.len());
+    for row in parsed {
+        labels.push(map_label(row.label));
+        b.push_row(row.entries)?;
     }
     Ok(Dataset::new(b.finish(), labels))
 }
@@ -134,6 +203,36 @@ mod tests {
         assert!(read(std::io::Cursor::new("+1 0:1\n"), 0).is_err()); // 0-based
         assert!(read(std::io::Cursor::new("+1 1\n"), 0).is_err());
         assert!(read(std::io::Cursor::new("+1 1:x\n"), 0).is_err());
+    }
+
+    #[test]
+    fn non_finite_rejected_with_line_numbers() {
+        // f64::parse accepts these spellings; the reader must not.
+        for bad in ["inf 1:1\n", "-inf 1:1\n", "nan 1:1\n", "NaN 1:1\n"] {
+            let err = read(std::io::Cursor::new(bad), 0).unwrap_err();
+            assert!(err.to_string().contains("line 1"), "{bad:?}: {err}");
+            assert!(err.to_string().contains("non-finite label"), "{bad:?}: {err}");
+        }
+        for bad in ["+1 1:inf\n", "+1 1:nan\n", "-1 2:-inf\n"] {
+            let err = read(std::io::Cursor::new(bad), 0).unwrap_err();
+            assert!(err.to_string().contains("non-finite value"), "{bad:?}: {err}");
+        }
+        // The line number points at the offending line, not the count
+        // of data rows seen so far.
+        let text = "# header\n+1 1:1\n\n+1 2:nan\n";
+        let err = read(std::io::Cursor::new(text), 0).unwrap_err();
+        assert!(err.to_string().contains("line 4"), "{err}");
+    }
+
+    #[test]
+    fn row_iter_streams_without_building() {
+        let text = "# c\n+1 1:0.5 3:2\n\n-1 2:1\n";
+        let parsed: Vec<ParsedRow> =
+            rows(std::io::Cursor::new(text)).collect::<anyhow::Result<_>>().unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].label, 1.0);
+        assert_eq!(parsed[0].entries, vec![(0, 0.5), (2, 2.0)]);
+        assert_eq!(parsed[1].label, -1.0);
     }
 
     #[test]

@@ -30,6 +30,15 @@ impl Strategy {
             _ => None,
         }
     }
+
+    /// Canonical lowercase name; `Strategy::parse(s.name()) == Some(s)`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Contiguous => "contiguous",
+            Strategy::Striped => "striped",
+            Strategy::Shuffled => "shuffled",
+        }
+    }
 }
 
 /// A two-level partition: `parts[k][r]` = global row indices owned by
@@ -81,6 +90,111 @@ impl Partition {
             .map(|chunk| split_even(&chunk, r_cores).into_iter().collect())
             .collect();
         Partition { parts }
+    }
+
+    /// Build a shard-aware partition: node cuts are placed on shard
+    /// boundaries so every node owns whole shards, in disk order — the
+    /// out-of-core contract that `I_k` never leaves the order its
+    /// shards were packed in (paper §3's pre-partitioned node-local
+    /// blocks, as Hydra and distributed mini-batch SDCA assume).
+    ///
+    /// `spans` are the store's `[start, end)` global row ranges, which
+    /// must tile `0..n` contiguously. Each of the `K − 1` interior cut
+    /// points is the shard boundary nearest the ideal even cut that
+    /// still leaves every node at least `r_cores` rows; if no boundary
+    /// qualifies (shards too coarse for K), this errors with repack
+    /// advice instead of silently splitting a shard. Within a node the
+    /// contiguous row range is split evenly across cores, exactly like
+    /// [`Partition::build`] with [`Strategy::Contiguous`].
+    pub fn from_shards(
+        n: usize,
+        spans: &[(usize, usize)],
+        k_nodes: usize,
+        r_cores: usize,
+    ) -> anyhow::Result<Partition> {
+        anyhow::ensure!(k_nodes > 0 && r_cores > 0, "need K ≥ 1 and R ≥ 1");
+        anyhow::ensure!(!spans.is_empty(), "shard store has no shards");
+        let mut expect = 0usize;
+        for &(s, e) in spans {
+            anyhow::ensure!(
+                s == expect && e > s,
+                "shard spans must tile 0..{n} contiguously (got [{s}, {e}) where \
+                 start {expect} was expected)"
+            );
+            expect = e;
+        }
+        anyhow::ensure!(
+            expect == n,
+            "shard spans cover {expect} rows but the dataset has {n}"
+        );
+        anyhow::ensure!(
+            n >= k_nodes * r_cores,
+            "need at least one row per core: n={n}, K*R={}",
+            k_nodes * r_cores
+        );
+
+        let cut_candidates: Vec<usize> = spans.iter().map(|&(_, e)| e).collect();
+        // Feasibility oracle: the most ≥R-row nodes the shard suffix
+        // starting at row `from` can still form (whole shards, disk
+        // order). Greedy-from-the-left maximizes the count, and any
+        // smaller count is reachable by merging adjacent groups — so a
+        // cut at `b` is viable for step j iff max_groups(b) ≥ K − j.
+        // Checking this per candidate (instead of a row-count window
+        // alone) guarantees the construction never refuses a span set
+        // that has a valid shard-aligned partition.
+        let max_groups = |from: usize| -> usize {
+            let mut groups = 0usize;
+            let mut acc = 0usize;
+            for &(s, e) in spans {
+                if s < from {
+                    continue;
+                }
+                acc += e - s;
+                if acc >= r_cores {
+                    groups += 1;
+                    acc = 0;
+                }
+            }
+            groups
+        };
+        anyhow::ensure!(
+            max_groups(0) >= k_nodes,
+            "{} shards over {n} rows cannot form {k_nodes} nodes of ≥ {r_cores} rows \
+             on shard boundaries; repack with smaller shards, e.g. --shard-rows {}",
+            spans.len(),
+            (n / (k_nodes * 2)).max(1)
+        );
+        let mut node_bounds = vec![0usize; k_nodes + 1];
+        node_bounds[k_nodes] = n;
+        for j in 1..k_nodes {
+            let prev = node_bounds[j - 1];
+            // This node keeps ≥ R rows …
+            let lo = prev + r_cores;
+            let ideal = ((n as f64) * (j as f64) / (k_nodes as f64)).round() as i64;
+            let best = cut_candidates
+                .iter()
+                .copied()
+                // … and the suffix can still seat the remaining nodes.
+                .filter(|&b| b >= lo && max_groups(b) >= k_nodes - j)
+                .min_by_key(|&b| (b as i64 - ideal).abs());
+            node_bounds[j] = best.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no viable shard boundary to cut node {j} of {k_nodes} \
+                     ({} shards over {n} rows); repack with smaller shards",
+                    spans.len()
+                )
+            })?;
+        }
+
+        let parts = (0..k_nodes)
+            .map(|j| {
+                let rows: Vec<usize> = (node_bounds[j]..node_bounds[j + 1]).collect();
+                split_even(&rows, r_cores)
+            })
+            .collect();
+        let p = Partition { parts };
+        p.validate(n).expect("shard-aligned construction covers 0..n");
+        Ok(p)
     }
 
     pub fn k_nodes(&self) -> usize {
@@ -204,5 +318,79 @@ mod tests {
         assert_eq!(Strategy::parse("striped"), Some(Strategy::Striped));
         assert_eq!(Strategy::parse("SHUFFLED"), Some(Strategy::Shuffled));
         assert_eq!(Strategy::parse("x"), None);
+    }
+
+    #[test]
+    fn strategy_names_roundtrip() {
+        for s in [Strategy::Contiguous, Strategy::Striped, Strategy::Shuffled] {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+    }
+
+    fn uniform_spans(n: usize, step: usize) -> Vec<(usize, usize)> {
+        (0..n).step_by(step).map(|s| (s, (s + step).min(n))).collect()
+    }
+
+    #[test]
+    fn from_shards_even_boundaries_match_contiguous_build() {
+        // 4 shards of 50, K = 2, R = 1: the snapped cut is exactly the
+        // even cut, so the partition equals a Contiguous build.
+        let spans = uniform_spans(200, 50);
+        let sharded = Partition::from_shards(200, &spans, 2, 1).unwrap();
+        let mut rng = Rng::new(0);
+        let contiguous = Partition::build(200, 2, 1, Strategy::Contiguous, &mut rng);
+        assert_eq!(sharded, contiguous);
+    }
+
+    #[test]
+    fn from_shards_cuts_on_shard_boundaries() {
+        // Uneven shards: every node boundary must coincide with one.
+        let spans = vec![(0, 30), (30, 90), (90, 110), (110, 200)];
+        let p = Partition::from_shards(200, &spans, 3, 2).unwrap();
+        p.validate(200).unwrap();
+        let ends: Vec<usize> = spans.iter().map(|&(_, e)| e).collect();
+        for k in 0..p.k_nodes() {
+            let node = p.node_indices(k);
+            // Contiguous ascending disk order inside each node.
+            for w in node.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "node {k} left disk order");
+            }
+            let hi = node.last().unwrap() + 1;
+            assert!(
+                hi == 200 || ends.contains(&hi),
+                "node {k} ends at {hi}, not a shard boundary"
+            );
+        }
+    }
+
+    #[test]
+    fn from_shards_succeeds_when_only_a_non_greedy_cut_works() {
+        // Nearest-to-ideal alone would pick 34 for the first cut
+        // (ideal 33), stranding the second cut with no boundary in its
+        // window; the feasibility filter must steer to 31 and 63.
+        let spans = vec![(0, 31), (31, 34), (34, 63), (63, 100)];
+        let p = Partition::from_shards(100, &spans, 3, 30).unwrap();
+        p.validate(100).unwrap();
+        let sizes: Vec<usize> = (0..3).map(|k| p.node_indices(k).len()).collect();
+        assert_eq!(sizes, vec![31, 32, 37]);
+    }
+
+    #[test]
+    fn from_shards_too_coarse_errors_with_repack_advice() {
+        // One giant shard cannot be cut for K = 2.
+        let err = Partition::from_shards(100, &[(0, 100)], 2, 1).unwrap_err();
+        assert!(err.to_string().contains("repack"), "{err}");
+    }
+
+    #[test]
+    fn from_shards_rejects_bad_spans() {
+        // Gap.
+        assert!(Partition::from_shards(100, &[(0, 40), (50, 100)], 2, 1).is_err());
+        // Wrong total.
+        assert!(Partition::from_shards(100, &[(0, 40), (40, 90)], 2, 1).is_err());
+        // Empty span.
+        assert!(Partition::from_shards(100, &[(0, 0), (0, 100)], 1, 1).is_err());
+        // Too few rows for K*R.
+        assert!(Partition::from_shards(4, &[(0, 2), (2, 4)], 2, 4).is_err());
     }
 }

@@ -35,9 +35,15 @@ impl QuickFull {
     }
 }
 
-/// Resolve a dataset from a config: LIBSVM file if `data_path` is set,
-/// otherwise the named synthetic preset.
+/// Resolve a dataset from a config: a packed shard store if
+/// `store_path` is set (materialized flat — use
+/// [`crate::session::Session::load_source`] to keep shard structure),
+/// a LIBSVM file if `data_path` is set, otherwise the named synthetic
+/// preset.
 pub fn load_dataset(cfg: &ExpConfig) -> anyhow::Result<Dataset> {
+    if let Some(dir) = &cfg.store_path {
+        return crate::store::open(dir)?.materialize();
+    }
     if let Some(path) = &cfg.data_path {
         return crate::data::libsvm::read_file(path, 0);
     }

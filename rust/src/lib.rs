@@ -56,6 +56,7 @@ pub mod runtime;
 pub mod session;
 pub mod sim;
 pub mod solver;
+pub mod store;
 pub mod util;
 
 /// Most-used items in one import.
@@ -67,8 +68,9 @@ pub mod prelude {
     pub use crate::loss::{Hinge, Logistic, Loss, LossKind, SquaredHinge};
     pub use crate::metrics::{objectives, Objectives, Trace, TracePoint};
     pub use crate::session::{
-        EvalEvent, Observer, ObserverHandle, RoundEvent, RunCtx, Session, SessionBuilder,
-        SolverEngine,
+        DataSource, EvalEvent, Observer, ObserverHandle, RoundEvent, RunCtx, Session,
+        SessionBuilder, SolverEngine,
     };
+    pub use crate::store::ShardedDataset;
     pub use crate::util::Rng;
 }

@@ -4,6 +4,8 @@
 //!
 //! * `train`     — run one algorithm on a dataset, print the trace.
 //! * `gen-data`  — write a synthetic preset as a LIBSVM file.
+//! * `data`      — shard store: `pack` LIBSVM text into binary CSR
+//!   shards, `inspect` a packed store.
 //! * `stats`     — dataset statistics (Table 1 columns).
 //! * `bench`     — regenerate a paper table/figure (table1, fig3…fig7).
 //! * `artifacts` — list/verify the AOT artifacts.
@@ -38,6 +40,7 @@ fn real_main(argv: &[String]) -> anyhow::Result<()> {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "gen-data" => cmd_gen_data(rest),
+        "data" => cmd_data(rest),
         "stats" => cmd_stats(rest),
         "bench" => cmd_bench(rest),
         "artifacts" => cmd_artifacts(rest),
@@ -55,6 +58,7 @@ fn print_usage() {
          Subcommands:\n\
          \x20 train      run one solver (Baseline | CoCoA+ | PassCoDe | Hybrid-DCA)\n\
          \x20 gen-data   write a synthetic preset as a LIBSVM file\n\
+         \x20 data       shard store: pack LIBSVM → binary CSR shards, inspect a store\n\
          \x20 stats      dataset statistics (Table 1)\n\
          \x20 bench      regenerate a paper table/figure (table1, fig3..fig7)\n\
          \x20 artifacts  list/verify the AOT artifacts\n\n\
@@ -72,6 +76,7 @@ fn train_specs() -> Vec<FlagSpec> {
             "preset name (tiny|rcv1-s|webspam-s|kddb-s|splicesite-s)",
         ),
         FlagSpec::value("data", "", "LIBSVM file path (overrides --dataset)"),
+        FlagSpec::value("store", "", "shard-store directory (see 'data pack'; overrides --data)"),
         FlagSpec::value("loss", "hinge", "hinge|squared_hinge|logistic"),
         FlagSpec::value("lambda", "1e-4", "regularization λ"),
         FlagSpec::value("nodes", "4", "worker nodes K"),
@@ -107,8 +112,16 @@ fn parse_train_cfg(args: &cli::Args) -> anyhow::Result<(Algorithm, ExpConfig)> {
     let mut cfg = ExpConfig::default();
     cfg.dataset = args.get("dataset").unwrap().to_string();
     let data = args.get("data").unwrap();
+    let store = args.get("store").unwrap();
+    anyhow::ensure!(
+        data.is_empty() || store.is_empty(),
+        "--data and --store are mutually exclusive"
+    );
     if !data.is_empty() {
         cfg.data_path = Some(data.to_string());
+    }
+    if !store.is_empty() {
+        cfg.store_path = Some(store.to_string());
     }
     cfg.loss = LossKind::parse(args.get("loss").unwrap())
         .ok_or_else(|| anyhow::anyhow!("unknown --loss"))?;
@@ -151,11 +164,20 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     // only the CLI-flag surface.
     let session = Session::from_exp_config(&cfg)?;
     let engine_name = session::canonical_name(algo);
-    let data = harness::load_dataset(&cfg)?;
+    // A shard store keeps its spans so multi-node engines partition on
+    // shard boundaries; presets/files load flat.
+    let source = session.load_source()?;
+    let spans = source.shard_spans();
+    let data = source.into_dataset()?;
+    let sharded_note = match &spans {
+        Some(s) => format!(" [{} shards]", s.len()),
+        None => String::new(),
+    };
     println!(
-        "# {} on {} (n={}, d={}, nnz={}) λ={} K={} R={} S={} Γ={} H={}",
+        "# {} on {}{} (n={}, d={}, nnz={}) λ={} K={} R={} S={} Γ={} H={}",
         algo.name(),
         data.name,
+        sharded_note,
         data.n(),
         data.d(),
         data.x.nnz(),
@@ -171,7 +193,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let csv = args.get("csv").unwrap().to_string();
     let report = if csv.is_empty() {
         let mut obs = PrintObserver::new();
-        session.run_observed(engine_name, &data, &mut obs)?
+        session.run_with_shards(engine_name, &data, spans, &mut obs)?
     } else {
         let file = std::io::BufWriter::new(
             std::fs::File::create(&csv)
@@ -185,7 +207,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
             algo.name()
         };
         let mut obs = Chain(PrintObserver::new(), CsvStreamObserver::new(file, label)?);
-        let report = session.run_observed(engine_name, &data, &mut obs)?;
+        let report = session.run_with_shards(engine_name, &data, spans, &mut obs)?;
         if let Some(e) = obs.1.error.take() {
             anyhow::bail!("writing trace CSV {csv}: {e}");
         }
@@ -221,6 +243,153 @@ fn cmd_gen_data(argv: &[String]) -> anyhow::Result<()> {
     let out = args.get("out").unwrap();
     libsvm::write_file(out, &ds)?;
     println!("wrote {} ({} rows, {} nnz)", out, ds.n(), ds.x.nnz());
+    Ok(())
+}
+
+fn cmd_data(argv: &[String]) -> anyhow::Result<()> {
+    let usage = "data — shard store tools\n\nSubcommands:\n\
+                 \x20 pack     LIBSVM text (or a preset) → binary CSR shards + manifest\n\
+                 \x20 inspect  print a store's manifest; --verify decodes every shard\n\n\
+                 Use 'data <subcommand> --help' for flags.";
+    let Some(sub) = argv.first() else {
+        println!("{usage}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "pack" => cmd_data_pack(rest),
+        "inspect" => cmd_data_inspect(rest),
+        "help" | "--help" | "-h" => {
+            println!("{usage}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown data subcommand '{other}' (try 'data help')"),
+    }
+}
+
+fn cmd_data_pack(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::value("in", "", "input LIBSVM file (streamed, constant memory)"),
+        FlagSpec::value("preset", "", "synthetic preset instead of --in"),
+        FlagSpec::required("out", "output store directory"),
+        FlagSpec::value("shard-rows", "4096", "rows per shard (0 = no row budget)"),
+        FlagSpec::value("shard-bytes", "0", "encoded bytes per shard (0 = no byte budget)"),
+        FlagSpec::value("align", "1", "cut shards only at row multiples of this (use K*R)"),
+        FlagSpec::value("name", "", "dataset name in the manifest (default: input stem)"),
+        FlagSpec::value("seed", "42", "RNG seed (preset generation / --shuffle order)"),
+        FlagSpec::switch("shuffle", "permute rows at pack time (presets only)"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("data pack", "pack LIBSVM text into CSR shards", &specs));
+        return Ok(());
+    }
+    let input = args.get("in").unwrap();
+    let preset_name = args.get("preset").unwrap();
+    anyhow::ensure!(
+        input.is_empty() != preset_name.is_empty(),
+        "exactly one of --in or --preset is required"
+    );
+    let seed: u64 = args.get_parse("seed")?;
+    let out = std::path::PathBuf::from(args.get("out").unwrap());
+    let mut opts = hybrid_dca::store::PackOptions {
+        shard_rows: args.get_parse("shard-rows")?,
+        shard_bytes: args.get_parse("shard-bytes")?,
+        align: args.get_parse::<usize>("align")?.max(1),
+        seed,
+        ..Default::default()
+    };
+    anyhow::ensure!(
+        opts.shard_rows > 0 || opts.shard_bytes > 0,
+        "set --shard-rows and/or --shard-bytes (both 0 would make one giant shard)"
+    );
+    let named = args.get("name").unwrap();
+    let (manifest, report) = if !input.is_empty() {
+        anyhow::ensure!(
+            !args.flag("shuffle"),
+            "--shuffle needs the rows in memory; a streaming pack keeps file order \
+             (pack a --preset, or pre-shuffle the text)"
+        );
+        opts.name = if named.is_empty() {
+            std::path::Path::new(input)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "dataset".into())
+        } else {
+            named.to_string()
+        };
+        hybrid_dca::store::pack_file(std::path::Path::new(input), &out, &opts)?
+    } else {
+        let preset = Preset::parse(preset_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown preset '{preset_name}'"))?;
+        let ds = harness::gen_preset(preset, seed);
+        opts.name = if named.is_empty() { ds.name.clone() } else { named.to_string() };
+        let strategy = if args.flag("shuffle") {
+            Strategy::Shuffled
+        } else {
+            Strategy::Contiguous
+        };
+        hybrid_dca::store::pack_dataset(&ds, &out, &opts, strategy)?
+    };
+    println!(
+        "packed {} → {}: {} shards, {} rows, {} nnz, {} bytes (peak buffer {} rows)",
+        manifest.name,
+        out.display(),
+        report.shards,
+        report.rows,
+        report.nnz,
+        report.bytes_written,
+        report.peak_buffered_rows
+    );
+    println!("# manifest at {}", hybrid_dca::store::Manifest::path_in(&out).display());
+    Ok(())
+}
+
+fn cmd_data_inspect(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::required("store", "store directory to inspect"),
+        FlagSpec::switch("verify", "decode every shard (CRC + CSR + label checks)"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("data inspect", "print a store's manifest", &specs));
+        return Ok(());
+    }
+    let store = hybrid_dca::store::open(args.get("store").unwrap())?;
+    let m = store.manifest();
+    println!(
+        "store {} — n={} d={} nnz={} order={} seed={} ({} shards)",
+        store.dir().display(),
+        m.n,
+        m.d,
+        m.nnz,
+        m.strategy.name(),
+        m.seed,
+        m.shards.len()
+    );
+    println!(
+        "{:<6} {:<18} {:>12} {:>10} {:>10} {:>9} {:>8} {:>10}",
+        "shard", "file", "rows", "nnz", "bytes", "density", "nnz/row", "crc32"
+    );
+    for (i, s) in m.shards.iter().enumerate() {
+        println!(
+            "{:<6} {:<18} {:>12} {:>10} {:>10} {:>9.5} {:>8.1} {:>10}",
+            i,
+            s.path,
+            format!("[{},{})", s.row_start, s.row_end),
+            s.nnz,
+            s.bytes,
+            s.stats.density,
+            s.stats.nnz_per_row_mean,
+            format!("{:08x}", s.crc32)
+        );
+    }
+    if args.flag("verify") {
+        store.verify()?;
+        println!("verify: all {} shards decode clean (CRC + CSR + labels)", m.shards.len());
+    }
     Ok(())
 }
 

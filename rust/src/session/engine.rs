@@ -25,16 +25,29 @@ use super::observer::{Observer, ObserverHandle};
 pub struct RunCtx<'a> {
     pub cfg: &'a ExpConfig,
     pub observer: ObserverHandle<'a>,
+    /// Shard row spans (`[start, end)` tiling `0..n` in disk order)
+    /// when the dataset came from a packed store. Multi-node engines
+    /// partition on these boundaries (node `k` owns whole shards via
+    /// [`Partition::from_shards`](crate::data::Partition::from_shards))
+    /// instead of re-slicing `0..n` themselves; `None` means in-memory
+    /// data and the configured [`Strategy`](crate::data::Strategy).
+    pub shards: Option<Vec<(usize, usize)>>,
 }
 
 impl<'a> RunCtx<'a> {
     pub fn new(cfg: &'a ExpConfig, obs: &'a mut dyn Observer) -> Self {
-        Self { cfg, observer: ObserverHandle::new(obs) }
+        Self { cfg, observer: ObserverHandle::new(obs), shards: None }
     }
 
     /// A context that observes nothing (the deprecated-shim path).
     pub fn silent(cfg: &'a ExpConfig) -> Self {
-        Self { cfg, observer: ObserverHandle::silent() }
+        Self { cfg, observer: ObserverHandle::silent(), shards: None }
+    }
+
+    /// Attach shard spans from a [`ShardedDataset`](crate::store::ShardedDataset).
+    pub fn with_shards(mut self, spans: Vec<(usize, usize)>) -> Self {
+        self.shards = Some(spans);
+        self
     }
 }
 

@@ -50,15 +50,86 @@ use crate::coordinator::RunReport;
 use crate::data::{Dataset, Strategy};
 use crate::loss::LossKind;
 
-/// Which data the session runs on (preset name or LIBSVM path) and the
-/// root RNG seed.
+/// Which data the session runs on (preset name, LIBSVM path, or a
+/// packed shard store) and the root RNG seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataSpec {
-    /// Synthetic preset name; ignored when `path` is set.
+    /// Synthetic preset name; ignored when `path` or `store` is set.
     pub dataset: String,
     /// LIBSVM file path (overrides `dataset`).
     pub path: Option<String>,
+    /// Shard-store directory (`store::pack` output; overrides both).
+    pub store: Option<String>,
     pub seed: u64,
+}
+
+/// Where a session's dataset physically lives — the seam between
+/// in-memory workloads (presets, LIBSVM files read whole) and the
+/// out-of-core shard store. Multi-node engines partition a sharded
+/// source on its shard boundaries, so node `k` trains on its own
+/// packed shards in disk order.
+#[derive(Debug, Clone)]
+pub enum DataSource {
+    InMemory(Dataset),
+    Sharded(crate::store::ShardedDataset),
+}
+
+impl DataSource {
+    /// Number of data points.
+    pub fn n(&self) -> usize {
+        match self {
+            DataSource::InMemory(ds) => ds.n(),
+            DataSource::Sharded(s) => s.n(),
+        }
+    }
+
+    /// Feature dimension.
+    pub fn d(&self) -> usize {
+        match self {
+            DataSource::InMemory(ds) => ds.d(),
+            DataSource::Sharded(s) => s.d(),
+        }
+    }
+
+    /// Total nonzeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            DataSource::InMemory(ds) => ds.x.nnz(),
+            DataSource::Sharded(s) => s.nnz(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            DataSource::InMemory(ds) => &ds.name,
+            DataSource::Sharded(s) => s.name(),
+        }
+    }
+
+    /// Shard row spans when sharded (the partition seam), else `None`.
+    pub fn shard_spans(&self) -> Option<Vec<(usize, usize)>> {
+        match self {
+            DataSource::InMemory(_) => None,
+            DataSource::Sharded(s) => Some(s.spans()),
+        }
+    }
+
+    /// A flat [`Dataset`] view: borrowed for in-memory sources,
+    /// materialized (all shards, disk order) for sharded ones.
+    pub fn as_dataset(&self) -> anyhow::Result<std::borrow::Cow<'_, Dataset>> {
+        match self {
+            DataSource::InMemory(ds) => Ok(std::borrow::Cow::Borrowed(ds)),
+            DataSource::Sharded(s) => Ok(std::borrow::Cow::Owned(s.materialize()?)),
+        }
+    }
+
+    /// Consume into a flat [`Dataset`].
+    pub fn into_dataset(self) -> anyhow::Result<Dataset> {
+        match self {
+            DataSource::InMemory(ds) => Ok(ds),
+            DataSource::Sharded(s) => s.materialize(),
+        }
+    }
 }
 
 /// The optimization problem: loss φ and regularization λ.
@@ -167,6 +238,9 @@ impl Session {
         if let Some(p) = &cfg.data_path {
             b = b.data_path(p);
         }
+        if let Some(s) = &cfg.store_path {
+            b = b.store_dir(s);
+        }
         b.build()
     }
 
@@ -177,6 +251,7 @@ impl Session {
         ExpConfig {
             dataset: self.data.dataset.clone(),
             data_path: self.data.path.clone(),
+            store_path: self.data.store.clone(),
             seed: self.data.seed,
             loss: self.problem.loss,
             lambda: self.problem.lambda,
@@ -220,9 +295,64 @@ impl Session {
         engine.run(data, &RunCtx::new(&cfg, obs))
     }
 
-    /// Resolve the session's dataset (preset or LIBSVM file).
+    /// Run with explicit shard spans (the CLI's `--store` path uses
+    /// this after materializing once): multi-node engines partition on
+    /// the spans instead of re-slicing `0..n`.
+    pub fn run_with_shards(
+        &self,
+        engine_name: &str,
+        data: &Dataset,
+        shards: Option<Vec<(usize, usize)>>,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<RunReport> {
+        let engine = engine::resolve(engine_name)?;
+        let cfg = self.to_exp_config();
+        let mut ctx = RunCtx::new(&cfg, obs);
+        if let Some(spans) = shards {
+            ctx = ctx.with_shards(spans);
+        }
+        engine.run(data, &ctx)
+    }
+
+    /// Run an engine against a [`DataSource`], silent. Sharded sources
+    /// carry their spans into the engine so the node partition follows
+    /// shard boundaries.
+    pub fn run_source(&self, engine_name: &str, source: &DataSource) -> anyhow::Result<RunReport> {
+        let engine = engine::resolve(engine_name)?;
+        let cfg = self.to_exp_config();
+        let data = source.as_dataset()?;
+        let mut ctx = RunCtx::silent(&cfg);
+        if let Some(spans) = source.shard_spans() {
+            ctx = ctx.with_shards(spans);
+        }
+        engine.run(&data, &ctx)
+    }
+
+    /// [`Self::run_source`] streaming progress to `obs`.
+    pub fn run_source_observed(
+        &self,
+        engine_name: &str,
+        source: &DataSource,
+        obs: &mut dyn Observer,
+    ) -> anyhow::Result<RunReport> {
+        let data = source.as_dataset()?;
+        self.run_with_shards(engine_name, &data, source.shard_spans(), obs)
+    }
+
+    /// Resolve the session's dataset (preset, LIBSVM file, or shard
+    /// store — the latter materialized flat; use [`Self::load_source`]
+    /// to keep the sharded structure).
     pub fn load_dataset(&self) -> anyhow::Result<Dataset> {
         crate::harness::load_dataset(&self.to_exp_config())
+    }
+
+    /// Resolve the session's data as a [`DataSource`]: a shard store
+    /// opens lazily (manifest only), everything else loads in memory.
+    pub fn load_source(&self) -> anyhow::Result<DataSource> {
+        if let Some(dir) = &self.data.store {
+            return Ok(DataSource::Sharded(crate::store::open(dir)?));
+        }
+        Ok(DataSource::InMemory(self.load_dataset()?))
     }
 }
 
@@ -247,7 +377,12 @@ impl Default for SessionBuilder {
     fn default() -> Self {
         let d = ExpConfig::default();
         Self {
-            data: DataSpec { dataset: d.dataset, path: d.data_path, seed: d.seed },
+            data: DataSpec {
+                dataset: d.dataset,
+                path: d.data_path,
+                store: d.store_path,
+                seed: d.seed,
+            },
             problem: ProblemSpec { loss: d.loss, lambda: d.lambda },
             cluster: ClusterShape {
                 k_nodes: d.k_nodes,
@@ -287,6 +422,13 @@ impl SessionBuilder {
 
     pub fn data_path(mut self, path: &str) -> Self {
         self.data.path = Some(path.to_string());
+        self
+    }
+
+    /// Train from a packed shard store (`store::pack` output) instead
+    /// of a preset or LIBSVM file.
+    pub fn store_dir(mut self, dir: &str) -> Self {
+        self.data.store = Some(dir.to_string());
         self
     }
 
@@ -447,6 +589,10 @@ impl SessionBuilder {
             barrier_explicit: _,
         } = self;
 
+        anyhow::ensure!(
+            !(data.path.is_some() && data.store.is_some()),
+            "DataSpec: a LIBSVM path and a shard store are mutually exclusive"
+        );
         anyhow::ensure!(
             problem.lambda > 0.0,
             "ProblemSpec: regularization λ must be > 0 (got {})",
@@ -665,6 +811,21 @@ mod tests {
         cfg.eval_every = 3;
         let session = Session::from_exp_config(&cfg).unwrap();
         assert_eq!(session.to_exp_config(), cfg);
+    }
+
+    #[test]
+    fn store_dir_round_trips_and_excludes_data_path() {
+        let s = Session::builder().store_dir("tiny_store").build().unwrap();
+        assert_eq!(s.data.store.as_deref(), Some("tiny_store"));
+        let cfg = s.to_exp_config();
+        assert_eq!(cfg.store_path.as_deref(), Some("tiny_store"));
+        assert_eq!(Session::from_exp_config(&cfg).unwrap(), s);
+        let err = Session::builder()
+            .data_path("x.svm")
+            .store_dir("y_store")
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,359 @@
+//! The store manifest: one JSON document (`manifest.json`, written and
+//! parsed by `util/json` — no serde) describing the whole sharded
+//! dataset: global dims, the pack-time row-order [`Strategy`], and one
+//! entry per shard with its row span, sizes, CRC, and `data::stats`
+//! summary. The manifest is the only file a reader must parse before
+//! deciding which shards to touch — `data inspect` and shard-aware
+//! partitioning work from it without opening any shard.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::{Dataset, DatasetStats, Strategy};
+use crate::util::json::Json;
+
+/// Manifest file name inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+/// Format marker embedded in the JSON, so a stray JSON file is never
+/// mistaken for a store.
+pub const FORMAT_MARKER: &str = "hybrid-dca-shard-store";
+/// Manifest schema version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Per-shard shape statistics (the `data::stats` columns that make
+/// sense per block). Stored so `data inspect` reports Table-1-style
+/// numbers without decoding a single shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardStats {
+    pub density: f64,
+    pub nnz_per_row_mean: f64,
+    pub nnz_per_row_max: usize,
+    pub positive_fraction: f64,
+}
+
+impl ShardStats {
+    /// Compute from an in-memory shard via [`DatasetStats`].
+    pub fn compute(shard: &Dataset) -> ShardStats {
+        let s = DatasetStats::compute(shard);
+        ShardStats {
+            density: s.density,
+            nnz_per_row_mean: s.nnz_per_row_mean,
+            nnz_per_row_max: s.nnz_per_row_max,
+            positive_fraction: s.positive_fraction,
+        }
+    }
+}
+
+/// One shard's manifest entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardEntry {
+    /// File name relative to the store directory.
+    pub path: String,
+    /// Global row span `[row_start, row_end)`.
+    pub row_start: usize,
+    pub row_end: usize,
+    pub nnz: usize,
+    /// Encoded file size in bytes.
+    pub bytes: u64,
+    /// The shard file's trailing CRC-32, duplicated here so `inspect`
+    /// can cross-check manifest↔file without recomputing.
+    pub crc32: u32,
+    pub stats: ShardStats,
+}
+
+impl ShardEntry {
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.row_end - self.row_start
+    }
+}
+
+/// The full store description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Dataset name (preset name or input file stem).
+    pub name: String,
+    /// Global dims: rows, features, nonzeros.
+    pub n: usize,
+    pub d: usize,
+    pub nnz: usize,
+    /// Row order the packer wrote: `Contiguous` = input order,
+    /// `Shuffled` = permuted at pack time with `seed`. Shard-aware
+    /// partitions always read disk order; this records what that order
+    /// *means*.
+    pub strategy: Strategy,
+    /// Seed of the pack-time permutation (0 when `Contiguous`).
+    pub seed: u64,
+    pub shards: Vec<ShardEntry>,
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("manifest missing key '{key}'"))
+}
+
+fn get_f64(j: &Json, key: &str) -> anyhow::Result<f64> {
+    get(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("manifest key '{key}' is not a number"))
+}
+
+fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    let x = get_f64(j, key)?;
+    anyhow::ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= 2f64.powi(53),
+        "manifest key '{key}' = {x} is not a non-negative integer"
+    );
+    Ok(x as usize)
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    get(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest key '{key}' is not a string"))
+}
+
+impl Manifest {
+    /// Serialize to the JSON document layout.
+    pub fn to_json(&self) -> Json {
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("path".into(), Json::Str(s.path.clone())),
+                    ("row_start".into(), Json::Num(s.row_start as f64)),
+                    ("row_end".into(), Json::Num(s.row_end as f64)),
+                    ("nnz".into(), Json::Num(s.nnz as f64)),
+                    ("bytes".into(), Json::Num(s.bytes as f64)),
+                    ("crc32".into(), Json::Num(s.crc32 as f64)),
+                    (
+                        "stats".into(),
+                        Json::Obj(vec![
+                            ("density".into(), Json::Num(s.stats.density)),
+                            (
+                                "nnz_per_row_mean".into(),
+                                Json::Num(s.stats.nnz_per_row_mean),
+                            ),
+                            (
+                                "nnz_per_row_max".into(),
+                                Json::Num(s.stats.nnz_per_row_max as f64),
+                            ),
+                            (
+                                "positive_fraction".into(),
+                                Json::Num(s.stats.positive_fraction),
+                            ),
+                        ]),
+                    ),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("format".into(), Json::Str(FORMAT_MARKER.into())),
+            ("version".into(), Json::Num(MANIFEST_VERSION as f64)),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("n".into(), Json::Num(self.n as f64)),
+            ("d".into(), Json::Num(self.d as f64)),
+            ("nnz".into(), Json::Num(self.nnz as f64)),
+            ("strategy".into(), Json::Str(self.strategy.name().into())),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("shards".into(), Json::Arr(shards)),
+        ])
+    }
+
+    /// Parse from the JSON document layout.
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        let marker = get_str(j, "format")?;
+        anyhow::ensure!(
+            marker == FORMAT_MARKER,
+            "not a shard-store manifest (format marker '{marker}')"
+        );
+        let version = get_usize(j, "version")? as u64;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+        );
+        let strategy_s = get_str(j, "strategy")?;
+        let strategy = Strategy::parse(strategy_s)
+            .ok_or_else(|| anyhow::anyhow!("unknown pack strategy '{strategy_s}'"))?;
+        let shards_json = get(j, "shards")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest 'shards' is not an array"))?;
+        let mut shards = Vec::with_capacity(shards_json.len());
+        for sj in shards_json {
+            let stats_j = get(sj, "stats")?;
+            shards.push(ShardEntry {
+                path: get_str(sj, "path")?.to_string(),
+                row_start: get_usize(sj, "row_start")?,
+                row_end: get_usize(sj, "row_end")?,
+                nnz: get_usize(sj, "nnz")?,
+                bytes: get_usize(sj, "bytes")? as u64,
+                crc32: u32::try_from(get_usize(sj, "crc32")?)
+                    .map_err(|_| anyhow::anyhow!("shard crc32 out of u32 range"))?,
+                stats: ShardStats {
+                    density: get_f64(stats_j, "density")?,
+                    nnz_per_row_mean: get_f64(stats_j, "nnz_per_row_mean")?,
+                    nnz_per_row_max: get_usize(stats_j, "nnz_per_row_max")?,
+                    positive_fraction: get_f64(stats_j, "positive_fraction")?,
+                },
+            });
+        }
+        let m = Manifest {
+            name: get_str(j, "name")?.to_string(),
+            n: get_usize(j, "n")?,
+            d: get_usize(j, "d")?,
+            nnz: get_usize(j, "nnz")?,
+            strategy,
+            seed: get_usize(j, "seed")? as u64,
+            shards,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation: spans tile `0..n` in order, totals agree.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut expect = 0usize;
+        let mut nnz = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            anyhow::ensure!(
+                s.row_start == expect && s.row_end > s.row_start,
+                "shard {i} spans [{}, {}) where start {expect} was expected",
+                s.row_start,
+                s.row_end
+            );
+            anyhow::ensure!(!s.path.is_empty(), "shard {i} has an empty path");
+            expect = s.row_end;
+            nnz += s.nnz;
+        }
+        anyhow::ensure!(
+            expect == self.n,
+            "shards cover {expect} rows, manifest says n={}",
+            self.n
+        );
+        anyhow::ensure!(
+            nnz == self.nnz,
+            "shard nnz totals {nnz}, manifest says {}",
+            self.nnz
+        );
+        anyhow::ensure!(self.d >= 1 || self.n == 0, "manifest d must be ≥ 1");
+        Ok(())
+    }
+
+    /// The shards' `[start, end)` row spans in disk order — the input
+    /// to [`crate::data::Partition::from_shards`].
+    pub fn spans(&self) -> Vec<(usize, usize)> {
+        self.shards.iter().map(|s| (s.row_start, s.row_end)).collect()
+    }
+
+    /// Path of the manifest inside `dir`.
+    pub fn path_in(dir: &Path) -> PathBuf {
+        dir.join(MANIFEST_FILE)
+    }
+
+    /// Write `manifest.json` into the store directory.
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        let path = Self::path_in(dir);
+        std::fs::write(&path, self.to_json().to_pretty())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load and validate `manifest.json` from a store directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = Self::path_in(dir);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("open shard store {}: {e}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest {
+            name: "tiny".into(),
+            n: 30,
+            d: 7,
+            nnz: 11,
+            strategy: Strategy::Shuffled,
+            seed: 99,
+            shards: vec![
+                ShardEntry {
+                    path: "shard-00000.csr".into(),
+                    row_start: 0,
+                    row_end: 20,
+                    nnz: 8,
+                    bytes: 400,
+                    crc32: 0xDEAD_BEEF,
+                    stats: ShardStats {
+                        density: 0.05,
+                        nnz_per_row_mean: 0.4,
+                        nnz_per_row_max: 3,
+                        positive_fraction: 0.5,
+                    },
+                },
+                ShardEntry {
+                    path: "shard-00001.csr".into(),
+                    row_start: 20,
+                    row_end: 30,
+                    nnz: 3,
+                    bytes: 220,
+                    crc32: 7,
+                    stats: ShardStats {
+                        density: 0.04,
+                        nnz_per_row_mean: 0.3,
+                        nnz_per_row_max: 2,
+                        positive_fraction: 0.6,
+                    },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let text = m.to_json().to_pretty();
+        let back = Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn spans_and_validate() {
+        let m = sample();
+        m.validate().unwrap();
+        assert_eq!(m.spans(), vec![(0, 20), (20, 30)]);
+        let mut gap = m.clone();
+        gap.shards[1].row_start = 21;
+        assert!(gap.validate().is_err());
+        let mut short = m.clone();
+        short.n = 40;
+        assert!(short.validate().is_err());
+        let mut bad_nnz = m;
+        bad_nnz.nnz = 5;
+        assert!(bad_nnz.validate().is_err());
+    }
+
+    #[test]
+    fn foreign_json_rejected() {
+        let j = Json::parse(r#"{"format": "something-else", "version": 1}"#).unwrap();
+        let err = Manifest::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("format marker"), "{err}");
+        let j = Json::parse("{}").unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("hybrid_dca_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = sample();
+        m.save(&dir).unwrap();
+        let back = Manifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

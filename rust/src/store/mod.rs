@@ -1,0 +1,44 @@
+//! Out-of-core sharded dataset store.
+//!
+//! The paper's headline experiment (Fig. 7) solves splicesite — a
+//! 280 GB LIBSVM file that "cannot be accommodated on a single node".
+//! Hydra (Richtárik & Takáč 2013) and distributed mini-batch SDCA
+//! (Takáč et al. 2015) assume the data already lives pre-partitioned
+//! in node-local blocks; this module makes that block a first-class
+//! on-disk object:
+//!
+//! * [`format`] — the versioned little-endian binary shard: header
+//!   (magic, version, row span, dim, nnz), raw CSR arrays, labels, and
+//!   a trailing CRC-32. Hand-encoded, no serde.
+//! * [`manifest`] — `manifest.json` (via `util/json`): global dims,
+//!   pack-time row-order [`Strategy`](crate::data::Strategy), and per-
+//!   shard spans, sizes, CRCs, and `data::stats` summaries.
+//! * [`pack`] — one-pass, constant-memory streaming ingest from LIBSVM
+//!   text (shares `libsvm::rows` with the in-memory reader), cutting
+//!   shards on a row/byte budget with optional K×R alignment.
+//! * [`sharded`] — [`ShardedDataset`]: open parses only the manifest;
+//!   shards decode lazily one at a time. Its [`spans`] feed
+//!   [`Partition::from_shards`](crate::data::Partition::from_shards)
+//!   so node `k` trains on its own packed shards in disk order.
+//!
+//! [`spans`]: ShardedDataset::spans
+//!
+//! ```no_run
+//! use hybrid_dca::store;
+//!
+//! let opts = store::PackOptions { name: "rcv1".into(), ..Default::default() };
+//! store::pack_file("rcv1.svm".as_ref(), "rcv1_store".as_ref(), &opts)?;
+//! let sharded = store::open("rcv1_store")?;
+//! let node0 = sharded.load_shard(0)?; // one shard resident, not 280 GB
+//! # let _ = node0; Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod format;
+pub mod manifest;
+pub mod pack;
+pub mod sharded;
+
+pub use format::{crc32, decode_shard, encode_shard, ShardHeader};
+pub use manifest::{Manifest, ShardEntry, ShardStats, MANIFEST_FILE};
+pub use pack::{pack, pack_dataset, pack_file, PackOptions, PackReport};
+pub use sharded::{open, ShardedDataset};

@@ -1,0 +1,427 @@
+//! One-pass, constant-memory conversion of LIBSVM text (or an
+//! in-memory dataset) into a shard store.
+//!
+//! The paper's headline workload is a 280 GB LIBSVM file that "cannot
+//! be accommodated on a single node" — so the converter never holds
+//! more than the shard currently being filled: rows stream in through
+//! [`crate::data::libsvm::rows`], accumulate in one CSR buffer, and
+//! are encoded + flushed to disk the moment the row/byte budget is
+//! hit. [`PackReport::peak_buffered_rows`] records the high-water mark
+//! so tests can *prove* the bound instead of trusting it.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::data::csr::{sort_row_entries, CsrMatrix};
+use crate::data::{libsvm, Dataset, Strategy};
+use crate::util::Rng;
+
+use super::format;
+use super::manifest::{Manifest, ShardEntry, ShardStats};
+
+/// Packing parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackOptions {
+    /// Dataset name recorded in the manifest.
+    pub name: String,
+    /// Cut a shard once it holds this many rows (0 = no row budget).
+    pub shard_rows: usize,
+    /// Cut a shard once its encoded size reaches this many bytes
+    /// (0 = no byte budget). With both budgets 0 the whole input
+    /// becomes one shard.
+    pub shard_bytes: u64,
+    /// Only cut when the shard's row count is a multiple of this —
+    /// set it to K×R so the even K-node × R-core split lands exactly
+    /// on shard boundaries (the last shard is exempt). ≤ 1 disables.
+    pub align: usize,
+    /// Lower bound on the recorded feature dimension (like
+    /// `libsvm::read`'s `min_dim`).
+    pub min_dim: usize,
+    /// Seed for the pack-time permutation when a shuffled row order is
+    /// requested (only available via [`pack_dataset`]).
+    pub seed: u64,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        Self {
+            name: "dataset".into(),
+            shard_rows: 65_536,
+            shard_bytes: 0,
+            align: 1,
+            min_dim: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// What a pack run did — sizes, throughput inputs, and the buffered
+/// high-water mark that proves the constant-memory property.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackReport {
+    pub shards: usize,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Total shard bytes written (manifest excluded).
+    pub bytes_written: u64,
+    /// Max rows ever resident in the pack buffer — bounded by one
+    /// shard, never the file.
+    pub peak_buffered_rows: usize,
+}
+
+/// Streaming accumulator for the shard being filled.
+struct ShardAcc {
+    row_start: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+    labels: Vec<f64>,
+    dim_local: usize,
+}
+
+impl ShardAcc {
+    fn new(row_start: usize) -> Self {
+        Self {
+            row_start,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            labels: Vec::new(),
+            dim_local: 0,
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Append one row: the shared [`sort_row_entries`] normalization
+    /// (sort + duplicate rejection), then the same explicit-zero drop
+    /// [`crate::data::csr::CsrBuilder::push_row`] performs — minus the
+    /// up-front dim bound (the global d is only known at end of input).
+    fn push_row(&mut self, label: f64, entries: Vec<(u32, f64)>) -> anyhow::Result<()> {
+        let entries = sort_row_entries(entries)?;
+        if let Some(&(max_idx, _)) = entries.last() {
+            self.dim_local = self.dim_local.max(max_idx as usize + 1);
+        }
+        for (j, x) in entries {
+            if x != 0.0 {
+                self.indices.push(j);
+                self.values.push(x);
+            }
+        }
+        self.indptr.push(self.indices.len());
+        self.labels.push(label);
+        Ok(())
+    }
+
+    fn encoded_len(&self) -> usize {
+        format::encoded_len(self.rows(), self.indices.len())
+    }
+
+    /// Turn the buffer into an in-memory shard dataset (consumes it).
+    fn into_dataset(self) -> Dataset {
+        let x = CsrMatrix {
+            indptr: self.indptr,
+            indices: self.indices,
+            values: self.values,
+            dim: self.dim_local.max(1),
+        };
+        Dataset::new(x, self.labels)
+    }
+}
+
+/// Running pack state: the open accumulator plus everything already
+/// flushed.
+struct PackState<'a> {
+    dir: &'a Path,
+    opts: &'a PackOptions,
+    acc: ShardAcc,
+    entries: Vec<ShardEntry>,
+    dim_global: usize,
+    total_nnz: usize,
+    bytes_written: u64,
+    peak_buffered_rows: usize,
+}
+
+impl<'a> PackState<'a> {
+    fn new(dir: &'a Path, opts: &'a PackOptions) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("create store dir {}: {e}", dir.display()))?;
+        Ok(Self {
+            dir,
+            opts,
+            acc: ShardAcc::new(0),
+            entries: Vec::new(),
+            dim_global: 0,
+            total_nnz: 0,
+            bytes_written: 0,
+            peak_buffered_rows: 0,
+        })
+    }
+
+    fn push(&mut self, label: f64, entries: Vec<(u32, f64)>) -> anyhow::Result<()> {
+        self.acc.push_row(label, entries).map_err(|e| {
+            anyhow::anyhow!("row {}: {e}", self.acc.row_start + self.acc.rows())
+        })?;
+        self.peak_buffered_rows = self.peak_buffered_rows.max(self.acc.rows());
+        let rows = self.acc.rows();
+        let budget_hit = (self.opts.shard_rows > 0 && rows >= self.opts.shard_rows)
+            || (self.opts.shard_bytes > 0
+                && self.acc.encoded_len() as u64 >= self.opts.shard_bytes);
+        let aligned = self.opts.align <= 1 || rows % self.opts.align == 0;
+        if budget_hit && aligned {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Encode and write the open accumulator as the next shard file.
+    fn flush(&mut self) -> anyhow::Result<()> {
+        let row_start = self.acc.row_start;
+        let next_start = row_start + self.acc.rows();
+        let acc = std::mem::replace(&mut self.acc, ShardAcc::new(next_start));
+        if acc.rows() == 0 {
+            return Ok(());
+        }
+        let shard = acc.into_dataset();
+        self.dim_global = self.dim_global.max(shard.d());
+        self.total_nnz += shard.x.nnz();
+        let stats = ShardStats::compute(&shard);
+        let bytes = format::encode_shard(&shard, row_start);
+        let crc = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("crc tail"));
+        let file = format!("shard-{:05}.{}", self.entries.len(), format::SHARD_EXT);
+        let path = self.dir.join(&file);
+        let f = std::fs::File::create(&path)
+            .map_err(|e| anyhow::anyhow!("create {}: {e}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(&bytes)
+            .and_then(|_| w.flush())
+            .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+        self.bytes_written += bytes.len() as u64;
+        self.entries.push(ShardEntry {
+            path: file,
+            row_start,
+            row_end: next_start,
+            nnz: shard.x.nnz(),
+            bytes: bytes.len() as u64,
+            crc32: crc,
+            stats,
+        });
+        Ok(())
+    }
+
+    fn finish(mut self, strategy: Strategy) -> anyhow::Result<(Manifest, PackReport)> {
+        self.flush()?;
+        anyhow::ensure!(!self.entries.is_empty(), "input has no data rows to pack");
+        let n = self.entries.last().expect("non-empty").row_end;
+        let manifest = Manifest {
+            name: self.opts.name.clone(),
+            n,
+            d: self.dim_global.max(self.opts.min_dim).max(1),
+            nnz: self.total_nnz,
+            strategy,
+            seed: if strategy == Strategy::Contiguous { 0 } else { self.opts.seed },
+            shards: self.entries,
+        };
+        manifest.validate().expect("packer emits a consistent manifest");
+        manifest.save(self.dir)?;
+        let report = PackReport {
+            shards: manifest.shards.len(),
+            rows: n,
+            nnz: manifest.nnz,
+            bytes_written: self.bytes_written,
+            peak_buffered_rows: self.peak_buffered_rows,
+        };
+        Ok((manifest, report))
+    }
+}
+
+/// Stream LIBSVM text from `reader` into a shard store at `dir`.
+/// Constant memory: at most one shard is buffered. Rows keep their
+/// input order (`Strategy::Contiguous` in the manifest) — a streaming
+/// pass cannot shuffle; use [`pack_dataset`] for a shuffled pack.
+pub fn pack<R: BufRead>(
+    reader: R,
+    dir: &Path,
+    opts: &PackOptions,
+) -> anyhow::Result<(Manifest, PackReport)> {
+    let mut st = PackState::new(dir, opts)?;
+    for row in libsvm::rows(reader) {
+        let row = row?;
+        st.push(libsvm::map_label(row.label), row.entries)?;
+    }
+    st.finish(Strategy::Contiguous)
+}
+
+/// [`pack`] reading from a LIBSVM file on disk.
+pub fn pack_file(
+    input: &Path,
+    dir: &Path,
+    opts: &PackOptions,
+) -> anyhow::Result<(Manifest, PackReport)> {
+    let f = std::fs::File::open(input)
+        .map_err(|e| anyhow::anyhow!("open {}: {e}", input.display()))?;
+    pack(BufReader::new(f), dir, opts)
+}
+
+/// Pack an in-memory dataset, optionally permuting rows first:
+/// `Strategy::Contiguous` keeps input order, `Strategy::Shuffled`
+/// applies a seeded permutation at pack time (so a later shard-aware
+/// contiguous split *realizes* the shuffled assignment on disk).
+/// `Striped` needs a node count that doesn't exist at pack time and is
+/// rejected.
+pub fn pack_dataset(
+    ds: &Dataset,
+    dir: &Path,
+    opts: &PackOptions,
+    strategy: Strategy,
+) -> anyhow::Result<(Manifest, PackReport)> {
+    let n = ds.n();
+    anyhow::ensure!(n > 0, "input has no data rows to pack");
+    let order: Vec<usize> = match strategy {
+        Strategy::Contiguous => (0..n).collect(),
+        Strategy::Shuffled => {
+            let mut v: Vec<usize> = (0..n).collect();
+            Rng::new(opts.seed).shuffle(&mut v);
+            v
+        }
+        Strategy::Striped => anyhow::bail!(
+            "a striped pack order needs the node count at pack time; pack contiguous \
+             (or shuffled) and let the shard-aware partition place nodes"
+        ),
+    };
+    let mut opts_eff = opts.clone();
+    opts_eff.min_dim = opts.min_dim.max(ds.d());
+    let mut st = PackState::new(dir, &opts_eff)?;
+    for &i in &order {
+        let r = ds.x.row(i);
+        let entries: Vec<(u32, f64)> =
+            r.indices.iter().copied().zip(r.values.iter().copied()).collect();
+        st.push(ds.y[i], entries)?;
+    }
+    st.finish(strategy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("hybrid_dca_pack_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn pack_streams_with_bounded_buffer() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(1));
+        let mut text = Vec::new();
+        libsvm::write(&mut text, &ds).unwrap();
+        let dir = tmp_dir("bounded");
+        let opts = PackOptions {
+            name: "tiny".into(),
+            shard_rows: 32,
+            min_dim: ds.d(),
+            ..PackOptions::default()
+        };
+        let (manifest, report) = pack(std::io::Cursor::new(text), &dir, &opts).unwrap();
+        // 200 rows / 32-row budget → 7 shards; the buffer never held
+        // more than one shard even though the input had 200 rows.
+        assert_eq!(report.shards, 7);
+        assert_eq!(report.rows, 200);
+        assert!(report.peak_buffered_rows <= 32, "peak {}", report.peak_buffered_rows);
+        assert_eq!(manifest.n, 200);
+        assert_eq!(manifest.d, ds.d());
+        assert_eq!(manifest.strategy, Strategy::Contiguous);
+        assert_eq!(manifest.spans().first(), Some(&(0, 32)));
+        assert_eq!(manifest.spans().last(), Some(&(192, 200)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn byte_budget_cuts_shards() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(2));
+        let dir = tmp_dir("bytes");
+        let opts = PackOptions {
+            name: "tiny".into(),
+            shard_rows: 0,
+            shard_bytes: 4 * 1024,
+            ..PackOptions::default()
+        };
+        let (manifest, report) =
+            pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+        assert!(report.shards > 1, "4 KB budget should split tiny");
+        for e in &manifest.shards[..manifest.shards.len() - 1] {
+            // Each cut happened at the first row crossing the budget.
+            assert!(e.bytes >= 4 * 1024, "shard under budget: {} bytes", e.bytes);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(3));
+        let dir = tmp_dir("align");
+        let opts = PackOptions {
+            name: "tiny".into(),
+            shard_rows: 30,
+            align: 8, // K×R = 8: cut only at multiples of 8
+            ..PackOptions::default()
+        };
+        let (manifest, _) = pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+        for e in &manifest.shards[..manifest.shards.len() - 1] {
+            assert_eq!(e.rows() % 8, 0, "unaligned shard of {} rows", e.rows());
+            assert!(e.rows() >= 30, "cut before the row budget");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shuffled_pack_is_a_seeded_permutation() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(4));
+        let dir_a = tmp_dir("shuf_a");
+        let dir_b = tmp_dir("shuf_b");
+        let opts =
+            PackOptions { name: "tiny".into(), shard_rows: 64, seed: 7, ..Default::default() };
+        let (ma, _) = pack_dataset(&ds, &dir_a, &opts, Strategy::Shuffled).unwrap();
+        let (mb, _) = pack_dataset(&ds, &dir_b, &opts, Strategy::Shuffled).unwrap();
+        assert_eq!(ma.strategy, Strategy::Shuffled);
+        assert_eq!(ma.seed, 7);
+        // Same seed ⇒ identical stores (shard CRCs agree).
+        let crcs = |m: &Manifest| m.shards.iter().map(|s| s.crc32).collect::<Vec<_>>();
+        assert_eq!(crcs(&ma), crcs(&mb));
+        // Striped is rejected at pack time.
+        assert!(pack_dataset(&ds, &dir_a, &opts, Strategy::Striped).is_err());
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn empty_input_rejected() {
+        let dir = tmp_dir("empty");
+        let err = pack(
+            std::io::Cursor::new("# only comments\n\n"),
+            &dir,
+            &PackOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no data rows"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_finite_input_rejected_while_streaming() {
+        let dir = tmp_dir("nonfinite");
+        let err = pack(
+            std::io::Cursor::new("+1 1:1\n+1 2:inf\n"),
+            &dir,
+            &PackOptions::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,275 @@
+//! Lazy reader over a packed store: open parses only the manifest;
+//! shard files are read one at a time, on demand, through buffered
+//! whole-file reads (`pread`-style: seekless sequential I/O of exactly
+//! one shard, no mmap, no new dependencies). Peak memory for any
+//! single operation is one decoded shard — except [`materialize`],
+//! which deliberately assembles the full dataset for the in-process
+//! engines and says so.
+//!
+//! [`ShardedDataset::materialize`]: ShardedDataset::materialize
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::data::csr::CsrMatrix;
+use crate::data::Dataset;
+
+use super::format;
+use super::manifest::Manifest;
+
+/// An open shard store.
+#[derive(Debug, Clone)]
+pub struct ShardedDataset {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+/// Open a store directory (parses and validates `manifest.json` only —
+/// no shard is touched).
+pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<ShardedDataset> {
+    let dir = dir.as_ref().to_path_buf();
+    let manifest = Manifest::load(&dir)?;
+    Ok(ShardedDataset { dir, manifest })
+}
+
+impl ShardedDataset {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Dataset name from the manifest.
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    /// Global number of rows.
+    pub fn n(&self) -> usize {
+        self.manifest.n
+    }
+
+    /// Global feature dimension.
+    pub fn d(&self) -> usize {
+        self.manifest.d
+    }
+
+    /// Global nonzero count.
+    pub fn nnz(&self) -> usize {
+        self.manifest.nnz
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.manifest.shards.len()
+    }
+
+    /// The shards' global `[start, end)` row spans in disk order.
+    pub fn spans(&self) -> Vec<(usize, usize)> {
+        self.manifest.spans()
+    }
+
+    /// Read and decode one shard into an in-memory [`Dataset`] whose
+    /// matrix is widened to the global `d`. Memory: one shard.
+    pub fn load_shard(&self, i: usize) -> anyhow::Result<Dataset> {
+        let entry = self
+            .manifest
+            .shards
+            .get(i)
+            .ok_or_else(|| {
+                anyhow::anyhow!("shard {i} out of range ({} shards)", self.num_shards())
+            })?;
+        let path = self.dir.join(&entry.path);
+        let mut bytes = Vec::with_capacity(entry.bytes as usize);
+        std::fs::File::open(&path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let (header, ds) = format::decode_shard(&bytes, self.d())
+            .map_err(|e| anyhow::anyhow!("decode {}: {e}", path.display()))?;
+        // Cross-check file ↔ manifest: the decoder proved the file is
+        // *internally* consistent; the manifest's recorded CRC proves
+        // it is the file this store was packed with (a swapped-in
+        // shard from another pack is self-consistent but wrong).
+        let file_crc =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().expect("decoded shard"));
+        anyhow::ensure!(
+            file_crc == entry.crc32,
+            "{}: file CRC {:08x} disagrees with manifest {:08x} (shard replaced after pack?)",
+            path.display(),
+            file_crc,
+            entry.crc32
+        );
+        anyhow::ensure!(
+            bytes.len() as u64 == entry.bytes,
+            "{}: file is {} bytes, manifest says {}",
+            path.display(),
+            bytes.len(),
+            entry.bytes
+        );
+        anyhow::ensure!(
+            header.row_start == entry.row_start && header.row_end == entry.row_end,
+            "{}: header rows [{}, {}) disagree with manifest [{}, {})",
+            path.display(),
+            header.row_start,
+            header.row_end,
+            entry.row_start,
+            entry.row_end
+        );
+        anyhow::ensure!(
+            header.nnz == entry.nnz,
+            "{}: header nnz {} disagrees with manifest {}",
+            path.display(),
+            header.nnz,
+            entry.nnz
+        );
+        Ok(ds.with_name(format!("{}[{}]", self.manifest.name, i)))
+    }
+
+    /// Decode every shard (CRC + full structural validation) without
+    /// keeping more than one in memory. The `data inspect --verify`
+    /// backend.
+    pub fn verify(&self) -> anyhow::Result<()> {
+        for i in 0..self.num_shards() {
+            let ds = self.load_shard(i)?;
+            let entry = &self.manifest.shards[i];
+            anyhow::ensure!(
+                ds.n() == entry.rows(),
+                "shard {i}: decoded {} rows, manifest says {}",
+                ds.n(),
+                entry.rows()
+            );
+        }
+        Ok(())
+    }
+
+    /// Assemble the full in-memory dataset by streaming shards in disk
+    /// order — the bridge to engines that still want a flat
+    /// [`Dataset`]. This is the one operation whose memory is the
+    /// whole dataset (plus one shard transiently).
+    pub fn materialize(&self) -> anyhow::Result<Dataset> {
+        let n = self.n();
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0usize);
+        let mut indices = Vec::with_capacity(self.nnz());
+        let mut values = Vec::with_capacity(self.nnz());
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..self.num_shards() {
+            let shard = self.load_shard(i)?;
+            let offset = indices.len();
+            for &p in &shard.x.indptr[1..] {
+                indptr.push(offset + p);
+            }
+            indices.extend_from_slice(&shard.x.indices);
+            values.extend_from_slice(&shard.x.values);
+            labels.extend_from_slice(&shard.y);
+        }
+        let x = CsrMatrix { indptr, indices, values, dim: self.d().max(1) };
+        Ok(Dataset::new(x, labels).with_name(self.manifest.name.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Preset;
+    use crate::data::Strategy;
+    use crate::store::pack::{pack_dataset, PackOptions};
+    use crate::util::Rng;
+
+    fn packed_tiny(tag: &str, shard_rows: usize) -> (Dataset, PathBuf) {
+        let ds = Preset::Tiny.generate(&mut Rng::new(11));
+        let dir = std::env::temp_dir().join(format!("hybrid_dca_sharded_{tag}"));
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = PackOptions { name: "tiny".into(), shard_rows, ..Default::default() };
+        pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+        (ds, dir)
+    }
+
+    #[test]
+    fn open_reads_only_the_manifest() {
+        let (ds, dir) = packed_tiny("open", 64);
+        let store = open(&dir).unwrap();
+        assert_eq!(store.n(), ds.n());
+        assert_eq!(store.d(), ds.d());
+        assert_eq!(store.nnz(), ds.x.nnz());
+        assert_eq!(store.name(), "tiny");
+        assert_eq!(store.num_shards(), 4); // 200 / 64 → 64+64+64+8
+        assert_eq!(store.spans()[0], (0, 64));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_shard_is_the_row_slice() {
+        let (ds, dir) = packed_tiny("slice", 64);
+        let store = open(&dir).unwrap();
+        let s1 = store.load_shard(1).unwrap();
+        assert_eq!(s1.n(), 64);
+        assert_eq!(s1.d(), ds.d());
+        for (local, global) in (64..128).enumerate() {
+            assert_eq!(s1.x.row(local), ds.x.row(global), "row {global}");
+            assert_eq!(s1.y[local], ds.y[global]);
+        }
+        assert!(store.load_shard(99).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn materialize_is_bitwise_identical() {
+        let (ds, dir) = packed_tiny("mat", 32);
+        let store = open(&dir).unwrap();
+        let back = store.materialize().unwrap();
+        assert_eq!(back.x.indptr, ds.x.indptr);
+        assert_eq!(back.x.indices, ds.x.indices);
+        assert_eq!(back.x.values, ds.x.values);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.d(), ds.d());
+        assert_eq!(back.name, "tiny");
+        store.verify().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_shard_caught_on_load() {
+        let (_, dir) = packed_tiny("corrupt", 64);
+        let store = open(&dir).unwrap();
+        let victim = dir.join(&store.manifest().shards[2].path);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = store.load_shard(2).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "{err}");
+        assert!(store.verify().is_err());
+        // Untouched shards still load.
+        store.load_shard(0).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_file_crc_cross_checked() {
+        // A shard file that is internally valid but not the one the
+        // manifest recorded (e.g. swapped in from another pack) must
+        // fail the manifest↔file CRC cross-check.
+        let (_, dir) = packed_tiny("crosscheck", 64);
+        let mut m = Manifest::load(&dir).unwrap();
+        m.shards[1].crc32 ^= 1;
+        m.save(&dir).unwrap();
+        let store = open(&dir).unwrap();
+        let err = store.load_shard(1).unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
+        assert!(store.verify().is_err());
+        store.load_shard(0).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let dir = std::env::temp_dir().join("hybrid_dca_sharded_nostore");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = open(&dir).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -111,6 +111,87 @@ fn gen_data_and_stats_roundtrip() {
 }
 
 #[test]
+fn data_pack_inspect_train_pipeline() {
+    // The full out-of-core path: LIBSVM text → packed shards →
+    // inspect --verify → train --store.
+    let svm = std::env::temp_dir().join("hybrid_dca_cli_pack_in.svm");
+    let store = std::env::temp_dir().join("hybrid_dca_cli_pack_store");
+    std::fs::remove_dir_all(&store).ok();
+    let (_, stderr, ok) = run(&["gen-data", "--preset", "tiny", "--out", svm.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    let (stdout, stderr, ok) = run(&[
+        "data", "pack", "--in", svm.to_str().unwrap(), "--out", store.to_str().unwrap(),
+        "--shard-rows", "64",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("4 shards"), "{stdout}");
+    assert!(stdout.contains("manifest at"), "{stdout}");
+    let (stdout, stderr, ok) =
+        run(&["data", "inspect", "--store", store.to_str().unwrap(), "--verify"]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("n=200"), "{stdout}");
+    assert!(stdout.contains("shard-00003.csr"), "{stdout}");
+    assert!(stdout.contains("decode clean"), "{stdout}");
+    let (stdout, stderr, ok) = run(&[
+        "train", "--store", store.to_str().unwrap(), "--lambda", "0.01", "--nodes", "2",
+        "--cores", "1", "--h", "64", "--rounds", "5", "--threshold", "1e-9",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("[4 shards]"), "{stdout}");
+    assert!(stdout.contains("# finished"), "{stdout}");
+    std::fs::remove_file(&svm).ok();
+    std::fs::remove_dir_all(&store).ok();
+}
+
+#[test]
+fn data_pack_preset_shuffled() {
+    let store = std::env::temp_dir().join("hybrid_dca_cli_pack_preset");
+    std::fs::remove_dir_all(&store).ok();
+    let (stdout, stderr, ok) = run(&[
+        "data", "pack", "--preset", "tiny", "--out", store.to_str().unwrap(),
+        "--shard-rows", "50", "--shuffle",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("packed tiny"), "{stdout}");
+    let (stdout, stderr, ok) = run(&["data", "inspect", "--store", store.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("order=shuffled"), "{stdout}");
+    std::fs::remove_dir_all(&store).ok();
+}
+
+#[test]
+fn data_bad_usage_rejected() {
+    let (_, stderr, ok) = run(&["data", "frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown data subcommand"), "{stderr}");
+    // Neither or both inputs.
+    let (_, stderr, ok) = run(&["data", "pack", "--out", "/tmp/x"]);
+    assert!(!ok);
+    assert!(stderr.contains("exactly one of"), "{stderr}");
+    let (_, stderr, ok) = run(&[
+        "data", "pack", "--in", "a.svm", "--preset", "tiny", "--out", "/tmp/x",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("exactly one of"), "{stderr}");
+    // --shuffle needs in-memory rows.
+    let (_, stderr, ok) = run(&[
+        "data", "pack", "--in", "a.svm", "--out", "/tmp/x", "--shuffle",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("streaming pack"), "{stderr}");
+    // Store and LIBSVM file at once is ambiguous.
+    let (_, stderr, ok) = run(&[
+        "train", "--data", "a.svm", "--store", "b_store", "--lambda", "0.01",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("mutually exclusive"), "{stderr}");
+    // Inspecting a non-store fails with a manifest error.
+    let (_, stderr, ok) = run(&["data", "inspect", "--store", "/nonexistent_store_xyz"]);
+    assert!(!ok);
+    assert!(stderr.contains("manifest.json"), "{stderr}");
+}
+
+#[test]
 fn stats_all_presets() {
     let (stdout, stderr, ok) = run(&["stats", "--preset", "tiny"]);
     assert!(ok, "{stderr}");

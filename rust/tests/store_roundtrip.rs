@@ -1,0 +1,212 @@
+//! Shard-store round trips — the acceptance criteria of the
+//! out-of-core subsystem:
+//!
+//! 1. pack → open → materialize is **bitwise** identical (CSR arrays
+//!    and labels) to the in-memory dataset, through both the in-memory
+//!    and the streaming-text pack paths;
+//! 2. training from `DataSource::Sharded` produces **bitwise**
+//!    identical final α and v to the in-memory path for the hybrid-dca
+//!    engine (R = 1 determinism case);
+//! 3. pack is constant-memory: the buffered high-water mark is bounded
+//!    by one shard even when the input has many times more rows.
+
+use hybrid_dca::data::{libsvm, Dataset, Preset, Strategy};
+use hybrid_dca::session::{DataSource, Session};
+use hybrid_dca::store::{self, PackOptions};
+use hybrid_dca::util::Rng;
+
+fn tmp_store(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("hybrid_dca_roundtrip_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn tiny() -> Dataset {
+    Preset::Tiny.generate(&mut Rng::new(42))
+}
+
+#[test]
+fn pack_open_materialize_is_bitwise_identical() {
+    let ds = tiny();
+    let dir = tmp_store("bitwise");
+    let opts = PackOptions { name: "tiny".into(), shard_rows: 50, ..Default::default() };
+    let (manifest, _) = store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+    assert_eq!(manifest.spans(), vec![(0, 50), (50, 100), (100, 150), (150, 200)]);
+    let sharded = store::open(&dir).unwrap();
+    let back = sharded.materialize().unwrap();
+    // Bitwise: Vec<f64> equality is exact, not approximate.
+    assert_eq!(back.x.indptr, ds.x.indptr);
+    assert_eq!(back.x.indices, ds.x.indices);
+    assert_eq!(back.x.values, ds.x.values);
+    assert_eq!(back.y, ds.y);
+    assert_eq!(back.d(), ds.d());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_text_pack_matches_in_memory_reader() {
+    // The same LIBSVM text through (a) the buffering reader and (b) the
+    // constant-memory shard pipeline must yield identical datasets —
+    // both paths share the libsvm::rows parsing core.
+    let ds = tiny();
+    let mut text = Vec::new();
+    libsvm::write(&mut text, &ds).unwrap();
+    let via_reader = libsvm::read(std::io::Cursor::new(text.clone()), ds.d()).unwrap();
+
+    let dir = tmp_store("textpack");
+    let opts = PackOptions {
+        name: "tiny".into(),
+        shard_rows: 32,
+        min_dim: ds.d(),
+        ..Default::default()
+    };
+    let (_, report) = store::pack(std::io::Cursor::new(text), &dir, &opts).unwrap();
+    let via_store = store::open(&dir).unwrap().materialize().unwrap();
+
+    assert_eq!(via_store.x.indptr, via_reader.x.indptr);
+    assert_eq!(via_store.x.indices, via_reader.x.indices);
+    assert_eq!(via_store.x.values, via_reader.x.values);
+    assert_eq!(via_store.y, via_reader.y);
+
+    // Constant-memory proof: 200 input rows never put more than one
+    // 32-row shard in the pack buffer.
+    assert_eq!(report.rows, 200);
+    assert!(
+        report.peak_buffered_rows <= 32,
+        "pack buffered {} rows — not bounded by the shard budget",
+        report.peak_buffered_rows
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A session shaped for exact replay: R = 1 (single core per node
+/// keeps the intra-node interleaving deterministic) and a contiguous
+/// partition (consumes no RNG, exactly like the shard-aware path).
+fn replay_session(store_dir: Option<&str>) -> Session {
+    let mut b = Session::builder()
+        .dataset("tiny")
+        .seed(42)
+        .lambda(1e-2)
+        .cluster(2, 1)
+        .partition(Strategy::Contiguous)
+        .barrier(2)
+        .delay(1)
+        .local_iters(100)
+        .rounds(8)
+        .gap_threshold(1e-12); // run all rounds
+    if let Some(dir) = store_dir {
+        b = b.store_dir(dir);
+    }
+    b.build().unwrap()
+}
+
+#[test]
+fn sharded_training_bitwise_matches_in_memory() {
+    // Uniform 50-row shards, K = 2, R = 1: the shard-aware partition
+    // equals the contiguous even split, the RNG stream is untouched in
+    // both paths, and the store holds bit-identical data — so final α
+    // and v must match to the last bit, and so must every trace point.
+    let ds = tiny();
+    let dir = tmp_store("train");
+    let opts = PackOptions { name: "tiny".into(), shard_rows: 50, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+
+    let in_memory = replay_session(None);
+    let mem_report = in_memory.run("hybrid-dca", &ds).unwrap();
+
+    let sharded_session = replay_session(Some(dir.to_str().unwrap()));
+    let source = sharded_session.load_source().unwrap();
+    assert!(matches!(source, DataSource::Sharded(_)));
+    assert_eq!(source.shard_spans().map(|s| s.len()), Some(4));
+    let shard_report = sharded_session.run_source("hybrid-dca", &source).unwrap();
+
+    assert_eq!(shard_report.alpha, mem_report.alpha, "final α diverged");
+    assert_eq!(shard_report.v, mem_report.v, "final v diverged");
+    assert_eq!(shard_report.rounds, mem_report.rounds);
+    assert_eq!(shard_report.total_updates, mem_report.total_updates);
+    assert_eq!(shard_report.trace.points.len(), mem_report.trace.points.len());
+    for (a, b) in shard_report.trace.points.iter().zip(&mem_report.trace.points) {
+        assert_eq!(a.gap, b.gap, "round {} gap diverged", a.round);
+        assert_eq!(a.virt_secs, b.virt_secs, "round {} vtime diverged", a.round);
+    }
+    // The run made real progress (this is not a trivially-zero match).
+    assert!(mem_report.trace.final_gap().unwrap() < 1.0);
+    assert!(mem_report.total_updates > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_entry_point_partitions_a_store_backed_config_identically() {
+    // `Session::run` over materialized data and `run_source` over the
+    // open store must agree bitwise: the engine derives shard spans
+    // from cfg.store_path when the caller didn't attach them, so a
+    // store-backed config cannot silently fall back to the in-memory
+    // partition strategy depending on which API was used.
+    let ds = tiny();
+    let dir = tmp_store("entrypoints");
+    let opts = PackOptions { name: "tiny".into(), shard_rows: 50, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+    let session = replay_session(Some(dir.to_str().unwrap()));
+    let source = session.load_source().unwrap();
+    let via_source = session.run_source("hybrid-dca", &source).unwrap();
+    let materialized = store::open(&dir).unwrap().materialize().unwrap();
+    let via_run = session.run("hybrid-dca", &materialized).unwrap();
+    assert_eq!(via_run.alpha, via_source.alpha);
+    assert_eq!(via_run.v, via_source.v);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cocoa_engine_accepts_sharded_source() {
+    // The seam is engine-generic: CoCoA+ (which forces R = 1, S = K
+    // internally) trains from the same store through the same API.
+    let ds = tiny();
+    let dir = tmp_store("cocoa");
+    let opts = PackOptions { name: "tiny".into(), shard_rows: 25, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+    let session = replay_session(Some(dir.to_str().unwrap()));
+    let source = session.load_source().unwrap();
+    let report = session.run_source("cocoa+", &source).unwrap();
+    assert!(report.total_updates > 0);
+    assert!(report.trace.final_gap().unwrap() < 1.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn coarse_shards_fail_loudly_not_silently() {
+    // One giant shard cannot be split across K = 2 nodes on a shard
+    // boundary; the engine must refuse with repack advice rather than
+    // silently repartitioning mid-shard.
+    let ds = tiny();
+    let dir = tmp_store("coarse");
+    let opts = PackOptions { name: "tiny".into(), shard_rows: 400, ..Default::default() };
+    let (manifest, _) = store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+    assert_eq!(manifest.shards.len(), 1);
+    let session = replay_session(Some(dir.to_str().unwrap()));
+    let source = session.load_source().unwrap();
+    let err = session.run_source("hybrid-dca", &source).unwrap_err();
+    assert!(err.to_string().contains("repack"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shuffled_pack_realizes_the_permutation_on_disk() {
+    // A shuffled pack writes permuted rows; materialize returns them in
+    // disk order, so the multiset of (label, row) pairs is preserved
+    // while the order differs from the input.
+    let ds = tiny();
+    let dir = tmp_store("shufdisk");
+    let opts =
+        PackOptions { name: "tiny".into(), shard_rows: 64, seed: 9, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Shuffled).unwrap();
+    let sharded = store::open(&dir).unwrap();
+    assert_eq!(sharded.manifest().strategy, Strategy::Shuffled);
+    let back = sharded.materialize().unwrap();
+    assert_eq!(back.n(), ds.n());
+    assert_ne!(back.y, ds.y, "seeded shuffle left labels in input order");
+    // Same rows, different order: total nnz and label counts survive.
+    assert_eq!(back.x.nnz(), ds.x.nnz());
+    let pos = |d: &Dataset| d.y.iter().filter(|&&y| y > 0.0).count();
+    assert_eq!(pos(&back), pos(&ds));
+    std::fs::remove_dir_all(&dir).ok();
+}
