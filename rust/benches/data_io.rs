@@ -10,6 +10,8 @@
 
 use hybrid_dca::data::{libsvm, Preset};
 use hybrid_dca::harness::{self, QuickFull};
+use hybrid_dca::loss::Hinge;
+use hybrid_dca::metrics;
 use hybrid_dca::store::{self, PackOptions};
 use hybrid_dca::util::json::Json;
 use hybrid_dca::util::{measure, Stats};
@@ -120,6 +122,47 @@ fn main() -> anyhow::Result<()> {
         let st = Stats::from(&samples);
         let row = Row {
             path: "open + materialize".into(),
+            p50_secs: st.p50,
+            rows_per_sec: data.n() as f64 / st.p50,
+            mb_per_sec: store_bytes as f64 / 1e6 / st.p50,
+        };
+        print_row(&row);
+        rows_out.push(row);
+    }
+
+    // Objective evaluation: the in-memory fold vs streaming the same
+    // rows through leased shards (the `train --store` eval path — never
+    // materializes, ≤ 1 resident shard per eval thread). Same bits,
+    // different memory model; this row prices the streaming overhead.
+    {
+        let alpha: Vec<f64> = data.y.iter().map(|&y| 0.25 * y).collect();
+        let lambda = 1e-3;
+        let v = metrics::exact_v(&data, &alpha, lambda);
+
+        let mut mem_eval = metrics::Evaluator::in_memory(&data);
+        let samples = measure(1, 5, || {
+            let o = mem_eval.objectives(&Hinge, &alpha, &v, lambda);
+            assert!(o.gap.is_finite());
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "eval_in_memory".into(),
+            p50_secs: st.p50,
+            rows_per_sec: data.n() as f64 / st.p50,
+            mb_per_sec: store_bytes as f64 / 1e6 / st.p50,
+        };
+        print_row(&row);
+        rows_out.push(row);
+
+        let sharded = store::open(&store_dir)?;
+        let mut shard_eval = metrics::Evaluator::sharded(&sharded);
+        let samples = measure(1, 5, || {
+            let o = shard_eval.objectives(&Hinge, &alpha, &v, lambda);
+            assert!(o.gap.is_finite());
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "eval_over_shards".into(),
             p50_secs: st.p50,
             rows_per_sec: data.n() as f64 / st.p50,
             mb_per_sec: store_bytes as f64 / 1e6 / st.p50,

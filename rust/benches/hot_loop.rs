@@ -14,7 +14,7 @@ use hybrid_dca::data::Preset;
 use hybrid_dca::harness::{self, QuickFull};
 use hybrid_dca::loss::Hinge;
 use hybrid_dca::sim::{CostModel, UpdateCosts};
-use hybrid_dca::solver::local::LocalSolver;
+use hybrid_dca::solver::local::{LocalSolver, DUAL_RESYNC_EVERY};
 use hybrid_dca::solver::sdca::Sdca;
 use hybrid_dca::solver::StepParams;
 use hybrid_dca::util::json::Json;
@@ -121,6 +121,50 @@ fn main() -> anyhow::Result<()> {
             path: "local wild (R=4)".into(),
             p50_secs: st.p50,
             updates_per_sec: h as f64 / st.p50,
+        };
+        print_row(&row);
+        rows.push(row);
+    }
+
+    // Gap evaluation at eval_every=1: a full dual rescan per round vs
+    // the incrementally tracked dual sum (one primal pass, O(1) dual).
+    // Same round of updates in both closures, so the delta is pure
+    // evaluation cost; the tracked path pays its periodic exact resync
+    // inside the measured loop.
+    {
+        let h_eval = (h / 10).max(100);
+        let mut solver = Sdca::new(&data, lambda, Rng::new(5), &cost_model);
+        let samples = measure(1, 5, || {
+            solver.run_round(&Hinge, h_eval);
+            let o = solver.objectives(&Hinge);
+            assert!(o.gap.is_finite());
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "gap eval full-pass (every=1)".into(),
+            p50_secs: st.p50,
+            updates_per_sec: h_eval as f64 / st.p50,
+        };
+        print_row(&row);
+        rows.push(row);
+
+        let mut solver = Sdca::new(&data, lambda, Rng::new(5), &cost_model);
+        solver.enable_dual_tracking(&Hinge);
+        let mut round = 0usize;
+        let samples = measure(1, 5, || {
+            solver.run_round(&Hinge, h_eval);
+            round += 1;
+            if round % DUAL_RESYNC_EVERY == 0 {
+                solver.resync_dual(&Hinge);
+            }
+            let o = solver.objectives_tracked(&Hinge);
+            assert!(o.gap.is_finite());
+        });
+        let st = Stats::from(&samples);
+        let row = Row {
+            path: "gap eval incremental (every=1)".into(),
+            p50_secs: st.p50,
+            updates_per_sec: h_eval as f64 / st.p50,
         };
         print_row(&row);
         rows.push(row);

@@ -3,12 +3,13 @@
 
 use crate::config::ExpConfig;
 use crate::data::Dataset;
-use crate::metrics::{Trace, TracePoint};
+use crate::metrics::{Evaluator, Trace, TracePoint};
 use crate::session::observer::{EvalEvent, RoundEvent};
 use crate::session::RunCtx;
 use crate::sim::CostModel;
+use crate::solver::local::DUAL_RESYNC_EVERY;
 use crate::solver::sdca::Sdca;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{norm_sq, Rng, Stopwatch};
 
 use super::RunReport;
 
@@ -24,10 +25,17 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let loss = cfg.loss.build();
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
     let mut solver = Sdca::new(data, cfg.lambda, Rng::new(cfg.seed), &cost_model);
+    // The dual rides along with every coordinate step; eval rounds do
+    // one primal pass and no O(n) dual rescan.
+    solver.enable_dual_tracking(&*loss);
     let mut trace = Trace::new("Baseline");
     let sw = Stopwatch::start();
+    let n = data.n() as f64;
+    // Eval scratch hoisted out of the round loop (chunk partials are
+    // reused every eval instead of reallocated).
+    let mut eval = Evaluator::in_memory(data);
 
-    let o0 = solver.objectives(&*loss);
+    let o0 = solver.objectives_tracked(&*loss);
     let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
@@ -46,6 +54,10 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             break;
         }
         solver.run_round(&*loss, cfg.h_local);
+        // Periodic exact rescan cancels incremental rounding drift.
+        if t % DUAL_RESYNC_EVERY == 0 {
+            solver.resync_dual(&*loss);
+        }
         rounds = t;
         let mut stop = ctx
             .observer
@@ -56,21 +68,23 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             })
             .is_break();
         if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
-            let o = solver.objectives(&*loss);
+            let primal = eval.primal(&*loss, &solver.v, cfg.lambda);
+            let dual = solver.dual_sum() / n - 0.5 * cfg.lambda * norm_sq(&solver.v);
+            let gap = primal - dual;
             let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
                 virt_secs: solver.virt_secs,
-                gap: o.gap,
-                primal: o.primal,
-                dual: o.dual,
+                gap,
+                primal,
+                dual,
                 updates: solver.updates,
             };
             trace.push(point.clone());
             if ctx.observer.on_eval(&EvalEvent { point }).is_break() {
                 stop = true;
             }
-            if o.gap <= cfg.gap_threshold {
+            if gap <= cfg.gap_threshold {
                 stop = true;
             }
         }

@@ -16,9 +16,9 @@
 use crate::config::{ExpConfig, SigmaPolicy};
 use crate::data::Dataset;
 use crate::session::observer::ObserverHandle;
-use crate::session::RunCtx;
+use crate::session::{DataSource, RunCtx};
 
-use super::hybrid::{run_with, run_with_obs, ProtocolOpts};
+use super::hybrid::{run_source_with_obs, run_with, run_with_obs, ProtocolOpts};
 use super::master::MergePolicy;
 use super::RunReport;
 
@@ -34,24 +34,41 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     run_obs(data, ctx.cfg, &ctx.observer, ctx.shards.clone())
 }
 
+/// Engine entry point for a [`DataSource`]: sharded sources run the
+/// streamed hybrid path under the synchronous special case.
+pub fn run_source_ctx(source: &DataSource, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    let sync_cfg = sync_overrides(ctx.cfg);
+    let opts = sync_opts(ctx.shards.clone());
+    run_source_with_obs(source, &sync_cfg, &opts, &ctx.observer)
+}
+
+/// The synchronous special case of the hybrid config: 1 core per node,
+/// S = K, Γ = 1, σ = νK.
+fn sync_overrides(cfg: &ExpConfig) -> ExpConfig {
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.r_cores = 1;
+    sync_cfg.s_barrier = sync_cfg.k_nodes;
+    sync_cfg.gamma = 1;
+    sync_cfg.sigma = SigmaPolicy::NuK;
+    sync_cfg
+}
+
+fn sync_opts(shards: Option<Vec<(usize, usize)>>) -> ProtocolOpts {
+    ProtocolOpts {
+        label: "CoCoA+".into(),
+        sync_allreduce: true,
+        policy: MergePolicy::OldestFirst,
+        shards,
+    }
+}
+
 fn run_obs(
     data: &Dataset,
     cfg: &ExpConfig,
     obs: &ObserverHandle<'_>,
     shards: Option<Vec<(usize, usize)>>,
 ) -> anyhow::Result<RunReport> {
-    let mut sync_cfg = cfg.clone();
-    sync_cfg.r_cores = 1;
-    sync_cfg.s_barrier = sync_cfg.k_nodes;
-    sync_cfg.gamma = 1;
-    sync_cfg.sigma = SigmaPolicy::NuK;
-    let opts = ProtocolOpts {
-        label: "CoCoA+".into(),
-        sync_allreduce: true,
-        policy: MergePolicy::OldestFirst,
-        shards,
-    };
-    run_with_obs(data, &sync_cfg, &opts, obs)
+    run_with_obs(data, &sync_overrides(cfg), &sync_opts(shards), obs)
 }
 
 /// The paper's §6.5 variant: run CoCoA+ treating every core as a

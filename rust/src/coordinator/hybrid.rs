@@ -7,9 +7,12 @@ use std::sync::mpsc;
 
 use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
+use crate::loss::Loss;
+use crate::metrics::Evaluator;
 use crate::session::observer::ObserverHandle;
-use crate::session::RunCtx;
+use crate::session::{DataSource, RunCtx};
 use crate::sim::{resolve_stragglers, CostModel, SendCost, UpdateCosts};
+use crate::store::ShardedDataset;
 use crate::util::Rng;
 
 use super::master::{run_master, MasterCfg, MergePolicy};
@@ -73,6 +76,31 @@ pub fn run_with(
     run_with_obs(data, cfg, opts, &ObserverHandle::silent())
 }
 
+/// Engine entry point for a [`DataSource`]: in-memory sources run the
+/// flat path; sharded sources stream per-node slabs and evaluate over
+/// shards, never materializing the whole dataset.
+pub fn run_source_ctx(source: &DataSource, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
+    let opts = ProtocolOpts {
+        policy: ctx.cfg.merge_policy,
+        shards: ctx.shards.clone(),
+        ..ProtocolOpts::default()
+    };
+    run_source_with_obs(source, ctx.cfg, &opts, &ctx.observer)
+}
+
+/// Run against a [`DataSource`] with explicit options.
+pub fn run_source_with_obs(
+    source: &DataSource,
+    cfg: &ExpConfig,
+    opts: &ProtocolOpts,
+    obs: &ObserverHandle<'_>,
+) -> anyhow::Result<RunReport> {
+    match source {
+        DataSource::InMemory(data) => run_with_obs(data, cfg, opts, obs),
+        DataSource::Sharded(store) => run_streamed_obs(store, cfg, opts, obs),
+    }
+}
+
 /// Run with explicit options, streaming events to `obs`.
 pub fn run_with_obs(
     data: &Dataset,
@@ -111,6 +139,115 @@ pub fn run_with_obs(
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
     let costs = UpdateCosts::precompute(data, &cost_model);
     let norms = data.x.row_norms_sq();
+    // Every node reads the full dataset through shared tables; final α
+    // ids are already global (`row_base` 0).
+    let nodes: Vec<NodePlan<'_>> = partition
+        .parts
+        .iter()
+        .cloned()
+        .map(|cells| NodePlan { cells, data, norms: &norms, costs: &costs, row_base: 0 })
+        .collect();
+    let mut eval = Evaluator::in_memory(data);
+    drive(cfg, opts, obs, &mut eval, &*loss, nodes, rng, cost_model)
+}
+
+/// Run the protocol out of core: node `k` trains on a flat slab of its
+/// own shard range (streamed in, one shard resident during assembly)
+/// and the master's objective evaluations stream shards through the
+/// [`Evaluator`] — the full dataset is never assembled in memory. The
+/// per-node tables (`norms`, `costs`) and the per-row arithmetic are
+/// identical to the in-memory path, so final α/v and every traced
+/// objective are bitwise-identical to a run on the materialized data.
+pub fn run_streamed_obs(
+    store: &ShardedDataset,
+    cfg: &ExpConfig,
+    opts: &ProtocolOpts,
+    obs: &ObserverHandle<'_>,
+) -> anyhow::Result<RunReport> {
+    cfg.validate()?;
+    let loss = cfg.loss.build();
+    let k = cfg.k_nodes;
+    // The shard-aware partition never consults the strategy, so the
+    // seed stream matches the in-memory store-backed path (no draw).
+    let rng = Rng::new(cfg.seed);
+    let spans = match &opts.shards {
+        Some(s) => s.clone(),
+        None => store.spans(),
+    };
+    let partition = Partition::from_shards(store.n(), &spans, k, cfg.r_cores)?;
+    partition.validate(store.n()).expect("partition invariant");
+
+    let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
+
+    // Per-node slabs: each node's contiguous shard range, with its own
+    // norm/cost tables. Both tables are per-row quantities, so the
+    // slab-local values equal the global ones row for row.
+    struct Slab {
+        data: Dataset,
+        norms: Vec<f64>,
+        costs: UpdateCosts,
+        base: usize,
+    }
+    let mut slabs = Vec::with_capacity(k);
+    for w in 0..k {
+        let rows = partition.node_indices(w);
+        let (lo, hi) = (rows[0], rows[rows.len() - 1] + 1);
+        let data = store.materialize_range(lo, hi)?;
+        data.validate()?;
+        let norms = data.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&data, &cost_model);
+        slabs.push(Slab { data, norms, costs, base: lo });
+    }
+    let nodes: Vec<NodePlan<'_>> = slabs
+        .iter()
+        .enumerate()
+        .map(|(w, slab)| NodePlan {
+            // Cells carry global row ids; the worker indexes its slab.
+            cells: partition.parts[w]
+                .iter()
+                .map(|cell| cell.iter().map(|&i| i - slab.base).collect())
+                .collect(),
+            data: &slab.data,
+            norms: &slab.norms,
+            costs: &slab.costs,
+            row_base: slab.base,
+        })
+        .collect();
+    let mut eval = Evaluator::sharded(store);
+    drive(cfg, opts, obs, &mut eval, &*loss, nodes, rng, cost_model)
+}
+
+/// One worker node's view of the data for a run: the rows it trains on
+/// (`data` — the full dataset or a streamed slab of it), its per-core
+/// cells in `data`-local row ids, and the per-row tables the local
+/// solver reads.
+struct NodePlan<'a> {
+    cells: Vec<Vec<usize>>,
+    data: &'a Dataset,
+    norms: &'a [f64],
+    costs: &'a UpdateCosts,
+    row_base: usize,
+}
+
+/// The protocol core shared by the in-memory and streamed paths: spawn
+/// one worker thread per [`NodePlan`], run the master (Algorithm 2) in
+/// the calling thread against `eval`, and assemble the report.
+/// `rng` must be positioned after any partition draws so worker forks
+/// match across paths.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    cfg: &ExpConfig,
+    opts: &ProtocolOpts,
+    obs: &ObserverHandle<'_>,
+    eval: &mut Evaluator<'_>,
+    loss: &dyn Loss,
+    nodes: Vec<NodePlan<'_>>,
+    mut rng: Rng,
+    cost_model: CostModel,
+) -> anyhow::Result<RunReport> {
+    let k = nodes.len();
+    let n = eval.n();
+    let d = eval.d();
     let stragglers = resolve_stragglers(&cfg.stragglers, k);
     let sigma = cfg.sigma_value();
 
@@ -119,10 +256,10 @@ pub fn run_with_obs(
     // all-reduce for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for
     // the sync collective; the collective always moves dense vectors).
     let (send_cost, merge_cost, reply_latency) = if opts.sync_allreduce {
-        let ar = cost_model.allreduce_cost(k, data.d());
+        let ar = cost_model.allreduce_cost(k, d);
         (SendCost::Fixed(ar / 2.0), 0.0, ar / 2.0)
     } else {
-        (SendCost::Sized(cost_model), 0.0, cost_model.msg_cost(data.d()))
+        (SendCost::Sized(cost_model), 0.0, cost_model.msg_cost(d))
     };
 
     let master_cfg = MasterCfg {
@@ -156,13 +293,7 @@ pub fn run_with_obs(
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(k);
-        for (w, (cells, wrng)) in partition
-            .parts
-            .iter()
-            .cloned()
-            .zip(worker_rngs.into_iter())
-            .enumerate()
-        {
+        for (w, (plan, wrng)) in nodes.into_iter().zip(worker_rngs.into_iter()).enumerate() {
             let wcfg = WorkerCfg {
                 worker_id: w,
                 h_local: cfg.h_local,
@@ -173,14 +304,15 @@ pub fn run_with_obs(
                 straggler: stragglers[w],
                 send_cost,
                 delta_threshold: cfg.delta_threshold,
+                n_global: n,
+                row_base: plan.row_base,
             };
             let tx = tx_updates.clone();
             let rx = reply_rxs.remove(0);
-            let loss_ref: &dyn crate::loss::Loss = &*loss;
-            let norms_ref = &norms;
-            let costs_ref = &costs;
             handles.push(scope.spawn(move || {
-                run_worker(&wcfg, cells, data, loss_ref, norms_ref, costs_ref, tx, rx, wrng)
+                run_worker(
+                    &wcfg, plan.cells, plan.data, loss, plan.norms, plan.costs, tx, rx, wrng,
+                )
             }));
         }
         // The master must not hold a sender, or shutdown drain never
@@ -191,8 +323,8 @@ pub fn run_with_obs(
             &master_cfg,
             &rx_updates,
             &reply_txs,
-            data,
-            &*loss,
+            eval,
+            loss,
             &opts.label,
             obs,
         ));
@@ -205,8 +337,9 @@ pub fn run_with_obs(
     });
 
     let outcome = outcome.expect("master ran");
-    // Assemble the final global α from the workers' committed values.
-    let mut alpha = vec![0.0; data.n()];
+    // Assemble the final global α from the workers' committed values
+    // (workers report global row ids via their `row_base`).
+    let mut alpha = vec![0.0; n];
     let mut total_updates = 0u64;
     let mut worker_rounds = Vec::with_capacity(k);
     for fin in finals.into_iter().map(|f| f.expect("worker finished")) {

@@ -32,9 +32,8 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
 
-use crate::data::Dataset;
 use crate::loss::Loss;
-use crate::metrics::{Trace, TracePoint};
+use crate::metrics::{Evaluator, Trace, TracePoint};
 use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
 use crate::util::{norm_sq, Stopwatch};
 
@@ -124,9 +123,12 @@ struct Pending {
 /// Run Algorithm 2 until the gap threshold or `max_rounds`.
 ///
 /// `rx` receives worker messages; `txs[k]` replies to worker `k`.
-/// `data`/`loss` are used only for objective evaluation (the paper
+/// `eval`/`loss` are used only for objective evaluation (the paper
 /// computes these distributed / offline; in-process we evaluate
-/// directly — same numbers, zero protocol impact).
+/// directly — same numbers, zero protocol impact). The evaluator may
+/// stream a shard store — the master never needs the flat dataset:
+/// the dual is assembled from the workers' tracked sums, and only the
+/// primal pass touches rows.
 ///
 /// The caller must drop its own clone of the worker-side `Sender` so
 /// that `rx` disconnects when all workers exit (shutdown drain).
@@ -139,7 +141,7 @@ pub fn run_master(
     cfg: &MasterCfg,
     rx: &Receiver<WorkerMsg>,
     txs: &[Sender<MasterReply>],
-    data: &Dataset,
+    eval: &mut Evaluator<'_>,
     loss: &dyn Loss,
     label: &str,
     obs: &ObserverHandle<'_>,
@@ -147,8 +149,8 @@ pub fn run_master(
     let k = cfg.k_nodes;
     assert_eq!(txs.len(), k);
     let s_eff = cfg.s_barrier.min(k);
-    let n = data.n() as f64;
-    let mut v = vec![0.0; data.d()]; // v⁽⁰⁾ = (1/λn)·X·0 = 0
+    let n = eval.n() as f64;
+    let mut v = vec![0.0; eval.d()]; // v⁽⁰⁾ = (1/λn)·X·0 = 0
     let mut gamma_k = vec![1usize; k];
     // Workers we have replied to whose next message is still in flight.
     let mut computing: Vec<bool> = vec![true; k];
@@ -170,8 +172,9 @@ pub fn run_master(
     let mut vtime = 0.0f64;
     let mut total_updates: u64 = 0;
 
-    // Initial point (α = 0, v = 0).
-    let o0 = crate::metrics::objectives(data, loss, &vec![0.0; data.n()], &v, cfg.lambda);
+    // Initial point (α = 0, v = 0) — evaluated without materializing
+    // the zero α vector (n × 8 bytes at paper scale).
+    let o0 = eval.objectives_at_zero(loss, &v, cfg.lambda);
     let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
@@ -289,7 +292,7 @@ pub fn run_master(
         // ---- evaluate + stopping decision ----
         let mut stop = t >= cfg.max_rounds || observer_stop;
         if t % cfg.eval_every == 0 || stop {
-            let primal = crate::metrics::primal_objective(data, loss, &v, cfg.lambda);
+            let primal = eval.primal(loss, &v, cfg.lambda);
             let dual = dual_sums.iter().sum::<f64>() / n - 0.5 * cfg.lambda * norm_sq(&v);
             let gap = primal - dual;
             let point = TracePoint {

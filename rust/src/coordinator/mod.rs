@@ -52,9 +52,29 @@ pub struct RunReport {
 impl RunReport {
     /// Certificate duality gap recomputed from the final α (exact v).
     pub fn certificate_gap(&self, data: &Dataset, cfg: &ExpConfig) -> f64 {
+        self.certificate_gap_eval(&mut crate::metrics::Evaluator::in_memory(data), cfg)
+    }
+
+    /// [`Self::certificate_gap`] against any [`DataSource`]: sharded
+    /// sources stream shards for both the exact `v` recompute and the
+    /// objective sums — same bits as the in-memory certificate, without
+    /// materializing the dataset.
+    pub fn certificate_gap_source(
+        &self,
+        source: &crate::session::DataSource,
+        cfg: &ExpConfig,
+    ) -> f64 {
+        let mut eval = match source {
+            crate::session::DataSource::InMemory(ds) => crate::metrics::Evaluator::in_memory(ds),
+            crate::session::DataSource::Sharded(s) => crate::metrics::Evaluator::sharded(s),
+        };
+        self.certificate_gap_eval(&mut eval, cfg)
+    }
+
+    fn certificate_gap_eval(&self, eval: &mut crate::metrics::Evaluator<'_>, cfg: &ExpConfig) -> f64 {
         let loss = cfg.loss.build();
-        let v = crate::metrics::exact_v(data, &self.alpha, cfg.lambda);
-        crate::metrics::objectives(data, &*loss, &self.alpha, &v, cfg.lambda).gap
+        let v = eval.exact_v(&self.alpha, cfg.lambda);
+        eval.objectives(&*loss, &self.alpha, &v, cfg.lambda).gap
     }
 }
 

@@ -9,13 +9,13 @@
 
 use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
-use crate::metrics::{Trace, TracePoint};
+use crate::metrics::{Evaluator, Trace, TracePoint};
 use crate::session::observer::{EvalEvent, RoundEvent};
 use crate::session::RunCtx;
 use crate::sim::{CostModel, UpdateCosts};
-use crate::solver::local::LocalSolver;
+use crate::solver::local::{LocalSolver, DUAL_RESYNC_EVERY};
 use crate::solver::StepParams;
-use crate::util::{Rng, Stopwatch};
+use crate::util::{norm_sq, Rng, Stopwatch};
 
 use super::RunReport;
 
@@ -36,6 +36,9 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let params = StepParams { lambda: cfg.lambda, n: data.n(), sigma: 1.0 };
     let mut solver =
         LocalSolver::new(partition.parts[0].clone(), data.d(), params, cfg.wild, &mut rng);
+    // α is core-disjoint even in wild mode, so the tracked dual sums
+    // are exact w.r.t. the committed α; only `v` is racy.
+    solver.enable_dual_tracking(data, &*loss);
     let norms = data.x.row_norms_sq();
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
     let costs = UpdateCosts::precompute(data, &cost_model);
@@ -46,8 +49,14 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let mut vtime = 0.0;
     let mut total_updates = 0u64;
     let mut alpha = vec![0.0; data.n()];
+    let n = data.n() as f64;
+    // Eval scratch hoisted out of the round loop: the evaluator's chunk
+    // partials and the v snapshot buffer are reused every `on_eval`
+    // instead of reallocated.
+    let mut eval = Evaluator::in_memory(data);
+    let mut v_buf = vec![0.0f64; data.d()];
 
-    let o0 = crate::metrics::objectives(data, &*loss, &alpha, &vec![0.0; data.d()], cfg.lambda);
+    let o0 = eval.objectives_at_zero(&*loss, &v_buf, cfg.lambda);
     let p0 = TracePoint {
         round: 0,
         wall_secs: 0.0,
@@ -61,12 +70,19 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let initial_stop = ctx.observer.on_eval(&EvalEvent { point: p0 }).is_break();
 
     let mut rounds = 0;
+    let mut commits = 0usize;
     for t in 1..=cfg.max_rounds {
         if initial_stop {
             break;
         }
         let stats = solver.run_round(data, &*loss, &norms, &costs, cfg.h_local);
         solver.commit(1.0); // ν = 1: α_cur is the truth
+        commits += 1;
+        // ν = 1 keeps the tracked dual exact; the periodic rescan only
+        // cancels incremental rounding drift.
+        if commits % DUAL_RESYNC_EVERY == 0 {
+            solver.resync_dual(data, &*loss);
+        }
         total_updates += stats.updates;
         vtime += stats.node_secs();
         rounds = t;
@@ -75,23 +91,25 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             .on_round(&RoundEvent { round: t, vtime, updates: total_updates })
             .is_break();
         if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
-            solver.scatter_alpha(&mut alpha);
-            let v = solver.v.snapshot();
-            let o = crate::metrics::objectives(data, &*loss, &alpha, &v, cfg.lambda);
+            solver.v.snapshot_into(&mut v_buf);
+            // One primal pass; the dual rides on the tracked sums.
+            let primal = eval.primal(&*loss, &v_buf, cfg.lambda);
+            let dual = solver.dual_sum() / n - 0.5 * cfg.lambda * norm_sq(&v_buf);
+            let gap = primal - dual;
             let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
                 virt_secs: vtime,
-                gap: o.gap,
-                primal: o.primal,
-                dual: o.dual,
+                gap,
+                primal,
+                dual,
                 updates: total_updates,
             };
             trace.push(point.clone());
             if ctx.observer.on_eval(&EvalEvent { point }).is_break() {
                 stop = true;
             }
-            if o.gap <= cfg.gap_threshold {
+            if gap <= cfg.gap_threshold {
                 stop = true;
             }
         }

@@ -7,7 +7,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::sim::{SendCost, UpdateCosts};
-use crate::solver::local::LocalSolver;
+use crate::solver::local::{LocalSolver, DUAL_RESYNC_EVERY};
 use crate::solver::StepParams;
 use crate::util::Rng;
 
@@ -31,6 +31,14 @@ pub struct WorkerCfg {
     /// sparse). The merged arithmetic is identical either way; the
     /// simulated send cost tracks the actual wire size.
     pub delta_threshold: f64,
+    /// Global number of rows `n` — the dual is 1/n-scaled globally
+    /// (paper Eq. 4) even when `data` is this node's slab of a shard
+    /// store rather than the full dataset.
+    pub n_global: usize,
+    /// Global row id of `data`'s first row: 0 when `data` is the full
+    /// dataset, the node's slab offset when it was streamed from
+    /// shards. Only used to report final α under global ids.
+    pub row_base: usize,
 }
 
 /// Final state returned when the worker terminates.
@@ -64,11 +72,15 @@ pub fn run_worker(
     rx: Receiver<MasterReply>,
     mut rng: Rng,
 ) -> WorkerFinal {
-    let params = StepParams { lambda: cfg.lambda, n: data.n(), sigma: cfg.sigma };
+    let params = StepParams { lambda: cfg.lambda, n: cfg.n_global, sigma: cfg.sigma };
     let mut solver = LocalSolver::new(cells, data.d(), params, cfg.wild, &mut rng);
     // Dirty-coordinate tracking replaces the O(d) snapshot + diff per
     // round: Δv is read at the touched coordinates only.
     solver.enable_delta_tracking();
+    // Incremental dual tracking replaces the O(n_k) dual rescan per
+    // round: the sums ride along with each update.
+    solver.enable_dual_tracking(data, loss);
+    let mut commits = 0usize;
     // Mirror of the v each round starts from (v_old, Algorithm 1 line
     // 3) — refreshed from the master's replies, never re-snapshotted.
     let mut v_prev = vec![0.0f64; data.d()];
@@ -89,7 +101,15 @@ pub fn run_worker(
         // v, but δ is fixed once the round ends, so committing before
         // the send lets us attach this round's dual sum to the message.
         solver.commit(cfg.nu);
-        let dual_sum = local_dual_sum(&solver, data, loss);
+        commits += 1;
+        // ν = 1 commits take the live α bitwise, so the tracked sums
+        // stay exact and only the periodic drift guard rescans; a
+        // ν ≠ 1 commit moves α off the tracked value and needs the
+        // exact O(n_k) re-accumulation (the old per-round cost).
+        if cfg.nu != 1.0 || commits % DUAL_RESYNC_EVERY == 0 {
+            solver.resync_dual(data, loss);
+        }
+        let dual_sum = solver.dual_sum();
 
         // Δv = (v − v_old)/σ (line 10) at the touched support: the live
         // v accumulated the round's updates at σ·(1/λn) (see
@@ -147,11 +167,11 @@ pub fn run_worker(
         local_rounds += 1;
     }
 
-    // Collect committed α for the final report.
+    // Collect committed α for the final report, under global row ids.
     let mut alpha = Vec::with_capacity(solver.n_local());
     for shard in &solver.shards {
         for (j, &i) in shard.idx.iter().enumerate() {
-            alpha.push((i, shard.alpha_start[j]));
+            alpha.push((cfg.row_base + i, shard.alpha_start[j]));
         }
     }
     WorkerFinal {
@@ -161,17 +181,6 @@ pub fn run_worker(
         updates: total_updates,
         vtime,
     }
-}
-
-/// `Σ_{i∈I_k} −φ*(−α_i)` over the committed α.
-fn local_dual_sum(solver: &LocalSolver, data: &Dataset, loss: &dyn Loss) -> f64 {
-    let mut sum = 0.0;
-    for shard in &solver.shards {
-        for (j, &i) in shard.idx.iter().enumerate() {
-            sum += loss.dual_value(shard.alpha_start[j], data.y[i]);
-        }
-    }
-    sum
 }
 
 #[cfg(test)]
@@ -208,6 +217,8 @@ mod tests {
             straggler: 1.0,
             send_cost: SendCost::Fixed(1e-3),
             delta_threshold: 0.5,
+            n_global: ds.n(),
+            row_base: 0,
         };
         let master = std::thread::spawn(move || {
             let mut v = Vec::new();
@@ -280,6 +291,8 @@ mod tests {
             straggler: 1.0,
             send_cost: SendCost::Sized(CostModel::default()),
             delta_threshold: 1.0, // always sparse
+            n_global: ds.n(),
+            row_base: 0,
         };
         let master = std::thread::spawn(move || {
             let msg = rx_m.recv().unwrap();

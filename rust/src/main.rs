@@ -164,23 +164,23 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     // only the CLI-flag surface.
     let session = Session::from_exp_config(&cfg)?;
     let engine_name = session::canonical_name(algo);
-    // A shard store keeps its spans so multi-node engines partition on
-    // shard boundaries; presets/files load flat.
+    // A shard store stays a streamed source end to end: multi-node
+    // engines partition on its shard boundaries, train per-node slabs,
+    // and evaluate over streamed shards — the flat dataset is never
+    // assembled here. Presets/files load flat.
     let source = session.load_source()?;
-    let spans = source.shard_spans();
-    let data = source.into_dataset()?;
-    let sharded_note = match &spans {
+    let sharded_note = match source.shard_spans() {
         Some(s) => format!(" [{} shards]", s.len()),
         None => String::new(),
     };
     println!(
         "# {} on {}{} (n={}, d={}, nnz={}) λ={} K={} R={} S={} Γ={} H={}",
         algo.name(),
-        data.name,
+        source.name(),
         sharded_note,
-        data.n(),
-        data.d(),
-        data.x.nnz(),
+        source.n(),
+        source.d(),
+        source.nnz(),
         cfg.lambda,
         cfg.k_nodes,
         cfg.r_cores,
@@ -193,7 +193,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let csv = args.get("csv").unwrap().to_string();
     let report = if csv.is_empty() {
         let mut obs = PrintObserver::new();
-        session.run_with_shards(engine_name, &data, spans, &mut obs)?
+        session.run_source_observed(engine_name, &source, &mut obs)?
     } else {
         let file = std::io::BufWriter::new(
             std::fs::File::create(&csv)
@@ -207,7 +207,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
             algo.name()
         };
         let mut obs = Chain(PrintObserver::new(), CsvStreamObserver::new(file, label)?);
-        let report = session.run_with_shards(engine_name, &data, spans, &mut obs)?;
+        let report = session.run_source_observed(engine_name, &source, &mut obs)?;
         if let Some(e) = obs.1.error.take() {
             anyhow::bail!("writing trace CSV {csv}: {e}");
         }
@@ -219,7 +219,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         report.rounds,
         report.total_updates,
         report.vtime,
-        report.certificate_gap(&data, &cfg)
+        report.certificate_gap_source(&source, &cfg)
     );
     Ok(())
 }

@@ -3,17 +3,36 @@
 //! * [`Objectives`] — primal `P(w)`, dual `D(α)` and duality gap
 //!   `P(w(α)) − D(α)`, the paper's convergence measure (§6: "The duality
 //!   gap is measured as P(v) − D(α)").
+//! * [`Evaluator`] / [`EvalSource`] — the evaluation fast path: one
+//!   reusable evaluator folds the objective sums over either an
+//!   in-memory [`Dataset`] or a [`ShardedDataset`] streamed shard by
+//!   shard, on the persistent [`WorkPool`]. Both sources accumulate
+//!   identical fixed 2048-row chunks folded in chunk order, so the
+//!   result is **bitwise** independent of the thread count *and* of
+//!   which source held the rows.
 //! * [`TracePoint`] / [`Trace`] — the (round, wall-time, virtual-time,
 //!   gap) series every figure plots, with CSV export for the bench
 //!   harness.
+//!
+//! # Memory model
+//!
+//! Streamed evaluation never assembles the flat dataset: each eval
+//! thread owns a contiguous range of chunks and walks its rows in
+//! global order with exactly one leased shard resident, swapping
+//! lazily at shard boundaries (a chunk that straddles a boundary keeps
+//! its single running accumulator — splitting it would change the
+//! floating-point association). Peak resident data is therefore
+//! (eval threads × one shard), tracked by the store's residency gauge.
 
 pub mod trace;
 
 pub use trace::{Trace, TracePoint};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, SparseRow};
 use crate::loss::Loss;
-use crate::util::norm_sq;
+use crate::store::sharded::{ShardLease, ShardedDataset};
+use crate::util::pool::DisjointWrites;
+use crate::util::{norm_sq, WorkPool};
 
 /// Primal/dual objective values for one state `(α, v)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,85 +47,318 @@ pub struct Objectives {
 /// bitwise-independent of how many threads ran the chunks.
 const EVAL_CHUNK: usize = 2048;
 
-/// Minimum rows before the evaluation fans out to threads (below this
-/// the spawn overhead dominates the O(nnz) scan).
+/// Minimum rows before the evaluation fans out to pool threads (below
+/// this the hand-off overhead dominates the O(nnz) scan).
 const EVAL_PAR_MIN_ROWS: usize = 4096;
 
-/// Sum `body(lo..hi)` over `[0, n)` in fixed [`EVAL_CHUNK`] chunks,
-/// fanning out to scoped threads for large `n` (§Perf: the duality-gap
-/// evaluation gates every `eval_every` rounds while all K·R solver
-/// cores sit at the barrier — it was the last serial O(n·nnz) scan).
-/// Chunk sums are folded in chunk order regardless of thread count, so
-/// sequential and parallel runs are bitwise identical.
-fn chunked_sum<F>(n: usize, body: F) -> f64
-where
-    F: Fn(std::ops::Range<usize>) -> f64 + Sync,
-{
-    if n == 0 {
-        return 0.0;
+/// Where the rows live during evaluation.
+#[derive(Clone, Copy)]
+pub enum EvalSource<'a> {
+    /// Flat dataset; rows are indexed directly.
+    InMemory(&'a Dataset),
+    /// Packed shard store; rows stream through leased shards.
+    Sharded(&'a ShardedDataset),
+}
+
+impl EvalSource<'_> {
+    pub fn n(&self) -> usize {
+        match self {
+            EvalSource::InMemory(d) => d.n(),
+            EvalSource::Sharded(s) => s.n(),
+        }
     }
-    let chunks = n.div_ceil(EVAL_CHUNK);
-    let mut partials = vec![0.0f64; chunks];
-    let threads = if n >= EVAL_PAR_MIN_ROWS {
-        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(chunks)
-    } else {
-        1
+
+    pub fn d(&self) -> usize {
+        match self {
+            EvalSource::InMemory(d) => d.d(),
+            EvalSource::Sharded(s) => s.d(),
+        }
+    }
+}
+
+/// Reusable objective evaluator: owns the chunk-partial scratch (one
+/// `f64` per 2048-row chunk, reused across `on_eval` rounds instead of
+/// reallocated per call) and the eval-thread policy.
+///
+/// Sharded evaluation panics on shard I/O/CRC failures — the store was
+/// manifest-validated at open, so a failed read mid-run means the
+/// store changed underneath the training job and the run is
+/// unrecoverable.
+pub struct Evaluator<'a> {
+    source: EvalSource<'a>,
+    threads_override: Option<usize>,
+    partials: Vec<f64>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(source: EvalSource<'a>) -> Self {
+        Evaluator { source, threads_override: None, partials: Vec::new() }
+    }
+
+    pub fn in_memory(data: &'a Dataset) -> Self {
+        Evaluator::new(EvalSource::InMemory(data))
+    }
+
+    pub fn sharded(store: &'a ShardedDataset) -> Self {
+        Evaluator::new(EvalSource::Sharded(store))
+    }
+
+    /// Pin the eval fan-out to exactly `threads` workers (tests use
+    /// this to prove thread-count independence; it also overrides the
+    /// small-`n` serial shortcut).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads_override = Some(threads.max(1));
+        self
+    }
+
+    pub fn source(&self) -> EvalSource<'a> {
+        self.source
+    }
+
+    pub fn n(&self) -> usize {
+        self.source.n()
+    }
+
+    pub fn d(&self) -> usize {
+        self.source.d()
+    }
+
+    fn threads_for(&self, n: usize, chunks: usize) -> usize {
+        let t = match self.threads_override {
+            Some(t) => t,
+            None if n < EVAL_PAR_MIN_ROWS => 1,
+            None => WorkPool::global().size(),
+        };
+        t.min(chunks).max(1)
+    }
+
+    /// Fold `Σ_i term(i, x_i, y_i)` over all rows in fixed
+    /// [`EVAL_CHUNK`] chunks; chunk sums are folded in chunk order
+    /// regardless of thread count or source, so sequential, parallel,
+    /// in-memory and streamed runs are all bitwise identical.
+    fn fold<F>(&mut self, term: F) -> f64
+    where
+        F: Fn(usize, SparseRow<'_>, f64) -> f64 + Sync,
+    {
+        let n = self.source.n();
+        if n == 0 {
+            return 0.0;
+        }
+        let chunks = n.div_ceil(EVAL_CHUNK);
+        let threads = self.threads_for(n, chunks);
+        self.partials.clear();
+        self.partials.resize(chunks, 0.0);
+        match self.source {
+            EvalSource::InMemory(data) => {
+                fold_in_memory(data, &mut self.partials, threads, &term)
+            }
+            EvalSource::Sharded(store) => {
+                fold_sharded(store, &mut self.partials, threads, &term)
+            }
+        }
+        self.partials.iter().sum()
+    }
+
+    /// `P(w) = (1/n) Σ φ(x_iᵀw; y_i) + (λ/2)‖w‖²`.
+    pub fn primal(&mut self, loss: &dyn Loss, w: &[f64], lambda: f64) -> f64 {
+        assert_eq!(w.len(), self.source.d());
+        let n = self.source.n() as f64;
+        let sum = self.fold(|_, row, y| loss.primal(row.dot_dense(w), y));
+        sum / n + 0.5 * lambda * norm_sq(w)
+    }
+
+    /// `D(α) = (1/n) Σ (−φ*(−α_i)) − (λ/2)‖v‖²` where the caller
+    /// supplies `v = (1/λn) X α` (possibly the *estimate* shared across
+    /// nodes, exactly as the paper measures it).
+    pub fn dual(&mut self, loss: &dyn Loss, alpha: &[f64], v: &[f64], lambda: f64) -> f64 {
+        assert_eq!(alpha.len(), self.source.n());
+        assert_eq!(v.len(), self.source.d());
+        let n = self.source.n() as f64;
+        let sum = self.fold(|i, _, y| loss.dual_value(alpha[i], y));
+        sum / n - 0.5 * lambda * norm_sq(v)
+    }
+
+    /// [`dual`](Self::dual) at `α = 0` without materializing the zero
+    /// vector (the round-0 trace point of every engine; at paper scale
+    /// the zero vector alone would be n × 8 bytes).
+    pub fn dual_at_zero(&mut self, loss: &dyn Loss, v: &[f64], lambda: f64) -> f64 {
+        assert_eq!(v.len(), self.source.d());
+        let n = self.source.n() as f64;
+        let sum = self.fold(|_, _, y| loss.dual_value(0.0, y));
+        sum / n - 0.5 * lambda * norm_sq(v)
+    }
+
+    /// Full objective triple at `(α, v)`.
+    pub fn objectives(
+        &mut self,
+        loss: &dyn Loss,
+        alpha: &[f64],
+        v: &[f64],
+        lambda: f64,
+    ) -> Objectives {
+        let primal = self.primal(loss, v, lambda);
+        let dual = self.dual(loss, alpha, v, lambda);
+        Objectives { primal, dual, gap: primal - dual }
+    }
+
+    /// Objective triple at `α = 0` (round-0 trace point).
+    pub fn objectives_at_zero(&mut self, loss: &dyn Loss, v: &[f64], lambda: f64) -> Objectives {
+        let primal = self.primal(loss, v, lambda);
+        let dual = self.dual_at_zero(loss, v, lambda);
+        Objectives { primal, dual, gap: primal - dual }
+    }
+
+    /// Recompute `v = (1/λn) X α` exactly from the dual variables,
+    /// streaming shards in disk order for the sharded source — the
+    /// same row order and accumulation as `CsrMatrix::matvec_t`, so
+    /// both sources agree bitwise.
+    pub fn exact_v(&self, alpha: &[f64], lambda: f64) -> Vec<f64> {
+        match self.source {
+            EvalSource::InMemory(data) => exact_v(data, alpha, lambda),
+            EvalSource::Sharded(store) => {
+                assert_eq!(alpha.len(), store.n());
+                let mut out = vec![0.0; store.d()];
+                for (s, (row_start, _)) in store.spans().into_iter().enumerate() {
+                    let shard = lease_or_panic(store, s);
+                    for local in 0..shard.n() {
+                        let ai = alpha[row_start + local];
+                        if ai == 0.0 {
+                            continue;
+                        }
+                        let r = shard.x.row(local);
+                        for (&j, &x) in r.indices.iter().zip(r.values.iter()) {
+                            out[j as usize] += ai * x;
+                        }
+                    }
+                }
+                let scale = 1.0 / (lambda * store.n() as f64);
+                for x in out.iter_mut() {
+                    *x *= scale;
+                }
+                out
+            }
+        }
+    }
+}
+
+fn fold_in_memory(
+    data: &Dataset,
+    partials: &mut [f64],
+    threads: usize,
+    term: &(dyn Fn(usize, SparseRow<'_>, f64) -> f64 + Sync),
+) {
+    let n = data.n();
+    let chunks = partials.len();
+    let chunk_sum = |c: usize| {
+        let lo = c * EVAL_CHUNK;
+        let hi = (lo + EVAL_CHUNK).min(n);
+        let mut s = 0.0;
+        for i in lo..hi {
+            s += term(i, data.x.row(i), data.y[i]);
+        }
+        s
     };
     if threads <= 1 {
         for (c, p) in partials.iter_mut().enumerate() {
-            let lo = c * EVAL_CHUNK;
-            *p = body(lo..(lo + EVAL_CHUNK).min(n));
+            *p = chunk_sum(c);
         }
-    } else {
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(threads);
-            for _ in 0..threads {
-                let next = &next;
-                let body = &body;
-                handles.push(scope.spawn(move || {
-                    let mut local: Vec<(usize, f64)> = Vec::new();
-                    loop {
-                        let c = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if c >= chunks {
-                            break;
-                        }
-                        let lo = c * EVAL_CHUNK;
-                        local.push((c, body(lo..(lo + EVAL_CHUNK).min(n))));
-                    }
-                    local
-                }));
-            }
-            for h in handles {
-                for (c, s) in h.join().expect("eval worker panicked") {
-                    partials[c] = s;
-                }
-            }
-        });
+        return;
     }
-    partials.iter().sum()
-}
-
-/// Evaluate `P(w) = (1/n) Σ φ(x_iᵀw; y_i) + (λ/2)‖w‖²` (row-parallel
-/// for large n; see [`chunked_sum`]).
-pub fn primal_objective(data: &Dataset, loss: &dyn Loss, w: &[f64], lambda: f64) -> f64 {
-    assert_eq!(w.len(), data.d());
-    let n = data.n() as f64;
-    let loss_sum = chunked_sum(data.n(), |range| {
-        let mut s = 0.0;
-        for i in range {
-            let z = data.x.row(i).dot_dense(w);
-            s += loss.primal(z, data.y[i]);
+    // Dynamic chunk claiming: rows are uniform per chunk but nnz is
+    // not, and any claim order yields the same bits (disjoint writes,
+    // in-order fold by the caller).
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let sink = DisjointWrites::new(partials);
+    WorkPool::global().run(threads, &|_| loop {
+        let c = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if c >= chunks {
+            break;
         }
-        s
+        // SAFETY: each chunk index is claimed exactly once.
+        unsafe { sink.set(c, chunk_sum(c)) };
     });
-    loss_sum / n + 0.5 * lambda * norm_sq(w)
 }
 
-/// Evaluate `D(α) = (1/n) Σ (−φ*(−α_i)) − (λ/2)‖v‖²` where the caller
-/// supplies `v = (1/λn) X α` (possibly the *estimate* shared across
-/// nodes, exactly as the paper measures it). Row-parallel like
-/// [`primal_objective`].
+fn fold_sharded(
+    store: &ShardedDataset,
+    partials: &mut [f64],
+    threads: usize,
+    term: &(dyn Fn(usize, SparseRow<'_>, f64) -> f64 + Sync),
+) {
+    let n = store.n();
+    let chunks = partials.len();
+    let spans = store.spans();
+    let sink = DisjointWrites::new(partials);
+    if threads <= 1 {
+        walk_chunk_range(store, &spans, 0, chunks, n, sink, term);
+        return;
+    }
+    // Static contiguous chunk ranges (not dynamic claiming): each
+    // worker walks ascending rows so every shard it touches loads
+    // exactly once, with one lease resident at a time.
+    let per = chunks.div_ceil(threads);
+    WorkPool::global().run(threads, &|t| {
+        let c0 = t * per;
+        let c1 = (c0 + per).min(chunks);
+        if c0 < c1 {
+            walk_chunk_range(store, &spans, c0, c1, n, sink, term);
+        }
+    });
+}
+
+/// Accumulate chunks `[c0, c1)` walking global rows in order with one
+/// leased shard resident. A chunk straddling a shard boundary keeps
+/// its single running accumulator across the swap — splitting the sum
+/// at the boundary would change the floating-point association and
+/// break bitwise parity with the in-memory fold.
+fn walk_chunk_range(
+    store: &ShardedDataset,
+    spans: &[(usize, usize)],
+    c0: usize,
+    c1: usize,
+    n: usize,
+    sink: DisjointWrites,
+    term: &(dyn Fn(usize, SparseRow<'_>, f64) -> f64 + Sync),
+) {
+    let row0 = c0 * EVAL_CHUNK;
+    let mut pos = spans.partition_point(|&(_, end)| end <= row0);
+    let mut resident: Option<ShardLease> = None;
+    for c in c0..c1 {
+        let lo = c * EVAL_CHUNK;
+        let hi = (lo + EVAL_CHUNK).min(n);
+        let mut s = 0.0;
+        for i in lo..hi {
+            while spans[pos].1 <= i {
+                pos += 1;
+                resident = None; // drop before the next load: ≤ 1 resident
+            }
+            if resident.is_none() {
+                resident = Some(lease_or_panic(store, pos));
+            }
+            let shard = resident.as_ref().expect("resident shard");
+            let local = i - spans[pos].0;
+            s += term(i, shard.x.row(local), shard.y[local]);
+        }
+        // SAFETY: chunk ranges are disjoint across workers.
+        unsafe { sink.set(c, s) };
+    }
+}
+
+fn lease_or_panic(store: &ShardedDataset, shard: usize) -> ShardLease {
+    store
+        .lease_shard(shard)
+        .unwrap_or_else(|e| panic!("evaluation failed to stream shard {shard}: {e}"))
+}
+
+/// Evaluate `P(w)` over an in-memory dataset (row-parallel for large
+/// n). Thin wrapper over [`Evaluator`]; hold an `Evaluator` to reuse
+/// its scratch across calls.
+pub fn primal_objective(data: &Dataset, loss: &dyn Loss, w: &[f64], lambda: f64) -> f64 {
+    Evaluator::in_memory(data).primal(loss, w, lambda)
+}
+
+/// Evaluate `D(α)` over an in-memory dataset. Thin wrapper over
+/// [`Evaluator`].
 pub fn dual_objective(
     data: &Dataset,
     loss: &dyn Loss,
@@ -114,17 +366,7 @@ pub fn dual_objective(
     v: &[f64],
     lambda: f64,
 ) -> f64 {
-    assert_eq!(alpha.len(), data.n());
-    assert_eq!(v.len(), data.d());
-    let n = data.n() as f64;
-    let sum = chunked_sum(data.n(), |range| {
-        let mut s = 0.0;
-        for i in range {
-            s += loss.dual_value(alpha[i], data.y[i]);
-        }
-        s
-    });
-    sum / n - 0.5 * lambda * norm_sq(v)
+    Evaluator::in_memory(data).dual(loss, alpha, v, lambda)
 }
 
 /// Recompute `v = (1/λn) X α` exactly from the dual variables.
@@ -146,16 +388,16 @@ pub fn objectives(
     v: &[f64],
     lambda: f64,
 ) -> Objectives {
-    let primal = primal_objective(data, loss, v, lambda);
-    let dual = dual_objective(data, loss, alpha, v, lambda);
-    Objectives { primal, dual, gap: primal - dual }
+    Evaluator::in_memory(data).objectives(loss, alpha, v, lambda)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synth::Preset;
+    use crate::data::Strategy;
     use crate::loss::Hinge;
+    use crate::store::{pack_dataset, PackOptions};
     use crate::util::Rng;
 
     #[test]
@@ -169,6 +411,10 @@ mod tests {
         assert!((o.primal - 1.0).abs() < 1e-12);
         assert_eq!(o.dual, 0.0);
         assert!((o.gap - 1.0).abs() < 1e-12);
+        // The allocation-free zero path is the same computation.
+        let oz = Evaluator::in_memory(&ds).objectives_at_zero(&Hinge, &v, 1e-2);
+        assert_eq!(oz.primal.to_bits(), o.primal.to_bits());
+        assert_eq!(oz.dual.to_bits(), o.dual.to_bits());
     }
 
     #[test]
@@ -218,6 +464,47 @@ mod tests {
         let d1 = dual_objective(&ds, &Hinge, &alpha, &v, 1e-2);
         let d2 = dual_objective(&ds, &Hinge, &alpha, &v, 1e-2);
         assert_eq!(d1.to_bits(), d2.to_bits());
+    }
+
+    /// Streamed shard evaluation is bitwise-identical to the in-memory
+    /// fold, including at shard sizes that put boundaries mid-chunk.
+    #[test]
+    fn sharded_eval_bitwise_matches_in_memory() {
+        let mut rng = Rng::new(31);
+        let n = super::EVAL_PAR_MIN_ROWS + 901;
+        let d = 32;
+        let x = crate::data::CsrMatrix::random(&mut rng, n, d, 5);
+        let y: Vec<f64> = (0..n).map(|_| if rng.next_bool(0.5) { 1.0 } else { -1.0 }).collect();
+        let ds = crate::data::Dataset::new(x, y).with_name("stream-eval");
+        let dir = std::env::temp_dir().join("hybrid_dca_metrics_stream");
+        std::fs::remove_dir_all(&dir).ok();
+        // 700-row shards: boundaries land mid-chunk (700, 1400, …
+        // are not multiples of 2048), exercising the accumulator
+        // hand-off across a lazy shard swap.
+        let opts = PackOptions { name: "stream".into(), shard_rows: 700, ..Default::default() };
+        pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+        let store = crate::store::open(&dir).unwrap();
+
+        let w: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let alpha: Vec<f64> = ds.y.iter().map(|&yy| 0.25 * yy).collect();
+        let v = exact_v(&ds, &alpha, 1e-2);
+
+        let mem = Evaluator::in_memory(&ds).objectives(&Hinge, &alpha, &v, 1e-2);
+        let streamed = Evaluator::sharded(&store).objectives(&Hinge, &alpha, &v, 1e-2);
+        assert_eq!(mem.primal.to_bits(), streamed.primal.to_bits());
+        assert_eq!(mem.dual.to_bits(), streamed.dual.to_bits());
+
+        let pm = Evaluator::in_memory(&ds).primal(&Hinge, &w, 1e-2);
+        let ps = Evaluator::sharded(&store).primal(&Hinge, &w, 1e-2);
+        assert_eq!(pm.to_bits(), ps.to_bits());
+
+        let vm = Evaluator::in_memory(&ds).exact_v(&alpha, 1e-2);
+        let vs = Evaluator::sharded(&store).exact_v(&alpha, 1e-2);
+        assert_eq!(
+            vm.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            vs.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -62,6 +62,22 @@ pub trait SolverEngine: Send + Sync {
     /// Run to completion (gap threshold, round budget, or observer
     /// break) and return the final report.
     fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport>;
+
+    /// Run against a [`DataSource`](super::DataSource). The default
+    /// materializes sharded sources flat and delegates to
+    /// [`run`](Self::run) — correct for any engine, and the honest
+    /// contract for single-node algorithms that need every row
+    /// resident anyway. Multi-node engines override this to stream
+    /// per-node slabs and evaluate over shards without ever assembling
+    /// the full dataset.
+    fn run_source(
+        &self,
+        source: &super::DataSource,
+        ctx: &RunCtx<'_>,
+    ) -> anyhow::Result<RunReport> {
+        let data = source.as_dataset()?;
+        self.run(&data, ctx)
+    }
 }
 
 type Registry = RwLock<BTreeMap<String, Arc<dyn SolverEngine>>>;
@@ -156,6 +172,14 @@ impl SolverEngine for CocoaPlusEngine {
     fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         crate::coordinator::cocoa::run_ctx(data, ctx)
     }
+
+    fn run_source(
+        &self,
+        source: &super::DataSource,
+        ctx: &RunCtx<'_>,
+    ) -> anyhow::Result<RunReport> {
+        crate::coordinator::cocoa::run_source_ctx(source, ctx)
+    }
 }
 
 /// PassCoDe (Hsieh et al. 2015): single node, R async cores.
@@ -181,6 +205,14 @@ impl SolverEngine for HybridDcaEngine {
 
     fn run(&self, data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         crate::coordinator::hybrid::run_ctx(data, ctx)
+    }
+
+    fn run_source(
+        &self,
+        source: &super::DataSource,
+        ctx: &RunCtx<'_>,
+    ) -> anyhow::Result<RunReport> {
+        crate::coordinator::hybrid::run_source_ctx(source, ctx)
     }
 }
 

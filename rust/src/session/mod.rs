@@ -316,16 +316,17 @@ impl Session {
 
     /// Run an engine against a [`DataSource`], silent. Sharded sources
     /// carry their spans into the engine so the node partition follows
-    /// shard boundaries.
+    /// shard boundaries, and multi-node engines stream shards instead
+    /// of materializing the dataset
+    /// ([`SolverEngine::run_source`](engine::SolverEngine::run_source)).
     pub fn run_source(&self, engine_name: &str, source: &DataSource) -> anyhow::Result<RunReport> {
         let engine = engine::resolve(engine_name)?;
         let cfg = self.to_exp_config();
-        let data = source.as_dataset()?;
         let mut ctx = RunCtx::silent(&cfg);
         if let Some(spans) = source.shard_spans() {
             ctx = ctx.with_shards(spans);
         }
-        engine.run(&data, &ctx)
+        engine.run_source(source, &ctx)
     }
 
     /// [`Self::run_source`] streaming progress to `obs`.
@@ -335,8 +336,13 @@ impl Session {
         source: &DataSource,
         obs: &mut dyn Observer,
     ) -> anyhow::Result<RunReport> {
-        let data = source.as_dataset()?;
-        self.run_with_shards(engine_name, &data, source.shard_spans(), obs)
+        let engine = engine::resolve(engine_name)?;
+        let cfg = self.to_exp_config();
+        let mut ctx = RunCtx::new(&cfg, obs);
+        if let Some(spans) = source.shard_spans() {
+            ctx = ctx.with_shards(spans);
+        }
+        engine.run_source(source, &ctx)
     }
 
     /// Resolve the session's dataset (preset, LIBSVM file, or shard

@@ -184,6 +184,13 @@ pub fn run_core<L: Loss + ?Sized>(
     // factor, and without it the ν-weighted merge oscillates. Δv is
     // un-scaled back to (1/λn)Xδ before sending; see the worker.)
     let v_scale = params.v_scale() * params.sigma;
+    // Incremental dual tracking (§Perf, ISSUE 6): carry the shard's
+    // running Σ dual_value(α_i, y_i) through the round in a register,
+    // updated O(1) per applied step, so the duality gap needs no
+    // O(n_k) dual rescan at eval time. `None` keeps the branch out of
+    // baseline-comparable runs.
+    let track_dual = shard.dual_cur.is_some();
+    let mut dual_acc = shard.dual_cur.unwrap_or(0.0);
     for _ in 0..h {
         let j = shard.rng.next_below(len);
         // SAFETY: j < len, and the round-entry asserts above prove
@@ -203,6 +210,9 @@ pub fn run_core<L: Loss + ?Sized>(
         let eps = a_new - a_old;
         if eps != 0.0 {
             shard.alpha_cur[j] = a_new;
+            if track_dual {
+                dual_acc += loss.dual_value(a_new, y) - loss.dual_value(a_old, y);
+            }
             // SAFETY: feature indices < d ≤ v.len() and ≤ dirty.dim().
             unsafe {
                 if wild {
@@ -217,6 +227,9 @@ pub fn run_core<L: Loss + ?Sized>(
         }
         out.applied += 1;
         out.secs += costs.cost(i);
+    }
+    if track_dual {
+        shard.dual_cur = Some(dual_acc);
     }
     out
 }

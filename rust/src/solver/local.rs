@@ -40,14 +40,31 @@ pub struct CoreShard {
     /// [`LocalSolver::enable_delta_tracking`]. Core-owned: no
     /// synchronization on the hot path.
     pub dirty: Option<DirtySet>,
+    /// Running `Σ_j dual_value(α_cur[j], y_j)` over this shard's rows,
+    /// maintained O(1) per applied step by the kernel when tracking is
+    /// enabled ([`LocalSolver::enable_dual_tracking`]). Core-owned.
+    pub dual_cur: Option<f64>,
 }
 
 impl CoreShard {
     fn new(idx: Vec<usize>, rng: Rng) -> Self {
         let n = idx.len();
-        Self { idx, alpha_start: vec![0.0; n], alpha_cur: vec![0.0; n], rng, dirty: None }
+        Self {
+            idx,
+            alpha_start: vec![0.0; n],
+            alpha_cur: vec![0.0; n],
+            rng,
+            dirty: None,
+            dual_cur: None,
+        }
     }
 }
+
+/// Commit cadence for the tracked dual's exact re-accumulation: the
+/// running sums absorb one rounding error per applied step, so every
+/// `DUAL_RESYNC_EVERY` commits callers recompute them from the
+/// committed α (O(n_k), same cost as one pre-tracking eval scan).
+pub const DUAL_RESYNC_EVERY: usize = 64;
 
 /// Statistics from one local round.
 #[derive(Debug, Clone, PartialEq)]
@@ -188,8 +205,19 @@ impl LocalSolver {
 
     /// Commit the round: `α ← α_start + ν·δ` (Algorithm 1 line 12) and
     /// reset the round baseline.
+    ///
+    /// ν = 1 takes the live α verbatim: `start + 1·(cur − start)` can
+    /// differ from `cur` by one rounding in the last place, and the
+    /// bitwise identity is what keeps the tracked dual sums
+    /// ([`Self::dual_sum`]) exact across full-weight commits. For
+    /// ν ≠ 1 the committed α is genuinely new, so dual-tracking
+    /// callers must [`Self::resync_dual`] afterwards.
     pub fn commit(&mut self, nu: f64) {
         for shard in self.shards.iter_mut() {
+            if nu == 1.0 {
+                shard.alpha_start.copy_from_slice(&shard.alpha_cur);
+                continue;
+            }
             for j in 0..shard.idx.len() {
                 let delta = shard.alpha_cur[j] - shard.alpha_start[j];
                 let committed = shard.alpha_start[j] + nu * delta;
@@ -197,6 +225,43 @@ impl LocalSolver {
                 shard.alpha_cur[j] = committed;
             }
         }
+    }
+
+    /// Turn on incremental dual tracking: each core carries its
+    /// shard's `Σ dual_value(α_i, y_i)` as a running sum updated O(1)
+    /// per applied step, so reading the node's dual contribution
+    /// ([`Self::dual_sum`]) is O(R) instead of an O(n_k) rescan.
+    pub fn enable_dual_tracking(&mut self, data: &Dataset, loss: &dyn Loss) {
+        for shard in self.shards.iter_mut() {
+            shard.dual_cur = Some(0.0);
+        }
+        self.resync_dual(data, loss);
+    }
+
+    /// Whether [`Self::enable_dual_tracking`] was called.
+    pub fn dual_tracking(&self) -> bool {
+        self.shards.iter().any(|s| s.dual_cur.is_some())
+    }
+
+    /// Exactly re-accumulate every shard's tracked dual sum from the
+    /// committed α (left-to-right in shard index order — the reference
+    /// order the 0-ULP resync property test pins). Required after a
+    /// ν ≠ 1 commit and periodically ([`DUAL_RESYNC_EVERY`]) to cancel
+    /// incremental rounding drift.
+    pub fn resync_dual(&mut self, data: &Dataset, loss: &dyn Loss) {
+        for shard in self.shards.iter_mut() {
+            let mut s = 0.0;
+            for (j, &i) in shard.idx.iter().enumerate() {
+                s += loss.dual_value(shard.alpha_start[j], data.y[i]);
+            }
+            shard.dual_cur = Some(s);
+        }
+    }
+
+    /// The node's tracked `Σ_i dual_value(α_i, y_i)` — per-core sums
+    /// folded in shard order. Panics if tracking was never enabled.
+    pub fn dual_sum(&self) -> f64 {
+        self.shards.iter().map(|s| s.dual_cur.expect("dual tracking not enabled")).sum()
     }
 
     /// Scatter this node's committed α into a global dense vector.
@@ -303,6 +368,65 @@ mod tests {
         for (j, &committed) in s.shards[0].alpha_start.iter().enumerate() {
             let expected = 0.5 * live[j]; // started from 0
             assert!((committed - expected).abs() < 1e-15);
+        }
+    }
+
+    /// Exact reference for the tracked dual: per-shard left-to-right
+    /// sums folded in shard order — the same association as
+    /// `resync_dual` + `dual_sum`.
+    fn exact_dual_sum(s: &LocalSolver, ds: &Dataset) -> f64 {
+        let mut total = 0.0;
+        for shard in &s.shards {
+            let mut sh = 0.0;
+            for (j, &i) in shard.idx.iter().enumerate() {
+                sh += Hinge.dual_value(shard.alpha_start[j], ds.y[i]);
+            }
+            total += sh;
+        }
+        total
+    }
+
+    #[test]
+    fn tracked_dual_follows_exact_and_resyncs_to_zero_ulp() {
+        let (ds, mut s, norms, costs) = setup(2);
+        s.enable_dual_tracking(&ds, &Hinge);
+        assert!(s.dual_tracking());
+        for round in 0..10 {
+            s.run_round(&ds, &Hinge, &norms, &costs, 200);
+            s.commit(1.0); // bitwise α take-over keeps tracking exact
+            let tracked = s.dual_sum();
+            let exact = exact_dual_sum(&s, &ds);
+            assert!(
+                (tracked - exact).abs() <= 1e-9 * (1.0 + exact.abs()),
+                "round {round}: tracked {tracked} drifted from exact {exact}"
+            );
+        }
+        s.resync_dual(&ds, &Hinge);
+        let exact = exact_dual_sum(&s, &ds);
+        assert_eq!(s.dual_sum().to_bits(), exact.to_bits(), "post-resync not 0 ULP");
+    }
+
+    #[test]
+    fn nu_commit_requires_resync_then_agrees() {
+        let (ds, mut s, norms, costs) = setup(1);
+        s.enable_dual_tracking(&ds, &Hinge);
+        s.run_round(&ds, &Hinge, &norms, &costs, 300);
+        s.commit(0.5); // committed α ≠ live α: tracked sums are stale
+        s.resync_dual(&ds, &Hinge);
+        let exact = exact_dual_sum(&s, &ds);
+        assert_eq!(s.dual_sum().to_bits(), exact.to_bits());
+    }
+
+    #[test]
+    fn commit_nu1_takes_live_alpha_bitwise() {
+        let (ds, mut s, norms, costs) = setup(2);
+        s.run_round(&ds, &Hinge, &norms, &costs, 200);
+        let live: Vec<Vec<f64>> = s.shards.iter().map(|sh| sh.alpha_cur.clone()).collect();
+        s.commit(1.0);
+        for (shard, live) in s.shards.iter().zip(&live) {
+            for (a, b) in shard.alpha_start.iter().zip(live) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

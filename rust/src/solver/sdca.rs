@@ -27,6 +27,10 @@ pub struct Sdca<'d> {
     /// Cumulative virtual compute seconds.
     pub virt_secs: f64,
     costs: UpdateCosts,
+    /// Running `Σ_i dual_value(α_i, y_i)`, maintained O(1) per step
+    /// when enabled ([`Self::enable_dual_tracking`]) so evaluation
+    /// needs no O(n) dual rescan.
+    dual_cur: Option<f64>,
 }
 
 impl<'d> Sdca<'d> {
@@ -52,8 +56,33 @@ impl<'d> Sdca<'d> {
             updates: 0,
             virt_secs: 0.0,
             costs: UpdateCosts::precompute(data, cost_model),
+            dual_cur: None,
             data,
         }
+    }
+
+    /// Turn on incremental dual tracking (initialized by an exact
+    /// accumulation over the current α).
+    pub fn enable_dual_tracking(&mut self, loss: &dyn Loss) {
+        self.dual_cur = Some(0.0);
+        self.resync_dual(loss);
+    }
+
+    /// Exactly re-accumulate the tracked dual sum from α, left to
+    /// right — cancels incremental rounding drift
+    /// ([`crate::solver::local::DUAL_RESYNC_EVERY`] cadence).
+    pub fn resync_dual(&mut self, loss: &dyn Loss) {
+        let mut s = 0.0;
+        for (i, &a) in self.alpha.iter().enumerate() {
+            s += loss.dual_value(a, self.data.y[i]);
+        }
+        self.dual_cur = Some(s);
+    }
+
+    /// The tracked `Σ_i dual_value(α_i, y_i)`. Panics if tracking was
+    /// never enabled.
+    pub fn dual_sum(&self) -> f64 {
+        self.dual_cur.expect("dual tracking not enabled")
     }
 
     /// Apply one exact coordinate update at a random index. Generic
@@ -75,7 +104,12 @@ impl<'d> Sdca<'d> {
         let eps =
             coordinate_epsilon(loss, self.alpha[i], self.data.y[i], m, self.norms[i], &self.params);
         if eps != 0.0 {
+            let a_old = self.alpha[i];
             self.alpha[i] += eps;
+            if let Some(dual) = self.dual_cur.as_mut() {
+                let y = self.data.y[i];
+                *dual += loss.dual_value(self.alpha[i], y) - loss.dual_value(a_old, y);
+            }
             let scale = eps * self.params.v_scale();
             // SAFETY: same bounds argument as the dot above.
             unsafe {
@@ -108,6 +142,16 @@ impl<'d> Sdca<'d> {
     /// Current objectives measured against the maintained `v`.
     pub fn objectives(&self, loss: &dyn Loss) -> crate::metrics::Objectives {
         crate::metrics::objectives(self.data, loss, &self.alpha, &self.v, self.params.lambda)
+    }
+
+    /// Objectives using the tracked dual: one primal pass, zero dual
+    /// pass. Requires [`Self::enable_dual_tracking`].
+    pub fn objectives_tracked(&self, loss: &dyn Loss) -> crate::metrics::Objectives {
+        let lambda = self.params.lambda;
+        let primal = crate::metrics::primal_objective(self.data, loss, &self.v, lambda);
+        let dual = self.dual_sum() / self.params.n as f64
+            - 0.5 * lambda * crate::util::norm_sq(&self.v);
+        crate::metrics::Objectives { primal, dual, gap: primal - dual }
     }
 }
 
@@ -176,6 +220,34 @@ mod tests {
             let gap = s.objectives(loss).gap;
             assert!(gap < 1e-5, "{}: gap {gap}", loss.name());
         }
+    }
+
+    #[test]
+    fn tracked_dual_matches_full_recompute() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(7));
+        let mut s = solver(&ds, 1e-2);
+        let loss = Hinge;
+        s.enable_dual_tracking(&loss);
+        for _ in 0..10 {
+            s.run_round(&loss, 200);
+            let tracked = s.objectives_tracked(&loss);
+            let full = s.objectives(&loss);
+            assert!(
+                (tracked.dual - full.dual).abs() <= 1e-9 * (1.0 + full.dual.abs()),
+                "tracked dual {} drifted from {}",
+                tracked.dual,
+                full.dual
+            );
+            assert_eq!(tracked.primal.to_bits(), full.primal.to_bits());
+        }
+        // Post-resync the tracked sum equals the left-to-right exact
+        // accumulation to the last bit.
+        s.resync_dual(&loss);
+        let mut exact = 0.0;
+        for (i, &a) in s.alpha.iter().enumerate() {
+            exact += loss.dual_value(a, ds.y[i]);
+        }
+        assert_eq!(s.dual_sum().to_bits(), exact.to_bits());
     }
 
     #[test]

@@ -41,4 +41,4 @@ pub mod sharded;
 pub use format::{crc32, decode_shard, encode_shard, ShardHeader};
 pub use manifest::{Manifest, ShardEntry, ShardStats, MANIFEST_FILE};
 pub use pack::{pack, pack_dataset, pack_file, PackOptions, PackReport};
-pub use sharded::{open, ShardedDataset};
+pub use sharded::{open, ShardLease, ShardedDataset};

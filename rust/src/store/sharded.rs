@@ -8,20 +8,66 @@
 //!
 //! [`ShardedDataset::materialize`]: ShardedDataset::materialize
 
+use std::cell::RefCell;
 use std::io::Read;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::data::csr::CsrMatrix;
 use crate::data::Dataset;
+use crate::util::WorkPool;
 
 use super::format;
 use super::manifest::Manifest;
+
+/// Shard-residency gauge: how many leased (decoded, live) shards exist
+/// right now, and the high-water mark since the last reset. The
+/// out-of-core evaluation contract — peak resident data ≤ eval threads
+/// × one shard — is asserted against this in tests.
+#[derive(Debug, Default)]
+struct Residency {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
 
 /// An open shard store.
 #[derive(Debug, Clone)]
 pub struct ShardedDataset {
     dir: PathBuf,
     manifest: Manifest,
+    /// Shared across clones so every reader of this store feeds one
+    /// gauge.
+    residency: Arc<Residency>,
+}
+
+/// A decoded shard whose lifetime is tracked by the store's residency
+/// gauge: the gauge increments when the lease is created and
+/// decrements when it drops. Derefs to the decoded [`Dataset`].
+#[derive(Debug)]
+pub struct ShardLease {
+    data: Dataset,
+    residency: Arc<Residency>,
+}
+
+impl std::ops::Deref for ShardLease {
+    type Target = Dataset;
+    fn deref(&self) -> &Dataset {
+        &self.data
+    }
+}
+
+impl Drop for ShardLease {
+    fn drop(&mut self) {
+        self.residency.current.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// Reusable per-thread raw-byte buffer for shard reads. Pool threads
+// (`util::pool`) persist across evaluation rounds, so this scratch is
+// allocated once per thread instead of once per `on_eval` call.
+thread_local! {
+    static SHARD_BUF: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
 }
 
 /// Open a store directory (parses and validates `manifest.json` only —
@@ -29,7 +75,7 @@ pub struct ShardedDataset {
 pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<ShardedDataset> {
     let dir = dir.as_ref().to_path_buf();
     let manifest = Manifest::load(&dir)?;
-    Ok(ShardedDataset { dir, manifest })
+    Ok(ShardedDataset { dir, manifest, residency: Arc::default() })
 }
 
 impl ShardedDataset {
@@ -71,8 +117,50 @@ impl ShardedDataset {
     }
 
     /// Read and decode one shard into an in-memory [`Dataset`] whose
-    /// matrix is widened to the global `d`. Memory: one shard.
+    /// matrix is widened to the global `d`. Memory: one shard. The raw
+    /// file bytes go through a per-thread reusable buffer, so repeated
+    /// loads on the same (pool) thread do not reallocate the read
+    /// buffer.
     pub fn load_shard(&self, i: usize) -> anyhow::Result<Dataset> {
+        SHARD_BUF.with(|buf| self.load_shard_with(i, &mut buf.borrow_mut()))
+    }
+
+    /// [`load_shard`](Self::load_shard) plus residency accounting: the
+    /// returned lease keeps the store's shard-residency gauge
+    /// incremented until it drops. Every path with a memory contract
+    /// (streamed evaluation, slab assembly) loads through leases.
+    pub fn lease_shard(&self, i: usize) -> anyhow::Result<ShardLease> {
+        let cur = self.residency.current.fetch_add(1, Ordering::SeqCst) + 1;
+        self.residency.peak.fetch_max(cur, Ordering::SeqCst);
+        match self.load_shard(i) {
+            Ok(data) => Ok(ShardLease { data, residency: Arc::clone(&self.residency) }),
+            Err(e) => {
+                self.residency.current.fetch_sub(1, Ordering::SeqCst);
+                Err(e)
+            }
+        }
+    }
+
+    /// Number of shard leases alive right now.
+    pub fn residency_current(&self) -> usize {
+        self.residency.current.load(Ordering::SeqCst)
+    }
+
+    /// High-water mark of concurrently leased shards since open (or the
+    /// last [`reset_residency_peak`](Self::reset_residency_peak)).
+    pub fn residency_peak(&self) -> usize {
+        self.residency.peak.load(Ordering::SeqCst)
+    }
+
+    /// Reset the high-water mark (tests bracket one operation with
+    /// this and [`residency_peak`](Self::residency_peak)).
+    pub fn reset_residency_peak(&self) {
+        self.residency.peak.store(self.residency.current.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Core of [`load_shard`](Self::load_shard) with a caller-supplied
+    /// byte buffer (cleared, then reused at its grown capacity).
+    fn load_shard_with(&self, i: usize, bytes: &mut Vec<u8>) -> anyhow::Result<Dataset> {
         let entry = self
             .manifest
             .shards
@@ -81,11 +169,12 @@ impl ShardedDataset {
                 anyhow::anyhow!("shard {i} out of range ({} shards)", self.num_shards())
             })?;
         let path = self.dir.join(&entry.path);
-        let mut bytes = Vec::with_capacity(entry.bytes as usize);
+        bytes.clear();
+        bytes.reserve(entry.bytes as usize);
         std::fs::File::open(&path)
-            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .and_then(|mut f| f.read_to_end(bytes))
             .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
-        let (header, ds) = format::decode_shard(&bytes, self.d())
+        let (header, ds) = format::decode_shard(&*bytes, self.d())
             .map_err(|e| anyhow::anyhow!("decode {}: {e}", path.display()))?;
         // Cross-check file ↔ manifest: the decoder proved the file is
         // *internally* consistent; the manifest's recorded CRC proves
@@ -126,21 +215,96 @@ impl ShardedDataset {
         Ok(ds.with_name(format!("{}[{}]", self.manifest.name, i)))
     }
 
-    /// Decode every shard (CRC + full structural validation) without
-    /// keeping more than one in memory. The `data inspect --verify`
-    /// backend.
+    /// Decode every shard (CRC + full structural validation), fanned
+    /// out across the global [`WorkPool`] — each pool thread holds at
+    /// most one decoded shard, so peak memory is (pool threads × one
+    /// shard). The `data inspect --verify` backend.
     pub fn verify(&self) -> anyhow::Result<()> {
-        for i in 0..self.num_shards() {
-            let ds = self.load_shard(i)?;
-            let entry = &self.manifest.shards[i];
-            anyhow::ensure!(
-                ds.n() == entry.rows(),
-                "shard {i}: decoded {} rows, manifest says {}",
-                ds.n(),
-                entry.rows()
-            );
+        let shards = self.num_shards();
+        let pool = WorkPool::global();
+        let workers = pool.size().min(shards);
+        if workers <= 1 {
+            for i in 0..shards {
+                self.check_shard(i)?;
+            }
+            return Ok(());
         }
+        let next = AtomicUsize::new(0);
+        // Keep only the lowest-index failure so the parallel scan
+        // reports the same error a serial one would have hit first.
+        let first_err: Mutex<Option<(usize, anyhow::Error)>> = Mutex::new(None);
+        pool.run(workers, &|_| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= shards {
+                break;
+            }
+            if let Err(e) = self.check_shard(i) {
+                let mut slot = first_err.lock().expect("verify error slot");
+                if slot.as_ref().map_or(true, |(j, _)| i < *j) {
+                    *slot = Some((i, e));
+                }
+            }
+        });
+        match first_err.into_inner().expect("verify error slot") {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn check_shard(&self, i: usize) -> anyhow::Result<()> {
+        let ds = self.load_shard(i)?;
+        let entry = &self.manifest.shards[i];
+        anyhow::ensure!(
+            ds.n() == entry.rows(),
+            "shard {i}: decoded {} rows, manifest says {}",
+            ds.n(),
+            entry.rows()
+        );
         Ok(())
+    }
+
+    /// Assemble the contiguous row range `[lo, hi)` as one flat slab,
+    /// streaming its shards one at a time through leases (≤ 1 shard
+    /// resident beyond the slab being built). The range must align to
+    /// shard boundaries — shard-aware node partitions
+    /// ([`Partition::from_shards`](crate::data::Partition::from_shards))
+    /// produce exactly such ranges.
+    pub fn materialize_range(&self, lo: usize, hi: usize) -> anyhow::Result<Dataset> {
+        anyhow::ensure!(
+            lo < hi && hi <= self.n(),
+            "row range [{lo}, {hi}) is not a non-empty subrange of 0..{}",
+            self.n()
+        );
+        let spans = self.spans();
+        let first = spans.partition_point(|&(_, end)| end <= lo);
+        anyhow::ensure!(
+            first < spans.len() && spans[first].0 == lo,
+            "range start {lo} is not a shard boundary"
+        );
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut labels = Vec::with_capacity(hi - lo);
+        let mut s = first;
+        let mut row = lo;
+        while row < hi {
+            anyhow::ensure!(
+                s < spans.len() && spans[s].1 <= hi,
+                "range end {hi} is not a shard boundary"
+            );
+            let shard = self.lease_shard(s)?;
+            let offset = indices.len();
+            for &p in &shard.x.indptr[1..] {
+                indptr.push(offset + p);
+            }
+            indices.extend_from_slice(&shard.x.indices);
+            values.extend_from_slice(&shard.x.values);
+            labels.extend_from_slice(&shard.y);
+            row = spans[s].1;
+            s += 1;
+        }
+        let x = CsrMatrix { indptr, indices, values, dim: self.d().max(1) };
+        Ok(Dataset::new(x, labels).with_name(format!("{}[{lo}..{hi})", self.manifest.name)))
     }
 
     /// Assemble the full in-memory dataset by streaming shards in disk
@@ -230,6 +394,32 @@ mod tests {
     }
 
     #[test]
+    fn materialize_range_streams_one_shard_at_a_time() {
+        let (ds, dir) = packed_tiny("range", 32);
+        let store = open(&dir).unwrap();
+        let spans = store.spans();
+        assert!(spans.len() >= 3, "need ≥ 3 shards for a mid-store slab");
+        let (lo, hi) = (spans[1].0, spans[2].1);
+        store.reset_residency_peak();
+        let slab = store.materialize_range(lo, hi).unwrap();
+        assert_eq!(store.residency_peak(), 1, "one transient lease per shard");
+        assert_eq!(store.residency_current(), 0);
+        assert_eq!(slab.n(), hi - lo);
+        assert_eq!(slab.d(), ds.d());
+        for local in 0..slab.n() {
+            let g = lo + local;
+            assert_eq!(slab.x.row(local).indices, ds.x.row(g).indices);
+            assert_eq!(slab.x.row(local).values, ds.x.row(g).values);
+            assert_eq!(slab.y[local], ds.y[g]);
+        }
+        // Ranges off shard boundaries fail loudly instead of slicing a
+        // shard.
+        assert!(store.materialize_range(lo + 1, hi).is_err());
+        assert!(store.materialize_range(lo, hi - 1).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn corrupt_shard_caught_on_load() {
         let (_, dir) = packed_tiny("corrupt", 64);
         let store = open(&dir).unwrap();
@@ -260,6 +450,36 @@ mod tests {
         assert!(err.to_string().contains("manifest"), "{err}");
         assert!(store.verify().is_err());
         store.load_shard(0).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lease_residency_accounting() {
+        let (_, dir) = packed_tiny("lease", 64);
+        let store = open(&dir).unwrap();
+        assert_eq!(store.residency_current(), 0);
+        assert_eq!(store.residency_peak(), 0);
+        {
+            let a = store.lease_shard(0).unwrap();
+            assert_eq!(a.n(), 64);
+            assert_eq!(store.residency_current(), 1);
+            let b = store.lease_shard(1).unwrap();
+            assert_eq!(b.n(), 64);
+            assert_eq!(store.residency_current(), 2);
+            assert_eq!(store.residency_peak(), 2);
+        }
+        assert_eq!(store.residency_current(), 0);
+        assert_eq!(store.residency_peak(), 2, "peak is a high-water mark");
+        store.reset_residency_peak();
+        assert_eq!(store.residency_peak(), 0);
+        // A failed lease does not leak a residency slot.
+        assert!(store.lease_shard(99).is_err());
+        assert_eq!(store.residency_current(), 0);
+        // Clones share the gauge.
+        let clone = store.clone();
+        let _l = clone.lease_shard(2).unwrap();
+        assert_eq!(store.residency_current(), 1);
+        drop(_l);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -110,6 +110,15 @@ impl AtomicF64Vec {
             .collect()
     }
 
+    /// [`Self::snapshot`] into a caller-owned buffer, so eval loops
+    /// reuse one allocation across rounds (quiescent points only).
+    pub fn snapshot_into(&self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.data.len());
+        for (o, c) in out.iter_mut().zip(&self.data) {
+            *o = f64::from_bits(c.load(Ordering::Relaxed));
+        }
+    }
+
     /// Overwrite the whole vector from a slice (quiescent points only).
     pub fn copy_from(&self, xs: &[f64]) {
         assert_eq!(xs.len(), self.data.len());

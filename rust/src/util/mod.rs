@@ -5,11 +5,13 @@
 pub mod atomic_vec;
 pub mod json;
 pub mod logging;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod timer;
 
 pub use atomic_vec::AtomicF64Vec;
+pub use pool::WorkPool;
 pub use rng::Rng;
 pub use timer::{measure, Stats, Stopwatch};
 

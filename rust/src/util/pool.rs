@@ -1,0 +1,247 @@
+//! Persistent worker pool for evaluation and store maintenance.
+//!
+//! The PR 4 parallel objective evaluation spawned scoped threads on
+//! every call; at `eval_every = 1` the spawn/join cost rivals the scan
+//! itself on small shards. This pool parks a fixed set of threads once
+//! (first use) and hands them closures through a generation counter —
+//! no per-call thread creation, and pool threads keep their
+//! thread-local scratch (shard read buffers, see `store::sharded`)
+//! alive across evaluation rounds.
+//!
+//! Semantics match `std::thread::scope`: [`WorkPool::run`] blocks until
+//! every worker has finished the closure, so borrowing stack data in
+//! the job is sound (the lifetime erasure below is justified exactly by
+//! that barrier). Worker panics are caught and re-raised on the caller.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Work item: a lifetime-erased `Fn(worker_index)`. Only dereferenced
+/// between job publication and the last `remaining` decrement, while
+/// the submitting caller is still blocked in [`WorkPool::run`].
+#[derive(Clone, Copy)]
+struct Job {
+    ptr: *const (dyn Fn(usize) + Sync),
+    /// Workers with index ≥ `workers` skip the job (they still check
+    /// in, keeping the generation bookkeeping uniform).
+    workers: usize,
+}
+unsafe impl Send for Job {}
+
+struct State {
+    generation: u64,
+    job: Option<Job>,
+    /// Pool threads that have not yet finished the current generation.
+    remaining: usize,
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between generations.
+    work_cv: Condvar,
+    /// The submitter parks here until `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// A fixed-size pool of parked threads. One global instance
+/// ([`WorkPool::global`]) is shared by the objective evaluators and
+/// the shard-store verifier; a submission mutex serializes concurrent
+/// `run` calls (e.g. parallel `cargo test`).
+pub struct WorkPool {
+    shared: &'static Shared,
+    size: usize,
+    submit: Mutex<()>,
+}
+
+impl WorkPool {
+    /// The process-wide pool. Created on first use; threads are
+    /// detached and die with the process.
+    pub fn global() -> &'static WorkPool {
+        static POOL: OnceLock<WorkPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            // At least 4 so tests can exercise 1/2/4-way evaluation
+            // fan-out regardless of the host's core count.
+            let size =
+                std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).max(4);
+            WorkPool::with_size(size)
+        })
+    }
+
+    fn with_size(size: usize) -> WorkPool {
+        let shared: &'static Shared = Box::leak(Box::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        }));
+        for index in 0..size {
+            std::thread::Builder::new()
+                .name(format!("hdca-pool-{index}"))
+                .spawn(move || worker_loop(shared, index))
+                .expect("spawn pool thread");
+        }
+        WorkPool { shared, size, submit: Mutex::new(()) }
+    }
+
+    /// Number of threads in the pool (upper bound on `workers`).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Run `job(i)` on `workers` pool threads (`i` in `0..workers`)
+    /// and block until all have finished. Re-raises worker panics.
+    pub fn run(&self, workers: usize, job: &(dyn Fn(usize) + Sync)) {
+        let workers = workers.clamp(1, self.size);
+        let _serial: MutexGuard<'_, ()> = self.submit.lock().expect("pool submit lock");
+        // SAFETY: lifetime erasure. The pointer is only called by pool
+        // threads before they decrement `remaining`, and we do not
+        // return until `remaining == 0` (release on the state mutex /
+        // acquire below orders those calls before our return), so the
+        // borrow never outlives the frame that owns it.
+        let erased: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(job as *const (dyn Fn(usize) + Sync)) };
+        let mut state = self.shared.state.lock().expect("pool state lock");
+        state.generation += 1;
+        state.job = Some(Job { ptr: erased, workers });
+        state.remaining = self.size;
+        self.shared.work_cv.notify_all();
+        while state.remaining > 0 {
+            state = self.shared.done_cv.wait(state).expect("pool done wait");
+        }
+        state.job = None;
+        let panicked = std::mem::replace(&mut state.panicked, false);
+        drop(state);
+        if panicked {
+            panic!("worker panicked in WorkPool::run");
+        }
+    }
+}
+
+fn worker_loop(shared: &'static Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut state = shared.state.lock().expect("pool state lock");
+            while state.generation == seen {
+                state = shared.work_cv.wait(state).expect("pool work wait");
+            }
+            seen = state.generation;
+            state.job.expect("generation advanced without a job")
+        };
+        if index < job.workers {
+            // SAFETY: the submitter blocks in `run` until we decrement
+            // `remaining` below, so the erased borrow is still live.
+            let f = unsafe { &*job.ptr };
+            if catch_unwind(AssertUnwindSafe(|| f(index))).is_err() {
+                shared.state.lock().expect("pool state lock").panicked = true;
+            }
+        }
+        let mut state = shared.state.lock().expect("pool state lock");
+        state.remaining -= 1;
+        if state.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// A `*mut f64` slice that many pool workers may write through, each at
+/// indices it exclusively owns (chunk-claimed or range-partitioned).
+/// The caller must guarantee disjointness; the pool's completion
+/// barrier provides the happens-before for reading the results back.
+#[derive(Clone, Copy)]
+pub struct DisjointWrites(*mut f64);
+unsafe impl Send for DisjointWrites {}
+unsafe impl Sync for DisjointWrites {}
+
+impl DisjointWrites {
+    pub fn new(slice: &mut [f64]) -> Self {
+        DisjointWrites(slice.as_mut_ptr())
+    }
+
+    /// Write `value` at `index`.
+    ///
+    /// # Safety
+    /// `index` is in bounds of the source slice and no other thread
+    /// writes the same index during this pool job.
+    #[inline]
+    pub unsafe fn set(&self, index: usize, value: f64) {
+        unsafe { *self.0.add(index) = value };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_workers_and_blocks_until_done() {
+        let pool = WorkPool::global();
+        let hits = AtomicUsize::new(0);
+        pool.run(3, &|_i| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn reusable_across_many_generations() {
+        let pool = WorkPool::global();
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.run(2, &|i| {
+                total.fetch_add(i + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 300);
+    }
+
+    #[test]
+    fn disjoint_writes_land() {
+        let pool = WorkPool::global();
+        let mut out = vec![0.0f64; 8];
+        let sink = DisjointWrites::new(&mut out);
+        pool.run(4, &|i| {
+            // Worker i owns indices {i, i+4}.
+            unsafe {
+                sink.set(i, i as f64);
+                sink.set(i + 4, (i + 4) as f64);
+            }
+        });
+        assert_eq!(out, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkPool::global();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(2, &|i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Pool still serves jobs afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(2, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn workers_clamped_to_pool_size() {
+        let pool = WorkPool::global();
+        let hits = AtomicUsize::new(0);
+        pool.run(pool.size() + 100, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), pool.size());
+    }
+}

@@ -118,7 +118,20 @@ fn sharded_training_bitwise_matches_in_memory() {
     let source = sharded_session.load_source().unwrap();
     assert!(matches!(source, DataSource::Sharded(_)));
     assert_eq!(source.shard_spans().map(|s| s.len()), Some(4));
+    if let DataSource::Sharded(store) = &source {
+        store.reset_residency_peak();
+    }
     let shard_report = sharded_session.run_source("hybrid-dca", &source).unwrap();
+    if let DataSource::Sharded(store) = &source {
+        // The acceptance bound of the streamed path: slab assembly and
+        // every objective evaluation lease at most one shard per eval
+        // thread; nothing materializes the store flat.
+        assert_eq!(store.residency_current(), 0, "leases leaked past the run");
+        let bound = hybrid_dca::util::WorkPool::global().size().max(1);
+        let peak = store.residency_peak();
+        assert!(peak >= 1, "streamed run never leased a shard");
+        assert!(peak <= bound, "{peak} shards resident at once (pool size {bound})");
+    }
 
     assert_eq!(shard_report.alpha, mem_report.alpha, "final α diverged");
     assert_eq!(shard_report.v, mem_report.v, "final v diverged");
