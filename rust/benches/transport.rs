@@ -1,0 +1,269 @@
+//! Bench: the transport seam — loopback frame round-trip latency and
+//! Δv throughput for every backend (in-process channels, TCP, UDS).
+//!
+//! `cargo bench --bench transport` prints the table **and appends a
+//! machine-readable run to `BENCH_transport.json` at the repo root**,
+//! extending one perf trajectory per PR. Label the run with
+//! `HYBRID_DCA_BENCH_LABEL=...`; set `HYBRID_DCA_BENCH=quick` for the
+//! CI smoke mode (small payloads, no file write).
+
+use std::thread;
+
+use hybrid_dca::coordinator::messages::{DeltaV, MasterReply, WorkerMsg};
+use hybrid_dca::harness::QuickFull;
+use hybrid_dca::transport::{
+    in_process, Frame, SocketListener, SocketWorker, Transport, TransportBackend, TransportCfg,
+    MASTER,
+};
+use hybrid_dca::util::json::Json;
+use hybrid_dca::util::{measure, Stats};
+
+/// What the echo worker ships back per request.
+#[derive(Clone, Copy, PartialEq)]
+enum ReplyShape {
+    /// Empty dense Δv: measures pure framing + syscall latency.
+    Ping,
+    /// Dense Δv of dimension d.
+    Dense,
+    /// Sparse Δv touching d/10 of the coordinates.
+    Sparse,
+}
+
+impl ReplyShape {
+    fn delta(self, d: usize) -> DeltaV {
+        match self {
+            ReplyShape::Ping => DeltaV::Dense(Vec::new()),
+            ReplyShape::Dense => DeltaV::Dense(vec![0.125; d]),
+            ReplyShape::Sparse => {
+                let nnz = (d / 10).max(1);
+                DeltaV::Sparse {
+                    dim: d,
+                    indices: (0..nnz as u32).collect(),
+                    values: vec![0.125; nnz],
+                }
+            }
+        }
+    }
+}
+
+/// Worker side: echo every merged `v` back as one Δv update of the
+/// requested shape, until the shutdown frame.
+fn echo_loop(link: &mut dyn Transport, shape: ReplyShape, d: usize) {
+    loop {
+        match link.recv() {
+            Ok((_, Frame::Merged(r))) => {
+                let msg = WorkerMsg {
+                    worker: 0,
+                    local_round: r.global_round,
+                    delta_v: shape.delta(d),
+                    dual_sum: 0.0,
+                    arrival_vtime: r.arrival_vtime,
+                    updates: 0,
+                };
+                link.send(MASTER, Frame::Update(msg)).expect("echo send");
+            }
+            Ok((_, Frame::Shutdown { .. })) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+/// Master side: `rtts` request/reply round trips; returns the payload
+/// bytes moved per round trip (request frame + reply frame).
+fn drive(
+    link: &mut dyn Transport,
+    shape: ReplyShape,
+    d: usize,
+    rtts: usize,
+    round: &mut usize,
+) -> usize {
+    let v = if shape == ReplyShape::Ping { Vec::new() } else { vec![0.25f64; d] };
+    let mut bytes = 0usize;
+    for _ in 0..rtts {
+        *round += 1;
+        let req = Frame::Merged(MasterReply {
+            v: v.clone(),
+            arrival_vtime: 0.0,
+            global_round: *round,
+            terminate: false,
+        });
+        bytes += req.wire_len();
+        link.send(0, req).expect("bench send");
+        let (_, reply) = link.recv().expect("bench recv");
+        assert!(matches!(reply, Frame::Update(_)));
+        bytes += reply.wire_len();
+    }
+    bytes / rtts
+}
+
+struct Row {
+    path: String,
+    p50_secs: f64,
+    mb_per_sec: f64,
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<28} {:>14} {:>12.1}",
+        r.path,
+        hybrid_dca::util::timer::fmt_duration(r.p50_secs),
+        r.mb_per_sec
+    );
+}
+
+/// One (backend, shape) measurement over a fresh single-worker link.
+fn bench_link(
+    backend: TransportBackend,
+    shape: ReplyShape,
+    name: &str,
+    d: usize,
+    rtts: usize,
+    samples: usize,
+) -> Row {
+    let mut round = 0usize;
+    let (secs, bytes_per_rtt) = match backend {
+        TransportBackend::InProcess => {
+            let (mut master, mut workers) = in_process(1);
+            let mut worker = workers.pop().expect("one worker");
+            let echo = thread::spawn(move || {
+                echo_loop(&mut worker, shape, d);
+            });
+            let mut bytes = 0;
+            let timings = measure(1, samples, || {
+                bytes = drive(&mut master, shape, d, rtts, &mut round);
+            });
+            master.send(0, Frame::Shutdown { vtime: 0.0, round: 0 }).expect("shutdown");
+            echo.join().expect("echo worker");
+            (timings, bytes)
+        }
+        TransportBackend::Tcp | TransportBackend::Uds => {
+            let mut cfg = TransportCfg::default();
+            cfg.backend = backend;
+            cfg.listen = if backend == TransportBackend::Tcp {
+                "127.0.0.1:0".into()
+            } else {
+                std::env::temp_dir()
+                    .join(format!("hybrid_dca_bench_{name}.sock"))
+                    .to_string_lossy()
+                    .into_owned()
+            };
+            let listener = SocketListener::bind(&cfg).expect("bind");
+            let mut join_cfg = cfg.clone();
+            join_cfg.join = listener.local_desc().to_string();
+            let echo = thread::spawn(move || {
+                let mut link = SocketWorker::connect(&join_cfg).expect("connect");
+                echo_loop(&mut link, shape, d);
+            });
+            let mut master = listener.accept_cluster(1).expect("accept");
+            let mut bytes = 0;
+            let timings = measure(1, samples, || {
+                bytes = drive(&mut master, shape, d, rtts, &mut round);
+            });
+            master.send(0, Frame::Shutdown { vtime: 0.0, round: 0 }).expect("shutdown");
+            echo.join().expect("echo worker");
+            (timings, bytes)
+        }
+    };
+    let st = Stats::from(&secs);
+    let per_rtt = st.p50 / rtts as f64;
+    Row {
+        path: format!("{} {}", backend.name(), name),
+        p50_secs: per_rtt,
+        mb_per_sec: bytes_per_rtt as f64 / per_rtt / 1e6,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = QuickFull::from_env() == QuickFull::Quick;
+    let (d, rtts, samples) = if quick { (1_000usize, 50usize, 3usize) } else { (100_000, 200, 5) };
+
+    println!("transport round trips (d={d}, {rtts} rtts per sample)\n");
+    println!("{:<28} {:>14} {:>12}", "backend / payload", "p50 rtt", "MB/s");
+
+    let shapes = [
+        (ReplyShape::Ping, "ping (empty Δv)"),
+        (ReplyShape::Dense, "dense Δv"),
+        (ReplyShape::Sparse, "sparse Δv (d/10)"),
+    ];
+    let backends = [TransportBackend::InProcess, TransportBackend::Tcp, TransportBackend::Uds];
+
+    let mut rows = Vec::new();
+    for backend in backends {
+        for (shape, name) in shapes {
+            let row = bench_link(backend, shape, name, d, rtts, samples);
+            print_row(&row);
+            rows.push(row);
+        }
+    }
+
+    if quick {
+        println!("\n(quick mode: BENCH_transport.json not written)");
+    } else {
+        let path = bench_json_path();
+        append_run(&path, d, rtts, &rows)?;
+        println!("\n# run appended to {}", path.display());
+    }
+    Ok(())
+}
+
+/// `BENCH_transport.json` lives at the repo root, next to ROADMAP.md.
+fn bench_json_path() -> std::path::PathBuf {
+    let root = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    std::path::Path::new(&root).join("..").join("BENCH_transport.json")
+}
+
+/// Append this run, preserving earlier ones (the trajectory future PRs
+/// compare against). An unparseable existing file is an error — never
+/// silently overwrite the history.
+fn append_run(path: &std::path::Path, d: usize, rtts: usize, rows: &[Row]) -> anyhow::Result<()> {
+    let mut runs: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            let doc = Json::parse(&text).map_err(|e| {
+                anyhow::anyhow!(
+                    "{} exists but is not valid JSON ({e}); refusing to overwrite the \
+                     perf trajectory — fix or remove the file first",
+                    path.display()
+                )
+            })?;
+            doc.get("runs")
+                .and_then(|r| r.as_arr().map(|a| a.to_vec()))
+                .unwrap_or_default()
+        }
+        Err(_) => Vec::new(),
+    };
+    let label =
+        std::env::var("HYBRID_DCA_BENCH_LABEL").unwrap_or_else(|_| "local".to_string());
+    let row_objs: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("path".into(), Json::Str(r.path.clone())),
+                ("p50_secs".into(), Json::Num(r.p50_secs)),
+                ("mb_per_sec".into(), Json::Num(r.mb_per_sec)),
+            ])
+        })
+        .collect();
+    runs.push(Json::Obj(vec![
+        ("label".into(), Json::Str(label)),
+        ("d".into(), Json::Num(d as f64)),
+        ("rtts_per_sample".into(), Json::Num(rtts as f64)),
+        ("rows".into(), Json::Arr(row_objs)),
+    ]));
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::Str("transport".into())),
+        (
+            "units".into(),
+            Json::Obj(vec![
+                ("p50_secs".into(), Json::Str("seconds per frame round trip".into())),
+                (
+                    "mb_per_sec".into(),
+                    Json::Str("frame megabytes per second, both directions".into()),
+                ),
+            ]),
+        ),
+        ("runs".into(), Json::Arr(runs)),
+    ]);
+    std::fs::write(path, doc.to_pretty())
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))?;
+    Ok(())
+}

@@ -9,6 +9,8 @@ pub mod toml;
 
 use crate::data::partition::Strategy;
 use crate::loss::LossKind;
+use crate::transport::{TransportBackend, TransportCfg};
+use crate::util::json::Json;
 use toml::Document;
 
 /// Merge-order policy for the master's bounded-barrier pick (paper:
@@ -165,6 +167,11 @@ pub struct ExpConfig {
     /// equivalence holds when message cost is size-independent
     /// (`net_per_elem = 0`).
     pub delta_threshold: f64,
+
+    // Distributed execution (`[transport]` table)
+    /// Cross-node transport: in-process channels (default, simulated
+    /// cluster) or TCP / Unix-domain sockets for `train --distributed`.
+    pub transport: TransportCfg,
 }
 
 impl Default for ExpConfig {
@@ -200,6 +207,7 @@ impl Default for ExpConfig {
             // Sparse wire format costs 1.5 elems per touched coord, so
             // it wins below density 2/3; 0.5 keeps headroom.
             delta_threshold: 0.5,
+            transport: TransportCfg::default(),
         }
     }
 }
@@ -262,6 +270,7 @@ impl ExpConfig {
             "delta_threshold must be in [0, 1] (got {})",
             self.delta_threshold
         );
+        self.transport.validate()?;
         Ok(())
     }
 
@@ -364,6 +373,25 @@ impl ExpConfig {
             "sim.delta-threshold" | "sim.delta_threshold" | "delta_threshold" => {
                 self.delta_threshold = need_f64()?
             }
+            "transport.backend" => {
+                let s = need_str()?;
+                self.transport.backend = TransportBackend::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("unknown transport backend '{s}'"))?
+            }
+            "transport.listen" => self.transport.listen = need_str()?.to_string(),
+            "transport.join" => self.transport.join = need_str()?.to_string(),
+            "transport.connect-timeout" | "transport.connect_timeout" => {
+                self.transport.connect_timeout_secs = need_f64()?
+            }
+            "transport.accept-timeout" | "transport.accept_timeout" => {
+                self.transport.accept_timeout_secs = need_f64()?
+            }
+            "transport.read-timeout" | "transport.read_timeout" => {
+                self.transport.read_timeout_secs = need_f64()?
+            }
+            "transport.accept-backlog" | "transport.accept_backlog" => {
+                self.transport.accept_backlog = need_usize()?
+            }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -376,6 +404,162 @@ impl ExpConfig {
         let doc = toml::parse(&text)?;
         let mut cfg = ExpConfig::default();
         cfg.apply_document(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize every field to JSON — the wire form a distributed
+    /// master ships in its `Assign` frame so worker processes run the
+    /// exact effective config. `f64`s print shortest-round-trip, so
+    /// [`Self::from_json`] recovers identical bits; the `u64` seed
+    /// travels as a string (a JSON number is an `f64` and would lose
+    /// precision above 2⁵³).
+    pub fn to_json(&self) -> Json {
+        let opt = |o: &Option<String>| match o {
+            Some(s) => Json::Str(s.clone()),
+            None => Json::Null,
+        };
+        let loss = match self.loss {
+            LossKind::Hinge => "hinge",
+            LossKind::SquaredHinge => "squared_hinge",
+            LossKind::Logistic => "logistic",
+        };
+        let sigma = match self.sigma {
+            SigmaPolicy::NuS => "nus".to_string(),
+            SigmaPolicy::NuK => "nuk".to_string(),
+            SigmaPolicy::Fixed(v) => format!("{v}"),
+        };
+        let policy = match self.merge_policy {
+            MergePolicy::OldestFirst => "oldest-first",
+            MergePolicy::NewestFirst => "newest-first",
+        };
+        let t = &self.transport;
+        Json::Obj(vec![
+            ("dataset".into(), Json::Str(self.dataset.clone())),
+            ("data_path".into(), opt(&self.data_path)),
+            ("store_path".into(), opt(&self.store_path)),
+            ("seed".into(), Json::Str(self.seed.to_string())),
+            ("loss".into(), Json::Str(loss.into())),
+            ("lambda".into(), Json::Num(self.lambda)),
+            ("k_nodes".into(), Json::Num(self.k_nodes as f64)),
+            ("r_cores".into(), Json::Num(self.r_cores as f64)),
+            ("partition".into(), Json::Str(self.partition.name().into())),
+            ("h_local".into(), Json::Num(self.h_local as f64)),
+            ("nu".into(), Json::Num(self.nu)),
+            ("sigma".into(), Json::Str(sigma)),
+            ("wild".into(), Json::Bool(self.wild)),
+            ("s_barrier".into(), Json::Num(self.s_barrier as f64)),
+            ("gamma".into(), Json::Num(self.gamma as f64)),
+            ("merge_policy".into(), Json::Str(policy.into())),
+            ("max_rounds".into(), Json::Num(self.max_rounds as f64)),
+            ("gap_threshold".into(), Json::Num(self.gap_threshold)),
+            ("eval_every".into(), Json::Num(self.eval_every as f64)),
+            (
+                "stragglers".into(),
+                Json::Arr(self.stragglers.iter().map(|&s| Json::Num(s)).collect()),
+            ),
+            ("net_latency".into(), Json::Num(self.net_latency)),
+            ("net_per_elem".into(), Json::Num(self.net_per_elem)),
+            ("cost_per_nnz".into(), Json::Num(self.cost_per_nnz)),
+            ("delta_threshold".into(), Json::Num(self.delta_threshold)),
+            (
+                "transport".into(),
+                Json::Obj(vec![
+                    ("backend".into(), Json::Str(t.backend.name().into())),
+                    ("listen".into(), Json::Str(t.listen.clone())),
+                    ("join".into(), Json::Str(t.join.clone())),
+                    ("connect_timeout_secs".into(), Json::Num(t.connect_timeout_secs)),
+                    ("accept_timeout_secs".into(), Json::Num(t.accept_timeout_secs)),
+                    ("read_timeout_secs".into(), Json::Num(t.read_timeout_secs)),
+                    ("accept_backlog".into(), Json::Num(t.accept_backlog as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Rebuild a config from [`Self::to_json`] output. Every field is
+    /// required — a missing key means the two ends disagree about the
+    /// config schema and the run must not start.
+    pub fn from_json(text: &str) -> anyhow::Result<ExpConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config json: {e}"))?;
+        let num = |o: &Json, key: &str| {
+            o.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("config json: missing number '{key}'"))
+        };
+        let string = |o: &Json, key: &str| match o.get(key) {
+            Some(Json::Str(s)) => Ok(s.clone()),
+            _ => Err(anyhow::anyhow!("config json: missing string '{key}'")),
+        };
+        let flag = |o: &Json, key: &str| match o.get(key) {
+            Some(Json::Bool(b)) => Ok(*b),
+            _ => Err(anyhow::anyhow!("config json: missing bool '{key}'")),
+        };
+        let opt = |o: &Json, key: &str| match o.get(key) {
+            Some(Json::Str(s)) => Some(s.clone()),
+            _ => None,
+        };
+
+        let mut cfg = ExpConfig::default();
+        cfg.dataset = string(&j, "dataset")?;
+        cfg.data_path = opt(&j, "data_path");
+        cfg.store_path = opt(&j, "store_path");
+        let seed = string(&j, "seed")?;
+        cfg.seed = seed
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("config json: bad seed '{seed}': {e}"))?;
+        let loss = string(&j, "loss")?;
+        cfg.loss = LossKind::parse(&loss)
+            .ok_or_else(|| anyhow::anyhow!("config json: unknown loss '{loss}'"))?;
+        cfg.lambda = num(&j, "lambda")?;
+        cfg.k_nodes = num(&j, "k_nodes")? as usize;
+        cfg.r_cores = num(&j, "r_cores")? as usize;
+        let part = string(&j, "partition")?;
+        cfg.partition = Strategy::parse(&part)
+            .ok_or_else(|| anyhow::anyhow!("config json: unknown partition '{part}'"))?;
+        cfg.h_local = num(&j, "h_local")? as usize;
+        cfg.nu = num(&j, "nu")?;
+        let sigma = string(&j, "sigma")?;
+        cfg.sigma = SigmaPolicy::parse(&sigma)
+            .ok_or_else(|| anyhow::anyhow!("config json: bad sigma '{sigma}'"))?;
+        cfg.wild = flag(&j, "wild")?;
+        cfg.s_barrier = num(&j, "s_barrier")? as usize;
+        cfg.gamma = num(&j, "gamma")? as usize;
+        let policy = string(&j, "merge_policy")?;
+        cfg.merge_policy = MergePolicy::parse(&policy)
+            .ok_or_else(|| anyhow::anyhow!("config json: unknown merge policy '{policy}'"))?;
+        cfg.max_rounds = num(&j, "max_rounds")? as usize;
+        cfg.gap_threshold = num(&j, "gap_threshold")?;
+        cfg.eval_every = num(&j, "eval_every")? as usize;
+        cfg.stragglers = j
+            .get("stragglers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("config json: missing array 'stragglers'"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("config json: non-numeric straggler"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        cfg.net_latency = num(&j, "net_latency")?;
+        cfg.net_per_elem = num(&j, "net_per_elem")?;
+        cfg.cost_per_nnz = num(&j, "cost_per_nnz")?;
+        cfg.delta_threshold = num(&j, "delta_threshold")?;
+        let t = j
+            .get("transport")
+            .ok_or_else(|| anyhow::anyhow!("config json: missing object 'transport'"))?;
+        let backend = string(t, "backend")?;
+        cfg.transport = TransportCfg {
+            backend: TransportBackend::parse(&backend).ok_or_else(|| {
+                anyhow::anyhow!("config json: unknown transport backend '{backend}'")
+            })?,
+            listen: string(t, "listen")?,
+            join: string(t, "join")?,
+            connect_timeout_secs: num(t, "connect_timeout_secs")?,
+            accept_timeout_secs: num(t, "accept_timeout_secs")?,
+            read_timeout_secs: num(t, "read_timeout_secs")?,
+            accept_backlog: num(t, "accept_backlog")? as usize,
+        };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -533,6 +717,68 @@ cost_per_nnz = 1e-7
         cfg.data_path = Some("x.svm".into());
         let err = cfg.validate().unwrap_err();
         assert!(err.to_string().contains("mutually exclusive"), "{err}");
+    }
+
+    #[test]
+    fn transport_table_parsed() {
+        let text = r#"
+[transport]
+backend = "tcp"
+listen = "127.0.0.1:7070"
+join = "127.0.0.1:7070"
+connect_timeout = 2.5
+accept_timeout = 5.0
+read_timeout = 1.5
+accept_backlog = 8
+"#;
+        let doc = toml::parse(text).unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.transport.backend, TransportBackend::Tcp);
+        assert_eq!(cfg.transport.listen, "127.0.0.1:7070");
+        assert_eq!(cfg.transport.connect_timeout_secs, 2.5);
+        assert_eq!(cfg.transport.accept_backlog, 8);
+
+        let doc = toml::parse("[transport]\nbackend = \"carrier-pigeon\"\n").unwrap();
+        assert!(cfg.apply_document(&doc).is_err());
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut cfg = ExpConfig::default();
+        cfg.dataset = "rcv1-s".into();
+        cfg.store_path = Some("tiny_store".into());
+        cfg.seed = u64::MAX - 7; // would lose bits as a JSON number
+        cfg.loss = LossKind::Logistic;
+        cfg.lambda = 1e-4 / 3.0; // not exactly representable in decimal
+        cfg.k_nodes = 8;
+        cfg.s_barrier = 6;
+        cfg.partition = Strategy::Striped;
+        cfg.sigma = SigmaPolicy::Fixed(6.25);
+        cfg.merge_policy = MergePolicy::NewestFirst;
+        cfg.wild = true;
+        cfg.stragglers = vec![1.0; 8];
+        cfg.stragglers[3] = 2.0 + f64::EPSILON;
+        cfg.transport.backend = TransportBackend::Uds;
+        cfg.transport.listen = "/tmp/hdca.sock".into();
+        cfg.transport.join = "/tmp/hdca.sock".into();
+        cfg.transport.read_timeout_secs = 0.75;
+        let back = ExpConfig::from_json(&cfg.to_json().to_pretty()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_missing_field_is_an_error() {
+        let j = ExpConfig::default().to_json();
+        let pruned = match j {
+            Json::Obj(kvs) => {
+                Json::Obj(kvs.into_iter().filter(|(k, _)| k != "gap_threshold").collect())
+            }
+            _ => unreachable!(),
+        };
+        let err = ExpConfig::from_json(&pruned.to_pretty()).unwrap_err();
+        assert!(err.to_string().contains("gap_threshold"), "{err}");
     }
 
     #[test]

@@ -103,6 +103,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         alpha: solver.alpha,
         rounds,
         worker_rounds: vec![rounds],
+        net: Default::default(),
     })
 }
 

@@ -44,7 +44,7 @@ pub fn run_source_ctx(source: &DataSource, ctx: &RunCtx<'_>) -> anyhow::Result<R
 
 /// The synchronous special case of the hybrid config: 1 core per node,
 /// S = K, Γ = 1, σ = νK.
-fn sync_overrides(cfg: &ExpConfig) -> ExpConfig {
+pub(crate) fn sync_overrides(cfg: &ExpConfig) -> ExpConfig {
     let mut sync_cfg = cfg.clone();
     sync_cfg.r_cores = 1;
     sync_cfg.s_barrier = sync_cfg.k_nodes;
@@ -53,7 +53,7 @@ fn sync_overrides(cfg: &ExpConfig) -> ExpConfig {
     sync_cfg
 }
 
-fn sync_opts(shards: Option<Vec<(usize, usize)>>) -> ProtocolOpts {
+pub(crate) fn sync_opts(shards: Option<Vec<(usize, usize)>>) -> ProtocolOpts {
     ProtocolOpts {
         label: "CoCoA+".into(),
         sync_allreduce: true,

@@ -1,0 +1,236 @@
+//! Multi-process distributed execution: the socket-backed master and
+//! worker node entry points behind `train --distributed` and
+//! `hybrid-dca node`.
+//!
+//! The cluster forms over the [`crate::transport`] socket backend:
+//!
+//! 1. the master binds `transport.listen` and accepts `K` workers
+//!    (accept order assigns peer ids `0..K`);
+//! 2. each worker receives an `Assign` frame carrying its worker id,
+//!    its pre-forked RNG stream, and the master's full effective
+//!    config as JSON — so both ends provably run the same experiment;
+//! 3. rounds proceed exactly as in-process: `Update` (Δv) up,
+//!    `Merged` (v) down, through the same [`run_master`] /
+//!    [`run_worker`] loops;
+//! 4. at convergence the master broadcasts `Shutdown` and drains one
+//!    `Final` (α) report per worker.
+//!
+//! Parity by construction: the master forks worker RNG streams in id
+//! order from `Rng::new(seed)` and plans master/worker configs through
+//! the same `pub(crate)` helpers the in-process driver uses; each
+//! worker opens the shard store itself and materializes *only its own
+//! shard range* via [`build_node_slab`]. The master's conservative
+//! gather orders merges by virtual time, not socket delivery order, so
+//! final α, v, and every traced objective are bitwise-identical to the
+//! single-process streamed run on the same store and seed.
+
+use anyhow::Context;
+
+use crate::config::{Algorithm, ExpConfig};
+use crate::data::Partition;
+use crate::metrics::Evaluator;
+use crate::session::observer::ObserverHandle;
+use crate::sim::CostModel;
+use crate::transport::frame::Assignment;
+use crate::transport::{
+    Frame, SocketListener, SocketWorker, Transport, TransportCfg, TransportStats,
+};
+use crate::util::Rng;
+
+use super::cocoa;
+use super::hybrid::{build_node_slab, plan_master_cfg, plan_worker_cfg, ProtocolOpts};
+use super::master::run_master;
+use super::worker::run_worker;
+use super::RunReport;
+
+/// What a worker process reports when its run ends cleanly.
+#[derive(Debug)]
+pub struct WorkerSummary {
+    pub worker_id: usize,
+    /// Local rounds completed (merged replies + the shutdown round).
+    pub local_rounds: usize,
+    /// Total coordinate updates across this node's cores.
+    pub updates: u64,
+    /// Wire traffic to/from the master (including handshake bytes).
+    pub net: TransportStats,
+    /// The master's address, for the exit report.
+    pub master_addr: String,
+}
+
+/// Resolve the distributed protocol for `algo`: the effective config
+/// (CoCoA+ applies its synchronous overrides) and the protocol
+/// options. Single-node algorithms have nothing to distribute.
+fn plan_protocol(algo: Algorithm, cfg: &ExpConfig) -> anyhow::Result<(ExpConfig, ProtocolOpts)> {
+    match algo {
+        Algorithm::HybridDca => Ok((
+            cfg.clone(),
+            ProtocolOpts { policy: cfg.merge_policy, ..ProtocolOpts::default() },
+        )),
+        Algorithm::CocoaPlus => Ok((cocoa::sync_overrides(cfg), cocoa::sync_opts(None))),
+        Algorithm::Baseline | Algorithm::PassCoDe => anyhow::bail!(
+            "{} is a single-node algorithm — nothing to distribute (use plain `train`)",
+            algo.name()
+        ),
+    }
+}
+
+/// Run the master role: bind `cfg.transport.listen`, accept the
+/// cluster, and drive Algorithm 2 over it.
+pub fn run_master_node(
+    algo: Algorithm,
+    cfg: &ExpConfig,
+    obs: &ObserverHandle<'_>,
+) -> anyhow::Result<RunReport> {
+    let listener = SocketListener::bind(&cfg.transport)?;
+    run_master_with_listener(algo, cfg, listener, obs)
+}
+
+/// [`run_master_node`] with a pre-bound listener — lets the caller
+/// print (or hand to test workers) the actual address when binding
+/// port 0.
+pub fn run_master_with_listener(
+    algo: Algorithm,
+    cfg: &ExpConfig,
+    listener: SocketListener,
+    obs: &ObserverHandle<'_>,
+) -> anyhow::Result<RunReport> {
+    cfg.validate()?;
+    let (cfg, opts) = plan_protocol(algo, cfg)?;
+    let store_dir = cfg.store_path.as_deref().ok_or_else(|| {
+        anyhow::anyhow!(
+            "--distributed requires a packed shard store (set --store or data.store): \
+             worker processes open their own shard ranges, never a flat dataset"
+        )
+    })?;
+    let store = crate::store::open(store_dir)?;
+    let k = cfg.k_nodes;
+    let n = store.n();
+    let d = store.d();
+
+    // Same seed-stream discipline as the in-process streamed path:
+    // the shard-aware partition consumes no draws, workers fork in id
+    // order. The partition is built here only to fail fast on a store
+    // that cannot support K nodes — workers rebuild it locally.
+    let mut rng = Rng::new(cfg.seed);
+    let spans = store.spans();
+    let partition = Partition::from_shards(n, &spans, k, cfg.r_cores)?;
+    partition.validate(n).expect("partition invariant");
+    let worker_rngs: Vec<Rng> = (0..k).map(|_| rng.fork()).collect();
+
+    let mut link = listener.accept_cluster(k)?;
+
+    let config_json = cfg.to_json().to_pretty();
+    for (w, wrng) in worker_rngs.iter().enumerate() {
+        link.send(
+            w,
+            Frame::Assign(Assignment {
+                worker_id: w,
+                k_nodes: k,
+                n,
+                d,
+                rng_state: wrng.state(),
+                allreduce: opts.sync_allreduce,
+                config_json: config_json.clone(),
+            }),
+        )
+        .map_err(|e| anyhow::anyhow!("assigning worker {w}: {e}"))?;
+    }
+
+    let master_cfg = plan_master_cfg(&cfg, k, d, opts.policy, opts.sync_allreduce);
+    let mut eval = Evaluator::sharded(&store);
+    let loss = cfg.loss.build();
+    let outcome = run_master(&master_cfg, &mut link, &mut eval, &*loss, &opts.label, obs)?;
+
+    let mut alpha = vec![0.0; n];
+    let mut total_updates = 0u64;
+    let mut worker_rounds = Vec::with_capacity(k);
+    for (w, fin) in outcome.finals.into_iter().enumerate() {
+        let fin = fin
+            .ok_or_else(|| anyhow::anyhow!("worker {w} exited without reporting final state"))?;
+        for (i, a) in &fin.alpha {
+            alpha[*i] = *a;
+        }
+        total_updates += fin.updates;
+        worker_rounds.push(fin.local_rounds);
+    }
+
+    Ok(RunReport {
+        label: opts.label.clone(),
+        trace: outcome.trace,
+        events: outcome.events,
+        alpha,
+        v: outcome.v,
+        rounds: outcome.rounds,
+        vtime: outcome.vtime,
+        total_updates,
+        worker_rounds,
+        net: link.stats(),
+    })
+}
+
+/// Run the worker role: connect to `transport.join`, take the master's
+/// assignment, open **only this node's shard range** of the store, and
+/// run Algorithm 1 until the shutdown broadcast.
+///
+/// `store_override` replaces the store directory from the master's
+/// config — for clusters whose nodes mount the store at different
+/// paths.
+pub fn run_worker_node(
+    transport: &TransportCfg,
+    store_override: Option<&str>,
+) -> anyhow::Result<WorkerSummary> {
+    let mut link = SocketWorker::connect(transport)?;
+    let assign = match link.recv() {
+        Ok((_, Frame::Assign(a))) => a,
+        Ok((_, frame)) => anyhow::bail!(
+            "expected an assignment from the master, got a {} frame",
+            frame.kind_name()
+        ),
+        Err(e) => {
+            return Err(anyhow::Error::new(e).context("waiting for the master's assignment"));
+        }
+    };
+    let cfg = ExpConfig::from_json(&assign.config_json)
+        .context("parsing the master's experiment config")?;
+    let w = assign.worker_id;
+    anyhow::ensure!(
+        w < assign.k_nodes && assign.k_nodes == cfg.k_nodes,
+        "inconsistent assignment: worker {w} of {} nodes, config says K={}",
+        assign.k_nodes,
+        cfg.k_nodes
+    );
+
+    let store_dir = store_override.or(cfg.store_path.as_deref()).ok_or_else(|| {
+        anyhow::anyhow!("no shard store: the master's config has no store and --store was not set")
+    })?;
+    let store = crate::store::open(store_dir)?;
+    anyhow::ensure!(
+        store.n() == assign.n && store.d() == assign.d,
+        "shard store {store_dir} does not match the master's dataset: \
+         {}×{} here vs {}×{} at the master",
+        store.n(),
+        store.d(),
+        assign.n,
+        assign.d
+    );
+
+    let spans = store.spans();
+    let partition = Partition::from_shards(store.n(), &spans, cfg.k_nodes, cfg.r_cores)?;
+    let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
+    let slab = build_node_slab(&store, &partition, w, &cost_model)?;
+    let wcfg =
+        plan_worker_cfg(&cfg, w, cfg.k_nodes, store.d(), store.n(), slab.base, assign.allreduce);
+    let rng = Rng::from_state(assign.rng_state);
+    let loss = cfg.loss.build();
+
+    let fin = run_worker(
+        &wcfg, slab.cells, &slab.data, &*loss, &slab.norms, &slab.costs, &mut link, rng,
+    )?;
+    Ok(WorkerSummary {
+        worker_id: w,
+        local_rounds: fin.local_rounds,
+        updates: fin.updates,
+        net: link.stats(),
+        master_addr: link.master_addr().to_string(),
+    })
+}

@@ -3,8 +3,6 @@
 //! round), run the master in the calling thread, and assemble the
 //! final report.
 
-use std::sync::mpsc;
-
 use crate::config::ExpConfig;
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
@@ -13,6 +11,7 @@ use crate::session::observer::ObserverHandle;
 use crate::session::{DataSource, RunCtx};
 use crate::sim::{resolve_stragglers, CostModel, SendCost, UpdateCosts};
 use crate::store::ShardedDataset;
+use crate::transport::{in_process, Transport};
 use crate::util::Rng;
 
 use super::master::{run_master, MasterCfg, MergePolicy};
@@ -182,31 +181,14 @@ pub fn run_streamed_obs(
     // Per-node slabs: each node's contiguous shard range, with its own
     // norm/cost tables. Both tables are per-row quantities, so the
     // slab-local values equal the global ones row for row.
-    struct Slab {
-        data: Dataset,
-        norms: Vec<f64>,
-        costs: UpdateCosts,
-        base: usize,
-    }
     let mut slabs = Vec::with_capacity(k);
     for w in 0..k {
-        let rows = partition.node_indices(w);
-        let (lo, hi) = (rows[0], rows[rows.len() - 1] + 1);
-        let data = store.materialize_range(lo, hi)?;
-        data.validate()?;
-        let norms = data.x.row_norms_sq();
-        let costs = UpdateCosts::precompute(&data, &cost_model);
-        slabs.push(Slab { data, norms, costs, base: lo });
+        slabs.push(build_node_slab(store, &partition, w, &cost_model)?);
     }
     let nodes: Vec<NodePlan<'_>> = slabs
         .iter()
-        .enumerate()
-        .map(|(w, slab)| NodePlan {
-            // Cells carry global row ids; the worker indexes its slab.
-            cells: partition.parts[w]
-                .iter()
-                .map(|cell| cell.iter().map(|&i| i - slab.base).collect())
-                .collect(),
+        .map(|slab| NodePlan {
+            cells: slab.cells.clone(),
             data: &slab.data,
             norms: &slab.norms,
             costs: &slab.costs,
@@ -215,6 +197,43 @@ pub fn run_streamed_obs(
         .collect();
     let mut eval = Evaluator::sharded(store);
     drive(cfg, opts, obs, &mut eval, &*loss, nodes, rng, cost_model)
+}
+
+/// One node's streamed training slab: its contiguous shard range
+/// materialized as a flat dataset, per-row tables, and slab-local
+/// cells. Shared by the in-process streamed path and the distributed
+/// worker process — a `--distributed` worker materializes exactly this
+/// (its own shard range and nothing else), which is what keeps the two
+/// paths bitwise-identical.
+pub(crate) struct NodeSlab {
+    pub data: Dataset,
+    pub norms: Vec<f64>,
+    pub costs: UpdateCosts,
+    /// Global row id of the slab's first row.
+    pub base: usize,
+    /// Per-core cells in slab-local row ids.
+    pub cells: Vec<Vec<usize>>,
+}
+
+/// Build node `w`'s [`NodeSlab`] from a shard store (cells carry
+/// global row ids in `partition`; the worker indexes its slab).
+pub(crate) fn build_node_slab(
+    store: &ShardedDataset,
+    partition: &Partition,
+    w: usize,
+    cost_model: &CostModel,
+) -> anyhow::Result<NodeSlab> {
+    let rows = partition.node_indices(w);
+    let (lo, hi) = (rows[0], rows[rows.len() - 1] + 1);
+    let data = store.materialize_range(lo, hi)?;
+    data.validate()?;
+    let norms = data.x.row_norms_sq();
+    let costs = UpdateCosts::precompute(&data, cost_model);
+    let cells = partition.parts[w]
+        .iter()
+        .map(|cell| cell.iter().map(|&i| i - lo).collect())
+        .collect();
+    Ok(NodeSlab { data, norms, costs, base: lo, cells })
 }
 
 /// One worker node's view of the data for a run: the rows it trains on
@@ -229,11 +248,88 @@ struct NodePlan<'a> {
     row_base: usize,
 }
 
+/// Virtual communication model: point-to-point for Hybrid (billed by
+/// the actual wire size, so sparse Δv messages are cheaper), tree
+/// all-reduce for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for
+/// the sync collective; the collective always moves dense vectors).
+/// Returns `(send_cost, merge_cost, reply_latency)`.
+pub(crate) fn comm_profile(
+    cost_model: &CostModel,
+    allreduce: bool,
+    k: usize,
+    d: usize,
+) -> (SendCost, f64, f64) {
+    if allreduce {
+        let ar = cost_model.allreduce_cost(k, d);
+        (SendCost::Fixed(ar / 2.0), 0.0, ar / 2.0)
+    } else {
+        (SendCost::Sized(*cost_model), 0.0, cost_model.msg_cost(d))
+    }
+}
+
+/// Master configuration derived from the experiment config alone —
+/// shared by [`drive`] and the distributed master so both build the
+/// same protocol constants.
+pub(crate) fn plan_master_cfg(
+    cfg: &ExpConfig,
+    k: usize,
+    d: usize,
+    policy: MergePolicy,
+    allreduce: bool,
+) -> MasterCfg {
+    let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
+    let (_, merge_cost, reply_latency) = comm_profile(&cost_model, allreduce, k, d);
+    MasterCfg {
+        k_nodes: k,
+        s_barrier: cfg.s_barrier,
+        gamma: cfg.gamma,
+        nu: cfg.nu,
+        lambda: cfg.lambda,
+        max_rounds: cfg.max_rounds,
+        gap_threshold: cfg.gap_threshold,
+        eval_every: cfg.eval_every,
+        policy,
+        merge_cost,
+        reply_latency,
+    }
+}
+
+/// Worker `w`'s configuration derived from the experiment config alone
+/// — shared by [`drive`] and the distributed worker process, so a
+/// socket worker reproduces its in-process twin's behavior exactly.
+pub(crate) fn plan_worker_cfg(
+    cfg: &ExpConfig,
+    w: usize,
+    k: usize,
+    d: usize,
+    n_global: usize,
+    row_base: usize,
+    allreduce: bool,
+) -> WorkerCfg {
+    let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
+    let (send_cost, _, _) = comm_profile(&cost_model, allreduce, k, d);
+    let stragglers = resolve_stragglers(&cfg.stragglers, k);
+    WorkerCfg {
+        worker_id: w,
+        h_local: cfg.h_local,
+        nu: cfg.nu,
+        sigma: cfg.sigma_value(),
+        lambda: cfg.lambda,
+        wild: cfg.wild,
+        straggler: stragglers[w],
+        send_cost,
+        delta_threshold: cfg.delta_threshold,
+        n_global,
+        row_base,
+    }
+}
+
 /// The protocol core shared by the in-memory and streamed paths: spawn
 /// one worker thread per [`NodePlan`], run the master (Algorithm 2) in
-/// the calling thread against `eval`, and assemble the report.
-/// `rng` must be positioned after any partition draws so worker forks
-/// match across paths.
+/// the calling thread against `eval` over the in-process transport,
+/// and assemble the report. `rng` must be positioned after any
+/// partition draws so worker forks match across paths (the distributed
+/// master forks the same streams in the same order).
 #[allow(clippy::too_many_arguments)]
 fn drive(
     cfg: &ExpConfig,
@@ -243,106 +339,55 @@ fn drive(
     loss: &dyn Loss,
     nodes: Vec<NodePlan<'_>>,
     mut rng: Rng,
-    cost_model: CostModel,
+    _cost_model: CostModel,
 ) -> anyhow::Result<RunReport> {
     let k = nodes.len();
     let n = eval.n();
     let d = eval.d();
-    let stragglers = resolve_stragglers(&cfg.stragglers, k);
-    let sigma = cfg.sigma_value();
 
-    // Communication model: point-to-point for Hybrid (billed by the
-    // actual wire size, so sparse Δv messages are cheaper), tree
-    // all-reduce for CoCoA+ (§5: 2S vs 2K transmissions; tree depth for
-    // the sync collective; the collective always moves dense vectors).
-    let (send_cost, merge_cost, reply_latency) = if opts.sync_allreduce {
-        let ar = cost_model.allreduce_cost(k, d);
-        (SendCost::Fixed(ar / 2.0), 0.0, ar / 2.0)
-    } else {
-        (SendCost::Sized(cost_model), 0.0, cost_model.msg_cost(d))
-    };
-
-    let master_cfg = MasterCfg {
-        k_nodes: k,
-        s_barrier: cfg.s_barrier,
-        gamma: cfg.gamma,
-        nu: cfg.nu,
-        lambda: cfg.lambda,
-        max_rounds: cfg.max_rounds,
-        gap_threshold: cfg.gap_threshold,
-        eval_every: cfg.eval_every,
-        policy: opts.policy,
-        merge_cost,
-        reply_latency,
-    };
-
-    let (tx_updates, rx_updates) = mpsc::channel();
-    let mut reply_txs = Vec::with_capacity(k);
-    let mut reply_rxs = Vec::with_capacity(k);
-    for _ in 0..k {
-        let (tx, rx) = mpsc::channel();
-        reply_txs.push(tx);
-        reply_rxs.push(rx);
-    }
+    let master_cfg = plan_master_cfg(cfg, k, d, opts.policy, opts.sync_allreduce);
+    let (mut master_link, worker_links) = in_process(k);
 
     // Fork one RNG stream per worker up front (deterministic).
     let worker_rngs: Vec<Rng> = (0..k).map(|_| rng.fork()).collect();
 
     let mut outcome = None;
-    let mut finals: Vec<Option<super::worker::WorkerFinal>> = (0..k).map(|_| None).collect();
+    let mut worker_results = Vec::with_capacity(k);
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(k);
+        let mut links = worker_links;
         for (w, (plan, wrng)) in nodes.into_iter().zip(worker_rngs.into_iter()).enumerate() {
-            let wcfg = WorkerCfg {
-                worker_id: w,
-                h_local: cfg.h_local,
-                nu: cfg.nu,
-                sigma,
-                lambda: cfg.lambda,
-                wild: cfg.wild,
-                straggler: stragglers[w],
-                send_cost,
-                delta_threshold: cfg.delta_threshold,
-                n_global: n,
-                row_base: plan.row_base,
-            };
-            let tx = tx_updates.clone();
-            let rx = reply_rxs.remove(0);
+            let wcfg = plan_worker_cfg(cfg, w, k, d, n, plan.row_base, opts.sync_allreduce);
+            let mut link = links.remove(0);
             handles.push(scope.spawn(move || {
                 run_worker(
-                    &wcfg, plan.cells, plan.data, loss, plan.norms, plan.costs, tx, rx, wrng,
+                    &wcfg, plan.cells, plan.data, loss, plan.norms, plan.costs, &mut link, wrng,
                 )
             }));
         }
-        // The master must not hold a sender, or shutdown drain never
-        // disconnects.
-        drop(tx_updates);
 
-        outcome = Some(run_master(
-            &master_cfg,
-            &rx_updates,
-            &reply_txs,
-            eval,
-            loss,
-            &opts.label,
-            obs,
-        ));
+        outcome = Some(run_master(&master_cfg, &mut master_link, eval, loss, &opts.label, obs));
 
         for h in handles {
-            let fin = h.join().expect("worker thread panicked");
-            let id = fin.worker_id;
-            finals[id] = Some(fin);
+            worker_results.push(h.join().expect("worker thread panicked"));
         }
     });
 
-    let outcome = outcome.expect("master ran");
+    let outcome = outcome.expect("master ran")?;
+    for r in worker_results {
+        r?;
+    }
     // Assemble the final global α from the workers' committed values
-    // (workers report global row ids via their `row_base`).
+    // (workers report global row ids via their `row_base`) — taken
+    // from the master's collected Final frames, exactly as the
+    // distributed master assembles them.
     let mut alpha = vec![0.0; n];
     let mut total_updates = 0u64;
     let mut worker_rounds = Vec::with_capacity(k);
-    for fin in finals.into_iter().map(|f| f.expect("worker finished")) {
+    for (w, fin) in outcome.finals.into_iter().enumerate() {
+        let fin = fin
+            .ok_or_else(|| anyhow::anyhow!("worker {w} exited without reporting final state"))?;
         for (i, a) in &fin.alpha {
             alpha[*i] = *a;
         }
@@ -360,6 +405,7 @@ fn drive(
         vtime: outcome.vtime,
         total_updates,
         worker_rounds,
+        net: master_link.stats(),
     })
 }
 

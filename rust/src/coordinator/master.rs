@@ -30,14 +30,16 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
-use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::Context;
 
 use crate::loss::Loss;
 use crate::metrics::{Evaluator, Trace, TracePoint};
 use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
+use crate::transport::{Frame, Transport, TransportError};
 use crate::util::{norm_sq, Stopwatch};
 
-use super::messages::{MasterReply, WorkerMsg};
+use super::messages::{MasterReply, WorkerFinal, WorkerMsg};
 
 pub use crate::config::MergePolicy;
 
@@ -85,6 +87,10 @@ pub struct MasterOutcome {
     pub rounds: usize,
     /// Final virtual time.
     pub vtime: f64,
+    /// Each worker's final report, collected during the shutdown
+    /// drain. `None` only if the worker vanished before reporting
+    /// (the driver decides whether that is fatal).
+    pub finals: Vec<Option<WorkerFinal>>,
 }
 
 /// A message waiting in the virtual-arrival priority queue.
@@ -122,32 +128,34 @@ struct Pending {
 
 /// Run Algorithm 2 until the gap threshold or `max_rounds`.
 ///
-/// `rx` receives worker messages; `txs[k]` replies to worker `k`.
+/// All worker traffic flows through `link` — the in-process channel
+/// backend for simulated runs, a socket cluster for `--distributed`
+/// (the bounded-barrier gather then blocks on real socket readiness).
 /// `eval`/`loss` are used only for objective evaluation (the paper
-/// computes these distributed / offline; in-process we evaluate
-/// directly — same numbers, zero protocol impact). The evaluator may
-/// stream a shard store — the master never needs the flat dataset:
-/// the dual is assembled from the workers' tracked sums, and only the
-/// primal pass touches rows.
+/// computes these distributed / offline; we evaluate at the master —
+/// same numbers, zero protocol impact). The evaluator may stream a
+/// shard store — the master never needs the flat dataset: the dual is
+/// assembled from the workers' tracked sums, and only the primal pass
+/// touches rows.
 ///
-/// The caller must drop its own clone of the worker-side `Sender` so
-/// that `rx` disconnects when all workers exit (shutdown drain).
+/// At convergence/early-stop the master broadcasts `Shutdown` frames
+/// and drains one `Final` report per worker into the outcome, so
+/// worker processes exit cleanly rather than dying on a closed
+/// socket.
 ///
 /// `obs` streams merge/round/eval events to the caller's observer; a
 /// `Break` from any callback stops the run through the normal
-/// termination path (workers are drained and replied `terminate`).
-#[allow(clippy::too_many_arguments)]
+/// termination path.
 pub fn run_master(
     cfg: &MasterCfg,
-    rx: &Receiver<WorkerMsg>,
-    txs: &[Sender<MasterReply>],
+    link: &mut dyn Transport,
     eval: &mut Evaluator<'_>,
     loss: &dyn Loss,
     label: &str,
     obs: &ObserverHandle<'_>,
-) -> MasterOutcome {
+) -> anyhow::Result<MasterOutcome> {
     let k = cfg.k_nodes;
-    assert_eq!(txs.len(), k);
+    assert_eq!(link.peers(), k);
     let s_eff = cfg.s_barrier.min(k);
     let n = eval.n() as f64;
     let mut v = vec![0.0; eval.d()]; // v⁽⁰⁾ = (1/λn)·X·0 = 0
@@ -193,18 +201,32 @@ pub fn run_master(
         // ---- conservative DES step 1: hold one message per in-flight
         // worker so the next virtual arrival is known exactly ----
         while computing_count > 0 {
-            match rx.recv() {
-                Ok(msg) => {
+            match link.recv() {
+                Ok((peer, Frame::Update(msg))) => {
                     let w = msg.worker;
+                    anyhow::ensure!(
+                        w == peer && w < k,
+                        "update from peer {peer} claims worker id {w}"
+                    );
                     debug_assert!(computing[w], "worker {w} double-sent");
                     computing[w] = false;
                     computing_count -= 1;
                     pq.push(Reverse(Arrival { vtime: msg.arrival_vtime, seq, msg }));
                     seq += 1;
                 }
-                Err(_) => {
+                Ok((peer, frame)) => {
+                    anyhow::bail!(
+                        "unexpected {} frame from worker {peer} during round {t}",
+                        frame.kind_name()
+                    );
+                }
+                Err(TransportError::Closed) => {
                     disconnected = true;
                     break 'rounds;
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("receiving worker updates in round {t}")));
                 }
             }
         }
@@ -314,51 +336,83 @@ pub fn run_master(
         }
 
         if stop {
-            // Terminate contributors, everything still queued in P, and
+            // Shut down contributors, everything still queued in P, and
             // every message still sitting in the virtual queue (their
             // workers are all blocked on our reply).
             for &w in &picked {
-                let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+                let _ = link.send(w, Frame::Shutdown { vtime, round: t });
             }
             for w in 0..k {
                 if pending[w].take().is_some() {
-                    let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+                    let _ = link.send(w, Frame::Shutdown { vtime, round: t });
                 }
             }
             while let Some(Reverse(arr)) = pq.pop() {
-                let _ = txs[arr.msg.worker].send(MasterReply::terminate_now(vtime, t));
+                let _ = link.send(arr.msg.worker, Frame::Shutdown { vtime, round: t });
             }
             arrival_order.clear();
             break;
         }
         // ---- broadcast merged v to contributors ----
         for &w in &picked {
-            let _ = txs[w].send(MasterReply {
-                v: v.clone(),
-                arrival_vtime: vtime + cfg.reply_latency,
-                global_round: t,
-                terminate: false,
-            });
+            let _ = link.send(
+                w,
+                Frame::Merged(MasterReply {
+                    v: v.clone(),
+                    arrival_vtime: vtime + cfg.reply_latency,
+                    global_round: t,
+                    terminate: false,
+                }),
+            );
             computing[w] = true;
             computing_count += 1;
         }
     }
 
-    // Shutdown drain: reply terminate to any in-flight messages until
-    // all workers have dropped their senders.
+    // Shutdown drain: shut down any still-in-flight workers and
+    // collect every worker's Final report.
+    let mut finals: Vec<Option<WorkerFinal>> = (0..k).map(|_| None).collect();
     if !disconnected {
         for w in 0..k {
             if pending[w].take().is_some() {
-                let _ = txs[w].send(MasterReply::terminate_now(vtime, t));
+                let _ = link.send(w, Frame::Shutdown { vtime, round: t });
             }
         }
         while let Some(Reverse(arr)) = pq.pop() {
-            let _ = txs[arr.msg.worker].send(MasterReply::terminate_now(vtime, t));
+            let _ = link.send(arr.msg.worker, Frame::Shutdown { vtime, round: t });
         }
-        while let Ok(msg) = rx.recv() {
-            let _ = txs[msg.worker].send(MasterReply::terminate_now(vtime, t));
+        let mut reported = 0usize;
+        while reported < k {
+            match link.recv() {
+                Ok((peer, Frame::Update(_))) => {
+                    let _ = link.send(peer, Frame::Shutdown { vtime, round: t });
+                }
+                Ok((peer, Frame::Final(fin))) => {
+                    anyhow::ensure!(
+                        fin.worker_id == peer && peer < k,
+                        "final report from peer {peer} claims worker id {}",
+                        fin.worker_id
+                    );
+                    if finals[peer].replace(fin).is_none() {
+                        reported += 1;
+                    }
+                }
+                Ok((peer, frame)) => {
+                    anyhow::bail!(
+                        "unexpected {} frame from worker {peer} during shutdown",
+                        frame.kind_name()
+                    );
+                }
+                Err(TransportError::Closed) => break,
+                // A worker's connection closing after its Final is a
+                // normal exit; before it, the report is lost.
+                Err(TransportError::PeerGone { peer, .. }) if finals[peer].is_some() => {}
+                Err(e) => {
+                    return Err(anyhow::Error::new(e).context("draining worker final reports"));
+                }
+            }
         }
     }
 
-    MasterOutcome { v, trace, events, rounds: t, vtime }
+    Ok(MasterOutcome { v, trace, events, rounds: t, vtime, finals })
 }

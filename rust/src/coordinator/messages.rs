@@ -85,7 +85,7 @@ impl DeltaV {
 }
 
 /// Worker → master: one round's accumulated update.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct WorkerMsg {
     /// Worker (node) id `k`.
     pub worker: usize,
@@ -107,7 +107,7 @@ pub struct WorkerMsg {
 }
 
 /// Master → worker: the merged global state (or termination).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MasterReply {
     /// Merged `v^{(t+1)}` (empty when `terminate`).
     pub v: Vec<f64>,
@@ -123,6 +123,23 @@ impl MasterReply {
     pub fn terminate_now(vtime: f64, round: usize) -> Self {
         MasterReply { v: Vec::new(), arrival_vtime: vtime, global_round: round, terminate: true }
     }
+}
+
+/// Worker → master: final committed state, reported after shutdown.
+/// (In-process runs return it through the thread join as well; socket
+/// runs ship it as a `Final` frame so the master process can assemble
+/// the global α.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerFinal {
+    pub worker_id: usize,
+    /// Committed α values with their global row ids.
+    pub alpha: Vec<(usize, f64)>,
+    /// Rounds completed locally.
+    pub local_rounds: usize,
+    /// Total coordinate updates performed.
+    pub updates: u64,
+    /// Final local virtual time.
+    pub vtime: f64,
 }
 
 #[cfg(test)]

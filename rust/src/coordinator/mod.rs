@@ -15,6 +15,7 @@
 
 pub mod baseline;
 pub mod cocoa;
+pub mod distributed;
 pub mod hybrid;
 pub mod master;
 pub mod messages;
@@ -26,6 +27,7 @@ pub use master::{MergeEvent, MergePolicy};
 use crate::config::{Algorithm, ExpConfig};
 use crate::data::Dataset;
 use crate::metrics::Trace;
+use crate::transport::TransportStats;
 
 /// Common result of any solver run.
 #[derive(Debug)]
@@ -47,6 +49,11 @@ pub struct RunReport {
     pub total_updates: u64,
     /// Local rounds completed per worker.
     pub worker_rounds: Vec<usize>,
+    /// Master-side per-peer wire traffic (actual frame bytes — billed
+    /// at [`Frame::wire_len`](crate::transport::Frame::wire_len) even
+    /// in-process, counted on the socket for `--distributed`). Empty
+    /// for single-node algorithms.
+    pub net: TransportStats,
 }
 
 impl RunReport {
@@ -71,7 +78,11 @@ impl RunReport {
         self.certificate_gap_eval(&mut eval, cfg)
     }
 
-    fn certificate_gap_eval(&self, eval: &mut crate::metrics::Evaluator<'_>, cfg: &ExpConfig) -> f64 {
+    fn certificate_gap_eval(
+        &self,
+        eval: &mut crate::metrics::Evaluator<'_>,
+        cfg: &ExpConfig,
+    ) -> f64 {
         let loss = cfg.loss.build();
         let v = eval.exact_v(&self.alpha, cfg.lambda);
         eval.objectives(&*loss, &self.alpha, &v, cfg.lambda).gap

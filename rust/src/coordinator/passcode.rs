@@ -130,6 +130,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         vtime,
         total_updates,
         worker_rounds: vec![rounds],
+        net: Default::default(),
     })
 }
 

@@ -2,16 +2,15 @@
 //! `H` iterations each, send `Δv` to the master, wait for the merged
 //! `v`, commit `α ← α + ν·δ`, repeat.
 
-use std::sync::mpsc::{Receiver, Sender};
-
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::sim::{SendCost, UpdateCosts};
 use crate::solver::local::{LocalSolver, DUAL_RESYNC_EVERY};
 use crate::solver::StepParams;
+use crate::transport::{Frame, Transport, MASTER};
 use crate::util::Rng;
 
-use super::messages::{DeltaV, MasterReply, WorkerMsg};
+use super::messages::{DeltaV, WorkerFinal, WorkerMsg};
 
 /// Worker configuration.
 #[derive(Debug, Clone)]
@@ -41,26 +40,15 @@ pub struct WorkerCfg {
     pub row_base: usize,
 }
 
-/// Final state returned when the worker terminates.
-#[derive(Debug)]
-pub struct WorkerFinal {
-    pub worker_id: usize,
-    /// Committed α values with their global row ids.
-    pub alpha: Vec<(usize, f64)>,
-    /// Rounds completed locally.
-    pub local_rounds: usize,
-    /// Total coordinate updates performed.
-    pub updates: u64,
-    /// Final local virtual time.
-    pub vtime: f64,
-}
-
-/// Run one worker until the master says terminate.
+/// Run one worker until the master's `Shutdown` frame.
 ///
 /// `cells` are this node's per-core index shards (`I_{k,r}`);
-/// `norms`/`costs` are dataset-wide precomputed tables shared by all
-/// workers.
-#[allow(clippy::too_many_arguments)]
+/// `norms`/`costs` are per-row tables covering exactly `data`'s rows.
+/// All master traffic flows through `link` (its single peer is
+/// [`MASTER`]). On shutdown the final committed state is both sent to
+/// the master as a `Final` frame and returned. A vanished master is an
+/// error (socket workers exit non-zero with its address in the
+/// message), not a silent break.
 pub fn run_worker(
     cfg: &WorkerCfg,
     cells: Vec<Vec<usize>>,
@@ -68,10 +56,9 @@ pub fn run_worker(
     loss: &dyn Loss,
     norms: &[f64],
     costs: &UpdateCosts,
-    tx: Sender<WorkerMsg>,
-    rx: Receiver<MasterReply>,
+    link: &mut dyn Transport,
     mut rng: Rng,
-) -> WorkerFinal {
+) -> anyhow::Result<WorkerFinal> {
     let params = StepParams { lambda: cfg.lambda, n: cfg.n_global, sigma: cfg.sigma };
     let mut solver = LocalSolver::new(cells, data.d(), params, cfg.wild, &mut rng);
     // Dirty-coordinate tracking replaces the O(d) snapshot + diff per
@@ -147,24 +134,33 @@ pub fn run_worker(
             arrival_vtime: vtime + send_cost,
             updates: stats.updates,
         };
-        if tx.send(msg).is_err() {
-            break; // master gone
-        }
+        link.send(MASTER, Frame::Update(msg))
+            .map_err(|e| anyhow::anyhow!("sending round {local_rounds} update: {e}"))?;
 
-        // Wait for the merged v (line 11).
-        let reply = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => break,
-        };
-        if reply.terminate {
-            vtime = vtime.max(reply.arrival_vtime);
-            local_rounds += 1;
-            break;
+        // Wait for the merged v (line 11) or the shutdown broadcast.
+        match link.recv() {
+            Ok((_, Frame::Merged(reply))) => {
+                vtime = reply.arrival_vtime.max(vtime);
+                solver.v.copy_from(&reply.v);
+                v_prev.copy_from_slice(&reply.v);
+                local_rounds += 1;
+            }
+            Ok((_, Frame::Shutdown { vtime: stop_vtime, .. })) => {
+                vtime = vtime.max(stop_vtime);
+                local_rounds += 1;
+                break;
+            }
+            Ok((_, frame)) => {
+                anyhow::bail!(
+                    "unexpected {} frame from the master in round {local_rounds}",
+                    frame.kind_name()
+                );
+            }
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("waiting for the merged v in round {local_rounds}")));
+            }
         }
-        vtime = reply.arrival_vtime.max(vtime);
-        solver.v.copy_from(&reply.v);
-        v_prev.copy_from_slice(&reply.v);
-        local_rounds += 1;
     }
 
     // Collect committed α for the final report, under global row ids.
@@ -174,25 +170,29 @@ pub fn run_worker(
             alpha.push((cfg.row_base + i, shard.alpha_start[j]));
         }
     }
-    WorkerFinal {
+    let fin = WorkerFinal {
         worker_id: cfg.worker_id,
         alpha,
         local_rounds,
         updates: total_updates,
         vtime,
-    }
+    };
+    link.send(MASTER, Frame::Final(fin.clone()))
+        .map_err(|e| anyhow::anyhow!("reporting final state: {e}"))?;
+    Ok(fin)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::messages::MasterReply;
     use crate::data::synth::Preset;
     use crate::loss::Hinge;
     use crate::sim::CostModel;
-    use std::sync::mpsc;
+    use crate::transport::in_process;
 
     /// A single worker against a scripted "master" that echoes the
-    /// worker's own updates back (K = 1 semantics) and terminates after
+    /// worker's own updates back (K = 1 semantics) and shuts down after
     /// 3 rounds.
     #[test]
     fn worker_round_trip_and_terminate() {
@@ -205,8 +205,8 @@ mod tests {
                 .parts[0]
                 .clone()
         };
-        let (tx_w, rx_m) = mpsc::channel::<WorkerMsg>();
-        let (tx_m, rx_w) = mpsc::channel::<MasterReply>();
+        let (mut ml, mut wls) = in_process(1);
+        let mut wl = wls.pop().unwrap();
         let cfg = WorkerCfg {
             worker_id: 0,
             h_local: 100,
@@ -224,7 +224,12 @@ mod tests {
             let mut v = Vec::new();
             let mut vt = 0.0;
             for round in 0..3 {
-                let msg = rx_m.recv().unwrap();
+                let (from, frame) = ml.recv().unwrap();
+                assert_eq!(from, 0);
+                let msg = match frame {
+                    Frame::Update(m) => m,
+                    other => panic!("expected Update, got {}", other.kind_name()),
+                };
                 assert_eq!(msg.worker, 0);
                 assert_eq!(msg.local_round, round);
                 assert_eq!(msg.updates, 200); // R=2 × H=100
@@ -234,29 +239,30 @@ mod tests {
                     v = vec![0.0; msg.delta_v.dim()];
                 }
                 msg.delta_v.add_scaled_into(&mut v, 1.0);
-                tx_m.send(MasterReply {
-                    v: v.clone(),
-                    arrival_vtime: vt + 1e-3,
-                    global_round: round + 1,
-                    terminate: false,
-                })
+                ml.send(
+                    0,
+                    Frame::Merged(MasterReply {
+                        v: v.clone(),
+                        arrival_vtime: vt + 1e-3,
+                        global_round: round + 1,
+                        terminate: false,
+                    }),
+                )
                 .unwrap();
             }
-            let msg = rx_m.recv().unwrap();
-            tx_m.send(MasterReply::terminate_now(msg.arrival_vtime, 4)).unwrap();
+            let (_, frame) = ml.recv().unwrap();
+            let vt = match frame {
+                Frame::Update(m) => m.arrival_vtime,
+                other => panic!("expected Update, got {}", other.kind_name()),
+            };
+            ml.send(0, Frame::Shutdown { vtime: vt, round: 4 }).unwrap();
+            // The worker reports its final state before exiting.
+            let (_, frame) = ml.recv().unwrap();
+            assert!(matches!(frame, Frame::Final(_)));
         });
         let ds_ref = &ds;
-        let fin = run_worker(
-            &cfg,
-            cells,
-            ds_ref,
-            &Hinge,
-            &norms,
-            &costs,
-            tx_w,
-            rx_w,
-            Rng::new(3),
-        );
+        let fin =
+            run_worker(&cfg, cells, ds_ref, &Hinge, &norms, &costs, &mut wl, Rng::new(3)).unwrap();
         master.join().unwrap();
         assert_eq!(fin.local_rounds, 4);
         assert_eq!(fin.updates, 4 * 200);
@@ -279,8 +285,8 @@ mod tests {
                 .parts[0]
                 .clone()
         };
-        let (tx_w, rx_m) = mpsc::channel::<WorkerMsg>();
-        let (tx_m, rx_w) = mpsc::channel::<MasterReply>();
+        let (mut ml, mut wls) = in_process(1);
+        let mut wl = wls.pop().unwrap();
         let cfg = WorkerCfg {
             worker_id: 0,
             h_local: 40,
@@ -295,17 +301,24 @@ mod tests {
             row_base: 0,
         };
         let master = std::thread::spawn(move || {
-            let msg = rx_m.recv().unwrap();
+            let (_, frame) = ml.recv().unwrap();
+            let msg = match frame {
+                Frame::Update(m) => m,
+                other => panic!("expected Update, got {}", other.kind_name()),
+            };
             assert!(msg.delta_v.is_sparse());
             assert!(msg.delta_v.nnz() > 0);
             assert!(msg.delta_v.nnz() <= msg.delta_v.dim());
             // Sparse values reconstruct v exactly (first round: v_old=0,
             // ν=1 ⇒ Δv = live v).
             let dense = msg.delta_v.to_dense();
-            tx_m.send(MasterReply::terminate_now(msg.arrival_vtime, 1)).unwrap();
+            ml.send(0, Frame::Shutdown { vtime: msg.arrival_vtime, round: 1 }).unwrap();
+            let (_, frame) = ml.recv().unwrap();
+            assert!(matches!(frame, Frame::Final(_)));
             dense
         });
-        let fin = run_worker(&cfg, cells, &ds, &Hinge, &norms, &costs, tx_w, rx_w, Rng::new(7));
+        let fin =
+            run_worker(&cfg, cells, &ds, &Hinge, &norms, &costs, &mut wl, Rng::new(7)).unwrap();
         let dense = master.join().unwrap();
         // Rebuild v from the committed α and compare.
         let mut alpha = vec![0.0; ds.n()];
@@ -316,5 +329,40 @@ mod tests {
         for (j, (a, b)) in dense.iter().zip(&v_exact).enumerate() {
             assert!((a - b).abs() < 1e-9, "Δv[{j}]: {a} vs {b}");
         }
+    }
+
+    /// The graceful-shutdown satellite's in-process half: a worker
+    /// whose master vanishes mid-round errors out with "master
+    /// disconnected" instead of hanging or silently succeeding.
+    #[test]
+    fn vanished_master_is_an_error() {
+        let ds = Preset::Tiny.generate(&mut Rng::new(9));
+        let norms = ds.x.row_norms_sq();
+        let costs = UpdateCosts::precompute(&ds, &CostModel::default());
+        let cells = {
+            let mut rng = Rng::new(10);
+            crate::data::Partition::build(ds.n(), 1, 1, crate::data::Strategy::Contiguous, &mut rng)
+                .parts[0]
+                .clone()
+        };
+        let (ml, mut wls) = in_process(1);
+        let mut wl = wls.pop().unwrap();
+        drop(ml);
+        let cfg = WorkerCfg {
+            worker_id: 0,
+            h_local: 10,
+            nu: 1.0,
+            sigma: 1.0,
+            lambda: 1e-2,
+            wild: false,
+            straggler: 1.0,
+            send_cost: SendCost::Fixed(0.0),
+            delta_threshold: 0.5,
+            n_global: ds.n(),
+            row_base: 0,
+        };
+        let err = run_worker(&cfg, cells, &ds, &Hinge, &norms, &costs, &mut wl, Rng::new(11))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("master disconnected"), "{err:#}");
     }
 }

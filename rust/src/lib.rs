@@ -57,6 +57,7 @@ pub mod session;
 pub mod sim;
 pub mod solver;
 pub mod store;
+pub mod transport;
 pub mod util;
 
 /// Most-used items in one import.

@@ -3,6 +3,10 @@
 //! Subcommands:
 //!
 //! * `train`     — run one algorithm on a dataset, print the trace.
+//!   With `--distributed --listen <addr>` it becomes the master of a
+//!   multi-process cluster (workers join via the `node` subcommand).
+//! * `node`      — worker role: join a distributed master and train
+//!   this process's shard range until the shutdown broadcast.
 //! * `gen-data`  — write a synthetic preset as a LIBSVM file.
 //! * `data`      — shard store: `pack` LIBSVM text into binary CSR
 //!   shards, `inspect` a packed store.
@@ -12,10 +16,15 @@
 
 use hybrid_dca::cli::{self, FlagSpec};
 use hybrid_dca::config::{Algorithm, ExpConfig, SigmaPolicy};
+use hybrid_dca::coordinator::{distributed, RunReport};
 use hybrid_dca::data::{libsvm, DatasetStats, Preset, Strategy};
 use hybrid_dca::harness;
 use hybrid_dca::loss::LossKind;
-use hybrid_dca::session::{self, Chain, CsvStreamObserver, PrintObserver, Session};
+use hybrid_dca::session::{
+    self, Chain, CsvStreamObserver, DataSource, Observer, ObserverHandle, PrintObserver, Session,
+};
+use hybrid_dca::transport::{SocketListener, TransportBackend, TransportCfg};
+use hybrid_dca::util::json::Json;
 use hybrid_dca::util::{logging, Rng};
 
 fn main() {
@@ -39,6 +48,7 @@ fn real_main(argv: &[String]) -> anyhow::Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "train" => cmd_train(rest),
+        "node" => cmd_node(rest),
         "gen-data" => cmd_gen_data(rest),
         "data" => cmd_data(rest),
         "stats" => cmd_stats(rest),
@@ -57,6 +67,7 @@ fn print_usage() {
         "hybrid-dca — double asynchronous stochastic dual coordinate ascent\n\n\
          Subcommands:\n\
          \x20 train      run one solver (Baseline | CoCoA+ | PassCoDe | Hybrid-DCA)\n\
+         \x20 node       worker role: join a distributed master (see train --distributed)\n\
          \x20 gen-data   write a synthetic preset as a LIBSVM file\n\
          \x20 data       shard store: pack LIBSVM → binary CSR shards, inspect a store\n\
          \x20 stats      dataset statistics (Table 1)\n\
@@ -93,9 +104,37 @@ fn train_specs() -> Vec<FlagSpec> {
         FlagSpec::value("partition", "shuffled", "contiguous|striped|shuffled"),
         FlagSpec::value("stragglers", "", "profile: none|one-slow|ramp|half-slow"),
         FlagSpec::value("csv", "", "write trace CSV to this path"),
+        FlagSpec::value("dump", "", "write final state (α, v, trace) as bit-exact JSON"),
         FlagSpec::switch("wild", "use racy (PassCoDe-Wild) updates"),
+        FlagSpec::switch("distributed", "run as cluster master over real sockets"),
+        FlagSpec::value("listen", "", "master bind address (host:port for tcp, path for uds)"),
+        FlagSpec::value("transport", "tcp", "socket backend for --distributed: tcp|uds"),
+        FlagSpec::value("accept-timeout", "30", "seconds to wait for all workers to join"),
+        FlagSpec::value("read-timeout", "30", "seconds of peer silence before giving up"),
         FlagSpec::switch("help", "show help"),
     ]
+}
+
+/// Fold the `--distributed` socket flags into `cfg.transport`.
+fn apply_transport_flags(cfg: &mut ExpConfig, args: &cli::Args) -> anyhow::Result<()> {
+    let backend = args.get("transport").unwrap();
+    cfg.transport.backend = TransportBackend::parse(backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown --transport '{backend}' (tcp|uds)"))?;
+    anyhow::ensure!(
+        cfg.transport.backend != TransportBackend::InProcess,
+        "--distributed needs a socket backend (tcp|uds); drop --distributed to run in-process"
+    );
+    let listen = args.get("listen").unwrap();
+    if !listen.is_empty() {
+        cfg.transport.listen = listen.to_string();
+    }
+    anyhow::ensure!(
+        !cfg.transport.listen.is_empty(),
+        "--distributed requires --listen (host:port for tcp, a socket path for uds)"
+    );
+    cfg.transport.accept_timeout_secs = args.get_parse("accept-timeout")?;
+    cfg.transport.read_timeout_secs = args.get_parse("read-timeout")?;
+    cfg.validate()
 }
 
 fn parse_train_cfg(args: &cli::Args) -> anyhow::Result<(Algorithm, ExpConfig)> {
@@ -159,7 +198,11 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         print!("{}", cli::help("train", "run one solver", &specs));
         return Ok(());
     }
-    let (algo, cfg) = parse_train_cfg(&args)?;
+    let (algo, mut cfg) = parse_train_cfg(&args)?;
+    let is_distributed = args.flag("distributed");
+    if is_distributed {
+        apply_transport_flags(&mut cfg, &args)?;
+    }
     // The typed session API is the execution path; the flat config is
     // only the CLI-flag surface.
     let session = Session::from_exp_config(&cfg)?;
@@ -193,7 +236,7 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     let csv = args.get("csv").unwrap().to_string();
     let report = if csv.is_empty() {
         let mut obs = PrintObserver::new();
-        session.run_source_observed(engine_name, &source, &mut obs)?
+        run_train(is_distributed, algo, &cfg, &session, engine_name, &source, &mut obs)?
     } else {
         let file = std::io::BufWriter::new(
             std::fs::File::create(&csv)
@@ -207,19 +250,147 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
             algo.name()
         };
         let mut obs = Chain(PrintObserver::new(), CsvStreamObserver::new(file, label)?);
-        let report = session.run_source_observed(engine_name, &source, &mut obs)?;
+        let report =
+            run_train(is_distributed, algo, &cfg, &session, engine_name, &source, &mut obs)?;
         if let Some(e) = obs.1.error.take() {
             anyhow::bail!("writing trace CSV {csv}: {e}");
         }
         println!("# trace streamed to {csv}");
         report
     };
+    if is_distributed {
+        print_transport_report(&report);
+    }
+    let dump = args.get("dump").unwrap();
+    if !dump.is_empty() {
+        dump_state(dump, &report)?;
+        println!("# state dumped to {dump}");
+    }
     println!(
         "# finished: rounds={} updates={} vtime={:.6}s cert-gap={:.4e}",
         report.rounds,
         report.total_updates,
         report.vtime,
         report.certificate_gap_source(&source, &cfg)
+    );
+    Ok(())
+}
+
+/// Run the solver: in-process through the session engine, or as the
+/// master of a real socket cluster when `--distributed` is set.
+fn run_train(
+    is_distributed: bool,
+    algo: Algorithm,
+    cfg: &ExpConfig,
+    session: &Session,
+    engine_name: &str,
+    source: &DataSource,
+    obs: &mut dyn Observer,
+) -> anyhow::Result<RunReport> {
+    if !is_distributed {
+        return session.run_source_observed(engine_name, source, obs);
+    }
+    let listener = SocketListener::bind(&cfg.transport)?;
+    // Parsed by the distributed smoke tests to learn a port-0 bind.
+    println!(
+        "# listening on {} — waiting for {} worker processes",
+        listener.local_desc(),
+        cfg.k_nodes
+    );
+    let handle = ObserverHandle::new(obs);
+    distributed::run_master_with_listener(algo, cfg, listener, &handle)
+}
+
+/// Per-peer wire traffic, as seen from the master. `sent` is
+/// master→worker (v broadcasts), `recv` is worker→master (Δv updates) —
+/// sparse rounds show up directly as smaller `recv` byte counts.
+fn print_transport_report(report: &RunReport) {
+    for (w, p) in report.net.per_peer.iter().enumerate() {
+        println!(
+            "# transport: worker {w} sent={}B/{} frames recv={}B/{} frames",
+            p.sent_bytes, p.sent_frames, p.recv_bytes, p.recv_frames
+        );
+    }
+    println!(
+        "# transport: total sent={}B recv={}B",
+        report.net.sent_bytes(),
+        report.net.recv_bytes()
+    );
+}
+
+/// Write the run's final state as JSON with every f64 spelled as its
+/// IEEE-754 bit pattern, so two runs can be compared for *bitwise*
+/// equality with `cmp`. Wall-clock fields are excluded — everything
+/// kept is deterministic for a fixed store, seed, and config.
+fn dump_state(path: &str, report: &RunReport) -> anyhow::Result<()> {
+    let bits = |x: f64| Json::Str(format!("{:016x}", x.to_bits()));
+    let vec_bits = |xs: &[f64]| Json::Arr(xs.iter().map(|&x| bits(x)).collect());
+    let trace = Json::Arr(
+        report
+            .trace
+            .points
+            .iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("round".into(), Json::Num(p.round as f64)),
+                    ("virt_secs".into(), bits(p.virt_secs)),
+                    ("gap".into(), bits(p.gap)),
+                    ("primal".into(), bits(p.primal)),
+                    ("dual".into(), bits(p.dual)),
+                    ("updates".into(), Json::Num(p.updates as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::Obj(vec![
+        ("label".into(), Json::Str(report.label.clone())),
+        ("rounds".into(), Json::Num(report.rounds as f64)),
+        ("updates".into(), Json::Num(report.total_updates as f64)),
+        ("vtime".into(), bits(report.vtime)),
+        ("alpha".into(), vec_bits(&report.alpha)),
+        ("v".into(), vec_bits(&report.v)),
+        ("trace".into(), trace),
+    ]);
+    std::fs::write(path, doc.to_pretty()).map_err(|e| anyhow::anyhow!("write {path}: {e}"))
+}
+
+fn cmd_node(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::required("join", "master address (host:port for tcp, socket path for uds)"),
+        FlagSpec::value("transport", "tcp", "socket backend: tcp|uds"),
+        FlagSpec::value("store", "", "shard-store directory (default: the master's store path)"),
+        FlagSpec::value("connect-timeout", "10", "seconds to keep retrying the connect"),
+        FlagSpec::value("read-timeout", "30", "seconds of master silence before giving up"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("node", "worker role: join a distributed master", &specs));
+        return Ok(());
+    }
+    let backend = args.get("transport").unwrap();
+    let mut tcfg = TransportCfg::default();
+    tcfg.backend = TransportBackend::parse(backend)
+        .ok_or_else(|| anyhow::anyhow!("unknown --transport '{backend}' (tcp|uds)"))?;
+    anyhow::ensure!(
+        tcfg.backend != TransportBackend::InProcess,
+        "a worker node needs a socket backend (tcp|uds)"
+    );
+    tcfg.join = args.get("join").unwrap().to_string();
+    tcfg.connect_timeout_secs = args.get_parse("connect-timeout")?;
+    tcfg.read_timeout_secs = args.get_parse("read-timeout")?;
+    tcfg.validate()?;
+    let store = args.get("store").unwrap();
+    let store_override = if store.is_empty() { None } else { Some(store) };
+    let summary = distributed::run_worker_node(&tcfg, store_override)?;
+    println!(
+        "# worker {} done: rounds={} updates={} sent={}B recv={}B (master at {})",
+        summary.worker_id,
+        summary.local_rounds,
+        summary.updates,
+        summary.net.sent_bytes(),
+        summary.net.recv_bytes(),
+        summary.master_addr
     );
     Ok(())
 }

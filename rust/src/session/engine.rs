@@ -256,6 +256,7 @@ mod tests {
                     vtime: 0.0,
                     total_updates: 0,
                     worker_rounds: Vec::new(),
+                    net: Default::default(),
                 })
             }
         }

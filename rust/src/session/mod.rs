@@ -49,6 +49,7 @@ use crate::config::{ExpConfig, MergePolicy, SigmaPolicy};
 use crate::coordinator::RunReport;
 use crate::data::{Dataset, Strategy};
 use crate::loss::LossKind;
+use crate::transport::TransportCfg;
 
 /// Which data the session runs on (preset name, LIBSVM path, or a
 /// packed shard store) and the root RNG seed.
@@ -201,6 +202,9 @@ pub struct Session {
     pub master: MasterCfg,
     pub control: RunControl,
     pub sim: SimCfg,
+    /// Cross-node transport (`[transport]` table): in-process channels
+    /// by default, TCP/UDS for multi-process runs.
+    pub transport: TransportCfg,
 }
 
 impl Session {
@@ -234,7 +238,8 @@ impl Session {
             .net_latency(cfg.net_latency)
             .net_per_elem(cfg.net_per_elem)
             .cost_per_nnz(cfg.cost_per_nnz)
-            .delta_threshold(cfg.delta_threshold);
+            .delta_threshold(cfg.delta_threshold)
+            .transport(cfg.transport.clone());
         if let Some(p) = &cfg.data_path {
             b = b.data_path(p);
         }
@@ -273,6 +278,7 @@ impl Session {
             net_per_elem: self.sim.net_per_elem,
             cost_per_nnz: self.sim.cost_per_nnz,
             delta_threshold: self.sim.delta_threshold,
+            transport: self.transport.clone(),
         }
     }
 
@@ -373,6 +379,7 @@ pub struct SessionBuilder {
     master: MasterCfg,
     control: RunControl,
     sim: SimCfg,
+    transport: TransportCfg,
     allow_unsafe_sigma: bool,
     /// Whether `barrier()` was called; only a *default* barrier tracks
     /// the cluster size in `cluster()`.
@@ -413,6 +420,7 @@ impl Default for SessionBuilder {
                 cost_per_nnz: d.cost_per_nnz,
                 delta_threshold: d.delta_threshold,
             },
+            transport: d.transport,
             allow_unsafe_sigma: false,
             barrier_explicit: false,
         }
@@ -580,6 +588,14 @@ impl SessionBuilder {
         self
     }
 
+    // ---- transport ----
+    /// Cross-node transport configuration (backend, addresses,
+    /// timeouts) for `--distributed` runs.
+    pub fn transport(mut self, transport: TransportCfg) -> Self {
+        self.transport = transport;
+        self
+    }
+
     /// Validate every paper constraint and produce the session. Errors
     /// name the violated constraint and where it comes from.
     pub fn build(self) -> anyhow::Result<Session> {
@@ -591,6 +607,7 @@ impl SessionBuilder {
             master,
             control,
             sim,
+            transport,
             allow_unsafe_sigma,
             barrier_explicit: _,
         } = self;
@@ -677,7 +694,7 @@ impl SessionBuilder {
             sim.delta_threshold
         );
 
-        let session = Session { data, problem, cluster, local, master, control, sim };
+        let session = Session { data, problem, cluster, local, master, control, sim, transport };
         // Drift backstop: the checks above are the named-subconfig
         // versions of `ExpConfig::validate`; delegating the flattened
         // config back through it guarantees a built Session is never
@@ -815,6 +832,9 @@ mod tests {
         cfg.sigma = SigmaPolicy::Fixed(0.5); // unsafe: from_exp_config must accept
         cfg.stragglers = vec![1.0, 1.0, 2.0, 1.0, 4.0, 1.0];
         cfg.eval_every = 3;
+        cfg.transport.backend = crate::transport::TransportBackend::Tcp;
+        cfg.transport.listen = "127.0.0.1:0".into();
+        cfg.transport.read_timeout_secs = 2.0;
         let session = Session::from_exp_config(&cfg).unwrap();
         assert_eq!(session.to_exp_config(), cfg);
     }

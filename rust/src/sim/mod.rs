@@ -23,6 +23,16 @@
 //! for the S-th fastest worker instead of the slowest; bounded delay
 //! `Γ` ⇒ slow workers cannot fall arbitrarily far behind. Real wall
 //! time is *also* recorded in every trace for completeness.
+//!
+//! **Both transport backends bill the same virtual clock.** When the
+//! cluster runs over real sockets (`transport::Socket`, `train
+//! --distributed`), [`SendCost`] still prices the *simulated* network
+//! exactly as in-process — that is what keeps socket runs
+//! bitwise-identical to single-process runs. The *actual* bytes moved
+//! on the wire are counted separately per peer by
+//! [`transport::TransportStats`](crate::transport::TransportStats);
+//! socket-only traffic (handshake, `Assign`, `Final` frames) appears
+//! in those counters but is never charged to the virtual clock.
 
 use crate::data::Dataset;
 

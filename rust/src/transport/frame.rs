@@ -1,0 +1,651 @@
+//! The versioned binary wire protocol: handshake + length-prefixed
+//! CRC-checked frames (the `store::format` encoding idioms applied to
+//! the coordinator's messages).
+//!
+//! ```text
+//! handshake   worker → master   magic b"HDCAWIRE" | version u32 | reserved u32
+//!             master → worker   magic b"HDCAWIRE" | version u32 | status  u32
+//!
+//! frame       header (20 B)     kind u32 | round u64 | payload_len u64
+//!             payload           kind-specific, little-endian (below)
+//!             trailer (4 B)     crc32 u32 over header + payload
+//! ```
+//!
+//! Payloads (all integers little-endian, floats as IEEE-754 bits — the
+//! decode is bitwise, including negative zero and non-finite values):
+//!
+//! ```text
+//! Update   worker u32 | local_round u64 | updates u64 | dual_sum f64
+//!          | arrival_vtime f64 | Δv
+//! Merged   global_round u64 | arrival_vtime f64 | len u64 | v f64×len
+//! Shutdown round u64 | vtime f64
+//! Final    worker u32 | local_rounds u64 | updates u64 | vtime f64
+//!          | len u64 | (row u64, α f64)×len
+//! Assign   worker u32 | k u32 | n u64 | d u64 | rng u64×4
+//!          | allreduce u8 | json_len u64 | config json (UTF-8)
+//!
+//! Δv       tag u8 (0 = dense, 1 = sparse)
+//!   dense  dim u64 | values f64×dim
+//!   sparse dim u64 | nnz u64 | indices u32×nnz | values f64×nnz
+//! ```
+//!
+//! A sparse `Δv` frame therefore ships `O(touched)` bytes on the real
+//! wire — the same 1.5-elems-per-entry ratio the virtual cost model
+//! bills via [`DeltaV::wire_elems`].
+
+use crate::coordinator::messages::{DeltaV, MasterReply, WorkerFinal, WorkerMsg};
+use crate::store::format::crc32;
+
+/// Protocol magic, first bytes of every handshake.
+pub const WIRE_MAGIC: [u8; 8] = *b"HDCAWIRE";
+/// Current protocol version.
+pub const WIRE_VERSION: u32 = 1;
+/// Handshake hello/ack length (both directions).
+pub const HANDSHAKE_LEN: usize = 16;
+/// Frame header length: kind u32 + round u64 + payload_len u64.
+pub const FRAME_HEADER_LEN: usize = 20;
+/// Frame trailer length: crc32 u32.
+pub const FRAME_TRAILER_LEN: usize = 4;
+/// Sanity cap on a frame's payload, so a corrupt length prefix can
+/// never drive an allocation (the same guard the shard decoder uses).
+pub const MAX_FRAME_PAYLOAD: u64 = 1 << 32;
+
+/// Handshake ack status: accepted.
+pub const ACK_OK: u32 = 0;
+/// Handshake ack status: protocol version mismatch (the ack's version
+/// field carries the master's version so both sides can be reported).
+pub const ACK_VERSION_MISMATCH: u32 = 1;
+
+const KIND_UPDATE: u32 = 1;
+const KIND_MERGED: u32 = 2;
+const KIND_SHUTDOWN: u32 = 3;
+const KIND_FINAL: u32 = 4;
+const KIND_ASSIGN: u32 = 5;
+
+/// Startup assignment, master → worker, sent once after the handshake:
+/// everything a worker process needs to reproduce its in-process
+/// twin's behavior bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// This worker's id `k` (also its accept-order peer index).
+    pub worker_id: usize,
+    /// Cluster size `K`.
+    pub k_nodes: usize,
+    /// Global row count of the shard store (cross-checked against the
+    /// worker's own copy).
+    pub n: usize,
+    /// Global feature dimension.
+    pub d: usize,
+    /// The worker's forked xoshiro256** stream, forked by the master
+    /// in worker-id order exactly as the in-process driver forks them.
+    pub rng_state: [u64; 4],
+    /// Use the all-reduce send-cost model (CoCoA+) instead of sized
+    /// point-to-point (Hybrid-DCA).
+    pub allreduce: bool,
+    /// The full experiment config as `util::json` text.
+    pub config_json: String,
+}
+
+/// One typed message on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Worker → master: one round's accumulated update.
+    Update(WorkerMsg),
+    /// Master → worker: the merged global `v` (never a terminate —
+    /// termination is its own frame kind on the wire).
+    Merged(MasterReply),
+    /// Master → worker: stop after this round and report your final
+    /// state. Carries the stop-time virtual clock and global round.
+    Shutdown { vtime: f64, round: usize },
+    /// Worker → master: final committed state, sent after `Shutdown`.
+    Final(WorkerFinal),
+    /// Master → worker: startup assignment.
+    Assign(Assignment),
+}
+
+/// A named wire-level decode failure. Every single-byte corruption of
+/// an encoded frame maps to one of these (`tests/prop_transport.rs`
+/// flips each byte and checks).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireError {
+    /// Handshake bytes did not start with `HDCAWIRE`.
+    BadMagic { got: [u8; 8] },
+    /// Peers speak different protocol versions (both reported).
+    VersionMismatch { ours: u32, theirs: u32 },
+    /// Handshake rejected with an unrecognized status code.
+    HandshakeRejected { code: u32 },
+    /// Frame length prefix disagrees with the bytes on hand.
+    BadLength { expected: usize, got: usize },
+    /// Length prefix exceeds [`MAX_FRAME_PAYLOAD`].
+    Oversized { len: u64 },
+    /// CRC-32 over header + payload does not match the trailer.
+    BadCrc { expected: u32, got: u32 },
+    /// Unknown frame kind tag.
+    UnknownKind { kind: u32 },
+    /// Ran out of bytes while parsing the named field.
+    Truncated { field: &'static str },
+    /// A structurally invalid payload value.
+    BadPayload { field: &'static str, detail: String },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic { got } => {
+                write!(f, "bad handshake magic {:?} (expected {:?})", got, WIRE_MAGIC)
+            }
+            WireError::VersionMismatch { ours, theirs } => write!(
+                f,
+                "protocol version mismatch: we speak v{ours}, peer speaks v{theirs}"
+            ),
+            WireError::HandshakeRejected { code } => {
+                write!(f, "handshake rejected with unknown status {code}")
+            }
+            WireError::BadLength { expected, got } => write!(
+                f,
+                "frame length mismatch: length prefix implies {expected} bytes, got {got}"
+            ),
+            WireError::Oversized { len } => write!(
+                f,
+                "frame payload length {len} exceeds the {MAX_FRAME_PAYLOAD}-byte sanity cap"
+            ),
+            WireError::BadCrc { expected, got } => write!(
+                f,
+                "frame CRC mismatch: computed {expected:#010x}, stored {got:#010x}"
+            ),
+            WireError::UnknownKind { kind } => write!(f, "unknown frame kind {kind}"),
+            WireError::Truncated { field } => {
+                write!(f, "frame truncated while reading {field}")
+            }
+            WireError::BadPayload { field, detail } => {
+                write!(f, "bad frame payload at {field}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---- encoding helpers ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize, field: &'static str) -> Result<&'a [u8], WireError> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(WireError::Truncated { field })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, field: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self, field: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+    }
+
+    /// A length field that must fit both `usize` and the bytes left
+    /// (given `elem_bytes` per element) — a corrupt inner length can
+    /// never drive an allocation past the buffer it came from.
+    fn len_field(&mut self, elem_bytes: usize, field: &'static str) -> Result<usize, WireError> {
+        let raw = self.u64(field)?;
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if elem_bytes as u64 > 0 && raw > remaining / elem_bytes.max(1) as u64 {
+            return Err(WireError::Truncated { field });
+        }
+        Ok(raw as usize)
+    }
+
+    fn done(&self, field: &'static str) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::BadPayload {
+                field,
+                detail: format!("{} trailing bytes after payload", self.buf.len() - self.pos),
+            })
+        }
+    }
+}
+
+fn encode_delta_v(out: &mut Vec<u8>, dv: &DeltaV) {
+    match dv {
+        DeltaV::Dense(values) => {
+            out.push(0);
+            put_u64(out, values.len() as u64);
+            for &x in values {
+                put_f64(out, x);
+            }
+        }
+        DeltaV::Sparse { dim, indices, values } => {
+            debug_assert_eq!(indices.len(), values.len());
+            out.push(1);
+            put_u64(out, *dim as u64);
+            put_u64(out, indices.len() as u64);
+            for &j in indices {
+                put_u32(out, j);
+            }
+            for &x in values {
+                put_f64(out, x);
+            }
+        }
+    }
+}
+
+fn delta_v_wire_len(dv: &DeltaV) -> usize {
+    match dv {
+        DeltaV::Dense(values) => 1 + 8 + 8 * values.len(),
+        DeltaV::Sparse { indices, .. } => 1 + 8 + 8 + 12 * indices.len(),
+    }
+}
+
+fn decode_delta_v(c: &mut Cursor<'_>) -> Result<DeltaV, WireError> {
+    match c.u8("delta_v.tag")? {
+        0 => {
+            let dim = c.len_field(8, "delta_v.dim")?;
+            let mut values = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                values.push(c.f64("delta_v.values")?);
+            }
+            Ok(DeltaV::Dense(values))
+        }
+        1 => {
+            let dim = c.u64("delta_v.dim")? as usize;
+            let nnz = c.len_field(12, "delta_v.nnz")?;
+            let mut indices = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                let j = c.u32("delta_v.indices")?;
+                if j as usize >= dim {
+                    return Err(WireError::BadPayload {
+                        field: "delta_v.indices",
+                        detail: format!("index {j} out of range for dim {dim}"),
+                    });
+                }
+                indices.push(j);
+            }
+            let mut values = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                values.push(c.f64("delta_v.values")?);
+            }
+            Ok(DeltaV::Sparse { dim, indices, values })
+        }
+        t => Err(WireError::BadPayload {
+            field: "delta_v.tag",
+            detail: format!("unknown representation tag {t}"),
+        }),
+    }
+}
+
+impl Frame {
+    /// Wire kind tag.
+    pub fn kind(&self) -> u32 {
+        match self {
+            Frame::Update(_) => KIND_UPDATE,
+            Frame::Merged(_) => KIND_MERGED,
+            Frame::Shutdown { .. } => KIND_SHUTDOWN,
+            Frame::Final(_) => KIND_FINAL,
+            Frame::Assign(_) => KIND_ASSIGN,
+        }
+    }
+
+    /// Human name of the kind (error messages).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Update(_) => "Update",
+            Frame::Merged(_) => "Merged",
+            Frame::Shutdown { .. } => "Shutdown",
+            Frame::Final(_) => "Final",
+            Frame::Assign(_) => "Assign",
+        }
+    }
+
+    /// The round number mirrored into the frame header (on-wire
+    /// debuggability; the decoder cross-checks it against the payload).
+    pub fn header_round(&self) -> u64 {
+        match self {
+            Frame::Update(m) => m.local_round as u64,
+            Frame::Merged(r) => r.global_round as u64,
+            Frame::Shutdown { round, .. } => *round as u64,
+            Frame::Final(f) => f.local_rounds as u64,
+            Frame::Assign(_) => 0,
+        }
+    }
+
+    fn payload_len(&self) -> usize {
+        match self {
+            Frame::Update(m) => 4 + 8 + 8 + 8 + 8 + delta_v_wire_len(&m.delta_v),
+            Frame::Merged(r) => 8 + 8 + 8 + 8 * r.v.len(),
+            Frame::Shutdown { .. } => 8 + 8,
+            Frame::Final(f) => 4 + 8 + 8 + 8 + 8 + 16 * f.alpha.len(),
+            Frame::Assign(a) => 4 + 4 + 8 + 8 + 32 + 1 + 8 + a.config_json.len(),
+        }
+    }
+
+    /// Exact encoded size, header and trailer included — computed
+    /// without serializing, so the in-process backend can bill byte
+    /// counters at zero encoding cost (pinned equal to
+    /// `encode().len()` by the property tests).
+    pub fn wire_len(&self) -> usize {
+        FRAME_HEADER_LEN + self.payload_len() + FRAME_TRAILER_LEN
+    }
+
+    /// Encode as header + payload + CRC-32 trailer.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload_len = self.payload_len();
+        let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload_len + FRAME_TRAILER_LEN);
+        put_u32(&mut out, self.kind());
+        put_u64(&mut out, self.header_round());
+        put_u64(&mut out, payload_len as u64);
+        match self {
+            Frame::Update(m) => {
+                put_u32(&mut out, m.worker as u32);
+                put_u64(&mut out, m.local_round as u64);
+                put_u64(&mut out, m.updates);
+                put_f64(&mut out, m.dual_sum);
+                put_f64(&mut out, m.arrival_vtime);
+                encode_delta_v(&mut out, &m.delta_v);
+            }
+            Frame::Merged(r) => {
+                debug_assert!(!r.terminate, "terminate travels as Frame::Shutdown");
+                put_u64(&mut out, r.global_round as u64);
+                put_f64(&mut out, r.arrival_vtime);
+                put_u64(&mut out, r.v.len() as u64);
+                for &x in &r.v {
+                    put_f64(&mut out, x);
+                }
+            }
+            Frame::Shutdown { vtime, round } => {
+                put_u64(&mut out, *round as u64);
+                put_f64(&mut out, *vtime);
+            }
+            Frame::Final(f) => {
+                put_u32(&mut out, f.worker_id as u32);
+                put_u64(&mut out, f.local_rounds as u64);
+                put_u64(&mut out, f.updates);
+                put_f64(&mut out, f.vtime);
+                put_u64(&mut out, f.alpha.len() as u64);
+                for &(i, a) in &f.alpha {
+                    put_u64(&mut out, i as u64);
+                    put_f64(&mut out, a);
+                }
+            }
+            Frame::Assign(a) => {
+                put_u32(&mut out, a.worker_id as u32);
+                put_u32(&mut out, a.k_nodes as u32);
+                put_u64(&mut out, a.n as u64);
+                put_u64(&mut out, a.d as u64);
+                for &s in &a.rng_state {
+                    put_u64(&mut out, s);
+                }
+                out.push(a.allreduce as u8);
+                put_u64(&mut out, a.config_json.len() as u64);
+                out.extend_from_slice(a.config_json.as_bytes());
+            }
+        }
+        debug_assert_eq!(out.len(), FRAME_HEADER_LEN + payload_len);
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Decode a complete encoded frame. Checks, in order: overall
+    /// length consistency, the CRC, the kind tag, then the payload
+    /// structure — so any corruption is rejected with a named
+    /// [`WireError`] before a single payload value is trusted.
+    pub fn decode(buf: &[u8]) -> Result<Frame, WireError> {
+        if buf.len() < FRAME_HEADER_LEN + FRAME_TRAILER_LEN {
+            return Err(WireError::Truncated { field: "frame header" });
+        }
+        let mut hdr = Cursor::new(&buf[..FRAME_HEADER_LEN]);
+        let kind = hdr.u32("header.kind")?;
+        let round = hdr.u64("header.round")?;
+        let payload_len = hdr.u64("header.payload_len")?;
+        if payload_len > MAX_FRAME_PAYLOAD {
+            return Err(WireError::Oversized { len: payload_len });
+        }
+        let expected = FRAME_HEADER_LEN + payload_len as usize + FRAME_TRAILER_LEN;
+        if expected != buf.len() {
+            return Err(WireError::BadLength { expected, got: buf.len() });
+        }
+        let body = &buf[..buf.len() - FRAME_TRAILER_LEN];
+        let stored = u32::from_le_bytes(
+            buf[buf.len() - FRAME_TRAILER_LEN..].try_into().expect("4 trailer bytes"),
+        );
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(WireError::BadCrc { expected: computed, got: stored });
+        }
+        let mut c = Cursor::new(&body[FRAME_HEADER_LEN..]);
+        let frame = match kind {
+            KIND_UPDATE => {
+                let worker = c.u32("update.worker")? as usize;
+                let local_round = c.u64("update.local_round")? as usize;
+                let updates = c.u64("update.updates")?;
+                let dual_sum = c.f64("update.dual_sum")?;
+                let arrival_vtime = c.f64("update.arrival_vtime")?;
+                let delta_v = decode_delta_v(&mut c)?;
+                Frame::Update(WorkerMsg {
+                    worker,
+                    local_round,
+                    delta_v,
+                    dual_sum,
+                    arrival_vtime,
+                    updates,
+                })
+            }
+            KIND_MERGED => {
+                let global_round = c.u64("merged.global_round")? as usize;
+                let arrival_vtime = c.f64("merged.arrival_vtime")?;
+                let len = c.len_field(8, "merged.v.len")?;
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(c.f64("merged.v")?);
+                }
+                Frame::Merged(MasterReply { v, arrival_vtime, global_round, terminate: false })
+            }
+            KIND_SHUTDOWN => {
+                let r = c.u64("shutdown.round")? as usize;
+                let vtime = c.f64("shutdown.vtime")?;
+                Frame::Shutdown { vtime, round: r }
+            }
+            KIND_FINAL => {
+                let worker_id = c.u32("final.worker")? as usize;
+                let local_rounds = c.u64("final.local_rounds")? as usize;
+                let updates = c.u64("final.updates")?;
+                let vtime = c.f64("final.vtime")?;
+                let len = c.len_field(16, "final.alpha.len")?;
+                let mut alpha = Vec::with_capacity(len);
+                for _ in 0..len {
+                    let i = c.u64("final.alpha.row")? as usize;
+                    let a = c.f64("final.alpha.value")?;
+                    alpha.push((i, a));
+                }
+                Frame::Final(WorkerFinal { worker_id, alpha, local_rounds, updates, vtime })
+            }
+            KIND_ASSIGN => {
+                let worker_id = c.u32("assign.worker")? as usize;
+                let k_nodes = c.u32("assign.k")? as usize;
+                let n = c.u64("assign.n")? as usize;
+                let d = c.u64("assign.d")? as usize;
+                let mut rng_state = [0u64; 4];
+                for s in rng_state.iter_mut() {
+                    *s = c.u64("assign.rng")?;
+                }
+                let allreduce = match c.u8("assign.allreduce")? {
+                    0 => false,
+                    1 => true,
+                    b => {
+                        return Err(WireError::BadPayload {
+                            field: "assign.allreduce",
+                            detail: format!("expected 0 or 1, got {b}"),
+                        })
+                    }
+                };
+                let json_len = c.len_field(1, "assign.json_len")?;
+                let raw = c.take(json_len, "assign.config_json")?;
+                let config_json = std::str::from_utf8(raw)
+                    .map_err(|e| WireError::BadPayload {
+                        field: "assign.config_json",
+                        detail: format!("invalid UTF-8: {e}"),
+                    })?
+                    .to_string();
+                Frame::Assign(Assignment {
+                    worker_id,
+                    k_nodes,
+                    n,
+                    d,
+                    rng_state,
+                    allreduce,
+                    config_json,
+                })
+            }
+            other => return Err(WireError::UnknownKind { kind: other }),
+        };
+        c.done("payload")?;
+        if frame.header_round() != round {
+            return Err(WireError::BadPayload {
+                field: "header.round",
+                detail: format!(
+                    "header round {round} disagrees with payload round {}",
+                    frame.header_round()
+                ),
+            });
+        }
+        Ok(frame)
+    }
+}
+
+// ---- handshake ----
+
+/// Worker → master hello.
+pub fn encode_hello(version: u32) -> [u8; HANDSHAKE_LEN] {
+    let mut out = [0u8; HANDSHAKE_LEN];
+    out[..8].copy_from_slice(&WIRE_MAGIC);
+    out[8..12].copy_from_slice(&version.to_le_bytes());
+    out
+}
+
+/// Parse a hello; returns the client's protocol version. The *server*
+/// decides on mismatch so its ack can carry both versions.
+pub fn decode_hello(buf: &[u8; HANDSHAKE_LEN]) -> Result<u32, WireError> {
+    if buf[..8] != WIRE_MAGIC {
+        return Err(WireError::BadMagic { got: buf[..8].try_into().expect("8 bytes") });
+    }
+    Ok(u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes")))
+}
+
+/// Master → worker ack. `version` is the *master's* version; status is
+/// [`ACK_OK`] or [`ACK_VERSION_MISMATCH`].
+pub fn encode_ack(version: u32, status: u32) -> [u8; HANDSHAKE_LEN] {
+    let mut out = [0u8; HANDSHAKE_LEN];
+    out[..8].copy_from_slice(&WIRE_MAGIC);
+    out[8..12].copy_from_slice(&version.to_le_bytes());
+    out[12..16].copy_from_slice(&status.to_le_bytes());
+    out
+}
+
+/// Parse an ack on the worker side; `ours` is the version we sent, so
+/// a mismatch error reports both.
+pub fn decode_ack(buf: &[u8; HANDSHAKE_LEN], ours: u32) -> Result<u32, WireError> {
+    if buf[..8] != WIRE_MAGIC {
+        return Err(WireError::BadMagic { got: buf[..8].try_into().expect("8 bytes") });
+    }
+    let theirs = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
+    let status = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes"));
+    match status {
+        ACK_OK => Ok(theirs),
+        ACK_VERSION_MISMATCH => Err(WireError::VersionMismatch { ours, theirs }),
+        code => Err(WireError::HandshakeRejected { code }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handshake_round_trip() {
+        let hello = encode_hello(WIRE_VERSION);
+        assert_eq!(decode_hello(&hello).unwrap(), WIRE_VERSION);
+        let ack = encode_ack(WIRE_VERSION, ACK_OK);
+        assert_eq!(decode_ack(&ack, WIRE_VERSION).unwrap(), WIRE_VERSION);
+    }
+
+    #[test]
+    fn handshake_version_mismatch_reports_both() {
+        let ack = encode_ack(3, ACK_VERSION_MISMATCH);
+        let err = decode_ack(&ack, 7).unwrap_err();
+        assert_eq!(err, WireError::VersionMismatch { ours: 7, theirs: 3 });
+        let msg = err.to_string();
+        assert!(msg.contains('7') && msg.contains('3'), "{msg}");
+    }
+
+    #[test]
+    fn handshake_bad_magic() {
+        let mut hello = encode_hello(WIRE_VERSION);
+        hello[0] ^= 0xFF;
+        assert!(matches!(decode_hello(&hello), Err(WireError::BadMagic { .. })));
+        let mut ack = encode_ack(WIRE_VERSION, ACK_OK);
+        ack[3] ^= 0x01;
+        assert!(matches!(decode_ack(&ack, WIRE_VERSION), Err(WireError::BadMagic { .. })));
+    }
+
+    #[test]
+    fn unknown_ack_status_rejected() {
+        let ack = encode_ack(WIRE_VERSION, 9);
+        assert_eq!(
+            decode_ack(&ack, WIRE_VERSION),
+            Err(WireError::HandshakeRejected { code: 9 })
+        );
+    }
+
+    #[test]
+    fn shutdown_round_trip() {
+        let f = Frame::Shutdown { vtime: 12.375, round: 42 };
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), f.wire_len());
+        assert_eq!(Frame::decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_without_allocating() {
+        let mut bytes = Frame::Shutdown { vtime: 0.0, round: 0 }.encode();
+        // Corrupt the payload_len field to a huge value.
+        bytes[12..20].copy_from_slice(&(u64::MAX).to_le_bytes());
+        assert!(matches!(Frame::decode(&bytes), Err(WireError::Oversized { .. })));
+    }
+}

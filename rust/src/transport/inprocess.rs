@@ -1,0 +1,169 @@
+//! Threads-as-nodes backend: typed frames over `std::sync::mpsc`,
+//! exactly the channel topology the coordinator used before the
+//! transport seam existed. Frames move by value — nothing is encoded —
+//! but the byte counters bill [`Frame::wire_len`], so a simulated run
+//! reports the same per-peer wire traffic its socket twin would ship.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::frame::Frame;
+use super::{Transport, TransportError, TransportStats, MASTER};
+
+/// Master endpoint: one shared inbound channel, one outbound channel
+/// per worker.
+pub struct InProcessMaster {
+    rx: Receiver<(usize, Frame)>,
+    txs: Vec<Sender<Frame>>,
+    stats: TransportStats,
+}
+
+/// Worker endpoint: its single peer is the master.
+pub struct InProcessWorker {
+    id: usize,
+    tx: Sender<(usize, Frame)>,
+    rx: Receiver<Frame>,
+    stats: TransportStats,
+}
+
+/// Wire up a `K`-worker in-process cluster. The master holds no clone
+/// of the inbound sender, so its `recv` reports [`TransportError::Closed`]
+/// exactly when every worker endpoint has been dropped — the same
+/// disconnect semantics the raw channels had.
+pub fn in_process(k: usize) -> (InProcessMaster, Vec<InProcessWorker>) {
+    let (tx_up, rx_up) = channel::<(usize, Frame)>();
+    let mut txs = Vec::with_capacity(k);
+    let mut workers = Vec::with_capacity(k);
+    for id in 0..k {
+        let (tx_down, rx_down) = channel::<Frame>();
+        txs.push(tx_down);
+        workers.push(InProcessWorker {
+            id,
+            tx: tx_up.clone(),
+            rx: rx_down,
+            stats: TransportStats::new(1),
+        });
+    }
+    drop(tx_up);
+    let master = InProcessMaster { rx: rx_up, txs, stats: TransportStats::new(k) };
+    (master, workers)
+}
+
+impl Transport for InProcessMaster {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        assert!(to < self.txs.len(), "master send to unknown peer {to}");
+        let bytes = frame.wire_len() as u64;
+        match self.txs[to].send(frame) {
+            Ok(()) => {
+                self.stats.per_peer[to].sent_bytes += bytes;
+                self.stats.per_peer[to].sent_frames += 1;
+                Ok(())
+            }
+            Err(_) => Err(TransportError::PeerGone {
+                peer: to,
+                detail: "worker endpoint dropped".to_string(),
+            }),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        match self.rx.recv() {
+            Ok((from, frame)) => {
+                self.stats.per_peer[from].recv_bytes += frame.wire_len() as u64;
+                self.stats.per_peer[from].recv_frames += 1;
+                Ok((from, frame))
+            }
+            Err(_) => Err(TransportError::Closed),
+        }
+    }
+
+    fn peers(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats.clone()
+    }
+}
+
+impl Transport for InProcessWorker {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        assert_eq!(to, MASTER, "a worker's only peer is the master");
+        let bytes = frame.wire_len() as u64;
+        match self.tx.send((self.id, frame)) {
+            Ok(()) => {
+                self.stats.per_peer[MASTER].sent_bytes += bytes;
+                self.stats.per_peer[MASTER].sent_frames += 1;
+                Ok(())
+            }
+            Err(_) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: "master disconnected".to_string(),
+            }),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        match self.rx.recv() {
+            Ok(frame) => {
+                self.stats.per_peer[MASTER].recv_bytes += frame.wire_len() as u64;
+                self.stats.per_peer[MASTER].recv_frames += 1;
+                Ok((MASTER, frame))
+            }
+            Err(_) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: "master disconnected".to_string(),
+            }),
+        }
+    }
+
+    fn peers(&self) -> usize {
+        1
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_flow_and_bytes_are_billed() {
+        let (mut master, mut workers) = in_process(2);
+        let f = Frame::Shutdown { vtime: 1.0, round: 3 };
+        let len = f.wire_len() as u64;
+
+        workers[1].send(MASTER, f.clone()).unwrap();
+        let (from, got) = master.recv().unwrap();
+        assert_eq!(from, 1);
+        assert_eq!(got, f);
+        assert_eq!(master.stats().per_peer[1].recv_bytes, len);
+        assert_eq!(master.stats().per_peer[0].recv_bytes, 0);
+        assert_eq!(workers[1].stats().sent_bytes(), len);
+
+        master.send(0, f.clone()).unwrap();
+        let (from, got) = workers[0].recv().unwrap();
+        assert_eq!((from, got), (MASTER, f));
+        assert_eq!(master.stats().per_peer[0].sent_frames, 1);
+        assert_eq!(workers[0].stats().recv_bytes(), len);
+    }
+
+    #[test]
+    fn master_sees_closed_when_all_workers_drop() {
+        let (mut master, workers) = in_process(2);
+        drop(workers);
+        assert_eq!(master.recv(), Err(TransportError::Closed));
+    }
+
+    #[test]
+    fn worker_sees_master_gone() {
+        let (master, mut workers) = in_process(1);
+        drop(master);
+        let err = workers[0].recv().unwrap_err();
+        assert!(matches!(err, TransportError::PeerGone { peer: MASTER, .. }));
+        let err = workers[0].send(MASTER, Frame::Shutdown { vtime: 0.0, round: 0 }).unwrap_err();
+        assert!(matches!(err, TransportError::PeerGone { peer: MASTER, .. }));
+    }
+}

@@ -1,0 +1,752 @@
+//! Multi-process backend: the [`frame`](super::frame) protocol over
+//! TCP or Unix-domain sockets.
+//!
+//! Topology mirrors the in-process one: the master binds a listener
+//! ([`SocketListener::bind`]) and accepts exactly `K` workers
+//! ([`SocketListener::accept_cluster`]); each worker dials in
+//! ([`SocketWorker::connect`]). Worker ids are assigned in accept
+//! order — the master's `Assign` frame then binds each id to its shard
+//! range and RNG stream, so accept order carries no semantic weight.
+//!
+//! The master runs one reader thread per worker feeding a single
+//! readiness queue, which is what lets `master.rs`'s bounded-barrier
+//! gather block on *real socket readiness* exactly as it blocked on
+//! channel readiness. Setup failures (bind/connect/accept/handshake)
+//! return `anyhow` errors naming the peer address and the configured
+//! timeout; steady-state failures surface as typed
+//! [`TransportError`]s.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::frame::{
+    decode_ack, decode_hello, encode_ack, encode_hello, Frame, WireError, ACK_OK,
+    ACK_VERSION_MISMATCH, FRAME_HEADER_LEN, FRAME_TRAILER_LEN, HANDSHAKE_LEN, MAX_FRAME_PAYLOAD,
+    WIRE_VERSION,
+};
+use super::{
+    PeerStats, Transport, TransportBackend, TransportCfg, TransportError, TransportStats, MASTER,
+};
+
+/// Poll interval for the nonblocking accept loop and connect retries.
+const RETRY_EVERY: Duration = Duration::from_millis(25);
+
+fn timeout_of(secs: f64) -> Option<Duration> {
+    if secs > 0.0 {
+        Some(Duration::from_secs_f64(secs))
+    } else {
+        None
+    }
+}
+
+/// One connected socket, TCP or Unix-domain.
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> std::io::Result<Stream> {
+        match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        }
+    }
+
+    fn set_read_timeout(&self, dur: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+            Stream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    /// Half-close both directions; unblocks any reader sharing the
+    /// underlying socket. Errors ignored — this is teardown.
+    fn shutdown_both(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            Stream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Why a read loop stopped.
+#[derive(Debug)]
+enum ReadEnd {
+    /// Clean EOF on a frame boundary.
+    Eof,
+    /// EOF in the middle of a frame.
+    MidFrame,
+    /// No bytes within the read timeout.
+    Timeout,
+    /// Some other I/O failure.
+    Io(String),
+    /// Bytes arrived but did not decode.
+    Wire(WireError),
+}
+
+/// Fill `buf` completely. `at_boundary` marks whether EOF before the
+/// first byte is a clean close (frame boundary) or a truncation.
+fn fill(stream: &mut Stream, buf: &mut [u8], at_boundary: bool) -> Result<(), ReadEnd> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                return Err(if at_boundary && off == 0 { ReadEnd::Eof } else { ReadEnd::MidFrame })
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                return Err(ReadEnd::Timeout)
+            }
+            Err(e) => return Err(ReadEnd::Io(e.to_string())),
+        }
+    }
+    Ok(())
+}
+
+/// Read one complete frame: header first (its length prefix is
+/// sanity-capped before any allocation), then payload + CRC, then the
+/// full validated decode.
+fn read_frame(stream: &mut Stream) -> Result<Frame, ReadEnd> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    fill(stream, &mut header, true)?;
+    let payload_len = u64::from_le_bytes(header[12..20].try_into().expect("8 bytes"));
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(ReadEnd::Wire(WireError::Oversized { len: payload_len }));
+    }
+    let total = FRAME_HEADER_LEN + payload_len as usize + FRAME_TRAILER_LEN;
+    let mut buf = vec![0u8; total];
+    buf[..FRAME_HEADER_LEN].copy_from_slice(&header);
+    fill(stream, &mut buf[FRAME_HEADER_LEN..], false)?;
+    Frame::decode(&buf).map_err(ReadEnd::Wire)
+}
+
+/// Encode + write one frame; returns the bytes shipped.
+fn write_frame(stream: &mut Stream, frame: &Frame) -> std::io::Result<u64> {
+    let bytes = frame.encode();
+    stream.write_all(&bytes)?;
+    stream.flush()?;
+    Ok(bytes.len() as u64)
+}
+
+/// Per-peer counters shared with the master's reader threads.
+#[derive(Default)]
+struct AtomicPeerStats {
+    sent_bytes: AtomicU64,
+    recv_bytes: AtomicU64,
+    sent_frames: AtomicU64,
+    recv_frames: AtomicU64,
+}
+
+impl AtomicPeerStats {
+    fn snapshot(&self) -> PeerStats {
+        PeerStats {
+            sent_bytes: self.sent_bytes.load(Ordering::Relaxed),
+            recv_bytes: self.recv_bytes.load(Ordering::Relaxed),
+            sent_frames: self.sent_frames.load(Ordering::Relaxed),
+            recv_frames: self.recv_frames.load(Ordering::Relaxed),
+        }
+    }
+}
+
+enum ListenerInner {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// The master's bound-but-not-yet-formed cluster endpoint.
+pub struct SocketListener {
+    inner: ListenerInner,
+    desc: String,
+    accept_timeout_secs: f64,
+    read_timeout_secs: f64,
+}
+
+impl SocketListener {
+    /// Bind the master's listen address (`cfg.listen`): `host:port`
+    /// for tcp (port 0 picks a free port), a filesystem path for uds
+    /// (a stale socket file is replaced).
+    pub fn bind(cfg: &TransportCfg) -> anyhow::Result<SocketListener> {
+        anyhow::ensure!(!cfg.listen.is_empty(), "transport.listen is empty: nowhere to bind");
+        let (inner, desc) = match cfg.backend {
+            TransportBackend::Tcp => {
+                let l = TcpListener::bind(&cfg.listen)
+                    .with_context(|| format!("binding tcp listener on {}", cfg.listen))?;
+                let desc = l
+                    .local_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| cfg.listen.clone());
+                (ListenerInner::Tcp(l), desc)
+            }
+            TransportBackend::Uds => {
+                let _ = std::fs::remove_file(&cfg.listen);
+                let l = UnixListener::bind(&cfg.listen)
+                    .with_context(|| format!("binding unix socket at {}", cfg.listen))?;
+                (ListenerInner::Unix(l), cfg.listen.clone())
+            }
+            TransportBackend::InProcess => {
+                anyhow::bail!("the in-process backend has no listener; use transport tcp or uds")
+            }
+        };
+        Ok(SocketListener {
+            inner,
+            desc,
+            accept_timeout_secs: cfg.accept_timeout_secs,
+            read_timeout_secs: cfg.read_timeout_secs,
+        })
+    }
+
+    /// The actual bound address — for tcp this resolves a port-0 bind
+    /// to the assigned port.
+    pub fn local_desc(&self) -> &str {
+        &self.desc
+    }
+
+    /// Accept and handshake exactly `k` workers, then start the
+    /// per-peer reader threads. Worker ids are assigned in accept
+    /// order. Fails (naming the listen address, the configured
+    /// timeout, and the partial count) if the cluster does not form in
+    /// time.
+    pub fn accept_cluster(self, k: usize) -> anyhow::Result<SocketMaster> {
+        self.accept_cluster_version(k, WIRE_VERSION)
+    }
+
+    fn accept_cluster_version(self, k: usize, version: u32) -> anyhow::Result<SocketMaster> {
+        anyhow::ensure!(k > 0, "a cluster needs at least one worker");
+        match &self.inner {
+            ListenerInner::Tcp(l) => l.set_nonblocking(true),
+            ListenerInner::Unix(l) => l.set_nonblocking(true),
+        }
+        .context("setting listener nonblocking")?;
+        let deadline = timeout_of(self.accept_timeout_secs).map(|d| Instant::now() + d);
+        let mut streams: Vec<Stream> = Vec::with_capacity(k);
+        while streams.len() < k {
+            let accepted = match &self.inner {
+                ListenerInner::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+                ListenerInner::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            };
+            match accepted {
+                Ok(stream) => {
+                    let id = streams.len();
+                    self.handshake_accepted(&stream, id, version)?;
+                    streams.push(stream);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if let Some(dl) = deadline {
+                        if Instant::now() >= dl {
+                            anyhow::bail!(
+                                "timed out after {:.1}s waiting for {k} workers on {} \
+                                 ({} of {k} connected)",
+                                self.accept_timeout_secs,
+                                self.desc,
+                                streams.len(),
+                            );
+                        }
+                    }
+                    std::thread::sleep(RETRY_EVERY);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("accepting a worker on {}", self.desc)))
+                }
+            }
+        }
+
+        // Cluster formed: reader thread + shared counters per peer.
+        let stats: Vec<Arc<AtomicPeerStats>> =
+            (0..k).map(|_| Arc::new(AtomicPeerStats::default())).collect();
+        let (tx_ev, rx_ev) = channel::<(usize, Result<Frame, ReadEnd>)>();
+        let mut writers = Vec::with_capacity(k);
+        let mut threads = Vec::with_capacity(k);
+        for (peer, stream) in streams.into_iter().enumerate() {
+            stream
+                .set_read_timeout(timeout_of(self.read_timeout_secs))
+                .with_context(|| format!("setting read timeout for worker {peer}"))?;
+            let reader = stream
+                .try_clone()
+                .with_context(|| format!("cloning worker {peer}'s stream for reads"))?;
+            let tx = tx_ev.clone();
+            let st = Arc::clone(&stats[peer]);
+            threads.push(std::thread::spawn(move || {
+                let mut reader = reader;
+                loop {
+                    match read_frame(&mut reader) {
+                        Ok(frame) => {
+                            st.recv_bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+                            st.recv_frames.fetch_add(1, Ordering::Relaxed);
+                            if tx.send((peer, Ok(frame))).is_err() {
+                                return;
+                            }
+                        }
+                        Err(end) => {
+                            let _ = tx.send((peer, Err(end)));
+                            return;
+                        }
+                    }
+                }
+            }));
+            writers.push(stream);
+        }
+        drop(tx_ev);
+        Ok(SocketMaster {
+            writers,
+            rx: rx_ev,
+            stats,
+            threads,
+            read_timeout_secs: self.read_timeout_secs,
+        })
+    }
+
+    /// Server side of the magic + version handshake. A mismatching
+    /// worker is told our version (so *its* error reports both) and
+    /// refused here with an error reporting both too.
+    fn handshake_accepted(&self, stream: &Stream, id: usize, version: u32) -> anyhow::Result<()> {
+        stream.set_nonblocking(false).context("unsetting nonblocking on accepted stream")?;
+        if let Stream::Tcp(s) = stream {
+            s.set_nodelay(true).context("setting TCP_NODELAY")?;
+        }
+        let handshake_timeout =
+            timeout_of(self.accept_timeout_secs).or_else(|| timeout_of(self.read_timeout_secs));
+        stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
+        let mut hello = [0u8; HANDSHAKE_LEN];
+        let mut s = stream.try_clone().context("cloning stream for handshake")?;
+        fill(&mut s, &mut hello, true).map_err(|end| {
+            anyhow::anyhow!("worker {id} on {} sent no hello: {}", self.desc, describe_end(&end))
+        })?;
+        let theirs = decode_hello(&hello)
+            .with_context(|| format!("bad hello from worker {id} on {}", self.desc))?;
+        if theirs != version {
+            let _ = s.write_all(&encode_ack(version, ACK_VERSION_MISMATCH));
+            let _ = s.flush();
+            stream.shutdown_both();
+            anyhow::bail!(
+                "worker {id} on {}: protocol version mismatch: \
+                 master speaks v{version}, worker speaks v{theirs}",
+                self.desc,
+            );
+        }
+        s.write_all(&encode_ack(version, ACK_OK))
+            .and_then(|_| s.flush())
+            .with_context(|| format!("acking worker {id} on {}", self.desc))?;
+        Ok(())
+    }
+}
+
+fn describe_end(end: &ReadEnd) -> String {
+    match end {
+        ReadEnd::Eof => "connection closed".to_string(),
+        ReadEnd::MidFrame => "connection closed mid-frame".to_string(),
+        ReadEnd::Timeout => "read timed out".to_string(),
+        ReadEnd::Io(e) => e.clone(),
+        ReadEnd::Wire(e) => e.to_string(),
+    }
+}
+
+/// Master endpoint of a formed socket cluster.
+pub struct SocketMaster {
+    writers: Vec<Stream>,
+    rx: Receiver<(usize, Result<Frame, ReadEnd>)>,
+    stats: Vec<Arc<AtomicPeerStats>>,
+    threads: Vec<JoinHandle<()>>,
+    read_timeout_secs: f64,
+}
+
+impl SocketMaster {
+    fn end_to_error(&self, peer: usize, end: ReadEnd) -> TransportError {
+        match end {
+            ReadEnd::Wire(err) => TransportError::Wire { peer, err },
+            ReadEnd::Timeout => TransportError::PeerGone {
+                peer,
+                detail: format!(
+                    "worker silent past the {:.1}s read timeout",
+                    self.read_timeout_secs
+                ),
+            },
+            other => TransportError::PeerGone { peer, detail: describe_end(&other) },
+        }
+    }
+}
+
+impl Transport for SocketMaster {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        assert!(to < self.writers.len(), "master send to unknown peer {to}");
+        match write_frame(&mut self.writers[to], &frame) {
+            Ok(bytes) => {
+                self.stats[to].sent_bytes.fetch_add(bytes, Ordering::Relaxed);
+                self.stats[to].sent_frames.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => Err(TransportError::PeerGone {
+                peer: to,
+                detail: format!("send of {} frame failed: {e}", frame.kind_name()),
+            }),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        match self.rx.recv() {
+            Ok((peer, Ok(frame))) => Ok((peer, frame)),
+            Ok((peer, Err(end))) => Err(self.end_to_error(peer, end)),
+            Err(_) => Err(TransportError::Closed),
+        }
+    }
+
+    fn peers(&self) -> usize {
+        self.writers.len()
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats { per_peer: self.stats.iter().map(|s| s.snapshot()).collect() }
+    }
+}
+
+impl Drop for SocketMaster {
+    fn drop(&mut self) {
+        for w in &self.writers {
+            w.shutdown_both();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Worker endpoint: one connection to the master.
+pub struct SocketWorker {
+    stream: Stream,
+    addr: String,
+    stats: TransportStats,
+    read_timeout_secs: f64,
+}
+
+impl SocketWorker {
+    /// Dial the master at `cfg.join` and handshake. Connection refusal
+    /// is retried until `connect_timeout_secs` (workers may start
+    /// before the master listens); the timeout error names the address
+    /// and the configured bound.
+    pub fn connect(cfg: &TransportCfg) -> anyhow::Result<SocketWorker> {
+        Self::connect_version(cfg, WIRE_VERSION)
+    }
+
+    fn connect_version(cfg: &TransportCfg, version: u32) -> anyhow::Result<SocketWorker> {
+        let addr = cfg.join.clone();
+        anyhow::ensure!(!addr.is_empty(), "transport.join is empty: no master address");
+        let deadline = timeout_of(cfg.connect_timeout_secs).map(|d| Instant::now() + d);
+        let stream = loop {
+            let attempt = match cfg.backend {
+                TransportBackend::Tcp => TcpStream::connect(&addr).map(Stream::Tcp),
+                TransportBackend::Uds => UnixStream::connect(&addr).map(Stream::Unix),
+                TransportBackend::InProcess => {
+                    anyhow::bail!("the in-process backend has no socket; use transport tcp or uds")
+                }
+            };
+            match attempt {
+                Ok(s) => break s,
+                // Refused / not-yet-bound are retried: the master may
+                // simply not be listening yet.
+                Err(e)
+                    if matches!(e.kind(), ErrorKind::ConnectionRefused | ErrorKind::NotFound) =>
+                {
+                    let expired = match deadline {
+                        Some(dl) => Instant::now() >= dl,
+                        None => true, // zero timeout: single attempt
+                    };
+                    if expired {
+                        anyhow::bail!(
+                            "could not connect to master at {addr} within {:.1}s: {e}",
+                            cfg.connect_timeout_secs,
+                        );
+                    }
+                    std::thread::sleep(RETRY_EVERY);
+                }
+                Err(e) => {
+                    return Err(
+                        anyhow::Error::new(e).context(format!("connecting to master at {addr}"))
+                    )
+                }
+            }
+        };
+        if let Stream::Tcp(s) = &stream {
+            s.set_nodelay(true).context("setting TCP_NODELAY")?;
+        }
+
+        // Handshake under the connect deadline, then steady-state
+        // timeout.
+        let handshake_timeout =
+            timeout_of(cfg.connect_timeout_secs).or_else(|| timeout_of(cfg.read_timeout_secs));
+        stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
+        let mut stream = stream;
+        stream
+            .write_all(&encode_hello(version))
+            .and_then(|_| stream.flush())
+            .with_context(|| format!("sending hello to master at {addr}"))?;
+        let mut ack = [0u8; HANDSHAKE_LEN];
+        fill(&mut stream, &mut ack, true).map_err(|end| {
+            anyhow::anyhow!(
+                "no handshake ack from master at {addr} within {:.1}s: {}",
+                cfg.connect_timeout_secs,
+                describe_end(&end),
+            )
+        })?;
+        decode_ack(&ack, version).with_context(|| format!("handshake with master at {addr}"))?;
+        stream
+            .set_read_timeout(timeout_of(cfg.read_timeout_secs))
+            .context("setting read timeout")?;
+
+        let mut stats = TransportStats::new(1);
+        stats.per_peer[MASTER].sent_bytes = HANDSHAKE_LEN as u64;
+        stats.per_peer[MASTER].recv_bytes = HANDSHAKE_LEN as u64;
+        Ok(SocketWorker { stream, addr, stats, read_timeout_secs: cfg.read_timeout_secs })
+    }
+
+    /// The master's address, for error messages.
+    pub fn master_addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+impl Transport for SocketWorker {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        assert_eq!(to, MASTER, "a worker's only peer is the master");
+        match write_frame(&mut self.stream, &frame) {
+            Ok(bytes) => {
+                self.stats.per_peer[MASTER].sent_bytes += bytes;
+                self.stats.per_peer[MASTER].sent_frames += 1;
+                Ok(())
+            }
+            Err(e) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: format!("master at {} disconnected: {e}", self.addr),
+            }),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        match read_frame(&mut self.stream) {
+            Ok(frame) => {
+                self.stats.per_peer[MASTER].recv_bytes += frame.wire_len() as u64;
+                self.stats.per_peer[MASTER].recv_frames += 1;
+                Ok((MASTER, frame))
+            }
+            Err(ReadEnd::Wire(err)) => Err(TransportError::Wire { peer: MASTER, err }),
+            Err(ReadEnd::Timeout) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: format!(
+                    "master at {} silent past the {:.1}s read timeout",
+                    self.addr, self.read_timeout_secs
+                ),
+            }),
+            Err(end) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: format!("master at {} disconnected: {}", self.addr, describe_end(&end)),
+            }),
+        }
+    }
+
+    fn peers(&self) -> usize {
+        1
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats.clone()
+    }
+}
+
+impl Drop for SocketWorker {
+    fn drop(&mut self) {
+        self.stream.shutdown_both();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{DeltaV, WorkerMsg};
+
+    fn tcp_cfg(listen: &str, join: &str) -> TransportCfg {
+        TransportCfg {
+            backend: TransportBackend::Tcp,
+            listen: listen.to_string(),
+            join: join.to_string(),
+            connect_timeout_secs: 5.0,
+            accept_timeout_secs: 5.0,
+            read_timeout_secs: 5.0,
+            accept_backlog: 8,
+        }
+    }
+
+    fn update_frame() -> Frame {
+        Frame::Update(WorkerMsg {
+            worker: 0,
+            local_round: 0,
+            delta_v: DeltaV::Sparse { dim: 8, indices: vec![1, 5], values: vec![0.5, -2.0] },
+            dual_sum: 0.25,
+            arrival_vtime: 1.5,
+            updates: 10,
+        })
+    }
+
+    #[test]
+    fn tcp_round_trip_and_stats() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&tcp_cfg("", &addr)).unwrap();
+            w.send(MASTER, update_frame()).unwrap();
+            let (from, reply) = w.recv().unwrap();
+            assert_eq!(from, MASTER);
+            assert_eq!(reply, Frame::Shutdown { vtime: 2.0, round: 1 });
+            w.stats()
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        let (peer, frame) = m.recv().unwrap();
+        assert_eq!(peer, 0);
+        assert_eq!(frame, update_frame());
+        m.send(0, Frame::Shutdown { vtime: 2.0, round: 1 }).unwrap();
+        let wstats = worker.join().unwrap();
+
+        let sent = update_frame().wire_len() as u64;
+        let hs = HANDSHAKE_LEN as u64;
+        assert_eq!(wstats.sent_bytes(), hs + sent);
+        assert_eq!(m.stats().per_peer[0].recv_bytes, sent);
+        assert_eq!(m.stats().per_peer[0].sent_frames, 1);
+    }
+
+    #[test]
+    fn uds_round_trip() {
+        let path = std::env::temp_dir().join(format!("hdca-uds-test-{}", std::process::id()));
+        let path = path.to_string_lossy().to_string();
+        let mut cfg = tcp_cfg(&path, &path);
+        cfg.backend = TransportBackend::Uds;
+        let listener = SocketListener::bind(&cfg).unwrap();
+        let wcfg = cfg.clone();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&wcfg).unwrap();
+            let (_, got) = w.recv().unwrap();
+            assert_eq!(got, Frame::Shutdown { vtime: 0.5, round: 9 });
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        m.send(0, Frame::Shutdown { vtime: 0.5, round: 9 }).unwrap();
+        worker.join().unwrap();
+        drop(m);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn version_mismatch_reports_both_versions() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            SocketWorker::connect_version(&tcp_cfg("", &addr), WIRE_VERSION + 1)
+        });
+        let master_err = listener.accept_cluster(1).unwrap_err().to_string();
+        assert!(master_err.contains("version mismatch"), "{master_err}");
+        assert!(
+            master_err.contains(&format!("v{WIRE_VERSION}"))
+                && master_err.contains(&format!("v{}", WIRE_VERSION + 1)),
+            "{master_err}"
+        );
+        let worker_err = format!("{:#}", worker.join().unwrap().unwrap_err());
+        assert!(
+            worker_err.contains(&format!("v{WIRE_VERSION}"))
+                && worker_err.contains(&format!("v{}", WIRE_VERSION + 1)),
+            "{worker_err}"
+        );
+    }
+
+    #[test]
+    fn connect_refused_names_peer_and_timeout() {
+        // Bind then drop to get a port with (very likely) no listener.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut cfg = tcp_cfg("", &addr);
+        cfg.connect_timeout_secs = 0.3;
+        let err = SocketWorker::connect(&cfg).unwrap_err().to_string();
+        assert!(err.contains(&addr), "{err}");
+        assert!(err.contains("0.3"), "{err}");
+    }
+
+    #[test]
+    fn accept_timeout_names_listener_and_timeout() {
+        let mut cfg = tcp_cfg("127.0.0.1:0", "");
+        cfg.accept_timeout_secs = 0.3;
+        let listener = SocketListener::bind(&cfg).unwrap();
+        let desc = listener.local_desc().to_string();
+        let err = listener.accept_cluster(2).unwrap_err().to_string();
+        assert!(err.contains(&desc), "{err}");
+        assert!(err.contains("0.3"), "{err}");
+        assert!(err.contains("0 of 2"), "{err}");
+    }
+
+    /// The graceful-shutdown satellite's failure half: a killed master
+    /// must surface as a clear "master disconnected" on the worker
+    /// within the read timeout — here immediately, via EOF on a real
+    /// socket pair.
+    #[test]
+    fn killed_master_is_reported_as_disconnect() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&tcp_cfg("", &addr)).unwrap();
+            w.recv()
+        });
+        let m = listener.accept_cluster(1).unwrap();
+        drop(m); // "kill" the master: sockets shut down
+        let err = worker.join().unwrap().unwrap_err();
+        match err {
+            TransportError::PeerGone { peer, detail } => {
+                assert_eq!(peer, MASTER);
+                assert!(detail.contains("disconnected"), "{detail}");
+            }
+            other => panic!("expected PeerGone, got {other:?}"),
+        }
+    }
+}

@@ -268,3 +268,156 @@ fn bad_config_file_rejected() {
     assert!(stderr.contains("bogus_key"), "{stderr}");
     std::fs::remove_file(&path).ok();
 }
+
+// ---- distributed execution (train --distributed + node) ----
+
+/// Pack the tiny preset for the distributed smokes.
+fn dist_store(tag: &str) -> std::path::PathBuf {
+    let store = std::env::temp_dir().join(format!("hybrid_dca_cli_dist_{tag}"));
+    let _ = std::fs::remove_dir_all(&store);
+    let (_, stderr, ok) = run(&[
+        "data",
+        "pack",
+        "--preset",
+        "tiny",
+        "--out",
+        store.to_str().unwrap(),
+        "--shard-rows",
+        "50",
+        "--align",
+        "2",
+    ]);
+    assert!(ok, "pack failed: {stderr}");
+    store
+}
+
+/// The multi-process acceptance run: a master and two `node` worker
+/// processes over a loopback Unix socket must produce a final state
+/// byte-identical (`--dump`) to the plain single-process run.
+#[test]
+fn distributed_train_matches_single_process_bitwise() {
+    let store = dist_store("parity");
+    let tmp = std::env::temp_dir();
+    let dump_sim = tmp.join("hybrid_dca_cli_dist_sim.json");
+    let dump_dist = tmp.join("hybrid_dca_cli_dist_real.json");
+    let sock = tmp.join("hybrid_dca_cli_dist.sock");
+    for f in [&dump_sim, &dump_dist, &sock] {
+        let _ = std::fs::remove_file(f);
+    }
+
+    let store_s = store.to_str().unwrap().to_string();
+    let common = [
+        "--algo", "hybrid", "--store", &store_s, "--lambda", "0.01", "--nodes", "2", "--cores",
+        "1", "--s", "1", "--gamma", "2", "--h", "64", "--rounds", "8", "--threshold", "1e-9",
+        "--seed", "7",
+    ];
+
+    let mut sim_args = vec!["train"];
+    sim_args.extend_from_slice(&common);
+    sim_args.extend_from_slice(&["--dump", dump_sim.to_str().unwrap()]);
+    let (stdout, stderr, ok) = run(&sim_args);
+    assert!(ok, "single-process run failed: {stderr}");
+    assert!(stdout.contains("# state dumped"), "{stdout}");
+
+    let mut dist_args = vec!["train"];
+    dist_args.extend_from_slice(&common);
+    dist_args.extend_from_slice(&[
+        "--distributed",
+        "--transport",
+        "uds",
+        "--listen",
+        sock.to_str().unwrap(),
+        "--dump",
+        dump_dist.to_str().unwrap(),
+    ]);
+    let master = Command::new(bin())
+        .args(&dist_args)
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn master");
+    // Workers retry the connect until the master's socket appears.
+    let workers: Vec<_> = (0..2)
+        .map(|_| {
+            Command::new(bin())
+                .args(["node", "--transport", "uds", "--join", sock.to_str().unwrap()])
+                .stdout(std::process::Stdio::piped())
+                .stderr(std::process::Stdio::piped())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+
+    let mout = master.wait_with_output().expect("master exit");
+    assert!(
+        mout.status.success(),
+        "master failed: {}",
+        String::from_utf8_lossy(&mout.stderr)
+    );
+    let mstdout = String::from_utf8_lossy(&mout.stdout);
+    assert!(mstdout.contains("# listening on"), "{mstdout}");
+    assert!(mstdout.contains("# transport: worker 0"), "{mstdout}");
+    assert!(mstdout.contains("# transport: worker 1"), "{mstdout}");
+    assert!(mstdout.contains("# finished"), "{mstdout}");
+    for w in workers {
+        let out = w.wait_with_output().expect("worker exit");
+        assert!(
+            out.status.success(),
+            "worker failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let wstdout = String::from_utf8_lossy(&out.stdout);
+        assert!(wstdout.contains("# worker"), "{wstdout}");
+    }
+
+    let sim = std::fs::read(&dump_sim).expect("sim dump");
+    let dist = std::fs::read(&dump_dist).expect("dist dump");
+    assert!(!sim.is_empty());
+    assert_eq!(sim, dist, "distributed final state differs from the single-process run");
+}
+
+#[test]
+fn node_reports_unreachable_master_with_address_and_timeout() {
+    let (_, stderr, ok) = run(&[
+        "node",
+        "--join",
+        "127.0.0.1:1",
+        "--connect-timeout",
+        "0.2",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("127.0.0.1:1"), "{stderr}");
+    assert!(stderr.contains("0.2"), "{stderr}");
+}
+
+#[test]
+fn master_accept_timeout_names_the_bind_and_deadline() {
+    let store = dist_store("accept_timeout");
+    let (_, stderr, ok) = run(&[
+        "train",
+        "--algo",
+        "hybrid",
+        "--store",
+        store.to_str().unwrap(),
+        "--nodes",
+        "2",
+        "--cores",
+        "1",
+        "--distributed",
+        "--listen",
+        "127.0.0.1:0",
+        "--accept-timeout",
+        "0.2",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("timed out"), "{stderr}");
+    assert!(stderr.contains("0.2"), "{stderr}");
+    assert!(stderr.contains("0 of 2"), "{stderr}");
+}
+
+#[test]
+fn distributed_without_listen_is_rejected() {
+    let (_, stderr, ok) = run(&["train", "--distributed", "--dataset", "tiny"]);
+    assert!(!ok);
+    assert!(stderr.contains("--listen"), "{stderr}");
+}

@@ -1,0 +1,213 @@
+//! Multi-process-shaped distributed runs, exercised in-process with
+//! real sockets: a master (`run_master_with_listener`) and worker
+//! threads (`run_worker_node`) that talk TCP or UDS over loopback,
+//! each opening the shard store independently — exactly what the
+//! `train --distributed` / `node` CLI pair does across processes.
+//!
+//! The headline claim pinned here is *bitwise parity*: a socket
+//! cluster produces the same final α, v, and traced objectives as the
+//! single-process simulated run on the same store, seed, and config.
+
+use std::path::{Path, PathBuf};
+
+use hybrid_dca::config::{Algorithm, ExpConfig};
+use hybrid_dca::coordinator::distributed::{self, WorkerSummary};
+use hybrid_dca::coordinator::RunReport;
+use hybrid_dca::data::{Preset, Strategy};
+use hybrid_dca::session::{self, NullObserver, ObserverHandle, Session};
+use hybrid_dca::store::{self, PackOptions};
+use hybrid_dca::transport::{SocketListener, TransportBackend};
+use hybrid_dca::util::Rng;
+
+/// Pack the tiny preset (n=200, d=50) into a fresh shard store.
+fn packed_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hybrid_dca_distributed_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ds = Preset::Tiny.generate(&mut Rng::new(7));
+    let opts = PackOptions { shard_rows: 50, align: 2, seed: 7, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+    dir
+}
+
+/// The issue's acceptance shape: K=2 nodes × R=1 cores, bounded
+/// barrier S=1 and delay Γ=2 so the merge logic actually gates on
+/// socket readiness.
+fn base_cfg(store: &Path) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.store_path = Some(store.to_string_lossy().into_owned());
+    cfg.lambda = 1e-2;
+    cfg.k_nodes = 2;
+    cfg.r_cores = 1;
+    cfg.s_barrier = 1;
+    cfg.gamma = 2;
+    cfg.h_local = 64;
+    cfg.max_rounds = 10;
+    cfg.gap_threshold = 1e-9;
+    cfg.eval_every = 2;
+    cfg.seed = 42;
+    cfg
+}
+
+/// Form a loopback cluster: bind, hand the actual address to K worker
+/// threads, drive the master, join the workers.
+fn run_cluster(algo: Algorithm, cfg: &ExpConfig) -> (RunReport, Vec<WorkerSummary>) {
+    let listener = SocketListener::bind(&cfg.transport).unwrap();
+    let mut join_cfg = cfg.transport.clone();
+    join_cfg.join = listener.local_desc().to_string();
+    let handles: Vec<_> = (0..cfg.k_nodes)
+        .map(|_| {
+            let jc = join_cfg.clone();
+            std::thread::spawn(move || distributed::run_worker_node(&jc, None))
+        })
+        .collect();
+    let report =
+        distributed::run_master_with_listener(algo, cfg, listener, &ObserverHandle::silent())
+            .unwrap();
+    let summaries: Vec<WorkerSummary> =
+        handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+    (report, summaries)
+}
+
+fn run_in_process(algo: Algorithm, cfg: &ExpConfig) -> RunReport {
+    let session = Session::from_exp_config(cfg).unwrap();
+    let source = session.load_source().unwrap();
+    let mut obs = NullObserver;
+    session.run_source_observed(session::canonical_name(algo), &source, &mut obs).unwrap()
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_reports_bitwise_equal(sim: &RunReport, dist: &RunReport) {
+    assert_eq!(sim.rounds, dist.rounds, "global round counts");
+    assert_eq!(sim.total_updates, dist.total_updates, "update counts");
+    assert_eq!(bits(&sim.alpha), bits(&dist.alpha), "final α");
+    assert_eq!(bits(&sim.v), bits(&dist.v), "final v");
+    assert_eq!(sim.trace.points.len(), dist.trace.points.len(), "trace lengths");
+    for (a, b) in sim.trace.points.iter().zip(dist.trace.points.iter()) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.virt_secs.to_bits(), b.virt_secs.to_bits(), "round {}", a.round);
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "round {} gap", a.round);
+        assert_eq!(a.primal.to_bits(), b.primal.to_bits(), "round {} primal", a.round);
+        assert_eq!(a.dual.to_bits(), b.dual.to_bits(), "round {} dual", a.round);
+    }
+}
+
+#[test]
+fn tcp_cluster_matches_in_process_bitwise() {
+    let store = packed_store("tcp_parity");
+    let mut cfg = base_cfg(&store);
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+
+    let sim = run_in_process(Algorithm::HybridDca, &cfg);
+    let (dist, summaries) = run_cluster(Algorithm::HybridDca, &cfg);
+    assert_reports_bitwise_equal(&sim, &dist);
+
+    // Every worker opened only its own shard range and exited cleanly
+    // on the shutdown broadcast.
+    let mut ids: Vec<usize> = summaries.iter().map(|s| s.worker_id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1]);
+    for s in &summaries {
+        assert!(s.updates > 0);
+        assert!(s.net.sent_bytes() > 0 && s.net.recv_bytes() > 0);
+    }
+    // The master accounted real bytes for both peers.
+    assert_eq!(dist.net.per_peer.len(), 2);
+    for p in &dist.net.per_peer {
+        assert!(p.sent_bytes > 0 && p.recv_bytes > 0);
+        assert!(p.sent_frames > 0 && p.recv_frames > 0);
+    }
+}
+
+#[test]
+fn uds_cluster_matches_in_process_bitwise() {
+    let store = packed_store("uds_parity");
+    let mut cfg = base_cfg(&store);
+    cfg.seed = 4242;
+    cfg.transport.backend = TransportBackend::Uds;
+    cfg.transport.listen = std::env::temp_dir()
+        .join("hybrid_dca_dist_uds.sock")
+        .to_string_lossy()
+        .into_owned();
+
+    let sim = run_in_process(Algorithm::HybridDca, &cfg);
+    let (dist, _) = run_cluster(Algorithm::HybridDca, &cfg);
+    assert_reports_bitwise_equal(&sim, &dist);
+}
+
+#[test]
+fn cocoa_cluster_matches_in_process_bitwise() {
+    let store = packed_store("cocoa_parity");
+    let mut cfg = base_cfg(&store);
+    cfg.seed = 7;
+    cfg.max_rounds = 6;
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+
+    let sim = run_in_process(Algorithm::CocoaPlus, &cfg);
+    let (dist, _) = run_cluster(Algorithm::CocoaPlus, &cfg);
+    assert_reports_bitwise_equal(&sim, &dist);
+}
+
+#[test]
+fn single_node_algorithms_refuse_to_distribute() {
+    let store = packed_store("refuse");
+    let mut cfg = base_cfg(&store);
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+    for algo in [Algorithm::Baseline, Algorithm::PassCoDe] {
+        let err = distributed::run_master_node(algo, &cfg, &ObserverHandle::silent()).unwrap_err();
+        assert!(format!("{err:#}").contains("single-node"), "{algo:?}: {err:#}");
+    }
+}
+
+#[test]
+fn distributed_requires_a_shard_store() {
+    let mut cfg = ExpConfig::default();
+    cfg.k_nodes = 2;
+    cfg.r_cores = 1;
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+    let err = distributed::run_master_node(Algorithm::HybridDca, &cfg, &ObserverHandle::silent())
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shard store"), "{err:#}");
+}
+
+/// Sparse rounds must *measurably* ship fewer bytes than dense ones on
+/// the real wire — the per-peer counters are the acceptance surface.
+/// A short round on tiny (H=2, ~≤20 of 50 coords touched) is exactly
+/// the regime the sparse form exists for.
+#[test]
+fn sparse_rounds_ship_fewer_bytes_than_dense() {
+    let store = packed_store("sparse_bytes");
+    let mut cfg = base_cfg(&store);
+    cfg.h_local = 2;
+    cfg.max_rounds = 6;
+    cfg.eval_every = 10; // evaluation traffic is master-side only anyway
+    // Size-independent virtual message cost: both runs then follow the
+    // identical merge schedule, so the byte counters are the *only*
+    // thing the threshold changes.
+    cfg.net_per_elem = 0.0;
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+
+    cfg.delta_threshold = 0.0; // force dense Δv frames
+    let (dense, _) = run_cluster(Algorithm::HybridDca, &cfg);
+    cfg.delta_threshold = 1.0; // force sparse Δv frames
+    let (sparse, _) = run_cluster(Algorithm::HybridDca, &cfg);
+
+    for (w, (s, d)) in sparse.net.per_peer.iter().zip(dense.net.per_peer.iter()).enumerate() {
+        assert!(
+            s.recv_bytes < d.recv_bytes,
+            "worker {w}: sparse Δv traffic {}B not below dense {}B",
+            s.recv_bytes,
+            d.recv_bytes
+        );
+    }
+    assert!(sparse.net.recv_bytes() < dense.net.recv_bytes());
+}

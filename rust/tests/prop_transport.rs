@@ -1,0 +1,218 @@
+//! Property tests over the wire protocol (`transport::frame`), using
+//! the in-crate shrinking property runner (`util::proptest`).
+//!
+//! Invariants pinned here:
+//!  1. every frame kind survives encode → decode *bitwise* (the
+//!     re-encoded bytes equal the originals, so ±0.0, infinities, and
+//!     NaN payloads all round-trip exactly), including empty-round and
+//!     `d = 0` edge shapes;
+//!  2. `Frame::wire_len` equals `encode().len()` — the in-process
+//!     backend bills byte counters off `wire_len` without serializing;
+//!  3. corrupting ANY single byte of an encoded frame — header,
+//!     payload, or CRC trailer — is rejected with a named
+//!     [`WireError`], never a panic or a silently wrong frame;
+//!  4. every truncation of an encoded frame is rejected.
+
+use hybrid_dca::coordinator::messages::{DeltaV, MasterReply, WorkerFinal, WorkerMsg};
+use hybrid_dca::transport::frame::Assignment;
+use hybrid_dca::transport::Frame;
+use hybrid_dca::util::proptest::{check, default_cases};
+use hybrid_dca::util::Rng;
+
+/// f64s that stress the bitwise claim: zeros of both signs, the
+/// non-finite values, a subnormal, and ordinary magnitudes.
+fn gen_f64(r: &mut Rng) -> f64 {
+    match r.next_below(10) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => f64::INFINITY,
+        3 => f64::NEG_INFINITY,
+        4 => f64::NAN,
+        5 => f64::MIN_POSITIVE / 4.0,
+        _ => r.next_gaussian() * 1e3,
+    }
+}
+
+fn gen_delta_v(r: &mut Rng) -> DeltaV {
+    if r.next_bool(0.5) {
+        let d = r.next_below(24); // 0 included: the d = 0 edge
+        DeltaV::Dense((0..d).map(|_| gen_f64(r)).collect())
+    } else {
+        let dim = r.next_below(64) + 1;
+        let nnz = r.next_below(dim.min(12) + 1); // 0 included: empty round
+        let mut idx = r.sample_indices(dim, nnz);
+        idx.sort_unstable();
+        DeltaV::Sparse {
+            dim,
+            indices: idx.into_iter().map(|i| i as u32).collect(),
+            values: (0..nnz).map(|_| gen_f64(r)).collect(),
+        }
+    }
+}
+
+fn gen_frame(r: &mut Rng) -> Frame {
+    match r.next_below(5) {
+        0 => Frame::Update(WorkerMsg {
+            worker: r.next_below(16),
+            local_round: r.next_below(1000),
+            delta_v: gen_delta_v(r),
+            dual_sum: gen_f64(r),
+            arrival_vtime: r.next_f64() * 100.0,
+            updates: r.next_u64() >> 32,
+        }),
+        1 => Frame::Merged(MasterReply {
+            v: (0..r.next_below(24)).map(|_| gen_f64(r)).collect(),
+            arrival_vtime: r.next_f64() * 100.0,
+            global_round: r.next_below(1000),
+            terminate: false,
+        }),
+        2 => Frame::Shutdown { vtime: r.next_f64() * 100.0, round: r.next_below(1000) },
+        3 => Frame::Final(WorkerFinal {
+            worker_id: r.next_below(16),
+            alpha: (0..r.next_below(16)).map(|i| (i * 3, gen_f64(r))).collect(),
+            local_rounds: r.next_below(1000),
+            updates: r.next_u64() >> 32,
+            vtime: r.next_f64() * 100.0,
+        }),
+        _ => Frame::Assign(Assignment {
+            worker_id: r.next_below(16),
+            k_nodes: r.next_below(16) + 1,
+            n: r.next_below(100_000),
+            d: r.next_below(100_000),
+            rng_state: [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+            allreduce: r.next_bool(0.5),
+            config_json: "{\"k\": 2}".repeat(r.next_below(4)),
+        }),
+    }
+}
+
+/// The hand-written edge shapes the issue calls out explicitly.
+fn edge_frames() -> Vec<Frame> {
+    vec![
+        Frame::Update(WorkerMsg {
+            worker: 0,
+            local_round: 0,
+            delta_v: DeltaV::Dense(Vec::new()), // d = 0
+            dual_sum: -0.0,
+            arrival_vtime: 0.0,
+            updates: 0,
+        }),
+        Frame::Update(WorkerMsg {
+            worker: 0,
+            local_round: 0,
+            // Empty round: a sparse Δv that touched nothing.
+            delta_v: DeltaV::Sparse { dim: 7, indices: Vec::new(), values: Vec::new() },
+            dual_sum: 0.0,
+            arrival_vtime: 0.0,
+            updates: 0,
+        }),
+        Frame::Update(WorkerMsg {
+            worker: 0,
+            local_round: 0,
+            delta_v: DeltaV::Sparse { dim: 0, indices: Vec::new(), values: Vec::new() },
+            dual_sum: f64::NAN,
+            arrival_vtime: f64::INFINITY,
+            updates: u64::MAX,
+        }),
+        Frame::Merged(MasterReply {
+            v: Vec::new(),
+            arrival_vtime: 0.0,
+            global_round: 0,
+            terminate: false,
+        }),
+        Frame::Shutdown { vtime: 0.0, round: 0 },
+        Frame::Final(WorkerFinal {
+            worker_id: 0,
+            alpha: Vec::new(),
+            local_rounds: 0,
+            updates: 0,
+            vtime: -0.0,
+        }),
+        Frame::Assign(Assignment {
+            worker_id: 0,
+            k_nodes: 1,
+            n: 0,
+            d: 0,
+            rng_state: [0; 4],
+            allreduce: false,
+            config_json: String::new(),
+        }),
+    ]
+}
+
+/// Bitwise round trip: re-encoding the decoded frame reproduces the
+/// original bytes exactly. (Byte equality — not `PartialEq` on the
+/// frames — so NaN payloads are covered too.)
+fn assert_round_trips(f: &Frame) -> Result<(), String> {
+    let bytes = f.encode();
+    if bytes.len() != f.wire_len() {
+        return Err(format!("wire_len {} != encoded len {}", f.wire_len(), bytes.len()));
+    }
+    let back = Frame::decode(&bytes).map_err(|e| format!("decode failed: {e}"))?;
+    if back.kind() != f.kind() {
+        return Err(format!("kind changed: {} -> {}", f.kind_name(), back.kind_name()));
+    }
+    let re = back.encode();
+    if re != bytes {
+        return Err(format!("re-encode differs ({} vs {} bytes)", re.len(), bytes.len()));
+    }
+    Ok(())
+}
+
+#[test]
+fn every_frame_kind_round_trips_bitwise() {
+    for f in edge_frames() {
+        assert_round_trips(&f).unwrap();
+    }
+    check(
+        "frame encode/decode is bitwise",
+        default_cases(256),
+        gen_frame,
+        |_| Vec::new(),
+        |f| assert_round_trips(f),
+    );
+}
+
+#[test]
+fn any_single_byte_corruption_is_rejected() {
+    let mut frames = edge_frames();
+    let mut rng = Rng::new(0xBADC0DE);
+    for _ in 0..12 {
+        frames.push(gen_frame(&mut rng));
+    }
+    for f in &frames {
+        let bytes = f.encode();
+        for pos in 0..bytes.len() {
+            for flip in [0x01u8, 0xFF] {
+                let mut bad = bytes.clone();
+                bad[pos] ^= flip;
+                let err = match Frame::decode(&bad) {
+                    Err(e) => e,
+                    Ok(got) => panic!(
+                        "{} frame: flipping byte {pos} with {flip:#04x} decoded as {}",
+                        f.kind_name(),
+                        got.kind_name()
+                    ),
+                };
+                // Every corruption maps to a *named* error with a
+                // human-readable description.
+                assert!(!err.to_string().is_empty());
+            }
+        }
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    for f in edge_frames() {
+        let bytes = f.encode();
+        for len in 0..bytes.len() {
+            assert!(
+                Frame::decode(&bytes[..len]).is_err(),
+                "{} frame decoded from a {len}-byte prefix of {}",
+                f.kind_name(),
+                bytes.len()
+            );
+        }
+    }
+}
