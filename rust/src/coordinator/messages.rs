@@ -1,7 +1,8 @@
 //! Message types exchanged between workers and the master.
 //!
 //! In the paper these travel over MPI between nodes; here they travel
-//! over `std::sync::mpsc` channels between threads. The payload shapes
+//! over `util::sync::mailbox` channels between threads (or sockets,
+//! see `transport`). The payload shapes
 //! are identical to the paper's: workers send `Δv ∈ R^d`, the master
 //! replies with the merged `v ∈ R^d` (§5 counts exactly these 2S
 //! transmissions per round). The one refinement is the *wire format*

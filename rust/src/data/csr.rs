@@ -362,6 +362,7 @@ mod tests {
         let m = sample();
         for i in 0..m.rows() {
             let a = m.row(i);
+            // SAFETY: loop bound keeps i < m.rows().
             let b = unsafe { m.row_unchecked(i) };
             assert_eq!(a, b);
         }

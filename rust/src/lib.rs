@@ -44,6 +44,10 @@
 //! println!("final gap = {:?}", report.trace.final_gap());
 //! ```
 
+// The clippy style baseline lives in [workspace.lints.clippy]
+// (Cargo.toml) so every crate in the workspace — bin, tests, benches,
+// xtask — shares it, not just this lib.
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -267,10 +267,13 @@ fn fold_in_memory(
     // Dynamic chunk claiming: rows are uniform per chunk but nnz is
     // not, and any claim order yields the same bits (disjoint writes,
     // in-order fold by the caller).
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    // ORDERING: the claim ticket only needs the RMW's own atomicity
+    // (each index handed out once); the pool's completion barrier
+    // publishes the chunk sums, so `Relaxed` suffices.
+    let next = crate::util::sync::AtomicUsize::new(0);
     let sink = DisjointWrites::new(partials);
     WorkPool::global().run(threads, &|_| loop {
-        let c = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let c = next.fetch_add(1, crate::util::sync::Ordering::Relaxed);
         if c >= chunks {
             break;
         }

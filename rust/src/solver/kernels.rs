@@ -202,6 +202,8 @@ pub fn run_core<L: Loss + ?Sized>(
             out.skipped += 1;
             continue;
         }
+        // SAFETY: same round-entry bounds proof — row indices < d =
+        // v.len(), i < data.n() = y.len(), j < len = alpha_cur.len().
         let m = unsafe { v.sparse_dot_unchecked(row.indices, row.values) };
         let y = unsafe { *data.y.get_unchecked(i) };
         let q = params.q(ns);
@@ -352,6 +354,8 @@ mod tests {
 
             let row = crate::data::csr::SparseRow { indices: &idx, values: &vals };
             let dot_ref = row.dot_dense(&v);
+            // SAFETY: `idx` was sampled from 0..dim = v.len(), and
+            // `vals` was built element-for-element from `idx`.
             let dot_fast = unsafe { sparse_dot_dense_unchecked(&idx, &vals, &v) };
             assert_eq!(dot_ref.to_bits(), dot_fast.to_bits(), "dot nnz={nnz}");
 
@@ -360,6 +364,7 @@ mod tests {
             for (&j, &x) in idx.iter().zip(&vals) {
                 v_ref[j as usize] += a * x;
             }
+            // SAFETY: same `idx`/`vals` bounds proof as the dot above.
             unsafe { sparse_axpy_dense_unchecked(a, &idx, &vals, &mut v_fast) };
             assert_eq!(v_ref, v_fast, "axpy nnz={nnz}");
         }

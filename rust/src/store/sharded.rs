@@ -11,8 +11,9 @@
 use std::cell::RefCell;
 use std::io::Read;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::{AtomicUsize, Mutex, Ordering};
 
 use crate::data::csr::CsrMatrix;
 use crate::data::Dataset;
@@ -25,6 +26,15 @@ use super::manifest::Manifest;
 /// right now, and the high-water mark since the last reset. The
 /// out-of-core evaluation contract — peak resident data ≤ eval threads
 /// × one shard — is asserted against this in tests.
+// ORDERING: all gauge traffic is `Relaxed` (downgraded from the
+// original blanket `SeqCst`, see CHANGES.md). Correctness needs only
+// per-location RMW atomicity: `current` is an exact up/down counter
+// because fetch_add/fetch_sub never lose increments regardless of
+// ordering, and `peak` is maintained with `fetch_max` against the
+// value `current`'s own RMW returned — no cross-location ordering is
+// consumed. Every assertion against the gauge happens after the
+// leasing operation has quiesced (pool completion barrier or thread
+// join), which supplies the happens-before for the final loads.
 #[derive(Debug, Default)]
 struct Residency {
     current: AtomicUsize,
@@ -59,7 +69,7 @@ impl std::ops::Deref for ShardLease {
 
 impl Drop for ShardLease {
     fn drop(&mut self) {
-        self.residency.current.fetch_sub(1, Ordering::SeqCst);
+        self.residency.current.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -130,12 +140,12 @@ impl ShardedDataset {
     /// incremented until it drops. Every path with a memory contract
     /// (streamed evaluation, slab assembly) loads through leases.
     pub fn lease_shard(&self, i: usize) -> anyhow::Result<ShardLease> {
-        let cur = self.residency.current.fetch_add(1, Ordering::SeqCst) + 1;
-        self.residency.peak.fetch_max(cur, Ordering::SeqCst);
+        let cur = self.residency.current.fetch_add(1, Ordering::Relaxed) + 1;
+        self.residency.peak.fetch_max(cur, Ordering::Relaxed);
         match self.load_shard(i) {
             Ok(data) => Ok(ShardLease { data, residency: Arc::clone(&self.residency) }),
             Err(e) => {
-                self.residency.current.fetch_sub(1, Ordering::SeqCst);
+                self.residency.current.fetch_sub(1, Ordering::Relaxed);
                 Err(e)
             }
         }
@@ -143,19 +153,19 @@ impl ShardedDataset {
 
     /// Number of shard leases alive right now.
     pub fn residency_current(&self) -> usize {
-        self.residency.current.load(Ordering::SeqCst)
+        self.residency.current.load(Ordering::Relaxed)
     }
 
     /// High-water mark of concurrently leased shards since open (or the
     /// last [`reset_residency_peak`](Self::reset_residency_peak)).
     pub fn residency_peak(&self) -> usize {
-        self.residency.peak.load(Ordering::SeqCst)
+        self.residency.peak.load(Ordering::Relaxed)
     }
 
     /// Reset the high-water mark (tests bracket one operation with
     /// this and [`residency_peak`](Self::residency_peak)).
     pub fn reset_residency_peak(&self) {
-        self.residency.peak.store(self.residency.current.load(Ordering::SeqCst), Ordering::SeqCst);
+        self.residency.peak.store(self.residency.current.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 
     /// Core of [`load_shard`](Self::load_shard) with a caller-supplied
@@ -229,6 +239,9 @@ impl ShardedDataset {
             }
             return Ok(());
         }
+        // ORDERING: work-claim ticket; RMW atomicity alone guarantees
+        // each shard index is checked exactly once, and the pool's
+        // completion barrier publishes the error slot — `Relaxed`.
         let next = AtomicUsize::new(0);
         // Keep only the lowest-index failure so the parallel scan
         // reports the same error a serial one would have hit first.

@@ -180,6 +180,19 @@ fn put_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+/// Slice→array conversion with the panic made impossible by type: the
+/// lengths are proven by the callers' `take`/bounds checks, but the
+/// decode path is panic-free *by construction* (the xtask lint bans
+/// `unwrap`/`expect` here), so a length surprise surfaces as a named
+/// [`WireError::Truncated`] instead of tearing the process down on a
+/// hostile or corrupt peer.
+pub(crate) fn arr<const N: usize>(
+    bytes: &[u8],
+    field: &'static str,
+) -> Result<[u8; N], WireError> {
+    <[u8; N]>::try_from(bytes).map_err(|_| WireError::Truncated { field })
+}
+
 /// Bounds-checked little-endian reader over a byte slice.
 struct Cursor<'a> {
     buf: &'a [u8],
@@ -207,15 +220,15 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self, field: &'static str) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().expect("4 bytes")))
+        Ok(u32::from_le_bytes(arr(self.take(4, field)?, field)?))
     }
 
     fn u64(&mut self, field: &'static str) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(arr(self.take(8, field)?, field)?))
     }
 
     fn f64(&mut self, field: &'static str) -> Result<f64, WireError> {
-        Ok(f64::from_le_bytes(self.take(8, field)?.try_into().expect("8 bytes")))
+        Ok(f64::from_le_bytes(arr(self.take(8, field)?, field)?))
     }
 
     /// A length field that must fit both `usize` and the bytes left
@@ -441,10 +454,11 @@ impl Frame {
         if expected != buf.len() {
             return Err(WireError::BadLength { expected, got: buf.len() });
         }
+        // In bounds: the early-return above guarantees
+        // buf.len() ≥ FRAME_HEADER_LEN + FRAME_TRAILER_LEN.
         let body = &buf[..buf.len() - FRAME_TRAILER_LEN];
-        let stored = u32::from_le_bytes(
-            buf[buf.len() - FRAME_TRAILER_LEN..].try_into().expect("4 trailer bytes"),
-        );
+        let stored =
+            u32::from_le_bytes(arr(&buf[buf.len() - FRAME_TRAILER_LEN..], "crc trailer")?);
         let computed = crc32(body);
         if stored != computed {
             return Err(WireError::BadCrc { expected: computed, got: stored });
@@ -563,9 +577,9 @@ pub fn encode_hello(version: u32) -> [u8; HANDSHAKE_LEN] {
 /// decides on mismatch so its ack can carry both versions.
 pub fn decode_hello(buf: &[u8; HANDSHAKE_LEN]) -> Result<u32, WireError> {
     if buf[..8] != WIRE_MAGIC {
-        return Err(WireError::BadMagic { got: buf[..8].try_into().expect("8 bytes") });
+        return Err(WireError::BadMagic { got: arr(&buf[..8], "hello.magic")? });
     }
-    Ok(u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes")))
+    Ok(u32::from_le_bytes(arr(&buf[8..12], "hello.version")?))
 }
 
 /// Master → worker ack. `version` is the *master's* version; status is
@@ -582,10 +596,10 @@ pub fn encode_ack(version: u32, status: u32) -> [u8; HANDSHAKE_LEN] {
 /// a mismatch error reports both.
 pub fn decode_ack(buf: &[u8; HANDSHAKE_LEN], ours: u32) -> Result<u32, WireError> {
     if buf[..8] != WIRE_MAGIC {
-        return Err(WireError::BadMagic { got: buf[..8].try_into().expect("8 bytes") });
+        return Err(WireError::BadMagic { got: arr(&buf[..8], "ack.magic")? });
     }
-    let theirs = u32::from_le_bytes(buf[8..12].try_into().expect("4 bytes"));
-    let status = u32::from_le_bytes(buf[12..16].try_into().expect("4 bytes"));
+    let theirs = u32::from_le_bytes(arr(&buf[8..12], "ack.version")?);
+    let status = u32::from_le_bytes(arr(&buf[12..16], "ack.status")?);
     match status {
         ACK_OK => Ok(theirs),
         ACK_VERSION_MISMATCH => Err(WireError::VersionMismatch { ours, theirs }),

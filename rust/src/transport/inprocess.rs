@@ -1,10 +1,17 @@
-//! Threads-as-nodes backend: typed frames over `std::sync::mpsc`,
-//! exactly the channel topology the coordinator used before the
-//! transport seam existed. Frames move by value — nothing is encoded —
-//! but the byte counters bill [`Frame::wire_len`], so a simulated run
-//! reports the same per-peer wire traffic its socket twin would ship.
+//! Threads-as-nodes backend: typed frames over the façade
+//! [`mailbox`](crate::util::sync::mailbox) channel, exactly the
+//! topology the coordinator used before the transport seam existed.
+//! Frames move by value — nothing is encoded — but the byte counters
+//! bill [`Frame::wire_len`], so a simulated run reports the same
+//! per-peer wire traffic its socket twin would ship.
+//!
+//! The master's merge mailbox used to be `std::sync::mpsc`; it now
+//! rides on `util::sync::mailbox` (Mutex + Condvar under the lint-
+//! enforced façade) with identical disconnect semantics, so the
+//! handoff protocol is small enough to model-check exhaustively
+//! (`tests/loom_mailbox.rs`).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::{mailbox, Receiver, Sender};
 
 use super::frame::Frame;
 use super::{Transport, TransportError, TransportStats, MASTER};
@@ -30,11 +37,11 @@ pub struct InProcessWorker {
 /// exactly when every worker endpoint has been dropped — the same
 /// disconnect semantics the raw channels had.
 pub fn in_process(k: usize) -> (InProcessMaster, Vec<InProcessWorker>) {
-    let (tx_up, rx_up) = channel::<(usize, Frame)>();
+    let (tx_up, rx_up) = mailbox::<(usize, Frame)>();
     let mut txs = Vec::with_capacity(k);
     let mut workers = Vec::with_capacity(k);
     for id in 0..k {
-        let (tx_down, rx_down) = channel::<Frame>();
+        let (tx_down, rx_down) = mailbox::<Frame>();
         txs.push(tx_down);
         workers.push(InProcessWorker {
             id,

@@ -4,8 +4,8 @@
 //! updates, merged `v` replies, shutdown, final reports — flows
 //! through this trait as typed [`Frame`]s:
 //!
-//! * [`InProcessMaster`] / [`InProcessWorker`] wrap the original
-//!   `std::sync::mpsc` channels. Frames pass by value (no encoding on
+//! * [`InProcessMaster`] / [`InProcessWorker`] wrap the façade's
+//!   `util::sync::mailbox` channels. Frames pass by value (no encoding on
 //!   the hot path) and the per-peer byte counters bill
 //!   [`Frame::wire_len`], so the simulated cluster reports the same
 //!   wire traffic a socket run would ship.

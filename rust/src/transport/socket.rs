@@ -19,16 +19,21 @@
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::util::sync::{mailbox, AtomicU64, Ordering, Receiver};
+
+// ORDERING: the per-peer byte/frame counters are monotonic statistics
+// read for reporting only (never for synchronization decisions), so
+// all accesses are `Relaxed`; the reader-thread joins in `Drop` give
+// snapshots taken after shutdown exact totals.
+
 use anyhow::Context;
 
 use super::frame::{
-    decode_ack, decode_hello, encode_ack, encode_hello, Frame, WireError, ACK_OK,
+    arr, decode_ack, decode_hello, encode_ack, encode_hello, Frame, WireError, ACK_OK,
     ACK_VERSION_MISMATCH, FRAME_HEADER_LEN, FRAME_TRAILER_LEN, HANDSHAKE_LEN, MAX_FRAME_PAYLOAD,
     WIRE_VERSION,
 };
@@ -155,7 +160,9 @@ fn fill(stream: &mut Stream, buf: &mut [u8], at_boundary: bool) -> Result<(), Re
 fn read_frame(stream: &mut Stream) -> Result<Frame, ReadEnd> {
     let mut header = [0u8; FRAME_HEADER_LEN];
     fill(stream, &mut header, true)?;
-    let payload_len = u64::from_le_bytes(header[12..20].try_into().expect("8 bytes"));
+    let payload_len = u64::from_le_bytes(
+        arr(&header[12..20], "header.payload_len").map_err(ReadEnd::Wire)?,
+    );
     if payload_len > MAX_FRAME_PAYLOAD {
         return Err(ReadEnd::Wire(WireError::Oversized { len: payload_len }));
     }
@@ -301,7 +308,7 @@ impl SocketListener {
         // Cluster formed: reader thread + shared counters per peer.
         let stats: Vec<Arc<AtomicPeerStats>> =
             (0..k).map(|_| Arc::new(AtomicPeerStats::default())).collect();
-        let (tx_ev, rx_ev) = channel::<(usize, Result<Frame, ReadEnd>)>();
+        let (tx_ev, rx_ev) = mailbox::<(usize, Result<Frame, ReadEnd>)>();
         let mut writers = Vec::with_capacity(k);
         let mut threads = Vec::with_capacity(k);
         for (peer, stream) in streams.into_iter().enumerate() {

@@ -6,8 +6,13 @@
 //! and per-line timestamps — everything the coordinator needs to trace
 //! its event flow without pulling in a heavyweight stack.
 
-use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::Instant;
+
+use crate::util::sync::{AtomicU8, Ordering};
+
+// ORDERING: the max-level switch is an advisory flag — a logger racing
+// a `set_level` call may print (or drop) one borderline line, which is
+// harmless, so `Relaxed` load/store suffice.
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]

@@ -5,9 +5,11 @@
 pub mod atomic_vec;
 pub mod json;
 pub mod logging;
+pub mod model;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 
 pub use atomic_vec::AtomicF64Vec;

@@ -1,0 +1,524 @@
+//! Exhaustive interleaving explorer — a vendored, dependency-free
+//! stand-in for `loom`.
+//!
+//! The container this repo builds in is offline, so the real `loom`
+//! crate cannot be added. This module implements the part of loom the
+//! ISSUE's invariants need: **exhaustive exploration of every
+//! interleaving of a small set of model threads**, where each thread is
+//! a deterministic state machine whose [`ModelThread::step`] performs
+//! one *atomic* action on the shared state.
+//!
+//! How this relates to the real code:
+//!
+//! * The model threads in `tests/loom_*.rs` are line-by-line
+//!   transcriptions of the protocols in `util/atomic_vec.rs`
+//!   (CAS add / wild add), `util/pool.rs` (generation handshake), and
+//!   `util/sync.rs` (`Mailbox` handoff) — each model cites the lines it
+//!   transcribes. The `xtask lint` wall keeps the real code's atomics
+//!   enumerable (they may only live behind the `util::sync` façade), so
+//!   the transcription stays auditable.
+//! * Because the explorer serializes steps, every exploration is a
+//!   sequentially-consistent execution. For the single-location
+//!   `Relaxed` protocols modeled here (per-cell CAS/store, one mutex)
+//!   coherence order per location is all that matters, so SC
+//!   exploration is faithful. Cross-location `Relaxed` reordering is
+//!   *not* modeled — that is exactly the staleness the algorithm
+//!   tolerates by design (paper Assumption 1, bounded delay), and the
+//!   README's "Correctness & static analysis" section spells out the
+//!   boundary.
+//!
+//! The explorer is depth-first with schedule replay: each execution
+//! re-creates the model from scratch via the caller's factory, replays
+//! the chosen schedule prefix, then extends it greedily, recording the
+//! untried alternatives at every choice point. Deterministic models
+//! make replay exact. Deadlocks (no runnable thread while some are
+//! unfinished) panic with the offending schedule.
+
+/// Result of one model-thread step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Step {
+    /// The thread performed one atomic action and has more to do.
+    Ran,
+    /// The thread performed its final action (or had nothing to do).
+    Done,
+}
+
+/// One deterministic thread of a model.
+///
+/// The explorer only calls [`step`](Self::step) when
+/// [`ready`](Self::ready) returns `true`; a thread parked on a model
+/// mutex/condvar reports not-ready instead of spinning, which keeps the
+/// schedule space finite and makes deadlocks detectable.
+pub trait ModelThread<S> {
+    /// May this thread take a step in the current shared state?
+    fn ready(&self, shared: &S) -> bool {
+        let _ = shared;
+        true
+    }
+
+    /// Perform exactly one atomic action. Must be deterministic given
+    /// `shared` and the thread's own state.
+    fn step(&mut self, shared: &mut S) -> Step;
+}
+
+/// Statistics from an exhaustive exploration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Explored {
+    /// Number of complete executions (distinct schedules) explored.
+    pub executions: usize,
+    /// Length of the longest schedule seen.
+    pub max_depth: usize,
+}
+
+/// Safety valve: a single execution longer than this panics. Real
+/// models here are < 100 steps; hitting the cap means a model livelock
+/// (e.g. a retry loop that the modeled protocol cannot exit).
+const STEP_CAP: usize = 4096;
+
+/// Exhaustively explore every interleaving of the model produced by
+/// `factory`. `on_complete` runs at the end of each execution with the
+/// final shared state — assert invariants there (it panicking fails the
+/// test with the schedule visible in the backtrace via `RUST_BACKTRACE`).
+///
+/// Panics on deadlock: some thread unfinished, none ready.
+pub fn explore<S>(
+    factory: &mut dyn FnMut() -> (S, Vec<Box<dyn ModelThread<S>>>),
+    on_complete: &mut dyn FnMut(&S),
+) -> Explored {
+    let mut prefix: Vec<usize> = Vec::new();
+    // alts[d] = thread choices at depth d not yet explored.
+    let mut alts: Vec<Vec<usize>> = Vec::new();
+    let mut executions = 0usize;
+    let mut max_depth = 0usize;
+
+    loop {
+        executions += 1;
+        let (mut shared, mut threads) = factory();
+        let mut done = vec![false; threads.len()];
+
+        // Replay the committed prefix (deterministic ⇒ identical run).
+        for &t in &prefix {
+            debug_assert!(!done[t] && threads[t].ready(&shared));
+            if threads[t].step(&mut shared) == Step::Done {
+                done[t] = true;
+            }
+        }
+
+        // Extend greedily, recording alternatives at each new depth.
+        loop {
+            let runnable: Vec<usize> = (0..threads.len())
+                .filter(|&t| !done[t] && threads[t].ready(&shared))
+                .collect();
+            match runnable.split_first() {
+                None => {
+                    if done.iter().all(|&d| d) {
+                        break; // execution complete
+                    }
+                    let stuck: Vec<usize> =
+                        (0..threads.len()).filter(|&t| !done[t]).collect();
+                    panic!(
+                        "model deadlock: threads {stuck:?} blocked, schedule {prefix:?}"
+                    );
+                }
+                Some((&first, rest)) => {
+                    assert!(
+                        prefix.len() < STEP_CAP,
+                        "model livelock: schedule exceeded {STEP_CAP} steps"
+                    );
+                    alts.push(rest.to_vec());
+                    prefix.push(first);
+                    if threads[first].step(&mut shared) == Step::Done {
+                        done[first] = true;
+                    }
+                }
+            }
+        }
+
+        max_depth = max_depth.max(prefix.len());
+        on_complete(&shared);
+
+        // Backtrack to the deepest choice point with an untried branch.
+        loop {
+            match alts.pop() {
+                None => return Explored { executions, max_depth },
+                Some(mut rest) => {
+                    prefix.pop();
+                    if !rest.is_empty() {
+                        let next = rest.remove(0);
+                        prefix.push(next);
+                        alts.push(rest);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Model lock / condvar building blocks.
+//
+// These let a model transcribe Mutex/Condvar protocols (WorkPool,
+// Mailbox) without busy-waiting: a thread that would block reports
+// not-ready via these helpers, so the explorer never schedules it and
+// deadlocks surface as "no runnable thread".
+// ---------------------------------------------------------------------
+
+/// A mutex modeled as "which thread holds it". Acquisition is one
+/// explorer step; contention is expressed by `ready()` gating on
+/// [`ModelMutex::free`].
+#[derive(Debug, Default)]
+pub struct ModelMutex {
+    holder: Option<usize>,
+}
+
+impl ModelMutex {
+    pub fn new() -> Self {
+        ModelMutex { holder: None }
+    }
+
+    /// Is the lock available (for `ready()` checks)?
+    pub fn free(&self) -> bool {
+        self.holder.is_none()
+    }
+
+    pub fn held_by(&self, who: usize) -> bool {
+        self.holder == Some(who)
+    }
+
+    /// Take the lock. Callers gate on [`free`](Self::free) in `ready`.
+    pub fn lock(&mut self, who: usize) {
+        assert!(self.holder.is_none(), "thread {who} locking a held ModelMutex");
+        self.holder = Some(who);
+    }
+
+    pub fn unlock(&mut self, who: usize) {
+        assert_eq!(
+            self.holder,
+            Some(who),
+            "thread {who} unlocking a ModelMutex it does not hold"
+        );
+        self.holder = None;
+    }
+}
+
+/// A condvar modeled as a parked-thread bitmask. `wait` = park +
+/// release the paired mutex (one atomic step, like the real condvar);
+/// `notify_all` unparks everyone — woken threads still re-acquire the
+/// mutex before their next step, exactly like `Condvar::wait` returning.
+///
+/// Spurious wakeups are not modeled; none of the transcribed protocols
+/// distinguish them from a real wake (all re-check their predicate in a
+/// loop), which the loom tests assert structurally by construction.
+#[derive(Debug, Default)]
+pub struct ModelCondvar {
+    parked: u64,
+}
+
+impl ModelCondvar {
+    pub fn new() -> Self {
+        ModelCondvar { parked: 0 }
+    }
+
+    /// Park `who` and release `lock` in one step.
+    pub fn wait(&mut self, who: usize, lock: &mut ModelMutex) {
+        assert!(who < 64);
+        self.parked |= 1 << who;
+        lock.unlock(who);
+    }
+
+    /// Is `who` currently parked (i.e. not ready)?
+    pub fn is_parked(&self, who: usize) -> bool {
+        self.parked & (1 << who) != 0
+    }
+
+    /// Unpark every waiter (they still contend on the mutex).
+    pub fn notify_all(&mut self) {
+        self.parked = 0;
+    }
+
+    /// Unpark the lowest-indexed waiter. With a single possible waiter
+    /// (the Mailbox receiver) this is exact; with several it picks one
+    /// deterministically, which under-approximates `notify_one`'s
+    /// nondeterminism — use `notify_all` for multi-waiter protocols.
+    pub fn notify_one(&mut self) {
+        if self.parked != 0 {
+            self.parked &= self.parked - 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads, two independent steps each: the explorer must visit
+    /// exactly C(4,2) = 6 interleavings.
+    #[test]
+    fn counts_interleavings_exactly() {
+        struct TwoSteps {
+            left: usize,
+        }
+        impl ModelThread<u64> for TwoSteps {
+            fn step(&mut self, shared: &mut u64) -> Step {
+                *shared += 1;
+                self.left -= 1;
+                if self.left == 0 {
+                    Step::Done
+                } else {
+                    Step::Ran
+                }
+            }
+        }
+        let stats = explore(
+            &mut || {
+                (
+                    0u64,
+                    vec![
+                        Box::new(TwoSteps { left: 2 }) as Box<dyn ModelThread<u64>>,
+                        Box::new(TwoSteps { left: 2 }),
+                    ],
+                )
+            },
+            &mut |&total| assert_eq!(total, 4),
+        );
+        assert_eq!(stats.executions, 6);
+        assert_eq!(stats.max_depth, 4);
+    }
+
+    /// A racy load-then-store increment (the "wild" shape): exploration
+    /// must find both the lost-update outcome (1) and the clean one (2).
+    #[test]
+    fn finds_lost_update_in_racy_increment() {
+        #[derive(Default)]
+        struct Racy {
+            seen: Option<u64>,
+        }
+        impl ModelThread<u64> for Racy {
+            fn step(&mut self, shared: &mut u64) -> Step {
+                match self.seen {
+                    None => {
+                        self.seen = Some(*shared); // load
+                        Step::Ran
+                    }
+                    Some(v) => {
+                        *shared = v + 1; // store
+                        Step::Done
+                    }
+                }
+            }
+        }
+        let mut outcomes = std::collections::BTreeSet::new();
+        explore(
+            &mut || {
+                (
+                    0u64,
+                    vec![
+                        Box::new(Racy::default()) as Box<dyn ModelThread<u64>>,
+                        Box::new(Racy::default()),
+                    ],
+                )
+            },
+            &mut |&v| {
+                outcomes.insert(v);
+            },
+        );
+        assert_eq!(outcomes.into_iter().collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    /// A CAS retry-loop increment (the atomic-add shape): every
+    /// interleaving must end at exactly 2 — no lost updates.
+    #[test]
+    fn cas_increment_never_loses() {
+        #[derive(Default)]
+        struct Cas {
+            seen: Option<u64>,
+        }
+        impl ModelThread<u64> for Cas {
+            fn step(&mut self, shared: &mut u64) -> Step {
+                match self.seen {
+                    None => {
+                        self.seen = Some(*shared);
+                        Step::Ran
+                    }
+                    Some(v) => {
+                        if *shared == v {
+                            *shared = v + 1; // CAS success
+                            Step::Done
+                        } else {
+                            self.seen = Some(*shared); // CAS failure: reload
+                            Step::Ran
+                        }
+                    }
+                }
+            }
+        }
+        let stats = explore(
+            &mut || {
+                (
+                    0u64,
+                    vec![
+                        Box::new(Cas::default()) as Box<dyn ModelThread<u64>>,
+                        Box::new(Cas::default()),
+                    ],
+                )
+            },
+            &mut |&v| assert_eq!(v, 2),
+        );
+        assert!(stats.executions >= 6);
+    }
+
+    /// Classic AB/BA lock ordering: the explorer must find the deadlock.
+    #[test]
+    fn detects_lock_order_deadlock() {
+        struct Locks {
+            a: ModelMutex,
+            b: ModelMutex,
+        }
+        /// Locks `first` then `second`, then releases both.
+        struct Grabber {
+            order: [bool; 2], // true = lock A at that stage
+            stage: usize,
+        }
+        impl ModelThread<Locks> for Grabber {
+            fn ready(&self, s: &Locks) -> bool {
+                match self.stage {
+                    0 | 1 => {
+                        let want_a = self.order[self.stage];
+                        if want_a {
+                            s.a.free()
+                        } else {
+                            s.b.free()
+                        }
+                    }
+                    _ => true,
+                }
+            }
+            fn step(&mut self, s: &mut Locks) -> Step {
+                let me = self.order[0] as usize; // distinct ids: 1 and 0
+                match self.stage {
+                    0 | 1 => {
+                        if self.order[self.stage] {
+                            s.a.lock(me);
+                        } else {
+                            s.b.lock(me);
+                        }
+                        self.stage += 1;
+                        Step::Ran
+                    }
+                    _ => {
+                        s.a.unlock(me);
+                        s.b.unlock(me);
+                        Step::Done
+                    }
+                }
+            }
+        }
+        let r = std::panic::catch_unwind(|| {
+            explore(
+                &mut || {
+                    (
+                        Locks { a: ModelMutex::new(), b: ModelMutex::new() },
+                        vec![
+                            Box::new(Grabber { order: [true, false], stage: 0 })
+                                as Box<dyn ModelThread<Locks>>,
+                            Box::new(Grabber { order: [false, true], stage: 0 }),
+                        ],
+                    )
+                },
+                &mut |_| {},
+            )
+        });
+        let msg = *r.expect_err("AB/BA must deadlock").downcast::<String>().unwrap();
+        assert!(msg.contains("model deadlock"), "unexpected panic: {msg}");
+    }
+
+    /// Park/notify round trip through the condvar helper terminates in
+    /// every interleaving.
+    #[test]
+    fn condvar_wait_notify_terminates() {
+        struct S {
+            lock: ModelMutex,
+            cv: ModelCondvar,
+            flag: bool,
+        }
+        /// Waiter (id 0): lock; while !flag wait; unlock.
+        struct Waiter {
+            stage: usize,
+        }
+        impl ModelThread<S> for Waiter {
+            fn ready(&self, s: &S) -> bool {
+                match self.stage {
+                    0 => s.lock.free(),            // first acquisition
+                    1 => true,                     // holds the lock
+                    _ => !s.cv.is_parked(0) && s.lock.free(), // re-acquire after wake
+                }
+            }
+            fn step(&mut self, s: &mut S) -> Step {
+                match self.stage {
+                    0 => {
+                        s.lock.lock(0);
+                        self.stage = 1;
+                        Step::Ran
+                    }
+                    1 => {
+                        if s.flag {
+                            s.lock.unlock(0);
+                            Step::Done
+                        } else {
+                            s.cv.wait(0, &mut s.lock);
+                            self.stage = 2;
+                            Step::Ran
+                        }
+                    }
+                    _ => {
+                        // Woken: re-acquire then re-check the predicate.
+                        if s.lock.held_by(0) {
+                            unreachable!()
+                        }
+                        s.lock.lock(0);
+                        self.stage = 1;
+                        Step::Ran
+                    }
+                }
+            }
+        }
+        /// Notifier (id 1): lock; flag = true; notify; unlock.
+        struct Notifier {
+            stage: usize,
+        }
+        impl ModelThread<S> for Notifier {
+            fn ready(&self, s: &S) -> bool {
+                self.stage != 0 || s.lock.free()
+            }
+            fn step(&mut self, s: &mut S) -> Step {
+                match self.stage {
+                    0 => {
+                        s.lock.lock(1);
+                        s.flag = true;
+                        self.stage = 1;
+                        Step::Ran
+                    }
+                    _ => {
+                        s.cv.notify_all();
+                        s.lock.unlock(1);
+                        Step::Done
+                    }
+                }
+            }
+        }
+        let stats = explore(
+            &mut || {
+                (
+                    S { lock: ModelMutex::new(), cv: ModelCondvar::new(), flag: false },
+                    vec![
+                        Box::new(Waiter { stage: 0 }) as Box<dyn ModelThread<S>>,
+                        Box::new(Notifier { stage: 0 }),
+                    ],
+                )
+            },
+            &mut |s| assert!(s.flag && s.lock.free()),
+        );
+        assert!(stats.executions >= 2);
+    }
+}

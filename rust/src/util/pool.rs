@@ -14,7 +14,16 @@
 //! that barrier). Worker panics are caught and re-raised on the caller.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::util::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+
+// ORDERING: the pool protocol uses no atomics at all — every shared
+// field (generation, job, remaining, panicked) lives under one façade
+// `Mutex`, so the lock's release/acquire edges order job publication
+// before execution and execution before the submitter's return. The
+// generation handshake is model-checked in `tests/loom_pool.rs`
+// (a generation never runs a job twice, panics propagate, drop-free
+// termination in every interleaving).
 
 /// Work item: a lifetime-erased `Fn(worker_index)`. Only dereferenced
 /// between job publication and the last `remaining` decrement, while
@@ -26,6 +35,9 @@ struct Job {
     /// in, keeping the generation bookkeeping uniform).
     workers: usize,
 }
+// SAFETY: the raw pointer is only dereferenced by pool threads while
+// the submitter is blocked in `run` (see the lifetime-erasure proof
+// there); sending it across threads adds no new access.
 unsafe impl Send for Job {}
 
 struct State {
@@ -155,7 +167,12 @@ fn worker_loop(shared: &'static Shared, index: usize) {
 /// barrier provides the happens-before for reading the results back.
 #[derive(Clone, Copy)]
 pub struct DisjointWrites(*mut f64);
+// SAFETY: the wrapped pointer is only written through `set`, whose
+// contract (caller-guaranteed index disjointness + the pool barrier)
+// makes concurrent use race-free; the pointer itself is plain data.
 unsafe impl Send for DisjointWrites {}
+// SAFETY: as above — shared references only expose `set`, which is
+// already unsafe with a disjointness contract.
 unsafe impl Sync for DisjointWrites {}
 
 impl DisjointWrites {
@@ -170,6 +187,8 @@ impl DisjointWrites {
     /// writes the same index during this pool job.
     #[inline]
     pub unsafe fn set(&self, index: usize, value: f64) {
+        // SAFETY: forwarded contract — `index` in bounds of the source
+        // slice, no concurrent writer of the same index.
         unsafe { *self.0.add(index) = value };
     }
 }
@@ -177,16 +196,20 @@ impl DisjointWrites {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use crate::util::sync::{AtomicUsize, Ordering};
+
+    // ORDERING: test counters are read only after `run` returns, and
+    // `run`'s completion barrier (state mutex) already orders all
+    // worker writes before that return — `Relaxed` suffices.
 
     #[test]
     fn runs_all_workers_and_blocks_until_done() {
         let pool = WorkPool::global();
         let hits = AtomicUsize::new(0);
         pool.run(3, &|_i| {
-            hits.fetch_add(1, Ordering::SeqCst);
+            hits.fetch_add(1, Ordering::Relaxed);
         });
-        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
     }
 
     #[test]
@@ -195,10 +218,10 @@ mod tests {
         let total = AtomicUsize::new(0);
         for _ in 0..100 {
             pool.run(2, &|i| {
-                total.fetch_add(i + 1, Ordering::SeqCst);
+                total.fetch_add(i + 1, Ordering::Relaxed);
             });
         }
-        assert_eq!(total.load(Ordering::SeqCst), 300);
+        assert_eq!(total.load(Ordering::Relaxed), 300);
     }
 
     #[test]
@@ -207,7 +230,8 @@ mod tests {
         let mut out = vec![0.0f64; 8];
         let sink = DisjointWrites::new(&mut out);
         pool.run(4, &|i| {
-            // Worker i owns indices {i, i+4}.
+            // SAFETY: worker i exclusively owns indices {i, i+4},
+            // both < 8 = out.len().
             unsafe {
                 sink.set(i, i as f64);
                 sink.set(i + 4, (i + 4) as f64);
@@ -230,9 +254,9 @@ mod tests {
         // Pool still serves jobs afterwards.
         let hits = AtomicUsize::new(0);
         pool.run(2, &|_| {
-            hits.fetch_add(1, Ordering::SeqCst);
+            hits.fetch_add(1, Ordering::Relaxed);
         });
-        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
     }
 
     #[test]
@@ -240,8 +264,8 @@ mod tests {
         let pool = WorkPool::global();
         let hits = AtomicUsize::new(0);
         pool.run(pool.size() + 100, &|_| {
-            hits.fetch_add(1, Ordering::SeqCst);
+            hits.fetch_add(1, Ordering::Relaxed);
         });
-        assert_eq!(hits.load(Ordering::SeqCst), pool.size());
+        assert_eq!(hits.load(Ordering::Relaxed), pool.size());
     }
 }

@@ -16,8 +16,13 @@ use super::rng::Rng;
 /// Outcome of a single property evaluation.
 pub type PropResult = Result<(), String>;
 
-/// Number of cases to run (env-overridable).
+/// Number of cases to run (env-overridable). Under Miri the interpreter
+/// runs ~3 orders of magnitude slower than native code, so the default
+/// shrinks to a handful of cases — enough for the UB detector to walk
+/// every code path (unsafe kernels, codec round trips) without timing
+/// out CI. The env override still wins for targeted deep runs.
 pub fn default_cases(fallback: usize) -> usize {
+    let fallback = if cfg!(miri) { fallback.clamp(1, 4) } else { fallback };
     std::env::var("HYBRID_DCA_PROPTEST_CASES")
         .ok()
         .and_then(|v| v.parse().ok())

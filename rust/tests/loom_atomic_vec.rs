@@ -1,0 +1,219 @@
+//! Exhaustive interleaving checks for the `AtomicF64Vec` protocols
+//! (`src/util/atomic_vec.rs`): the CAS add (`add`, lines 88–98), the
+//! wild add (`add_wild`, lines 103–107), and a reader racing either.
+//!
+//! Built only with `--features modelcheck` (see `[[test]]` in
+//! Cargo.toml). Each model thread transcribes the real protocol
+//! line-by-line: one explorer step per atomic instruction (load, CAS,
+//! store). The shared state holds the cell's *value*; tearing is
+//! impossible by construction because every model store writes the
+//! whole value — which is exactly the guarantee the real code gets from
+//! `AtomicU64` (the paper's "wild" mode loses read-modify-write
+//! atomicity, never store atomicity).
+
+use hybrid_dca::util::model::{explore, ModelThread, Step};
+
+/// Transcription of `AtomicF64Vec::add` (CAS retry loop): one step for
+/// the initial relaxed load, one step per `compare_exchange_weak`
+/// attempt (failure reloads, exactly like `Err(actual) => cur = actual`).
+struct CasAdd {
+    delta: f64,
+    seen: Option<f64>,
+}
+
+impl CasAdd {
+    fn new(delta: f64) -> Self {
+        CasAdd { delta, seen: None }
+    }
+}
+
+impl ModelThread<f64> for CasAdd {
+    fn step(&mut self, cell: &mut f64) -> Step {
+        match self.seen {
+            None => {
+                self.seen = Some(*cell); // cell.load(Relaxed)
+                Step::Ran
+            }
+            Some(cur) => {
+                if *cell == cur {
+                    *cell = cur + self.delta; // CAS success
+                    Step::Done
+                } else {
+                    self.seen = Some(*cell); // CAS failure: cur = actual
+                    Step::Ran
+                }
+            }
+        }
+    }
+}
+
+/// Transcription of `AtomicF64Vec::add_wild`: relaxed load, then an
+/// independent relaxed store of `loaded + delta`.
+struct WildAdd {
+    delta: f64,
+    seen: Option<f64>,
+}
+
+impl WildAdd {
+    fn new(delta: f64) -> Self {
+        WildAdd { delta, seen: None }
+    }
+}
+
+impl ModelThread<f64> for WildAdd {
+    fn step(&mut self, cell: &mut f64) -> Step {
+        match self.seen {
+            None => {
+                self.seen = Some(*cell); // cell.load(Relaxed)
+                Step::Ran
+            }
+            Some(cur) => {
+                *cell = cur + self.delta; // cell.store(cur + delta)
+                Step::Done
+            }
+        }
+    }
+}
+
+/// PassCoDe-Atomic invariant: two concurrent CAS adds to one cell
+/// commit both deltas in *every* interleaving — no lost Δα.
+#[test]
+fn cas_add_never_loses_an_update() {
+    let stats = explore(
+        &mut || {
+            (
+                0.0f64,
+                vec![
+                    Box::new(CasAdd::new(1.0)) as Box<dyn ModelThread<f64>>,
+                    Box::new(CasAdd::new(2.0)),
+                ],
+            )
+        },
+        &mut |&v| assert_eq!(v, 3.0, "CAS add lost an update"),
+    );
+    // At least the C(4,2) = 6 schedules of two 2-step threads, plus
+    // retry branches where a CAS observes the other thread's commit.
+    assert!(stats.executions >= 6, "explored only {} executions", stats.executions);
+}
+
+/// PassCoDe-Wild invariant: concurrent wild adds may lose an update —
+/// but the result is always some *valid* partial sum, never a torn
+/// value. Exploration must also prove both the lossy and the clean
+/// outcome are reachable (the race is real, not hypothetical).
+#[test]
+fn wild_add_loses_updates_but_never_tears() {
+    let mut outcomes = std::collections::BTreeSet::new();
+    explore(
+        &mut || {
+            (
+                0.0f64,
+                vec![
+                    Box::new(WildAdd::new(1.0)) as Box<dyn ModelThread<f64>>,
+                    Box::new(WildAdd::new(2.0)),
+                ],
+            )
+        },
+        &mut |&v| {
+            assert!(
+                v == 1.0 || v == 2.0 || v == 3.0,
+                "torn/invalid value {v} observed"
+            );
+            outcomes.insert(v.to_bits());
+        },
+    );
+    let outcomes: Vec<f64> = outcomes.into_iter().map(f64::from_bits).collect();
+    assert_eq!(outcomes, vec![1.0, 2.0, 3.0], "missing reachable outcome");
+}
+
+/// Wild-vs-CAS: a wild store may erase a concurrent CAS commit (final
+/// 2.0), but can never produce anything outside the valid-sum set, and
+/// the clean outcome (3.0) stays reachable. This is the exact risk the
+/// ν-damped aggregation in the paper compensates for.
+#[test]
+fn wild_store_may_erase_cas_commit_but_never_tears() {
+    let mut outcomes = std::collections::BTreeSet::new();
+    explore(
+        &mut || {
+            (
+                0.0f64,
+                vec![
+                    Box::new(CasAdd::new(1.0)) as Box<dyn ModelThread<f64>>,
+                    Box::new(WildAdd::new(2.0)),
+                ],
+            )
+        },
+        &mut |&v| {
+            outcomes.insert(v.to_bits());
+        },
+    );
+    let outcomes: Vec<f64> = outcomes.into_iter().map(f64::from_bits).collect();
+    // 2.0 = wild overwrote the CAS commit; 3.0 = both landed. The CAS
+    // retry loop makes 1.0 (CAS erasing the wild store) unreachable:
+    // a CAS that observed pre-store state fails and reloads.
+    assert_eq!(outcomes, vec![2.0, 3.0]);
+}
+
+/// Reader invariant ("dual sum never observes torn α"): a reader racing
+/// a CAS writer that commits two increments observes only valid partial
+/// sums, in monotone order — each observation is one of the writer's
+/// committed states, never an intermediate bit pattern.
+#[test]
+fn reader_observes_only_committed_partial_sums() {
+    /// Writer: two sequential CAS adds of 0.5 each (same cell).
+    struct TwoAdds {
+        inner: CasAdd,
+        left: usize,
+    }
+    impl ModelThread<(f64, Vec<u64>)> for TwoAdds {
+        fn step(&mut self, s: &mut (f64, Vec<u64>)) -> Step {
+            match self.inner.step(&mut s.0) {
+                Step::Done if self.left > 1 => {
+                    self.left -= 1;
+                    self.inner = CasAdd::new(0.5);
+                    Step::Ran
+                }
+                done_or_ran => done_or_ran,
+            }
+        }
+    }
+    /// Reader: two relaxed loads, recorded for the final assertion.
+    struct Reader {
+        loads: usize,
+    }
+    impl ModelThread<(f64, Vec<u64>)> for Reader {
+        fn step(&mut self, s: &mut (f64, Vec<u64>)) -> Step {
+            s.1.push(s.0.to_bits());
+            self.loads -= 1;
+            if self.loads == 0 {
+                Step::Done
+            } else {
+                Step::Ran
+            }
+        }
+    }
+    explore(
+        &mut || {
+            (
+                (0.0f64, Vec::new()),
+                vec![
+                    Box::new(TwoAdds { inner: CasAdd::new(0.5), left: 2 })
+                        as Box<dyn ModelThread<(f64, Vec<u64>)>>,
+                    Box::new(Reader { loads: 2 }),
+                ],
+            )
+        },
+        &mut |(final_v, observed)| {
+            assert_eq!(*final_v, 1.0);
+            let mut prev = f64::NEG_INFINITY;
+            for &bits in observed {
+                let v = f64::from_bits(bits);
+                assert!(
+                    v == 0.0 || v == 0.5 || v == 1.0,
+                    "reader saw non-committed value {v}"
+                );
+                assert!(v >= prev, "reader saw non-monotone sequence");
+                prev = v;
+            }
+        },
+    );
+}

@@ -1,0 +1,271 @@
+//! Exhaustive interleaving checks for the `Mailbox` channel
+//! (`src/util/sync.rs`), the mpsc replacement carrying the master's
+//! merge-mailbox handoff (`transport::inprocess`) and the socket
+//! demultiplexer (`transport::socket`).
+//!
+//! Built only with `--features modelcheck`. One explorer step per
+//! critical section (all mailbox state lives under one mutex), with the
+//! real code's unlock-before-notify window preserved as its own step:
+//! `send` pushes under the lock, *releases it*, then calls
+//! `notify_one` (sync.rs lines 110–119), and the last `Sender::drop`
+//! does the same (lines 129–141). The classic lost-wakeup hazard lives
+//! exactly in that window, so the model must not collapse it.
+//!
+//! Invariants checked across EVERY interleaving:
+//! * no message is lost: the receiver drains every sent message before
+//!   observing disconnect (`RecvError` only after queue empty AND all
+//!   senders dropped);
+//! * FIFO per sender;
+//! * the receiver never sleeps through a wake (no deadlock — the
+//!   explorer panics if unfinished threads are all blocked);
+//! * after `Receiver::drop`, `send` hands the message back
+//!   (`SendError`), and both the success and failure outcome of the
+//!   racing send are actually reachable.
+
+use hybrid_dca::util::model::{explore, ModelCondvar, ModelMutex, ModelThread, Step};
+
+/// Park-bit id for the receiver on `ready_cv` (producers use 0..N).
+const RECEIVER: usize = 8;
+
+struct MbState {
+    lock: ModelMutex,
+    ready_cv: ModelCondvar,
+    queue: Vec<u64>,
+    senders: usize,
+    receiver_gone: bool,
+    /// What the receiver popped, in order.
+    received: Vec<u64>,
+    /// Receiver returned `Err(RecvError)`.
+    disconnected: bool,
+    /// Per-producer result of a send that raced `Receiver::drop`
+    /// (None = not attempted, Some(true) = Ok, Some(false) = SendError).
+    racing_send_ok: Option<bool>,
+}
+
+impl MbState {
+    fn new(senders: usize) -> Self {
+        MbState {
+            lock: ModelMutex::new(),
+            ready_cv: ModelCondvar::new(),
+            queue: Vec::new(),
+            senders,
+            receiver_gone: false,
+            received: Vec::new(),
+            disconnected: false,
+            racing_send_ok: None,
+        }
+    }
+}
+
+/// Transcription of `Sender::send` for each queued message (push under
+/// lock, unlock, then a separate notify step) followed by
+/// `Sender::drop` (decrement under lock, unlock, notify if last).
+struct Producer {
+    id: usize,
+    to_send: Vec<u64>,
+    /// Pending notify step after a push or a last-sender drop.
+    notify_pending: bool,
+    dropped: bool,
+}
+
+impl Producer {
+    fn new(id: usize, to_send: Vec<u64>) -> Self {
+        Producer { id, to_send, notify_pending: false, dropped: false }
+    }
+}
+
+impl ModelThread<MbState> for Producer {
+    fn ready(&self, s: &MbState) -> bool {
+        // The notify step needs no lock; everything else contends.
+        self.notify_pending || s.lock.free()
+    }
+
+    fn step(&mut self, s: &mut MbState) -> Step {
+        if self.notify_pending {
+            // `self.inner.ready_cv.notify_one()` — after the unlock.
+            s.ready_cv.notify_one();
+            self.notify_pending = false;
+            if self.dropped {
+                return Step::Done;
+            }
+            return Step::Ran;
+        }
+        if !self.to_send.is_empty() {
+            // `send(msg)`: one critical section.
+            let msg = self.to_send.remove(0);
+            s.lock.lock(self.id);
+            if s.receiver_gone {
+                s.racing_send_ok = Some(false); // Err(SendError(msg))
+                s.lock.unlock(self.id);
+                return Step::Ran; // still have to drop the sender
+            }
+            s.queue.push(msg);
+            s.lock.unlock(self.id);
+            self.notify_pending = true;
+            if msg >= 100 {
+                s.racing_send_ok = Some(true); // marked racing send landed
+            }
+            return Step::Ran;
+        }
+        // `Sender::drop`: decrement, unlock, notify iff last.
+        s.lock.lock(self.id);
+        s.senders -= 1;
+        let last = s.senders == 0;
+        s.lock.unlock(self.id);
+        self.dropped = true;
+        if last {
+            self.notify_pending = true;
+            Step::Ran
+        } else {
+            Step::Done
+        }
+    }
+}
+
+/// Transcription of `Receiver::recv` called in a loop until
+/// disconnect: pop / disconnect-check / wait, all under one lock.
+struct Consumer;
+
+impl ModelThread<MbState> for Consumer {
+    fn ready(&self, s: &MbState) -> bool {
+        !s.ready_cv.is_parked(RECEIVER) && s.lock.free()
+    }
+
+    fn step(&mut self, s: &mut MbState) -> Step {
+        s.lock.lock(RECEIVER);
+        if !s.queue.is_empty() {
+            let msg = s.queue.remove(0);
+            s.received.push(msg);
+            s.lock.unlock(RECEIVER);
+            Step::Ran
+        } else if s.senders == 0 {
+            s.disconnected = true; // Err(RecvError)
+            s.lock.unlock(RECEIVER);
+            Step::Done
+        } else {
+            s.ready_cv.wait(RECEIVER, &mut s.lock);
+            Step::Ran
+        }
+    }
+}
+
+/// Receiver that takes `keep` messages and then drops
+/// (`Receiver::drop` sets `receiver_gone` under the lock).
+struct DroppingConsumer {
+    keep: usize,
+}
+
+impl ModelThread<MbState> for DroppingConsumer {
+    fn ready(&self, s: &MbState) -> bool {
+        !s.ready_cv.is_parked(RECEIVER) && s.lock.free()
+    }
+
+    fn step(&mut self, s: &mut MbState) -> Step {
+        s.lock.lock(RECEIVER);
+        if self.keep > 0 {
+            if !s.queue.is_empty() {
+                let msg = s.queue.remove(0);
+                s.received.push(msg);
+                self.keep -= 1;
+            } else {
+                s.ready_cv.wait(RECEIVER, &mut s.lock);
+                return Step::Ran;
+            }
+            s.lock.unlock(RECEIVER);
+            Step::Ran
+        } else {
+            s.receiver_gone = true; // Receiver::drop
+            s.lock.unlock(RECEIVER);
+            Step::Done
+        }
+    }
+}
+
+/// Two producers, one message each: every interleaving delivers both
+/// messages, and disconnect is reported only after the drain.
+#[test]
+fn two_producers_lose_nothing_and_disconnect_after_drain() {
+    let stats = explore(
+        &mut || {
+            (
+                MbState::new(2),
+                vec![
+                    Box::new(Producer::new(0, vec![10])) as Box<dyn ModelThread<MbState>>,
+                    Box::new(Producer::new(1, vec![20])),
+                    Box::new(Consumer),
+                ],
+            )
+        },
+        &mut |s| {
+            assert!(s.disconnected, "receiver never saw the disconnect");
+            let mut got = s.received.clone();
+            got.sort_unstable();
+            assert_eq!(got, vec![10, 20], "message lost or duplicated");
+            assert!(s.queue.is_empty());
+        },
+    );
+    assert!(stats.executions >= 10, "explored only {} executions", stats.executions);
+}
+
+/// FIFO per sender: one producer, two messages — received in send
+/// order in every interleaving (including ones where the receiver
+/// parks between them).
+#[test]
+fn single_producer_is_fifo_in_every_interleaving() {
+    explore(
+        &mut || {
+            (
+                MbState::new(1),
+                vec![
+                    Box::new(Producer::new(0, vec![1, 2])) as Box<dyn ModelThread<MbState>>,
+                    Box::new(Consumer),
+                ],
+            )
+        },
+        &mut |s| {
+            assert!(s.disconnected);
+            assert_eq!(s.received, vec![1, 2], "FIFO violated");
+        },
+    );
+}
+
+/// `send` racing `Receiver::drop`: the marked send (id ≥ 100) either
+/// lands before the drop (Ok) or observes `receiver_gone` and hands
+/// the message back (SendError) — and exploration reaches BOTH
+/// outcomes. Never a deadlock, never an unaccounted message.
+#[test]
+fn send_racing_receiver_drop_reaches_both_outcomes() {
+    let mut saw_ok = false;
+    let mut saw_err = false;
+    explore(
+        &mut || {
+            (
+                MbState::new(1),
+                vec![
+                    // First message feeds the receiver; the second
+                    // (≥ 100, "racing") contends with Receiver::drop.
+                    Box::new(Producer::new(0, vec![1, 100])) as Box<dyn ModelThread<MbState>>,
+                    Box::new(DroppingConsumer { keep: 1 }),
+                ],
+            )
+        },
+        &mut |s| {
+            assert_eq!(s.received, vec![1]);
+            match s.racing_send_ok {
+                Some(true) => {
+                    saw_ok = true;
+                    // Landed in the queue; discarded with the channel.
+                    assert_eq!(s.queue, vec![100]);
+                }
+                Some(false) => {
+                    saw_err = true;
+                    // Handed back to the caller, not silently dropped.
+                    assert!(s.queue.is_empty());
+                }
+                None => panic!("racing send never attempted"),
+            }
+        },
+    );
+    assert!(saw_ok, "send-before-drop outcome unreachable");
+    assert!(saw_err, "send-after-drop outcome unreachable");
+}

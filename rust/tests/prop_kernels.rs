@@ -100,6 +100,7 @@ fn prop_unrolled_kernels_bitwise_match_scalar() {
             let v_ref = AtomicF64Vec::from_slice(base);
             let v_fast = AtomicF64Vec::from_slice(base);
             v_ref.sparse_axpy(*a, idx, vals);
+            // SAFETY: same idx/vals bounds proof as the dot above.
             unsafe { v_fast.sparse_axpy_unchecked(*a, idx, vals) };
             if v_ref.snapshot() != v_fast.snapshot() {
                 return Err("axpy mismatch".into());
@@ -109,6 +110,7 @@ fn prop_unrolled_kernels_bitwise_match_scalar() {
             for (&j, &x) in idx.iter().zip(vals.iter()) {
                 d_ref[j as usize] += *a * x;
             }
+            // SAFETY: same idx/vals bounds proof as the dot above.
             unsafe { kernels::sparse_axpy_dense_unchecked(*a, idx, vals, &mut d_fast) };
             if d_ref != d_fast {
                 return Err("dense axpy mismatch".into());

@@ -1,0 +1,343 @@
+//! Repo-specific lint wall: `cargo xtask lint`.
+//!
+//! Four textual rules the compiler and clippy cannot enforce, run over
+//! `src/`, `tests/`, and `benches/` of the solver crate:
+//!
+//! 1. **safety-comments** — every `unsafe {` block and `unsafe impl`
+//!    must be preceded by a `// SAFETY:` comment (within a few lines);
+//!    every `unsafe fn` must document its contract with a `# Safety`
+//!    doc section (or a `SAFETY` comment) in the block right above it.
+//! 2. **decode-no-panic** — the wire-decode path
+//!    (`src/transport/frame.rs`, `src/transport/socket.rs`, non-test
+//!    code) must not contain `.unwrap()`, `.expect(`, `panic!(`,
+//!    `unreachable!(` or `todo!(`: a hostile or corrupt peer must
+//!    surface as a named `WireError`, never a process abort.
+//! 3. **atomics-via-facade** — no file other than `src/util/sync.rs`
+//!    may mention `std::sync::atomic`; all atomics flow through the
+//!    façade so the ordering audit stays complete.
+//! 4. **seqcst-justified** — any `SeqCst` use must carry an
+//!    `// ORDERING:` justification within the preceding lines. (The
+//!    tree is currently SeqCst-free; this keeps it honest if one
+//!    returns.)
+//!
+//! Exit status: 0 clean, 1 with findings (one `file:line:` per line),
+//! 2 on usage/IO errors. No dependencies, so the lint wall builds
+//! anywhere the toolchain does.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Workspace root = parent of xtask's own manifest dir, so the lint
+/// works from any cwd (`cargo xtask` runs it from wherever you are).
+fn workspace_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().expect("xtask has a parent dir").to_path_buf()
+}
+
+fn lint() -> ExitCode {
+    let root = workspace_root();
+    let mut files = Vec::new();
+    for dir in ["src", "tests", "benches"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("xtask: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path.strip_prefix(&root).unwrap_or(path).to_path_buf();
+        let lines: Vec<&str> = text.lines().collect();
+        check_safety_comments(&rel, &lines, &mut findings);
+        check_decode_no_panic(&rel, &lines, &mut findings);
+        check_atomics_via_facade(&rel, &lines, &mut findings);
+        check_seqcst_justified(&rel, &lines, &mut findings);
+    }
+
+    if findings.is_empty() {
+        println!("xtask lint: {} files clean", files.len());
+        ExitCode::SUCCESS
+    } else {
+        let mut out = String::new();
+        for f in &findings {
+            let _ = writeln!(out, "{f}");
+        }
+        eprint!("{out}");
+        eprintln!("xtask lint: {} finding(s) in {} files", findings.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Is the line (sans leading whitespace) a comment line?
+fn is_comment(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.starts_with("/*") || t.starts_with('*')
+}
+
+/// The code portion of a line: everything before a trailing `//`
+/// comment. (A `//` inside a string literal is miscounted, but none of
+/// the trigger patterns below appear in strings in this tree, and a
+/// false find is a loud, fixable event — the lint prefers simplicity.)
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Does `hay` contain `needle` as a whole word (no `[A-Za-z0-9_]` on
+/// either side)?
+fn has_word(hay: &str, needle: &str) -> bool {
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(needle) {
+        let start = from + i;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !is_word_byte(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_word_byte(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// `unsafe` followed by one of `{`, `fn`, `impl` on the same line.
+fn unsafe_kind(code: &str) -> Option<&'static str> {
+    let mut from = 0;
+    while let Some(i) = code[from..].find("unsafe") {
+        let start = from + i;
+        let end = start + "unsafe".len();
+        let pre_ok = start == 0 || !is_word_byte(code.as_bytes()[start - 1]);
+        if pre_ok {
+            let rest = code[end..].trim_start();
+            if rest.starts_with('{') {
+                return Some("block");
+            }
+            if rest.starts_with("fn") {
+                return Some("fn");
+            }
+            if rest.starts_with("impl") {
+                return Some("impl");
+            }
+        }
+        from = end;
+    }
+    None
+}
+
+/// Rule 1: SAFETY comments on unsafe blocks/impls, `# Safety` docs on
+/// unsafe fns.
+fn check_safety_comments(rel: &Path, lines: &[&str], findings: &mut Vec<String>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if is_comment(line) {
+            continue;
+        }
+        let code = code_part(line);
+        let Some(kind) = unsafe_kind(code) else { continue };
+        let ok = match kind {
+            // Contract lives in the doc block directly above the item.
+            "fn" => doc_block_has(lines, idx, &["# Safety", "SAFETY"]),
+            // Proof lives in a comment just above (or trailing).
+            _ => line.contains("SAFETY:") || preceding_comment_has(lines, idx, 6, "SAFETY:"),
+        };
+        if !ok {
+            let what = match kind {
+                "fn" => "unsafe fn without a `# Safety` doc section",
+                "impl" => "unsafe impl without a preceding `// SAFETY:` comment",
+                _ => "unsafe block without a preceding `// SAFETY:` comment",
+            };
+            findings.push(format!("{}:{}: {what}", rel.display(), idx + 1));
+        }
+    }
+}
+
+/// Scan the contiguous doc/attr/comment block above `idx` for any of
+/// `needles` (up to 30 lines).
+fn doc_block_has(lines: &[&str], idx: usize, needles: &[&str]) -> bool {
+    let mut i = idx;
+    let mut budget = 30;
+    while i > 0 && budget > 0 {
+        i -= 1;
+        budget -= 1;
+        let t = lines[i].trim_start();
+        let part_of_block = t.starts_with("///")
+            || t.starts_with("//!")
+            || t.starts_with("//")
+            || t.starts_with("#[")
+            || t.starts_with("#!")
+            || (t.is_empty() && budget == 29); // allow one blank right above
+        if !part_of_block {
+            return false;
+        }
+        if needles.iter().any(|n| lines[i].contains(n)) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Is there a comment containing `needle` within the `window` lines
+/// above `idx` (scanning only comment/attribute lines)?
+fn preceding_comment_has(lines: &[&str], idx: usize, window: usize, needle: &str) -> bool {
+    let lo = idx.saturating_sub(window);
+    for i in (lo..idx).rev() {
+        if lines[i].contains(needle) {
+            return true;
+        }
+    }
+    false
+}
+
+const DECODE_FILES: [&str; 2] = ["src/transport/frame.rs", "src/transport/socket.rs"];
+const PANICKY: [&str; 5] = [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!("];
+
+/// Rule 2: no panicking calls in the wire-decode path (non-test code).
+fn check_decode_no_panic(rel: &Path, lines: &[&str], findings: &mut Vec<String>) {
+    let rel_s = rel.to_string_lossy().replace('\\', "/");
+    if !DECODE_FILES.contains(&rel_s.as_str()) {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.contains("#[cfg(test)]") {
+            break; // tests sit at the bottom of both files
+        }
+        if is_comment(line) {
+            continue;
+        }
+        let code = code_part(line);
+        for pat in PANICKY {
+            if code.contains(pat) {
+                findings.push(format!(
+                    "{}:{}: `{pat}` in the wire-decode path (must return a WireError)",
+                    rel.display(),
+                    idx + 1
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 3: atomics only through the `util::sync` façade.
+fn check_atomics_via_facade(rel: &Path, lines: &[&str], findings: &mut Vec<String>) {
+    let rel_s = rel.to_string_lossy().replace('\\', "/");
+    if rel_s == "src/util/sync.rs" {
+        return;
+    }
+    for (idx, line) in lines.iter().enumerate() {
+        if line.contains("std::sync::atomic") {
+            findings.push(format!(
+                "{}:{}: raw `std::sync::atomic` outside the `util::sync` façade",
+                rel.display(),
+                idx + 1
+            ));
+        }
+    }
+}
+
+/// Rule 4: every SeqCst carries an ORDERING justification.
+fn check_seqcst_justified(rel: &Path, lines: &[&str], findings: &mut Vec<String>) {
+    for (idx, line) in lines.iter().enumerate() {
+        if !has_word(code_part(line), "SeqCst") {
+            continue;
+        }
+        if line.contains("ORDERING:") || preceding_comment_has(lines, idx, 5, "ORDERING:") {
+            continue;
+        }
+        findings.push(format!(
+            "{}:{}: `SeqCst` without an `// ORDERING:` justification",
+            rel.display(),
+            idx + 1
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_matching() {
+        assert!(has_word("a SeqCst b", "SeqCst"));
+        assert!(!has_word("NotSeqCst", "SeqCst"));
+        assert!(!has_word("SeqCst_ish", "SeqCst"));
+    }
+
+    #[test]
+    fn unsafe_kinds() {
+        assert_eq!(unsafe_kind("let x = unsafe { y };"), Some("block"));
+        assert_eq!(unsafe_kind("pub unsafe fn f()"), Some("fn"));
+        assert_eq!(unsafe_kind("unsafe impl Send for T {}"), Some("impl"));
+        assert_eq!(unsafe_kind("\"sigma=0.25(unsafe)\""), None);
+        assert_eq!(unsafe_kind("says unsafe) =="), None);
+        assert_eq!(unsafe_kind("allow_unsafe_sigma"), None);
+    }
+
+    #[test]
+    fn safety_rule_flags_and_accepts() {
+        let bad = ["fn f() {", "    let x = unsafe { g() };", "}"];
+        let mut out = Vec::new();
+        check_safety_comments(Path::new("x.rs"), &bad, &mut out);
+        assert_eq!(out.len(), 1);
+
+        let good = ["fn f() {", "    // SAFETY: g's contract holds.", "    let x = unsafe { g() };", "}"];
+        let mut out = Vec::new();
+        check_safety_comments(Path::new("x.rs"), &good, &mut out);
+        assert!(out.is_empty());
+
+        let doc = ["/// Does things.", "///", "/// # Safety", "/// i < len.", "pub unsafe fn g(i: usize) {}"];
+        let mut out = Vec::new();
+        check_safety_comments(Path::new("x.rs"), &doc, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn seqcst_rule() {
+        let bad = ["x.load(Ordering::SeqCst);"];
+        let mut out = Vec::new();
+        check_seqcst_justified(Path::new("x.rs"), &bad, &mut out);
+        assert_eq!(out.len(), 1);
+
+        let good = ["// ORDERING: fence needed for X.", "x.load(Ordering::SeqCst);"];
+        let mut out = Vec::new();
+        check_seqcst_justified(Path::new("x.rs"), &good, &mut out);
+        assert!(out.is_empty());
+    }
+}
