@@ -9,7 +9,7 @@ pub mod toml;
 
 use crate::data::partition::Strategy;
 use crate::loss::LossKind;
-use crate::transport::{TransportBackend, TransportCfg};
+use crate::transport::{FaultPlan, TransportBackend, TransportCfg};
 use crate::util::json::Json;
 use toml::Document;
 
@@ -172,6 +172,15 @@ pub struct ExpConfig {
     /// Cross-node transport: in-process channels (default, simulated
     /// cluster) or TCP / Unix-domain sockets for `train --distributed`.
     pub transport: TransportCfg,
+
+    // Fault injection (`[chaos]` table / `--chaos` flag)
+    /// Scripted fault plan in the [`FaultPlan::parse`] grammar
+    /// (`kind:worker=W,round=R[,secs=X];...`); empty = no faults (the
+    /// chaos decorator is not even installed).
+    pub chaos_plan: String,
+    /// Seed for the chaos plan's randomness (corrupt byte positions).
+    /// A `seed=` entry inside `chaos_plan` overrides it.
+    pub chaos_seed: u64,
 }
 
 impl Default for ExpConfig {
@@ -208,6 +217,8 @@ impl Default for ExpConfig {
             // it wins below density 2/3; 0.5 keeps headroom.
             delta_threshold: 0.5,
             transport: TransportCfg::default(),
+            chaos_plan: String::new(),
+            chaos_seed: 0,
         }
     }
 }
@@ -216,6 +227,13 @@ impl ExpConfig {
     /// The effective σ for Hybrid-DCA under this config.
     pub fn sigma_value(&self) -> f64 {
         self.sigma.value(self.nu, self.s_barrier, self.k_nodes)
+    }
+
+    /// The effective parsed chaos plan. `chaos_seed` seeds it by
+    /// default; a `seed=` entry inside the spec wins because the parser
+    /// applies entries left to right.
+    pub fn chaos(&self) -> anyhow::Result<FaultPlan> {
+        FaultPlan::parse(&format!("seed={};{}", self.chaos_seed, self.chaos_plan))
     }
 
     /// Enforce parameter constraints.
@@ -271,6 +289,17 @@ impl ExpConfig {
             self.delta_threshold
         );
         self.transport.validate()?;
+        let plan = self
+            .chaos()
+            .map_err(|e| anyhow::anyhow!("chaos_plan: {e}"))?;
+        for f in &plan.faults {
+            anyhow::ensure!(
+                f.worker < self.k_nodes,
+                "chaos_plan targets worker {} but K = {}",
+                f.worker,
+                self.k_nodes
+            );
+        }
         Ok(())
     }
 
@@ -392,6 +421,24 @@ impl ExpConfig {
             "transport.accept-backlog" | "transport.accept_backlog" => {
                 self.transport.accept_backlog = need_usize()?
             }
+            "transport.suspicion-timeouts" | "transport.suspicion_timeouts" => {
+                self.transport.suspicion_timeouts = need_usize()? as u32
+            }
+            "transport.reconnect-attempts" | "transport.reconnect_attempts" => {
+                self.transport.reconnect_attempts = need_usize()? as u32
+            }
+            "transport.backoff-base" | "transport.backoff_base" => {
+                self.transport.backoff_base_secs = need_f64()?
+            }
+            "transport.backoff-max" | "transport.backoff_max" => {
+                self.transport.backoff_max_secs = need_f64()?
+            }
+            "chaos.plan" | "chaos_plan" => self.chaos_plan = need_str()?.to_string(),
+            "chaos.seed" | "chaos_seed" => {
+                self.chaos_seed = val
+                    .as_int()
+                    .ok_or_else(|| anyhow::anyhow!("expected int"))? as u64
+            }
             other => anyhow::bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -472,8 +519,14 @@ impl ExpConfig {
                     ("accept_timeout_secs".into(), Json::Num(t.accept_timeout_secs)),
                     ("read_timeout_secs".into(), Json::Num(t.read_timeout_secs)),
                     ("accept_backlog".into(), Json::Num(t.accept_backlog as f64)),
+                    ("suspicion_timeouts".into(), Json::Num(f64::from(t.suspicion_timeouts))),
+                    ("reconnect_attempts".into(), Json::Num(f64::from(t.reconnect_attempts))),
+                    ("backoff_base_secs".into(), Json::Num(t.backoff_base_secs)),
+                    ("backoff_max_secs".into(), Json::Num(t.backoff_max_secs)),
                 ]),
             ),
+            ("chaos_plan".into(), Json::Str(self.chaos_plan.clone())),
+            ("chaos_seed".into(), Json::Str(self.chaos_seed.to_string())),
         ])
     }
 
@@ -559,7 +612,16 @@ impl ExpConfig {
             accept_timeout_secs: num(t, "accept_timeout_secs")?,
             read_timeout_secs: num(t, "read_timeout_secs")?,
             accept_backlog: num(t, "accept_backlog")? as usize,
+            suspicion_timeouts: num(t, "suspicion_timeouts")? as u32,
+            reconnect_attempts: num(t, "reconnect_attempts")? as u32,
+            backoff_base_secs: num(t, "backoff_base_secs")?,
+            backoff_max_secs: num(t, "backoff_max_secs")?,
         };
+        cfg.chaos_plan = string(&j, "chaos_plan")?;
+        let chaos_seed = string(&j, "chaos_seed")?;
+        cfg.chaos_seed = chaos_seed
+            .parse::<u64>()
+            .map_err(|e| anyhow::anyhow!("config json: bad chaos_seed '{chaos_seed}': {e}"))?;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -730,6 +792,10 @@ connect_timeout = 2.5
 accept_timeout = 5.0
 read_timeout = 1.5
 accept_backlog = 8
+suspicion_timeouts = 3
+reconnect_attempts = 7
+backoff_base = 0.1
+backoff_max = 2.0
 "#;
         let doc = toml::parse(text).unwrap();
         let mut cfg = ExpConfig::default();
@@ -739,9 +805,37 @@ accept_backlog = 8
         assert_eq!(cfg.transport.listen, "127.0.0.1:7070");
         assert_eq!(cfg.transport.connect_timeout_secs, 2.5);
         assert_eq!(cfg.transport.accept_backlog, 8);
+        assert_eq!(cfg.transport.suspicion_timeouts, 3);
+        assert_eq!(cfg.transport.reconnect_attempts, 7);
+        assert_eq!(cfg.transport.backoff_base_secs, 0.1);
+        assert_eq!(cfg.transport.backoff_max_secs, 2.0);
 
         let doc = toml::parse("[transport]\nbackend = \"carrier-pigeon\"\n").unwrap();
         assert!(cfg.apply_document(&doc).is_err());
+    }
+
+    #[test]
+    fn chaos_table_parsed_and_validated() {
+        let doc = toml::parse(
+            "[chaos]\nplan = \"stall:worker=1,round=2,secs=0.1;kill:worker=2,round=4\"\nseed = 9\n",
+        )
+        .unwrap();
+        let mut cfg = ExpConfig::default();
+        cfg.apply_document(&doc).unwrap();
+        cfg.validate().unwrap();
+        let plan = cfg.chaos().unwrap();
+        assert_eq!(plan.faults.len(), 2);
+        assert_eq!(plan.seed, 9);
+        // An in-spec seed= beats chaos_seed (entries apply left to right).
+        cfg.chaos_plan = "drop:worker=0,round=1;seed=3".into();
+        assert_eq!(cfg.chaos().unwrap().seed, 3);
+        // Faults must target real workers (K = 4 by default).
+        cfg.chaos_plan = "kill:worker=9,round=1".into();
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("worker 9"), "{err}");
+        // A malformed plan is a config error, not a runtime surprise.
+        cfg.chaos_plan = "fry:worker=0,round=1".into();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]
@@ -764,6 +858,12 @@ accept_backlog = 8
         cfg.transport.listen = "/tmp/hdca.sock".into();
         cfg.transport.join = "/tmp/hdca.sock".into();
         cfg.transport.read_timeout_secs = 0.75;
+        cfg.transport.suspicion_timeouts = 2;
+        cfg.transport.reconnect_attempts = 9;
+        cfg.transport.backoff_base_secs = 0.05;
+        cfg.transport.backoff_max_secs = 1.0 / 3.0; // not exact in decimal
+        cfg.chaos_plan = "stall:worker=1,round=2,secs=0.25".into();
+        cfg.chaos_seed = u64::MAX - 11;
         let back = ExpConfig::from_json(&cfg.to_json().to_pretty()).unwrap();
         assert_eq!(cfg, back);
     }

@@ -104,6 +104,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         rounds,
         worker_rounds: vec![rounds],
         net: Default::default(),
+        faults: Default::default(),
     })
 }
 

@@ -33,7 +33,8 @@ use crate::session::observer::ObserverHandle;
 use crate::sim::CostModel;
 use crate::transport::frame::Assignment;
 use crate::transport::{
-    Frame, SocketListener, SocketWorker, Transport, TransportCfg, TransportStats,
+    ChaosTransport, Frame, SocketListener, SocketWorker, Transport, TransportCfg,
+    TransportStats,
 };
 use crate::util::Rng;
 
@@ -117,7 +118,14 @@ pub fn run_master_with_listener(
     partition.validate(n).expect("partition invariant");
     let worker_rngs: Vec<Rng> = (0..k).map(|_| rng.fork()).collect();
 
-    let mut link = listener.accept_cluster(k)?;
+    let link = listener.accept_cluster(k)?;
+    // The chaos decorator wraps the socket master exactly as it wraps
+    // the in-process one (only when a plan is scripted).
+    let chaos = cfg.chaos()?;
+    let mut link: Box<dyn Transport> = Box::new(link);
+    if !chaos.is_empty() {
+        link = Box::new(ChaosTransport::wrap(link, chaos, None));
+    }
 
     let config_json = cfg.to_json().to_pretty();
     for (w, wrng) in worker_rngs.iter().enumerate() {
@@ -139,14 +147,21 @@ pub fn run_master_with_listener(
     let master_cfg = plan_master_cfg(&cfg, k, d, opts.policy, opts.sync_allreduce);
     let mut eval = Evaluator::sharded(&store);
     let loss = cfg.loss.build();
-    let outcome = run_master(&master_cfg, &mut link, &mut eval, &*loss, &opts.label, obs)?;
+    let outcome = run_master(&master_cfg, &mut *link, &mut eval, &*loss, &opts.label, obs)?;
 
     let mut alpha = vec![0.0; n];
     let mut total_updates = 0u64;
     let mut worker_rounds = Vec::with_capacity(k);
     for (w, fin) in outcome.finals.into_iter().enumerate() {
-        let fin = fin
-            .ok_or_else(|| anyhow::anyhow!("worker {w} exited without reporting final state"))?;
+        let Some(fin) = fin else {
+            // A declared-dead worker owes no final report — its α rows
+            // stay 0 and the certificate recomputes v exactly from the
+            // assembled α, so the degraded result is still certified.
+            let dead = outcome.faults.per_peer.get(w).is_some_and(|p| p.declared_dead > 0);
+            anyhow::ensure!(dead, "worker {w} exited without reporting final state");
+            worker_rounds.push(0);
+            continue;
+        };
         for (i, a) in &fin.alpha {
             alpha[*i] = *a;
         }
@@ -165,6 +180,7 @@ pub fn run_master_with_listener(
         total_updates,
         worker_rounds,
         net: link.stats(),
+        faults: outcome.faults,
     })
 }
 
@@ -223,14 +239,24 @@ pub fn run_worker_node(
     let rng = Rng::from_state(assign.rng_state);
     let loss = cfg.loss.build();
 
+    // This node's scripted faults ride in on the master's config, so
+    // one `--chaos` flag (or `[chaos]` table) at the master perturbs
+    // the whole cluster deterministically.
+    let master_addr = link.master_addr().to_string();
+    let chaos = cfg.chaos()?;
+    let mut link: Box<dyn Transport> = Box::new(link);
+    if !chaos.is_empty() {
+        link = Box::new(ChaosTransport::wrap(link, chaos, Some(w)));
+    }
+
     let fin = run_worker(
-        &wcfg, slab.cells, &slab.data, &*loss, &slab.norms, &slab.costs, &mut link, rng,
+        &wcfg, slab.cells, &slab.data, &*loss, &slab.norms, &slab.costs, &mut *link, rng,
     )?;
     Ok(WorkerSummary {
         worker_id: w,
         local_rounds: fin.local_rounds,
         updates: fin.updates,
         net: link.stats(),
-        master_addr: link.master_addr().to_string(),
+        master_addr,
     })
 }

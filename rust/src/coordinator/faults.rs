@@ -1,0 +1,130 @@
+//! Fault accounting for the degradation-tolerant master.
+//!
+//! The master's gather loop ([`super::master`]) survives silent,
+//! severed, and killed workers: silence accumulates suspicion strikes,
+//! a struck-out worker is declared dead and the effective cluster
+//! shrinks (`K_live`), and a worker that dials back in with a `Rejoin`
+//! frame is readmitted. Everything it does on that path is recorded
+//! here — per-peer counters plus an ordered event log — and lands in
+//! [`RunReport::faults`](super::RunReport), so a degraded run *says*
+//! it degraded instead of silently certifying a smaller cluster.
+//!
+//! Fault-free runs leave the log empty (`FaultLog::default()`), which
+//! keeps the bitwise in-process ≡ distributed parity checks meaningful:
+//! the `--dump` state excludes this section exactly as it excludes the
+//! wire-traffic counters.
+
+/// One notable liveness decision, in the order the master took them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Virtual time when the master logged the event.
+    pub vtime: f64,
+    /// Global merge round the master was gathering at the time.
+    pub round: usize,
+    /// The worker concerned.
+    pub peer: usize,
+    /// Human-readable description ("declared dead after 4 strikes",
+    /// "rejoined with last_acked_round=7", ...).
+    pub what: String,
+}
+
+/// Per-worker fault counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PeerFaults {
+    /// Suspicion strikes: read timeouts / silent ticks charged to this
+    /// worker (resets on any frame from it, so this counts the total
+    /// charged over the run, not the final streak).
+    pub stalls: u64,
+    /// Duplicate updates deduplicated and replies resent (stop-and-wait
+    /// retransmissions in either direction).
+    pub retransmits: u64,
+    /// Successful `Rejoin` handshakes after a severed connection.
+    pub rejoins: u64,
+    /// Times this worker was declared dead (can exceed 1 if it
+    /// rejoined and died again).
+    pub declared_dead: u64,
+    /// Last global round whose merged reply this worker acknowledged —
+    /// by sending its next update or its `Rejoin` frame. Diagnostic
+    /// context for "how far behind was it when it went silent".
+    pub last_acked_round: usize,
+}
+
+/// The run's complete fault record: per-peer counters, the ordered
+/// event log, and the surviving cluster size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultLog {
+    pub per_peer: Vec<PeerFaults>,
+    pub events: Vec<FaultEvent>,
+    /// Workers still considered live when the run finished. Equals the
+    /// configured `K` unless someone was declared dead and never came
+    /// back; the bounded barrier keeps running as long as
+    /// `S ≤ k_live`.
+    pub k_live: usize,
+}
+
+impl Default for FaultLog {
+    fn default() -> Self {
+        FaultLog { per_peer: Vec::new(), events: Vec::new(), k_live: 0 }
+    }
+}
+
+impl FaultLog {
+    /// An empty log sized for `k` workers, all presumed live.
+    pub fn new(k: usize) -> Self {
+        FaultLog { per_peer: vec![PeerFaults::default(); k], events: Vec::new(), k_live: k }
+    }
+
+    /// True iff nothing fault-related happened: no strikes, no
+    /// retransmissions, no deaths, no rejoins.
+    pub fn is_clean(&self) -> bool {
+        self.events.is_empty()
+            && self.per_peer.iter().all(|p| {
+                p.stalls == 0 && p.retransmits == 0 && p.rejoins == 0 && p.declared_dead == 0
+            })
+    }
+
+    /// Append one event to the ordered log.
+    pub fn log(&mut self, vtime: f64, round: usize, peer: usize, what: impl Into<String>) {
+        self.events.push(FaultEvent { vtime, round, peer, what: what.into() });
+    }
+
+    /// Total workers declared dead over the whole run.
+    pub fn total_deaths(&self) -> u64 {
+        self.per_peer.iter().map(|p| p.declared_dead).sum()
+    }
+
+    /// Total successful rejoins over the whole run.
+    pub fn total_rejoins(&self) -> u64 {
+        self.per_peer.iter().map(|p| p.rejoins).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_until_something_happens() {
+        let mut log = FaultLog::new(3);
+        assert!(log.is_clean());
+        assert_eq!(log.k_live, 3);
+        log.per_peer[1].stalls += 1;
+        assert!(!log.is_clean());
+
+        let mut log = FaultLog::new(2);
+        log.log(1.5, 3, 0, "declared dead after 4 strikes");
+        assert!(!log.is_clean());
+        assert_eq!(log.events[0].peer, 0);
+        assert_eq!(log.events[0].round, 3);
+    }
+
+    #[test]
+    fn totals_sum_over_peers() {
+        let mut log = FaultLog::new(3);
+        log.per_peer[0].declared_dead = 1;
+        log.per_peer[2].declared_dead = 1;
+        log.per_peer[2].rejoins = 2;
+        assert_eq!(log.total_deaths(), 2);
+        assert_eq!(log.total_rejoins(), 2);
+    }
+}

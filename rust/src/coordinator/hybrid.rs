@@ -11,10 +11,10 @@ use crate::session::observer::ObserverHandle;
 use crate::session::{DataSource, RunCtx};
 use crate::sim::{resolve_stragglers, CostModel, SendCost, UpdateCosts};
 use crate::store::ShardedDataset;
-use crate::transport::{in_process, Transport};
+use crate::transport::{in_process, ChaosTransport, Frame, Transport};
 use crate::util::Rng;
 
-use super::master::{run_master, MasterCfg, MergePolicy};
+use super::master::{run_master, MasterCfg, MasterOutcome, MergePolicy};
 use super::worker::{run_worker, WorkerCfg};
 use super::RunReport;
 
@@ -291,6 +291,10 @@ pub(crate) fn plan_master_cfg(
         policy,
         merge_cost,
         reply_latency,
+        // Fault tolerance: the liveness tick mirrors the transport's
+        // read timeout (0 = the pre-fault-tolerance blocking gather).
+        tick_secs: cfg.transport.read_timeout_secs,
+        suspicion_timeouts: cfg.transport.suspicion_timeouts,
     }
 }
 
@@ -346,7 +350,26 @@ fn drive(
     let d = eval.d();
 
     let master_cfg = plan_master_cfg(cfg, k, d, opts.policy, opts.sync_allreduce);
-    let (mut master_link, worker_links) = in_process(k);
+    let chaos = cfg.chaos()?;
+    let (master_link, worker_links) = in_process(k);
+    // Chaos decorates both ends only when the plan is non-empty, so
+    // fault-free runs pay nothing and stay bitwise-identical.
+    let mut master_link: Box<dyn Transport> = Box::new(master_link);
+    if !chaos.is_empty() {
+        master_link = Box::new(ChaosTransport::wrap(master_link, chaos.clone(), None));
+    }
+    let worker_links: Vec<Box<dyn Transport>> = worker_links
+        .into_iter()
+        .enumerate()
+        .map(|(w, l)| {
+            let boxed: Box<dyn Transport> = Box::new(l);
+            if chaos.is_empty() {
+                boxed
+            } else {
+                Box::new(ChaosTransport::wrap(boxed, chaos.clone(), Some(w)))
+            }
+        })
+        .collect();
 
     // Fork one RNG stream per worker up front (deterministic).
     let worker_rngs: Vec<Rng> = (0..k).map(|_| rng.fork()).collect();
@@ -362,12 +385,25 @@ fn drive(
             let mut link = links.remove(0);
             handles.push(scope.spawn(move || {
                 run_worker(
-                    &wcfg, plan.cells, plan.data, loss, plan.norms, plan.costs, &mut link, wrng,
+                    &wcfg, plan.cells, plan.data, loss, plan.norms, plan.costs, &mut *link, wrng,
                 )
             }));
         }
 
-        outcome = Some(run_master(&master_cfg, &mut master_link, eval, loss, &opts.label, obs));
+        outcome = Some(run_master(&master_cfg, &mut *master_link, eval, loss, &opts.label, obs));
+
+        // Release any declared-dead straggler still parked in its recv:
+        // an in-process worker the master gave up on can wake from a
+        // stall after the shutdown drain already ended, and nothing
+        // else would ever unblock it (the join below would hang).
+        if let Some(Ok(oc)) = &outcome {
+            for (w, p) in oc.faults.per_peer.iter().enumerate() {
+                if p.declared_dead > 0 {
+                    let _ = master_link
+                        .send(w, Frame::Shutdown { vtime: oc.vtime, round: oc.rounds });
+                }
+            }
+        }
 
         for h in handles {
             worker_results.push(h.join().expect("worker thread panicked"));
@@ -375,8 +411,17 @@ fn drive(
     });
 
     let outcome = outcome.expect("master ran")?;
-    for r in worker_results {
-        r?;
+    let MasterOutcome { v, trace, events, rounds, vtime, finals, faults } = outcome;
+    for (w, r) in worker_results.into_iter().enumerate() {
+        if let Err(e) = r {
+            // A declared-dead worker erroring out (killed link, master
+            // unreachable) is the expected other half of the master's
+            // graceful degradation; any live worker's error is real.
+            let dead = faults.per_peer.get(w).is_some_and(|p| p.declared_dead > 0);
+            if !dead {
+                return Err(e);
+            }
+        }
     }
     // Assemble the final global α from the workers' committed values
     // (workers report global row ids via their `row_base`) — taken
@@ -385,9 +430,16 @@ fn drive(
     let mut alpha = vec![0.0; n];
     let mut total_updates = 0u64;
     let mut worker_rounds = Vec::with_capacity(k);
-    for (w, fin) in outcome.finals.into_iter().enumerate() {
-        let fin = fin
-            .ok_or_else(|| anyhow::anyhow!("worker {w} exited without reporting final state"))?;
+    for (w, fin) in finals.into_iter().enumerate() {
+        let Some(fin) = fin else {
+            let dead = faults.per_peer.get(w).is_some_and(|p| p.declared_dead > 0);
+            anyhow::ensure!(dead, "worker {w} exited without reporting final state");
+            // Declared dead without a final report: its α rows stay 0.
+            // The certificate gap recomputes v exactly from this α, so
+            // the result is still certified — just looser.
+            worker_rounds.push(0);
+            continue;
+        };
         for (i, a) in &fin.alpha {
             alpha[*i] = *a;
         }
@@ -397,15 +449,16 @@ fn drive(
 
     Ok(RunReport {
         label: opts.label.clone(),
-        trace: outcome.trace,
-        events: outcome.events,
+        trace,
+        events,
         alpha,
-        v: outcome.v,
-        rounds: outcome.rounds,
-        vtime: outcome.vtime,
+        v,
+        rounds,
+        vtime,
         total_updates,
         worker_rounds,
         net: master_link.stats(),
+        faults,
     })
 }
 

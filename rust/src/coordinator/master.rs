@@ -28,8 +28,25 @@
 //! is deterministic given the seed, while the *intra-node* asynchrony
 //! (R racing core-threads per worker) remains physically real.
 
+//! ## Fault tolerance (graceful S-barrier degradation)
+//!
+//! The gather loop keeps a per-worker liveness record. Read-timeout
+//! ticks and `PeerSilent`/`PeerGone` transport errors accumulate
+//! *suspicion strikes*; a worker striking out
+//! (`suspicion_timeouts` consecutive strikes) is declared dead: its
+//! queued update is discarded, its link released, and the effective
+//! cluster shrinks to `K_live`. The barrier keeps running as long as
+//! `S ≤ K_live` and the run errors (naming the peer and its last
+//! acked round) only when `K_live < S`. A worker that dials back in
+//! with a `Rejoin` frame is readmitted, and lost frames are repaired
+//! by a stop-and-wait retransmit protocol (`Nack` = "resend"):
+//! duplicate updates are deduplicated by local round, duplicate
+//! replies by global round. Undisturbed runs never tick and never
+//! Nack, so the fault layer is bitwise invisible to the parity tests.
+
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
 
 use anyhow::Context;
 
@@ -39,6 +56,7 @@ use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
 use crate::transport::{Frame, Transport, TransportError};
 use crate::util::{norm_sq, Stopwatch};
 
+use super::faults::FaultLog;
 use super::messages::{MasterReply, WorkerFinal, WorkerMsg};
 
 pub use crate::config::MergePolicy;
@@ -76,6 +94,14 @@ pub struct MasterCfg {
     pub merge_cost: f64,
     /// Virtual latency of the reply (master → worker message).
     pub reply_latency: f64,
+    /// Liveness tick (seconds of *real* silence before a suspicion
+    /// strike; mirrors `transport.read_timeout_secs`). 0 disables the
+    /// tick — the gather blocks forever, the pre-fault-tolerance
+    /// behavior.
+    pub tick_secs: f64,
+    /// Consecutive strikes before a silent worker is declared dead
+    /// (mirrors `transport.suspicion_timeouts`; 0 = never).
+    pub suspicion_timeouts: u32,
 }
 
 /// Outcome of a master run.
@@ -89,8 +115,12 @@ pub struct MasterOutcome {
     pub vtime: f64,
     /// Each worker's final report, collected during the shutdown
     /// drain. `None` only if the worker vanished before reporting
-    /// (the driver decides whether that is fatal).
+    /// (the driver decides whether that is fatal — a declared-dead
+    /// worker's missing report is expected degradation).
     pub finals: Vec<Option<WorkerFinal>>,
+    /// Liveness record: stalls, retransmits, rejoins, deaths, and the
+    /// surviving `k_live`. Clean for undisturbed runs.
+    pub faults: FaultLog,
 }
 
 /// A message waiting in the virtual-arrival priority queue.
@@ -124,6 +154,71 @@ struct Pending {
     msg: WorkerMsg,
     /// Global round at which it was received.
     received_at: usize,
+}
+
+/// Everything [`declare_dead`] mutates, bundled so the call site stays
+/// readable.
+struct DeclareDead<'a> {
+    w: usize,
+    t: usize,
+    vtime: f64,
+    link: &'a mut dyn Transport,
+    live: &'a mut Vec<bool>,
+    k_live: &'a mut usize,
+    strikes: &'a mut Vec<u32>,
+    computing: &'a mut Vec<bool>,
+    computing_count: &'a mut usize,
+    pending: &'a mut Vec<Option<Pending>>,
+    arrival_order: &'a mut VecDeque<usize>,
+    pq: &'a mut BinaryHeap<Reverse<Arrival>>,
+    gamma_k: &'a mut Vec<usize>,
+    last_update_round: &'a mut Vec<Option<usize>>,
+    faults: &'a mut FaultLog,
+}
+
+/// Declare worker `w` dead: discard its queued update, release its
+/// link, shrink the live cluster, and log the event. Idempotent.
+fn declare_dead(d: DeclareDead<'_>) {
+    let w = d.w;
+    if !d.live[w] {
+        return;
+    }
+    d.live[w] = false;
+    *d.k_live -= 1;
+    d.strikes[w] = 0;
+    if d.computing[w] {
+        d.computing[w] = false;
+        *d.computing_count -= 1;
+    }
+    let mut purged = false;
+    if d.pending[w].take().is_some() {
+        d.arrival_order.retain(|&x| x != w);
+        purged = true;
+    }
+    let held = std::mem::take(d.pq);
+    let before = held.len();
+    *d.pq = held.into_iter().filter(|Reverse(a)| a.msg.worker != w).collect();
+    purged |= d.pq.len() < before;
+    if purged {
+        // The discarded update was received but never merged; roll the
+        // stop-and-wait dedup filter back so that if this worker
+        // rejoins, its retransmit of the same local round is accepted
+        // as new instead of deduplicated into a livelock. (An update
+        // that *was* merged keeps its filter entry — the retransmit
+        // must then be answered with the recorded `last_reply`, never
+        // merged twice.)
+        d.last_update_round[w] = None;
+    }
+    d.gamma_k[w] = 1;
+    d.link.disconnect(w);
+    d.faults.per_peer[w].declared_dead += 1;
+    let last = d.faults.per_peer[w].last_acked_round;
+    d.faults.log(
+        d.vtime,
+        d.t,
+        w,
+        format!("declared dead (last acked round {last}); k_live now {}", *d.k_live),
+    );
 }
 
 /// Run Algorithm 2 until the gap threshold or `max_rounds`.
@@ -174,6 +269,23 @@ pub fn run_master(
     // supported losses (hinge: a=0→0; squared hinge: 0; logistic: H(0)=0).
     let mut dual_sums = vec![0.0; k];
 
+    // ---- liveness / retransmit state (fault tolerance) ----
+    let mut faults = FaultLog::new(k);
+    let mut live = vec![true; k];
+    let mut k_live = k;
+    let mut strikes = vec![0u32; k];
+    // Highest worker-local round accepted per worker: the duplicate
+    // filter of the stop-and-wait protocol.
+    let mut last_update_round: Vec<Option<usize>> = vec![None; k];
+    // Last reply shipped to each worker, kept for Nack-triggered and
+    // duplicate-triggered retransmission.
+    let mut last_reply: Vec<Option<Frame>> = (0..k).map(|_| None).collect();
+    let tick = if cfg.tick_secs > 0.0 {
+        Some(Duration::from_secs_f64(cfg.tick_secs))
+    } else {
+        None
+    };
+
     let mut trace = Trace::new(label);
     let mut events = Vec::new();
     let sw = Stopwatch::start();
@@ -197,28 +309,150 @@ pub fn run_master(
 
     let mut t = 0usize;
     let mut disconnected = false;
+    // Final reports, collected mostly by the shutdown drain below —
+    // but a released dead worker may report out mid-gather, and its α
+    // is still worth keeping.
+    let mut finals: Vec<Option<WorkerFinal>> = (0..k).map(|_| None).collect();
     'rounds: while t < cfg.max_rounds && !initial_stop {
         // ---- conservative DES step 1: hold one message per in-flight
-        // worker so the next virtual arrival is known exactly ----
+        // live worker so the next virtual arrival is known exactly ----
         while computing_count > 0 {
-            match link.recv() {
-                Ok((peer, Frame::Update(msg))) => {
+            let got = match tick {
+                Some(d) => link.recv_timeout(d),
+                None => link.recv().map(Some),
+            };
+            match got {
+                Ok(Some((peer, Frame::Update(msg)))) => {
                     let w = msg.worker;
                     anyhow::ensure!(
                         w == peer && w < k,
                         "update from peer {peer} claims worker id {w}"
                     );
+                    strikes[w] = 0;
+                    if !live[w] {
+                        // Declared dead, surfaced without a Rejoin (an
+                        // in-process stall straggler): release it so
+                        // its thread can exit cleanly.
+                        let _ = link.send(w, Frame::Shutdown { vtime, round: t });
+                        continue;
+                    }
+                    if Some(msg.local_round) <= last_update_round[w] {
+                        // Stop-and-wait duplicate (our reply was lost,
+                        // or the worker redialed before it arrived):
+                        // drop the copy, repeat the reply.
+                        faults.per_peer[w].retransmits += 1;
+                        if let Some(reply) = last_reply[w].clone() {
+                            let _ = link.send(w, reply);
+                        }
+                        continue;
+                    }
                     debug_assert!(computing[w], "worker {w} double-sent");
-                    computing[w] = false;
-                    computing_count -= 1;
+                    last_update_round[w] = Some(msg.local_round);
+                    faults.per_peer[w].last_acked_round = msg.local_round;
+                    if computing[w] {
+                        computing[w] = false;
+                        computing_count -= 1;
+                    }
                     pq.push(Reverse(Arrival { vtime: msg.arrival_vtime, seq, msg }));
                     seq += 1;
                 }
-                Ok((peer, frame)) => {
+                Ok(Some((peer, Frame::Rejoin(info)))) => {
+                    anyhow::ensure!(
+                        info.worker_id == peer && peer < k,
+                        "rejoin from peer {peer} claims worker id {}",
+                        info.worker_id
+                    );
+                    let w = peer;
+                    strikes[w] = 0;
+                    faults.per_peer[w].rejoins += 1;
+                    faults.per_peer[w].last_acked_round =
+                        faults.per_peer[w].last_acked_round.max(info.last_acked_round);
+                    if live[w] {
+                        faults.log(
+                            vtime,
+                            t,
+                            w,
+                            format!(
+                                "reconnected (last_acked_round={}, alpha_crc={:#010x})",
+                                info.last_acked_round, info.alpha_crc
+                            ),
+                        );
+                    } else {
+                        live[w] = true;
+                        k_live += 1;
+                        gamma_k[w] = 1;
+                        // It will resend the update we never merged.
+                        computing[w] = true;
+                        computing_count += 1;
+                        faults.log(
+                            vtime,
+                            t,
+                            w,
+                            format!(
+                                "readmitted after death (last_acked_round={}, \
+                                 alpha_crc={:#010x}); k_live now {k_live}",
+                                info.last_acked_round, info.alpha_crc
+                            ),
+                        );
+                    }
+                }
+                Ok(Some((peer, Frame::Nack { .. }))) if peer < k => {
+                    // "Resend your last reply" — our Merged was lost.
+                    faults.per_peer[peer].retransmits += 1;
+                    if let Some(reply) = last_reply[peer].clone() {
+                        let _ = link.send(peer, reply);
+                    }
+                }
+                Ok(Some((peer, Frame::Final(fin)))) if peer < k && !live[peer] => {
+                    // A released dead worker reporting out on its way
+                    // down — the Shutdown we sent it provoked exactly
+                    // this frame, and its α is still worth keeping.
+                    anyhow::ensure!(
+                        fin.worker_id == peer,
+                        "final report from peer {peer} claims worker id {}",
+                        fin.worker_id
+                    );
+                    finals[peer] = Some(fin);
+                }
+                Ok(Some((peer, frame))) => {
                     anyhow::bail!(
                         "unexpected {} frame from worker {peer} during round {t}",
                         frame.kind_name()
                     );
+                }
+                Ok(None) => {
+                    // Liveness tick: nothing at all arrived. Strike
+                    // every awaited worker and probe it — the Nack asks
+                    // it to resend, repairing a dropped update.
+                    for w in 0..k {
+                        if live[w] && computing[w] {
+                            strikes[w] += 1;
+                            faults.per_peer[w].stalls += 1;
+                            let _ = link.send(w, Frame::Nack { round: t });
+                        }
+                    }
+                }
+                Err(TransportError::PeerSilent { peer, .. }) if peer < k => {
+                    if live[peer] && computing[peer] {
+                        strikes[peer] += 1;
+                        faults.per_peer[peer].stalls += 1;
+                        let _ = link.send(peer, Frame::Nack { round: t });
+                    }
+                }
+                Err(TransportError::PeerGone { peer, .. }) if peer < k => {
+                    // The connection died; the worker may still redial
+                    // and Rejoin. Strike it and keep gathering. (For an
+                    // already-dead peer this is stale news — ignore.)
+                    if live[peer] {
+                        strikes[peer] += 1;
+                        faults.per_peer[peer].stalls += 1;
+                    }
+                }
+                Err(TransportError::Wire { peer, .. }) if peer < k && live[peer] => {
+                    // A frame arrived corrupted (CRC reject): ask for a
+                    // retransmit instead of tearing the cluster down.
+                    faults.per_peer[peer].retransmits += 1;
+                    let _ = link.send(peer, Frame::Nack { round: t });
                 }
                 Err(TransportError::Closed) => {
                     disconnected = true;
@@ -229,15 +463,49 @@ pub fn run_master(
                         .context(format!("receiving worker updates in round {t}")));
                 }
             }
+
+            // ---- suspicion: declare struck-out workers dead ----
+            if cfg.suspicion_timeouts > 0 {
+                for w in 0..k {
+                    if live[w] && strikes[w] >= cfg.suspicion_timeouts {
+                        declare_dead(DeclareDead {
+                            w,
+                            t,
+                            vtime,
+                            link: &mut *link,
+                            live: &mut live,
+                            k_live: &mut k_live,
+                            strikes: &mut strikes,
+                            computing: &mut computing,
+                            computing_count: &mut computing_count,
+                            pending: &mut pending,
+                            arrival_order: &mut arrival_order,
+                            pq: &mut pq,
+                            gamma_k: &mut gamma_k,
+                            last_update_round: &mut last_update_round,
+                            faults: &mut faults,
+                        });
+                        anyhow::ensure!(
+                            k_live >= s_eff,
+                            "worker {w} declared dead after {} silent ticks \
+                             (last acked round {}): only {k_live} live workers remain, \
+                             cannot satisfy barrier S={s_eff}",
+                            cfg.suspicion_timeouts,
+                            faults.per_peer[w].last_acked_round,
+                        );
+                    }
+                }
+            }
         }
 
         // ---- Algorithm 2 gather: pop arrivals in virtual order until
-        // |P| ≥ S and no not-yet-arrived worker is staler than Γ ----
-        let stale_unarrived = |pending: &[Option<Pending>], gamma_k: &[usize]| {
-            (0..k).any(|w| pending[w].is_none() && gamma_k[w] > cfg.gamma)
-        };
-        while arrival_order.len() < s_eff || stale_unarrived(&pending, &gamma_k) {
-            let Reverse(arr) = pq.pop().expect("all K workers are in P or pq");
+        // |P| ≥ S and no not-yet-arrived live worker is staler than Γ ----
+        let stale_unarrived =
+            |pending: &[Option<Pending>], gamma_k: &[usize], live: &[bool]| {
+                (0..k).any(|w| live[w] && pending[w].is_none() && gamma_k[w] > cfg.gamma)
+            };
+        while arrival_order.len() < s_eff || stale_unarrived(&pending, &gamma_k, &live) {
+            let Reverse(arr) = pq.pop().expect("all live workers are in P or pq");
             vtime = vtime.max(arr.vtime);
             let w = arr.msg.worker;
             gamma_k[w] = 1;
@@ -287,9 +555,9 @@ pub fn run_master(
         }
         vtime += cfg.merge_cost;
 
-        // ---- Γ bookkeeping ----
+        // ---- Γ bookkeeping (dead workers carry no staleness debt) ----
         for w in 0..k {
-            if !picked.contains(&w) {
+            if live[w] && !picked.contains(&w) {
                 gamma_k[w] += 1;
             }
         }
@@ -340,79 +608,173 @@ pub fn run_master(
             // every message still sitting in the virtual queue (their
             // workers are all blocked on our reply).
             for &w in &picked {
-                let _ = link.send(w, Frame::Shutdown { vtime, round: t });
+                let f = Frame::Shutdown { vtime, round: t };
+                last_reply[w] = Some(f.clone());
+                let _ = link.send(w, f);
             }
             for w in 0..k {
                 if pending[w].take().is_some() {
-                    let _ = link.send(w, Frame::Shutdown { vtime, round: t });
+                    let f = Frame::Shutdown { vtime, round: t };
+                    last_reply[w] = Some(f.clone());
+                    let _ = link.send(w, f);
                 }
             }
             while let Some(Reverse(arr)) = pq.pop() {
-                let _ = link.send(arr.msg.worker, Frame::Shutdown { vtime, round: t });
+                let w = arr.msg.worker;
+                let f = Frame::Shutdown { vtime, round: t };
+                last_reply[w] = Some(f.clone());
+                let _ = link.send(w, f);
             }
             arrival_order.clear();
             break;
         }
         // ---- broadcast merged v to contributors ----
         for &w in &picked {
-            let _ = link.send(
-                w,
-                Frame::Merged(MasterReply {
-                    v: v.clone(),
-                    arrival_vtime: vtime + cfg.reply_latency,
-                    global_round: t,
-                    terminate: false,
-                }),
-            );
+            let reply = Frame::Merged(MasterReply {
+                v: v.clone(),
+                arrival_vtime: vtime + cfg.reply_latency,
+                global_round: t,
+                terminate: false,
+            });
+            last_reply[w] = Some(reply.clone());
+            let _ = link.send(w, reply);
             computing[w] = true;
             computing_count += 1;
         }
     }
 
     // Shutdown drain: shut down any still-in-flight workers and
-    // collect every worker's Final report.
-    let mut finals: Vec<Option<WorkerFinal>> = (0..k).map(|_| None).collect();
+    // collect a Final report from every worker still considered live.
+    // Declared-dead workers owe us nothing (their `finals` slot stays
+    // `None` — expected degradation, not an error).
     if !disconnected {
         for w in 0..k {
             if pending[w].take().is_some() {
-                let _ = link.send(w, Frame::Shutdown { vtime, round: t });
+                let f = Frame::Shutdown { vtime, round: t };
+                last_reply[w] = Some(f.clone());
+                let _ = link.send(w, f);
             }
         }
         while let Some(Reverse(arr)) = pq.pop() {
-            let _ = link.send(arr.msg.worker, Frame::Shutdown { vtime, round: t });
+            let w = arr.msg.worker;
+            let f = Frame::Shutdown { vtime, round: t };
+            last_reply[w] = Some(f.clone());
+            let _ = link.send(w, f);
         }
-        let mut reported = 0usize;
-        while reported < k {
-            match link.recv() {
-                Ok((peer, Frame::Update(_))) => {
-                    let _ = link.send(peer, Frame::Shutdown { vtime, round: t });
+        let need = |finals: &[Option<WorkerFinal>], live: &[bool]| {
+            live.iter().zip(finals).filter(|(l, f)| **l && f.is_none()).count()
+        };
+        while need(&finals, &live) > 0 {
+            let got = match tick {
+                Some(d) => link.recv_timeout(d),
+                None => link.recv().map(Some),
+            };
+            match got {
+                Ok(Some((peer, Frame::Update(_)))) => {
+                    // A straggler that never saw the Shutdown (or a
+                    // stop-and-wait retransmit of its last update).
+                    let f = Frame::Shutdown { vtime, round: t };
+                    if peer < k {
+                        last_reply[peer] = Some(f.clone());
+                    }
+                    let _ = link.send(peer, f);
                 }
-                Ok((peer, Frame::Final(fin))) => {
+                Ok(Some((peer, Frame::Rejoin(info)))) => {
+                    anyhow::ensure!(
+                        info.worker_id == peer && peer < k,
+                        "rejoin from peer {peer} claims worker id {}",
+                        info.worker_id
+                    );
+                    // Too late to rejoin the barrier — tell it to wrap
+                    // up (it will answer with its Final).
+                    faults.per_peer[peer].rejoins += 1;
+                    let f = Frame::Shutdown { vtime, round: t };
+                    last_reply[peer] = Some(f.clone());
+                    let _ = link.send(peer, f);
+                }
+                Ok(Some((peer, Frame::Nack { .. }))) if peer < k => {
+                    faults.per_peer[peer].retransmits += 1;
+                    if let Some(reply) = last_reply[peer].clone() {
+                        let _ = link.send(peer, reply);
+                    }
+                }
+                Ok(Some((peer, Frame::Final(fin)))) => {
                     anyhow::ensure!(
                         fin.worker_id == peer && peer < k,
                         "final report from peer {peer} claims worker id {}",
                         fin.worker_id
                     );
-                    if finals[peer].replace(fin).is_none() {
-                        reported += 1;
-                    }
+                    strikes[peer] = 0;
+                    finals[peer] = Some(fin);
                 }
-                Ok((peer, frame)) => {
+                Ok(Some((peer, frame))) => {
                     anyhow::bail!(
                         "unexpected {} frame from worker {peer} during shutdown",
                         frame.kind_name()
                     );
                 }
+                Ok(None) => {
+                    for w in 0..k {
+                        if live[w] && finals[w].is_none() {
+                            strikes[w] += 1;
+                            faults.per_peer[w].stalls += 1;
+                        }
+                    }
+                }
+                Err(TransportError::PeerSilent { peer, .. }) if peer < k => {
+                    if live[peer] && finals[peer].is_none() {
+                        strikes[peer] += 1;
+                        faults.per_peer[peer].stalls += 1;
+                    }
+                }
+                Err(TransportError::PeerGone { peer, detail }) if peer < k => {
+                    // Closing after the Final is a normal exit; before
+                    // it, strike (it may redial) unless suspicion is
+                    // off — then nothing would ever terminate the
+                    // drain, so fail like the pre-fault-tolerance code.
+                    if live[peer] && finals[peer].is_none() {
+                        anyhow::ensure!(
+                            cfg.suspicion_timeouts > 0,
+                            "worker {peer} vanished during shutdown drain \
+                             before its final report: {detail}"
+                        );
+                        strikes[peer] += 1;
+                        faults.per_peer[peer].stalls += 1;
+                    }
+                }
+                Err(TransportError::Wire { peer, .. }) if peer < k => {
+                    faults.per_peer[peer].retransmits += 1;
+                    let _ = link.send(peer, Frame::Nack { round: t });
+                }
                 Err(TransportError::Closed) => break,
-                // A worker's connection closing after its Final is a
-                // normal exit; before it, the report is lost.
-                Err(TransportError::PeerGone { peer, .. }) if finals[peer].is_some() => {}
                 Err(e) => {
                     return Err(anyhow::Error::new(e).context("draining worker final reports"));
+                }
+            }
+
+            if cfg.suspicion_timeouts > 0 {
+                for w in 0..k {
+                    if live[w] && finals[w].is_none() && strikes[w] >= cfg.suspicion_timeouts {
+                        live[w] = false;
+                        k_live -= 1;
+                        strikes[w] = 0;
+                        link.disconnect(w);
+                        faults.per_peer[w].declared_dead += 1;
+                        faults.log(
+                            vtime,
+                            t,
+                            w,
+                            format!(
+                                "declared dead during shutdown drain (no final \
+                                 report); k_live now {k_live}"
+                            ),
+                        );
+                    }
                 }
             }
         }
     }
 
-    Ok(MasterOutcome { v, trace, events, rounds: t, vtime, finals })
+    faults.k_live = k_live;
+    Ok(MasterOutcome { v, trace, events, rounds: t, vtime, finals, faults })
 }

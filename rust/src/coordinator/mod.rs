@@ -16,12 +16,14 @@
 pub mod baseline;
 pub mod cocoa;
 pub mod distributed;
+pub mod faults;
 pub mod hybrid;
 pub mod master;
 pub mod messages;
 pub mod passcode;
 pub mod worker;
 
+pub use faults::{FaultEvent, FaultLog, PeerFaults};
 pub use master::{MergeEvent, MergePolicy};
 
 use crate::config::{Algorithm, ExpConfig};
@@ -54,6 +56,10 @@ pub struct RunReport {
     /// in-process, counted on the socket for `--distributed`). Empty
     /// for single-node algorithms.
     pub net: TransportStats,
+    /// Liveness record: stalls, retransmissions, rejoins, and deaths
+    /// the master logged, plus the surviving `k_live`. Empty/default
+    /// for single-node algorithms and clean for undisturbed runs.
+    pub faults: FaultLog,
 }
 
 impl RunReport {

@@ -131,6 +131,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         total_updates,
         worker_rounds: vec![rounds],
         net: Default::default(),
+        faults: Default::default(),
     })
 }
 

@@ -1,13 +1,26 @@
 //! The worker node — Algorithm 1: run `R` asynchronous core-threads for
 //! `H` iterations each, send `Δv` to the master, wait for the merged
 //! `v`, commit `α ← α + ν·δ`, repeat.
+//!
+//! ## Fault tolerance (the worker's half)
+//!
+//! The round loop is a stop-and-wait ARQ endpoint: the current round's
+//! `Update` frame is held un-consumed until a reply acknowledges it, so
+//! a `Nack` from the master (or a reconnect) can retransmit it.
+//! Duplicate `Merged` replies are skipped by global round, master
+//! silence past the read timeout is answered with a `Nack` probe, and
+//! a dead connection goes through [`Transport::reconnect`] — jittered
+//! exponential backoff plus a [`Rejoin`](Frame::Rejoin) handshake
+//! carrying a CRC of the committed α — before the worker gives up and
+//! errors out. A fault-free run takes none of these paths.
 
 use crate::data::Dataset;
 use crate::loss::Loss;
 use crate::sim::{SendCost, UpdateCosts};
 use crate::solver::local::{LocalSolver, DUAL_RESYNC_EVERY};
 use crate::solver::StepParams;
-use crate::transport::{Frame, Transport, MASTER};
+use crate::store::format::crc32;
+use crate::transport::{Frame, RejoinInfo, Transport, TransportError, MASTER};
 use crate::util::Rng;
 
 use super::messages::{DeltaV, WorkerFinal, WorkerMsg};
@@ -38,6 +51,29 @@ pub struct WorkerCfg {
     /// dataset, the node's slab offset when it was streamed from
     /// shards. Only used to report final α under global ids.
     pub row_base: usize,
+}
+
+/// CRC-32 over the committed α (f64 little-endian bytes, shard order)
+/// — the integrity token a `Rejoin` frame carries so a resumed run can
+/// prove the worker's state survived the reconnect bitwise.
+fn committed_alpha_crc(solver: &LocalSolver) -> u32 {
+    let mut bytes = Vec::with_capacity(solver.n_local() * 8);
+    for shard in &solver.shards {
+        for &a in &shard.alpha_start {
+            bytes.extend_from_slice(&a.to_le_bytes());
+        }
+    }
+    crc32(&bytes)
+}
+
+/// The resumable-handshake token for this worker right now. Only built
+/// on the reconnect path — the α CRC is an O(n_k) scan.
+fn rejoin_info(cfg: &WorkerCfg, solver: &LocalSolver, last_acked_round: usize) -> RejoinInfo {
+    RejoinInfo {
+        worker_id: cfg.worker_id,
+        last_acked_round,
+        alpha_crc: committed_alpha_crc(solver),
+    }
 }
 
 /// Run one worker until the master's `Shutdown` frame.
@@ -75,6 +111,9 @@ pub fn run_worker(
     let mut vtime = 0.0f64;
     let mut local_rounds = 0usize;
     let mut total_updates = 0u64;
+    // Highest master global round committed — the duplicate filter of
+    // the stop-and-wait protocol (real rounds are 1-based, 0 = none).
+    let mut last_global_round = 0usize;
 
     loop {
         // R cores × H iterations (lines 4–9).
@@ -134,32 +173,89 @@ pub fn run_worker(
             arrival_vtime: vtime + send_cost,
             updates: stats.updates,
         };
-        link.send(MASTER, Frame::Update(msg))
-            .map_err(|e| anyhow::anyhow!("sending round {local_rounds} update: {e}"))?;
+        // Held until a reply acknowledges it: Nack-triggered and
+        // rejoin-triggered retransmits resend this exact frame.
+        let update = Frame::Update(msg);
+        if let Err(e) = link.send(MASTER, update.clone()) {
+            let recovered = matches!(e, TransportError::PeerGone { .. })
+                && matches!(
+                    link.reconnect(&rejoin_info(cfg, &solver, last_global_round)),
+                    Ok(true)
+                )
+                && link.send(MASTER, update.clone()).is_ok();
+            if !recovered {
+                anyhow::bail!("sending round {local_rounds} update: {e}");
+            }
+        }
 
         // Wait for the merged v (line 11) or the shutdown broadcast.
-        match link.recv() {
-            Ok((_, Frame::Merged(reply))) => {
-                vtime = reply.arrival_vtime.max(vtime);
-                solver.v.copy_from(&reply.v);
-                v_prev.copy_from_slice(&reply.v);
-                local_rounds += 1;
+        let mut done = false;
+        loop {
+            match link.recv() {
+                Ok((_, Frame::Merged(reply))) => {
+                    if reply.global_round <= last_global_round {
+                        // Stop-and-wait duplicate (a stale retransmit
+                        // of a reply we already committed) — skip it.
+                        continue;
+                    }
+                    last_global_round = reply.global_round;
+                    vtime = reply.arrival_vtime.max(vtime);
+                    solver.v.copy_from(&reply.v);
+                    v_prev.copy_from_slice(&reply.v);
+                    local_rounds += 1;
+                    break;
+                }
+                Ok((_, Frame::Shutdown { vtime: stop_vtime, .. })) => {
+                    vtime = vtime.max(stop_vtime);
+                    local_rounds += 1;
+                    done = true;
+                    break;
+                }
+                Ok((_, Frame::Nack { .. })) => {
+                    // "Resend your last frame": our update never made
+                    // it intact. A send failure here surfaces on the
+                    // next recv as a connection error, which the arms
+                    // below recover or report.
+                    let _ = link.send(MASTER, update.clone());
+                }
+                Ok((_, frame)) => {
+                    anyhow::bail!(
+                        "unexpected {} frame from the master in round {local_rounds}",
+                        frame.kind_name()
+                    );
+                }
+                Err(TransportError::PeerSilent { .. }) => {
+                    // The master is quiet past the read timeout while
+                    // the link is up. Probe it: if our update was lost
+                    // the Nack triggers the retransmit pair; if the
+                    // reply was lost we get it resent; if the barrier
+                    // is just slow, the probes deduplicate to nothing.
+                    let _ = link.send(MASTER, Frame::Nack { round: last_global_round });
+                }
+                Err(e @ TransportError::PeerGone { .. }) => {
+                    // Dead connection. Try the backoff + Rejoin path,
+                    // then retransmit the unacknowledged update; give
+                    // up with the original error when the transport
+                    // can't reconnect (in-process, exhausted retries,
+                    // or killed by the chaos plan).
+                    if matches!(
+                        link.reconnect(&rejoin_info(cfg, &solver, last_global_round)),
+                        Ok(true)
+                    ) {
+                        let _ = link.send(MASTER, update.clone());
+                        continue;
+                    }
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("waiting for the merged v in round {local_rounds}")));
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("waiting for the merged v in round {local_rounds}")));
+                }
             }
-            Ok((_, Frame::Shutdown { vtime: stop_vtime, .. })) => {
-                vtime = vtime.max(stop_vtime);
-                local_rounds += 1;
-                break;
-            }
-            Ok((_, frame)) => {
-                anyhow::bail!(
-                    "unexpected {} frame from the master in round {local_rounds}",
-                    frame.kind_name()
-                );
-            }
-            Err(e) => {
-                return Err(anyhow::Error::new(e)
-                    .context(format!("waiting for the merged v in round {local_rounds}")));
-            }
+        }
+        if done {
+            break;
         }
     }
 
@@ -177,8 +273,18 @@ pub fn run_worker(
         updates: total_updates,
         vtime,
     };
-    link.send(MASTER, Frame::Final(fin.clone()))
-        .map_err(|e| anyhow::anyhow!("reporting final state: {e}"))?;
+    let report = Frame::Final(fin.clone());
+    if let Err(e) = link.send(MASTER, report.clone()) {
+        let recovered = matches!(e, TransportError::PeerGone { .. })
+            && matches!(
+                link.reconnect(&rejoin_info(cfg, &solver, last_global_round)),
+                Ok(true)
+            )
+            && link.send(MASTER, report).is_ok();
+        if !recovered {
+            anyhow::bail!("reporting final state: {e}");
+        }
+    }
     Ok(fin)
 }
 

@@ -111,6 +111,16 @@ fn train_specs() -> Vec<FlagSpec> {
         FlagSpec::value("transport", "tcp", "socket backend for --distributed: tcp|uds"),
         FlagSpec::value("accept-timeout", "30", "seconds to wait for all workers to join"),
         FlagSpec::value("read-timeout", "30", "seconds of peer silence before giving up"),
+        FlagSpec::value(
+            "suspicion",
+            "4",
+            "silent read-timeout ticks before a worker is declared dead (0 = never)",
+        ),
+        FlagSpec::value(
+            "chaos",
+            "",
+            "fault-injection plan, e.g. \"seed=7;kill:worker=1,round=2\" (see README)",
+        ),
         FlagSpec::switch("help", "show help"),
     ]
 }
@@ -134,6 +144,7 @@ fn apply_transport_flags(cfg: &mut ExpConfig, args: &cli::Args) -> anyhow::Resul
     );
     cfg.transport.accept_timeout_secs = args.get_parse("accept-timeout")?;
     cfg.transport.read_timeout_secs = args.get_parse("read-timeout")?;
+    cfg.transport.suspicion_timeouts = args.get_parse("suspicion")?;
     cfg.validate()
 }
 
@@ -203,6 +214,13 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     if is_distributed {
         apply_transport_flags(&mut cfg, &args)?;
     }
+    // Like --csv, --chaos applies even over --config: it perturbs a run,
+    // it does not define the experiment.
+    let chaos = args.get("chaos").unwrap();
+    if !chaos.is_empty() {
+        cfg.chaos_plan = chaos.to_string();
+        cfg.validate()?;
+    }
     // The typed session API is the execution path; the flat config is
     // only the CLI-flag surface.
     let session = Session::from_exp_config(&cfg)?;
@@ -261,6 +279,9 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     if is_distributed {
         print_transport_report(&report);
     }
+    if !report.faults.is_clean() {
+        print_fault_report(&report);
+    }
     let dump = args.get("dump").unwrap();
     if !dump.is_empty() {
         dump_state(dump, &report)?;
@@ -315,6 +336,35 @@ fn print_transport_report(report: &RunReport) {
         "# transport: total sent={}B recv={}B",
         report.net.sent_bytes(),
         report.net.recv_bytes()
+    );
+}
+
+/// The run's fault record: per-peer counters, the ordered event log,
+/// and the surviving cluster size. Printed only when something
+/// fault-related actually happened — clean runs stay clean on stdout.
+fn print_fault_report(report: &RunReport) {
+    let f = &report.faults;
+    for (w, p) in f.per_peer.iter().enumerate() {
+        if p.stalls == 0 && p.retransmits == 0 && p.rejoins == 0 && p.declared_dead == 0 {
+            continue;
+        }
+        println!(
+            "# faults: worker {w} stalls={} retransmits={} rejoins={} declared-dead={} \
+             last-acked-round={}",
+            p.stalls, p.retransmits, p.rejoins, p.declared_dead, p.last_acked_round
+        );
+    }
+    for e in &f.events {
+        println!(
+            "# faults: [vtime {:.3} round {}] worker {}: {}",
+            e.vtime, e.round, e.peer, e.what
+        );
+    }
+    println!(
+        "# faults: k_live={} deaths={} rejoins={}",
+        f.k_live,
+        f.total_deaths(),
+        f.total_rejoins()
     );
 }
 

@@ -257,6 +257,7 @@ mod tests {
                     total_updates: 0,
                     worker_rounds: Vec::new(),
                     net: Default::default(),
+                    faults: Default::default(),
                 })
             }
         }

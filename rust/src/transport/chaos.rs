@@ -1,0 +1,453 @@
+//! Deterministic fault injection as a [`Transport`] decorator.
+//!
+//! A [`FaultPlan`] is a seeded, scripted list of one-shot faults —
+//! stall a worker, drop/duplicate/corrupt a frame, sever a link, kill
+//! a worker — keyed by `(worker, local_round)`. [`ChaosTransport`]
+//! wraps any backend (the in-process simulator and the socket
+//! endpoints identically) and fires each fault exactly once when the
+//! matching `Update` frame passes through, so a chaos run is exactly
+//! as reproducible as the fault-free run it perturbs.
+//!
+//! Sides: `stall`/`drop`/`dup`/`sever`/`kill` act on the *worker*
+//! wrapper (they perturb the worker's own send path); `corrupt` acts
+//! on the *master* wrapper (it mangles a received frame before the
+//! coordinator sees it, surfacing as the same [`TransportError::Wire`]
+//! a real on-wire bitflip would produce). `sever` and `kill` need a
+//! real link to cut, so they are socket-only (`kill` still poisons an
+//! in-process endpoint; `sever` is a no-op there).
+//!
+//! Plan grammar (the `--chaos` flag and the `[chaos]` TOML table):
+//!
+//! ```text
+//! kind:worker=W,round=R[,secs=X] [; ...]    e.g.
+//! "stall:worker=1,round=2,secs=0.3;kill:worker=2,round=4;seed=7"
+//! ```
+
+use std::time::Duration;
+
+use crate::util::Rng;
+
+use super::frame::{Frame, FRAME_TRAILER_LEN};
+use super::{RejoinInfo, Transport, TransportError, TransportStats, WireError, MASTER};
+
+/// What a single scripted fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Sleep the worker's send path for `secs` real seconds before the
+    /// `Update` goes out (a straggler the master should *survive*, via
+    /// suspicion strikes and, if it comes back in time, no fault at all).
+    Stall { secs: f64 },
+    /// Swallow the `Update` once; the retransmit (triggered by the
+    /// master's `Nack` probe) goes through.
+    Drop,
+    /// Send the `Update` twice; the master's round dedup absorbs it.
+    Duplicate,
+    /// Master side: flip one seeded-random byte of the received
+    /// frame's encoding, so the coordinator sees the identical
+    /// [`TransportError::Wire`] a corrupted wire read would produce.
+    Corrupt,
+    /// Cut the worker's connection right before the send, exercising
+    /// the reconnect-with-backoff + `Rejoin` path (socket-only).
+    Sever,
+    /// Cut the connection and poison the endpoint: every later call
+    /// fails and `reconnect` refuses, simulating a worker process that
+    /// died for good.
+    Kill,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::Stall { .. } => "stall",
+            FaultKind::Drop => "drop",
+            FaultKind::Duplicate => "dup",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Sever => "sever",
+            FaultKind::Kill => "kill",
+        }
+    }
+}
+
+/// One scripted fault: fire `kind` when worker `worker` reaches local
+/// round `round` (0-based, matching `WorkerMsg::local_round`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fault {
+    pub kind: FaultKind,
+    pub worker: usize,
+    pub round: usize,
+}
+
+/// A parsed, seeded chaos script. Empty plans are free: the decorator
+/// is only installed when the plan is non-empty, so fault-free runs
+/// pay nothing and stay bitwise-identical to pre-chaos builds.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Seeds the byte-position RNG for `corrupt` faults.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `;`-separated spec grammar (see module docs). An
+    /// empty/whitespace spec parses to the empty plan.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            if let Some(seed) = entry.strip_prefix("seed=") {
+                plan.seed = seed
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("chaos: bad seed '{seed}': {e}"))?;
+                continue;
+            }
+            let (kind_name, args) = entry
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("chaos: entry '{entry}' is not kind:args"))?;
+            let (mut worker, mut round, mut secs) = (None, None, None);
+            for kv in args.split(',') {
+                let kv = kv.trim();
+                let (key, value) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("chaos: '{kv}' is not key=value"))?;
+                match key.trim() {
+                    "worker" => worker = Some(value.trim().parse::<usize>()?),
+                    "round" => round = Some(value.trim().parse::<usize>()?),
+                    "secs" => secs = Some(value.trim().parse::<f64>()?),
+                    other => anyhow::bail!("chaos: unknown key '{other}' in '{entry}'"),
+                }
+            }
+            let worker = worker
+                .ok_or_else(|| anyhow::anyhow!("chaos: '{entry}' is missing worker="))?;
+            let round =
+                round.ok_or_else(|| anyhow::anyhow!("chaos: '{entry}' is missing round="))?;
+            let kind = match kind_name.trim() {
+                "stall" => {
+                    let secs = secs
+                        .ok_or_else(|| anyhow::anyhow!("chaos: stall needs secs= ('{entry}')"))?;
+                    anyhow::ensure!(
+                        secs.is_finite() && secs >= 0.0,
+                        "chaos: stall secs must be finite and ≥ 0 (got {secs})"
+                    );
+                    FaultKind::Stall { secs }
+                }
+                "drop" => FaultKind::Drop,
+                "dup" | "duplicate" => FaultKind::Duplicate,
+                "corrupt" => FaultKind::Corrupt,
+                "sever" => FaultKind::Sever,
+                "kill" => FaultKind::Kill,
+                other => anyhow::bail!(
+                    "chaos: unknown fault kind '{other}' \
+                     (stall|drop|dup|corrupt|sever|kill)"
+                ),
+            };
+            if secs.is_some() && !matches!(kind, FaultKind::Stall { .. }) {
+                anyhow::bail!("chaos: secs= only applies to stall ('{entry}')");
+            }
+            plan.faults.push(Fault { kind, worker, round });
+        }
+        Ok(plan)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// The decorator. Wraps either endpoint of any backend; `role` is
+/// `Some(worker_id)` on a worker link, `None` on the master link.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    rng: Rng,
+    role: Option<usize>,
+    /// One-shot latch per plan entry.
+    fired: Vec<bool>,
+    /// Set by a `kill` fault: the endpoint is poisoned for good.
+    killed: bool,
+}
+
+impl ChaosTransport {
+    pub fn wrap(inner: Box<dyn Transport>, plan: FaultPlan, role: Option<usize>) -> Self {
+        let fired = vec![false; plan.faults.len()];
+        let rng = Rng::new(plan.seed ^ 0xC4A05);
+        Self { inner, plan, rng, role, fired, killed: false }
+    }
+
+    fn killed_err(&self) -> TransportError {
+        TransportError::PeerGone {
+            peer: MASTER,
+            detail: "worker killed by chaos plan".to_string(),
+        }
+    }
+
+    /// First unfired non-stall fault matching `(worker, round)`, with
+    /// every matching stall applied (slept and latched) on the way.
+    fn take_send_fault(&mut self, worker: usize, round: usize) -> Option<FaultKind> {
+        let mut hit = None;
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if self.fired[i] || f.worker != worker || f.round != round {
+                continue;
+            }
+            match f.kind {
+                FaultKind::Stall { secs } => {
+                    self.fired[i] = true;
+                    std::thread::sleep(Duration::from_secs_f64(secs));
+                }
+                FaultKind::Corrupt => {} // master-side; not a send fault
+                kind => {
+                    if hit.is_none() {
+                        self.fired[i] = true;
+                        hit = Some(kind);
+                    }
+                }
+            }
+        }
+        hit
+    }
+
+    /// Master side: replace a received `Update` that a `corrupt` fault
+    /// targets with the [`TransportError::Wire`] its mangled encoding
+    /// actually decodes to.
+    fn filter_recv(
+        &mut self,
+        peer: usize,
+        frame: Frame,
+    ) -> Result<(usize, Frame), TransportError> {
+        if self.role.is_none() {
+            if let Frame::Update(m) = &frame {
+                for (i, f) in self.plan.faults.iter().enumerate() {
+                    if self.fired[i]
+                        || !matches!(f.kind, FaultKind::Corrupt)
+                        || f.worker != m.worker
+                        || f.round != m.local_round
+                    {
+                        continue;
+                    }
+                    self.fired[i] = true;
+                    let mut bytes = frame.encode();
+                    let idx = self.rng.next_below(bytes.len() - FRAME_TRAILER_LEN);
+                    bytes[idx] ^= 0xFF;
+                    let err = match Frame::decode(&bytes) {
+                        Err(e) => e,
+                        // Unreachable (the CRC covers every non-trailer
+                        // byte), but stay panic-free regardless.
+                        Ok(_) => WireError::BadCrc { expected: 0, got: 0 },
+                    };
+                    return Err(TransportError::Wire { peer, err });
+                }
+            }
+        }
+        Ok((peer, frame))
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        if self.killed {
+            return Err(self.killed_err());
+        }
+        let me = match self.role {
+            Some(me) => me,
+            None => return self.inner.send(to, frame),
+        };
+        let round = match &frame {
+            Frame::Update(m) => m.local_round,
+            _ => return self.inner.send(to, frame),
+        };
+        match self.take_send_fault(me, round) {
+            None => self.inner.send(to, frame),
+            Some(FaultKind::Drop) => Ok(()),
+            Some(FaultKind::Duplicate) => {
+                self.inner.send(to, frame.clone())?;
+                self.inner.send(to, frame)
+            }
+            Some(FaultKind::Sever) => {
+                self.inner.sever();
+                self.inner.send(to, frame)
+            }
+            Some(FaultKind::Kill) => {
+                self.killed = true;
+                self.inner.sever();
+                Err(self.killed_err())
+            }
+            // Stall and Corrupt never come back from take_send_fault.
+            Some(_) => self.inner.send(to, frame),
+        }
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        if self.killed {
+            return Err(self.killed_err());
+        }
+        let (peer, frame) = self.inner.recv()?;
+        self.filter_recv(peer, frame)
+    }
+
+    fn recv_timeout(
+        &mut self,
+        dur: Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        if self.killed {
+            return Err(self.killed_err());
+        }
+        match self.inner.recv_timeout(dur)? {
+            None => Ok(None),
+            Some((peer, frame)) => self.filter_recv(peer, frame).map(Some),
+        }
+    }
+
+    fn reconnect(&mut self, info: &RejoinInfo) -> Result<bool, TransportError> {
+        if self.killed {
+            return Ok(false);
+        }
+        self.inner.reconnect(info)
+    }
+
+    fn disconnect(&mut self, peer: usize) {
+        self.inner.disconnect(peer);
+    }
+
+    fn sever(&mut self) {
+        self.inner.sever();
+    }
+
+    fn peers(&self) -> usize {
+        self.inner.peers()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::{DeltaV, WorkerMsg};
+    use crate::transport::in_process;
+
+    fn update(worker: usize, round: usize) -> Frame {
+        Frame::Update(WorkerMsg {
+            worker,
+            local_round: round,
+            delta_v: DeltaV::Dense(vec![1.0, 2.0]),
+            dual_sum: 0.5,
+            arrival_vtime: 1.0,
+            updates: 4,
+        })
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "stall:worker=1,round=2,secs=0.25; kill:worker=2,round=4; \
+             dup:worker=0,round=1; seed=9",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.faults.len(), 3);
+        assert_eq!(plan.faults[0], Fault {
+            kind: FaultKind::Stall { secs: 0.25 },
+            worker: 1,
+            round: 2
+        });
+        assert_eq!(plan.faults[1], Fault { kind: FaultKind::Kill, worker: 2, round: 4 });
+        assert_eq!(plan.faults[1].kind.name(), "kill");
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("fry:worker=0,round=1").is_err());
+        assert!(FaultPlan::parse("stall:worker=0,round=1").is_err()); // no secs
+        assert!(FaultPlan::parse("drop:worker=0,round=1,secs=2").is_err());
+        assert!(FaultPlan::parse("drop:round=1").is_err()); // no worker
+        assert!(FaultPlan::parse("drop:worker=0").is_err()); // no round
+        assert!(FaultPlan::parse("seed=banana").is_err());
+    }
+
+    #[test]
+    fn drop_swallows_once_then_delivers() {
+        let (mut master, workers) = in_process(1);
+        let plan = FaultPlan::parse("drop:worker=0,round=0").unwrap();
+        let mut w: ChaosTransport = ChaosTransport::wrap(
+            Box::new(workers.into_iter().next().unwrap()),
+            plan,
+            Some(0),
+        );
+        w.send(MASTER, update(0, 0)).unwrap();
+        assert_eq!(master.recv_timeout(Duration::from_millis(20)).unwrap(), None);
+        // The retransmit of the same round is not re-dropped.
+        w.send(MASTER, update(0, 0)).unwrap();
+        let (peer, got) = master.recv().unwrap();
+        assert_eq!(peer, 0);
+        assert_eq!(got, update(0, 0));
+    }
+
+    #[test]
+    fn duplicate_sends_twice() {
+        let (mut master, workers) = in_process(1);
+        let plan = FaultPlan::parse("dup:worker=0,round=3").unwrap();
+        let mut w = ChaosTransport::wrap(
+            Box::new(workers.into_iter().next().unwrap()),
+            plan,
+            Some(0),
+        );
+        w.send(MASTER, update(0, 3)).unwrap();
+        assert_eq!(master.recv().unwrap().1, update(0, 3));
+        assert_eq!(master.recv().unwrap().1, update(0, 3));
+    }
+
+    #[test]
+    fn corrupt_surfaces_as_wire_error_once() {
+        let (master, mut workers) = in_process(1);
+        let plan = FaultPlan::parse("corrupt:worker=0,round=1;seed=5").unwrap();
+        let mut m = ChaosTransport::wrap(Box::new(master), plan, None);
+        workers[0].send(MASTER, update(0, 1)).unwrap();
+        match m.recv() {
+            Err(TransportError::Wire { peer: 0, .. }) => {}
+            other => panic!("expected a Wire error, got {other:?}"),
+        }
+        // The retransmit passes clean.
+        workers[0].send(MASTER, update(0, 1)).unwrap();
+        assert_eq!(m.recv().unwrap().1, update(0, 1));
+    }
+
+    #[test]
+    fn kill_poisons_the_endpoint() {
+        let (_master, workers) = in_process(1);
+        let plan = FaultPlan::parse("kill:worker=0,round=2").unwrap();
+        let mut w = ChaosTransport::wrap(
+            Box::new(workers.into_iter().next().unwrap()),
+            plan,
+            Some(0),
+        );
+        w.send(MASTER, update(0, 1)).unwrap(); // untouched round
+        let err = w.send(MASTER, update(0, 2)).unwrap_err();
+        assert!(matches!(err, TransportError::PeerGone { .. }), "{err}");
+        // Poisoned for good: later rounds fail too, and rejoin refuses.
+        assert!(w.send(MASTER, update(0, 3)).is_err());
+        assert!(w.recv().is_err());
+        let info = RejoinInfo { worker_id: 0, last_acked_round: 1, alpha_crc: 0 };
+        assert_eq!(w.reconnect(&info), Ok(false));
+    }
+
+    #[test]
+    fn stall_delays_but_delivers() {
+        let (mut master, workers) = in_process(1);
+        let plan = FaultPlan::parse("stall:worker=0,round=0,secs=0.05").unwrap();
+        let mut w = ChaosTransport::wrap(
+            Box::new(workers.into_iter().next().unwrap()),
+            plan,
+            Some(0),
+        );
+        let t0 = std::time::Instant::now();
+        w.send(MASTER, update(0, 0)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+        assert_eq!(master.recv().unwrap().1, update(0, 0));
+    }
+}

@@ -23,6 +23,8 @@
 //!          | len u64 | (row u64, α f64)×len
 //! Assign   worker u32 | k u32 | n u64 | d u64 | rng u64×4
 //!          | allreduce u8 | json_len u64 | config json (UTF-8)
+//! Rejoin   worker u32 | last_acked_round u64 | alpha_crc u32
+//! Nack     round u64
 //!
 //! Δv       tag u8 (0 = dense, 1 = sparse)
 //!   dense  dim u64 | values f64×dim
@@ -61,6 +63,25 @@ const KIND_MERGED: u32 = 2;
 const KIND_SHUTDOWN: u32 = 3;
 const KIND_FINAL: u32 = 4;
 const KIND_ASSIGN: u32 = 5;
+const KIND_REJOIN: u32 = 6;
+const KIND_NACK: u32 = 7;
+
+/// Resumable-reconnect handshake, worker → master, sent as the first
+/// frame on a *replacement* connection: identifies the worker, names
+/// the last global round whose `Merged` reply it committed, and
+/// carries a CRC-32 over its committed local α so the master can log
+/// (and tests can assert) that the dual state survived the outage
+/// bitwise-intact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RejoinInfo {
+    /// The rejoining worker's id (its original accept-order index).
+    pub worker_id: usize,
+    /// Last global round whose merged `v` this worker committed.
+    pub last_acked_round: usize,
+    /// CRC-32 over the worker's committed α (f64 little-endian bytes,
+    /// shard order).
+    pub alpha_crc: u32,
+}
 
 /// Startup assignment, master → worker, sent once after the handshake:
 /// everything a worker process needs to reproduce its in-process
@@ -101,6 +122,13 @@ pub enum Frame {
     Final(WorkerFinal),
     /// Master → worker: startup assignment.
     Assign(Assignment),
+    /// Worker → master: resumable reconnect after a severed link.
+    Rejoin(RejoinInfo),
+    /// Either direction: "your last frame never arrived intact —
+    /// retransmit it". `round` names the receiver's last good round,
+    /// purely for log context; the ARQ is stop-and-wait, so each side
+    /// holds at most one unacknowledged frame to resend.
+    Nack { round: usize },
 }
 
 /// A named wire-level decode failure. Every single-byte corruption of
@@ -332,6 +360,8 @@ impl Frame {
             Frame::Shutdown { .. } => KIND_SHUTDOWN,
             Frame::Final(_) => KIND_FINAL,
             Frame::Assign(_) => KIND_ASSIGN,
+            Frame::Rejoin(_) => KIND_REJOIN,
+            Frame::Nack { .. } => KIND_NACK,
         }
     }
 
@@ -343,6 +373,8 @@ impl Frame {
             Frame::Shutdown { .. } => "Shutdown",
             Frame::Final(_) => "Final",
             Frame::Assign(_) => "Assign",
+            Frame::Rejoin(_) => "Rejoin",
+            Frame::Nack { .. } => "Nack",
         }
     }
 
@@ -355,6 +387,8 @@ impl Frame {
             Frame::Shutdown { round, .. } => *round as u64,
             Frame::Final(f) => f.local_rounds as u64,
             Frame::Assign(_) => 0,
+            Frame::Rejoin(r) => r.last_acked_round as u64,
+            Frame::Nack { round } => *round as u64,
         }
     }
 
@@ -365,6 +399,8 @@ impl Frame {
             Frame::Shutdown { .. } => 8 + 8,
             Frame::Final(f) => 4 + 8 + 8 + 8 + 8 + 16 * f.alpha.len(),
             Frame::Assign(a) => 4 + 4 + 8 + 8 + 32 + 1 + 8 + a.config_json.len(),
+            Frame::Rejoin(_) => 4 + 8 + 4,
+            Frame::Nack { .. } => 8,
         }
     }
 
@@ -427,6 +463,14 @@ impl Frame {
                 out.push(a.allreduce as u8);
                 put_u64(&mut out, a.config_json.len() as u64);
                 out.extend_from_slice(a.config_json.as_bytes());
+            }
+            Frame::Rejoin(r) => {
+                put_u32(&mut out, r.worker_id as u32);
+                put_u64(&mut out, r.last_acked_round as u64);
+                put_u32(&mut out, r.alpha_crc);
+            }
+            Frame::Nack { round } => {
+                put_u64(&mut out, *round as u64);
             }
         }
         debug_assert_eq!(out.len(), FRAME_HEADER_LEN + payload_len);
@@ -547,6 +591,16 @@ impl Frame {
                     config_json,
                 })
             }
+            KIND_REJOIN => {
+                let worker_id = c.u32("rejoin.worker")? as usize;
+                let last_acked_round = c.u64("rejoin.last_acked_round")? as usize;
+                let alpha_crc = c.u32("rejoin.alpha_crc")?;
+                Frame::Rejoin(RejoinInfo { worker_id, last_acked_round, alpha_crc })
+            }
+            KIND_NACK => {
+                let r = c.u64("nack.round")? as usize;
+                Frame::Nack { round: r }
+            }
             other => return Err(WireError::UnknownKind { kind: other }),
         };
         c.done("payload")?;
@@ -653,6 +707,23 @@ mod tests {
         let bytes = f.encode();
         assert_eq!(bytes.len(), f.wire_len());
         assert_eq!(Frame::decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn rejoin_and_nack_round_trip() {
+        let r = Frame::Rejoin(RejoinInfo {
+            worker_id: 3,
+            last_acked_round: 17,
+            alpha_crc: 0xDEADBEEF,
+        });
+        let bytes = r.encode();
+        assert_eq!(bytes.len(), r.wire_len());
+        assert_eq!(Frame::decode(&bytes).unwrap(), r);
+
+        let n = Frame::Nack { round: 9 };
+        let bytes = n.encode();
+        assert_eq!(bytes.len(), n.wire_len());
+        assert_eq!(Frame::decode(&bytes).unwrap(), n);
     }
 
     #[test]

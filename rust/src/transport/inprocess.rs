@@ -83,6 +83,21 @@ impl Transport for InProcessMaster {
         }
     }
 
+    fn recv_timeout(
+        &mut self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(Some((from, frame))) => {
+                self.stats.per_peer[from].recv_bytes += frame.wire_len() as u64;
+                self.stats.per_peer[from].recv_frames += 1;
+                Ok(Some((from, frame)))
+            }
+            Ok(None) => Ok(None),
+            Err(_) => Err(TransportError::Closed),
+        }
+    }
+
     fn peers(&self) -> usize {
         self.txs.len()
     }
@@ -116,6 +131,24 @@ impl Transport for InProcessWorker {
                 self.stats.per_peer[MASTER].recv_frames += 1;
                 Ok((MASTER, frame))
             }
+            Err(_) => Err(TransportError::PeerGone {
+                peer: MASTER,
+                detail: "master disconnected".to_string(),
+            }),
+        }
+    }
+
+    fn recv_timeout(
+        &mut self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        match self.rx.recv_timeout(dur) {
+            Ok(Some(frame)) => {
+                self.stats.per_peer[MASTER].recv_bytes += frame.wire_len() as u64;
+                self.stats.per_peer[MASTER].recv_frames += 1;
+                Ok(Some((MASTER, frame)))
+            }
+            Ok(None) => Ok(None),
             Err(_) => Err(TransportError::PeerGone {
                 peer: MASTER,
                 detail: "master disconnected".to_string(),

@@ -22,11 +22,13 @@
 //! [`TransportStats`] counts the *actual* bytes moved (see README
 //! "Distributed execution" for what is and isn't billed).
 
+pub mod chaos;
 pub mod frame;
 mod inprocess;
 mod socket;
 
-pub use frame::{Frame, WireError, WIRE_MAGIC, WIRE_VERSION};
+pub use chaos::{ChaosTransport, FaultKind, FaultPlan};
+pub use frame::{Frame, RejoinInfo, WireError, WIRE_MAGIC, WIRE_VERSION};
 pub use inprocess::{in_process, InProcessMaster, InProcessWorker};
 pub use socket::{SocketListener, SocketMaster, SocketWorker};
 
@@ -51,6 +53,40 @@ pub trait Transport: Send {
 
     /// Per-peer traffic counters accumulated so far.
     fn stats(&self) -> TransportStats;
+
+    /// Block at most `dur` for a frame: `Ok(Some)` on arrival,
+    /// `Ok(None)` when the wait expires with nothing queued. The
+    /// default falls back to the blocking [`Transport::recv`] — only
+    /// backends with a real clock (mailbox, sockets) can tick, and the
+    /// fault-tolerant master degrades to fail-fast on the rest.
+    fn recv_timeout(
+        &mut self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        let _ = dur;
+        self.recv().map(Some)
+    }
+
+    /// Worker side: try to re-establish a severed link to the master
+    /// and introduce ourselves with `info` as the first frame.
+    /// `Ok(true)` means the link is live again; `Ok(false)` means this
+    /// backend cannot reconnect (in-process channels, or retries
+    /// exhausted) and the caller should treat the master as gone.
+    fn reconnect(&mut self, info: &RejoinInfo) -> Result<bool, TransportError> {
+        let _ = info;
+        Ok(false)
+    }
+
+    /// Master side: drop the link to one peer (a worker declared
+    /// dead), releasing its socket and reader without touching the
+    /// other peers. No-op where there is nothing to release.
+    fn disconnect(&mut self, peer: usize) {
+        let _ = peer;
+    }
+
+    /// Tear down this endpoint's own link abruptly — the chaos
+    /// decorator's hook for `sever`/`kill` faults. No-op in-process.
+    fn sever(&mut self) {}
 }
 
 /// Steady-state transport failure. Setup failures (bind, connect,
@@ -62,9 +98,12 @@ pub enum TransportError {
     /// Every peer has closed its connection cleanly — no frame will
     /// ever arrive again. The master sees this when all workers exit.
     Closed,
-    /// One peer's connection died (EOF, reset, or I/O error) or went
-    /// silent past the read timeout.
+    /// One peer's connection died (EOF, reset, or I/O error).
     PeerGone { peer: usize, detail: String },
+    /// One peer is *silent* past the read timeout but its connection
+    /// is still up — possibly just slow. The fault-tolerant master
+    /// counts these as suspicion strikes instead of declaring death.
+    PeerSilent { peer: usize, detail: String },
     /// A peer sent bytes that do not decode as a frame.
     Wire { peer: usize, err: WireError },
     /// A peer sent a well-formed frame that violates the protocol
@@ -78,6 +117,9 @@ impl std::fmt::Display for TransportError {
             TransportError::Closed => write!(f, "all peers disconnected"),
             TransportError::PeerGone { peer, detail } => {
                 write!(f, "peer {peer} gone: {detail}")
+            }
+            TransportError::PeerSilent { peer, detail } => {
+                write!(f, "peer {peer} silent: {detail}")
             }
             TransportError::Wire { peer, err } => {
                 write!(f, "bad frame from peer {peer}: {err}")
@@ -173,10 +215,23 @@ pub struct TransportCfg {
     /// Master-side deadline for all `K` workers to connect (seconds).
     pub accept_timeout_secs: f64,
     /// Steady-state read timeout (seconds; 0 disables). A worker whose
-    /// master dies mid-run errors out within this bound.
+    /// master dies mid-run errors out within this bound; the master
+    /// uses it as its liveness-tick period.
     pub read_timeout_secs: f64,
     /// Listen backlog for the master's accept socket.
     pub accept_backlog: usize,
+    /// Consecutive read-timeout strikes before the master declares a
+    /// silent worker dead and shrinks the effective cluster (0 = never
+    /// declare death; a silent worker then stalls the run forever, the
+    /// pre-fault-tolerance behavior).
+    pub suspicion_timeouts: u32,
+    /// Worker-side reconnect attempts after a severed link before
+    /// giving up (0 disables reconnecting entirely).
+    pub reconnect_attempts: u32,
+    /// First reconnect backoff delay (seconds); doubles per attempt.
+    pub backoff_base_secs: f64,
+    /// Backoff ceiling (seconds).
+    pub backoff_max_secs: f64,
 }
 
 impl Default for TransportCfg {
@@ -189,6 +244,10 @@ impl Default for TransportCfg {
             accept_timeout_secs: 30.0,
             read_timeout_secs: 30.0,
             accept_backlog: 64,
+            suspicion_timeouts: 4,
+            reconnect_attempts: 5,
+            backoff_base_secs: 0.2,
+            backoff_max_secs: 5.0,
         }
     }
 }
@@ -201,6 +260,8 @@ impl TransportCfg {
             ("connect_timeout", self.connect_timeout_secs),
             ("accept_timeout", self.accept_timeout_secs),
             ("read_timeout", self.read_timeout_secs),
+            ("backoff_base", self.backoff_base_secs),
+            ("backoff_max", self.backoff_max_secs),
         ] {
             anyhow::ensure!(
                 v.is_finite() && v >= 0.0,

@@ -23,17 +23,20 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::util::sync::{mailbox, AtomicU64, Ordering, Receiver};
+use crate::util::sync::{mailbox, AtomicBool, AtomicU64, Ordering, Receiver, Sender};
+use crate::util::Rng;
 
 // ORDERING: the per-peer byte/frame counters are monotonic statistics
 // read for reporting only (never for synchronization decisions), so
 // all accesses are `Relaxed`; the reader-thread joins in `Drop` give
-// snapshots taken after shutdown exact totals.
+// snapshots taken after shutdown exact totals. The rejoin-acceptor
+// stop flag is likewise `Relaxed`: it is a latched shutdown request
+// polled in a sleep loop, ordering nothing.
 
 use anyhow::Context;
 
 use super::frame::{
-    arr, decode_ack, decode_hello, encode_ack, encode_hello, Frame, WireError, ACK_OK,
+    arr, decode_ack, decode_hello, encode_ack, encode_hello, Frame, RejoinInfo, WireError, ACK_OK,
     ACK_VERSION_MISMATCH, FRAME_HEADER_LEN, FRAME_TRAILER_LEN, HANDSHAKE_LEN, MAX_FRAME_PAYLOAD,
     WIRE_VERSION,
 };
@@ -126,7 +129,10 @@ enum ReadEnd {
     Eof,
     /// EOF in the middle of a frame.
     MidFrame,
-    /// No bytes within the read timeout.
+    /// No bytes within the read timeout, *at a frame boundary* — the
+    /// peer is silent, but the byte stream is still in sync, so the
+    /// reader can keep listening (the master turns these into
+    /// suspicion strikes instead of declaring the worker dead).
     Timeout,
     /// Some other I/O failure.
     Io(String),
@@ -135,7 +141,10 @@ enum ReadEnd {
 }
 
 /// Fill `buf` completely. `at_boundary` marks whether EOF before the
-/// first byte is a clean close (frame boundary) or a truncation.
+/// first byte is a clean close (frame boundary) or a truncation. A
+/// timeout after *some* bytes of a frame already arrived desyncs the
+/// stream and is therefore an I/O failure, not a resumable
+/// [`ReadEnd::Timeout`].
 fn fill(stream: &mut Stream, buf: &mut [u8], at_boundary: bool) -> Result<(), ReadEnd> {
     let mut off = 0;
     while off < buf.len() {
@@ -146,7 +155,11 @@ fn fill(stream: &mut Stream, buf: &mut [u8], at_boundary: bool) -> Result<(), Re
             Ok(n) => off += n,
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                return Err(ReadEnd::Timeout)
+                return Err(if at_boundary && off == 0 {
+                    ReadEnd::Timeout
+                } else {
+                    ReadEnd::Io("read timed out mid-frame".to_string())
+                })
             }
             Err(e) => return Err(ReadEnd::Io(e.to_string())),
         }
@@ -280,7 +293,14 @@ impl SocketListener {
             match accepted {
                 Ok(stream) => {
                     let id = streams.len();
-                    self.handshake_accepted(&stream, id, version)?;
+                    handshake_accepted(
+                        &stream,
+                        &format!("worker {id}"),
+                        version,
+                        &self.desc,
+                        self.accept_timeout_secs,
+                        self.read_timeout_secs,
+                    )?;
                     streams.push(stream);
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -308,7 +328,7 @@ impl SocketListener {
         // Cluster formed: reader thread + shared counters per peer.
         let stats: Vec<Arc<AtomicPeerStats>> =
             (0..k).map(|_| Arc::new(AtomicPeerStats::default())).collect();
-        let (tx_ev, rx_ev) = mailbox::<(usize, Result<Frame, ReadEnd>)>();
+        let (tx_ev, rx_ev) = mailbox::<Event>();
         let mut writers = Vec::with_capacity(k);
         let mut threads = Vec::with_capacity(k);
         for (peer, stream) in streams.into_iter().enumerate() {
@@ -318,71 +338,179 @@ impl SocketListener {
             let reader = stream
                 .try_clone()
                 .with_context(|| format!("cloning worker {peer}'s stream for reads"))?;
-            let tx = tx_ev.clone();
-            let st = Arc::clone(&stats[peer]);
-            threads.push(std::thread::spawn(move || {
-                let mut reader = reader;
-                loop {
-                    match read_frame(&mut reader) {
-                        Ok(frame) => {
-                            st.recv_bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
-                            st.recv_frames.fetch_add(1, Ordering::Relaxed);
-                            if tx.send((peer, Ok(frame))).is_err() {
-                                return;
-                            }
-                        }
-                        Err(end) => {
-                            let _ = tx.send((peer, Err(end)));
-                            return;
-                        }
-                    }
-                }
-            }));
-            writers.push(stream);
+            threads.push(spawn_reader(peer, 0, reader, tx_ev.clone(), Arc::clone(&stats[peer])));
+            writers.push(Some(stream));
         }
-        drop(tx_ev);
+        // The listener stays alive for the rest of the run so a severed
+        // worker can dial back in and introduce itself with `Rejoin`.
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = spawn_rejoin_acceptor(
+            self.inner,
+            self.desc,
+            version,
+            self.accept_timeout_secs,
+            self.read_timeout_secs,
+            tx_ev.clone(),
+            Arc::clone(&stop),
+        );
         Ok(SocketMaster {
             writers,
             rx: rx_ev,
+            tx: tx_ev,
             stats,
             threads,
+            acceptor: Some(acceptor),
+            stop,
+            gen: vec![0; k],
             read_timeout_secs: self.read_timeout_secs,
         })
     }
+}
 
-    /// Server side of the magic + version handshake. A mismatching
-    /// worker is told our version (so *its* error reports both) and
-    /// refused here with an error reporting both too.
-    fn handshake_accepted(&self, stream: &Stream, id: usize, version: u32) -> anyhow::Result<()> {
-        stream.set_nonblocking(false).context("unsetting nonblocking on accepted stream")?;
-        if let Stream::Tcp(s) = stream {
-            s.set_nodelay(true).context("setting TCP_NODELAY")?;
-        }
-        let handshake_timeout =
-            timeout_of(self.accept_timeout_secs).or_else(|| timeout_of(self.read_timeout_secs));
-        stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
-        let mut hello = [0u8; HANDSHAKE_LEN];
-        let mut s = stream.try_clone().context("cloning stream for handshake")?;
-        fill(&mut s, &mut hello, true).map_err(|end| {
-            anyhow::anyhow!("worker {id} on {} sent no hello: {}", self.desc, describe_end(&end))
-        })?;
-        let theirs = decode_hello(&hello)
-            .with_context(|| format!("bad hello from worker {id} on {}", self.desc))?;
-        if theirs != version {
-            let _ = s.write_all(&encode_ack(version, ACK_VERSION_MISMATCH));
-            let _ = s.flush();
-            stream.shutdown_both();
-            anyhow::bail!(
-                "worker {id} on {}: protocol version mismatch: \
-                 master speaks v{version}, worker speaks v{theirs}",
-                self.desc,
-            );
-        }
-        s.write_all(&encode_ack(version, ACK_OK))
-            .and_then(|_| s.flush())
-            .with_context(|| format!("acking worker {id} on {}", self.desc))?;
-        Ok(())
+/// Server side of the magic + version handshake. A mismatching worker
+/// is told our version (so *its* error reports both) and refused here
+/// with an error reporting both too. Free function so the rejoin
+/// acceptor can handshake after the `SocketListener` has been consumed.
+fn handshake_accepted(
+    stream: &Stream,
+    who: &str,
+    version: u32,
+    desc: &str,
+    accept_timeout_secs: f64,
+    read_timeout_secs: f64,
+) -> anyhow::Result<()> {
+    stream.set_nonblocking(false).context("unsetting nonblocking on accepted stream")?;
+    if let Stream::Tcp(s) = stream {
+        s.set_nodelay(true).context("setting TCP_NODELAY")?;
     }
+    let handshake_timeout =
+        timeout_of(accept_timeout_secs).or_else(|| timeout_of(read_timeout_secs));
+    stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
+    let mut hello = [0u8; HANDSHAKE_LEN];
+    let mut s = stream.try_clone().context("cloning stream for handshake")?;
+    fill(&mut s, &mut hello, true).map_err(|end| {
+        anyhow::anyhow!("{who} on {desc} sent no hello: {}", describe_end(&end))
+    })?;
+    let theirs =
+        decode_hello(&hello).with_context(|| format!("bad hello from {who} on {desc}"))?;
+    if theirs != version {
+        let _ = s.write_all(&encode_ack(version, ACK_VERSION_MISMATCH));
+        let _ = s.flush();
+        stream.shutdown_both();
+        anyhow::bail!(
+            "{who} on {desc}: protocol version mismatch: \
+             master speaks v{version}, worker speaks v{theirs}",
+        );
+    }
+    s.write_all(&encode_ack(version, ACK_OK))
+        .and_then(|_| s.flush())
+        .with_context(|| format!("acking {who} on {desc}"))?;
+    Ok(())
+}
+
+/// What flows from the reader / rejoin-acceptor threads to the
+/// [`SocketMaster`]'s single readiness queue.
+enum Event {
+    /// A frame (or read failure) from worker `peer`'s reader thread of
+    /// generation `gen`. Events from a stale generation — the orphaned
+    /// reader of a stream that a rejoin has since replaced — are
+    /// silently dropped on receipt.
+    Frame { peer: usize, gen: u64, res: Result<Frame, ReadEnd> },
+    /// A fresh connection handshook and introduced itself with a
+    /// `Rejoin` frame; `SocketMaster` swaps it in for the peer it names.
+    Rejoined { stream: Stream, info: RejoinInfo },
+}
+
+/// One per-peer reader: decode frames off the socket and feed the
+/// master's readiness queue. A boundary read timeout leaves the byte
+/// stream in sync, so it is *reported and survived* — the master turns
+/// it into a suspicion strike while the reader keeps listening. Every
+/// other failure ends the reader (a rejoin spawns a successor under a
+/// new generation).
+fn spawn_reader(
+    peer: usize,
+    gen: u64,
+    mut reader: Stream,
+    tx: Sender<Event>,
+    st: Arc<AtomicPeerStats>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut reader) {
+            Ok(frame) => {
+                st.recv_bytes.fetch_add(frame.wire_len() as u64, Ordering::Relaxed);
+                st.recv_frames.fetch_add(1, Ordering::Relaxed);
+                if tx.send(Event::Frame { peer, gen, res: Ok(frame) }).is_err() {
+                    return;
+                }
+            }
+            Err(end) => {
+                let resumable = matches!(end, ReadEnd::Timeout);
+                if tx.send(Event::Frame { peer, gen, res: Err(end) }).is_err() || !resumable {
+                    return;
+                }
+            }
+        }
+    })
+}
+
+/// The post-formation accept loop: any connection arriving after the
+/// cluster formed must handshake and open with a `Rejoin` frame, or it
+/// is turned away. Runs until the master drops (stop flag) or the
+/// listener dies.
+fn spawn_rejoin_acceptor(
+    listener: ListenerInner,
+    desc: String,
+    version: u32,
+    accept_timeout_secs: f64,
+    read_timeout_secs: f64,
+    tx: Sender<Event>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let accepted = match &listener {
+            ListenerInner::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            ListenerInner::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        match accepted {
+            Ok(stream) => {
+                if handshake_accepted(
+                    &stream,
+                    "a rejoining worker",
+                    version,
+                    &desc,
+                    accept_timeout_secs,
+                    read_timeout_secs,
+                )
+                .is_err()
+                {
+                    stream.shutdown_both();
+                    continue;
+                }
+                let Ok(mut reader) = stream.try_clone() else {
+                    stream.shutdown_both();
+                    continue;
+                };
+                match read_frame(&mut reader) {
+                    Ok(Frame::Rejoin(info)) => {
+                        if stream.set_read_timeout(timeout_of(read_timeout_secs)).is_err() {
+                            stream.shutdown_both();
+                            continue;
+                        }
+                        if tx.send(Event::Rejoined { stream, info }).is_err() {
+                            return;
+                        }
+                    }
+                    _ => stream.shutdown_both(),
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(RETRY_EVERY),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    })
 }
 
 fn describe_end(end: &ReadEnd) -> String {
@@ -396,11 +524,23 @@ fn describe_end(end: &ReadEnd) -> String {
 }
 
 /// Master endpoint of a formed socket cluster.
+///
+/// `writers[p]` is `None` once peer `p` has been
+/// [`disconnect`](Transport::disconnect)ed; `gen[p]` counts reader
+/// generations so a replaced reader's queued events are ignored after a
+/// rejoin swaps the underlying stream.
 pub struct SocketMaster {
-    writers: Vec<Stream>,
-    rx: Receiver<(usize, Result<Frame, ReadEnd>)>,
+    writers: Vec<Option<Stream>>,
+    rx: Receiver<Event>,
+    /// Kept alive to hand to replacement reader threads on rejoin.
+    /// (Because the master holds a sender, `rx` never reports `Closed`
+    /// on its own — peer liveness is tracked per-peer upstairs.)
+    tx: Sender<Event>,
     stats: Vec<Arc<AtomicPeerStats>>,
     threads: Vec<JoinHandle<()>>,
+    acceptor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    gen: Vec<u64>,
     read_timeout_secs: f64,
 }
 
@@ -408,14 +548,69 @@ impl SocketMaster {
     fn end_to_error(&self, peer: usize, end: ReadEnd) -> TransportError {
         match end {
             ReadEnd::Wire(err) => TransportError::Wire { peer, err },
-            ReadEnd::Timeout => TransportError::PeerGone {
+            ReadEnd::Timeout => TransportError::PeerSilent {
                 peer,
                 detail: format!(
-                    "worker silent past the {:.1}s read timeout",
+                    "worker {peer} silent past the {:.1}s read timeout (connection still up)",
                     self.read_timeout_secs
                 ),
             },
             other => TransportError::PeerGone { peer, detail: describe_end(&other) },
+        }
+    }
+
+    /// Swap in a rejoined worker's fresh connection: bump the reader
+    /// generation (orphaning the old reader's queued events), bill the
+    /// `Rejoin` frame, start a replacement reader, and replace the
+    /// writer. `false` for a `worker_id` outside the cluster (the
+    /// stream is dropped on the floor).
+    fn install_rejoin(&mut self, stream: Stream, info: RejoinInfo) -> bool {
+        let peer = info.worker_id;
+        if peer >= self.writers.len() {
+            stream.shutdown_both();
+            return false;
+        }
+        let Ok(reader) = stream.try_clone() else {
+            stream.shutdown_both();
+            return false;
+        };
+        self.gen[peer] += 1;
+        self.stats[peer]
+            .recv_bytes
+            .fetch_add(Frame::Rejoin(info).wire_len() as u64, Ordering::Relaxed);
+        self.stats[peer].recv_frames.fetch_add(1, Ordering::Relaxed);
+        self.threads.push(spawn_reader(
+            peer,
+            self.gen[peer],
+            reader,
+            self.tx.clone(),
+            Arc::clone(&self.stats[peer]),
+        ));
+        if let Some(old) = self.writers[peer].replace(stream) {
+            old.shutdown_both();
+        }
+        true
+    }
+
+    /// Translate one queued event; `None` means "stale, keep waiting".
+    fn step(&mut self, ev: Event) -> Option<Result<(usize, Frame), TransportError>> {
+        match ev {
+            Event::Frame { peer, gen, res } => {
+                if gen != self.gen[peer] {
+                    return None; // orphaned reader of a replaced stream
+                }
+                Some(match res {
+                    Ok(frame) => Ok((peer, frame)),
+                    Err(end) => Err(self.end_to_error(peer, end)),
+                })
+            }
+            Event::Rejoined { stream, info } => {
+                if self.install_rejoin(stream, info) {
+                    Some(Ok((info.worker_id, Frame::Rejoin(info))))
+                } else {
+                    None
+                }
+            }
         }
     }
 }
@@ -423,7 +618,13 @@ impl SocketMaster {
 impl Transport for SocketMaster {
     fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
         assert!(to < self.writers.len(), "master send to unknown peer {to}");
-        match write_frame(&mut self.writers[to], &frame) {
+        let Some(stream) = self.writers[to].as_mut() else {
+            return Err(TransportError::PeerGone {
+                peer: to,
+                detail: "worker disconnected (no live link)".to_string(),
+            });
+        };
+        match write_frame(stream, &frame) {
             Ok(bytes) => {
                 self.stats[to].sent_bytes.fetch_add(bytes, Ordering::Relaxed);
                 self.stats[to].sent_frames.fetch_add(1, Ordering::Relaxed);
@@ -437,10 +638,48 @@ impl Transport for SocketMaster {
     }
 
     fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
-        match self.rx.recv() {
-            Ok((peer, Ok(frame))) => Ok((peer, frame)),
-            Ok((peer, Err(end))) => Err(self.end_to_error(peer, end)),
-            Err(_) => Err(TransportError::Closed),
+        loop {
+            match self.rx.recv() {
+                Ok(ev) => {
+                    if let Some(out) = self.step(ev) {
+                        return out;
+                    }
+                }
+                Err(_) => return Err(TransportError::Closed),
+            }
+        }
+    }
+
+    fn recv_timeout(
+        &mut self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        let deadline = Instant::now() + dur;
+        loop {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else {
+                return Ok(None);
+            };
+            match self.rx.recv_timeout(left) {
+                Ok(Some(ev)) => {
+                    if let Some(out) = self.step(ev) {
+                        return out.map(Some);
+                    }
+                }
+                Ok(None) => return Ok(None),
+                Err(_) => return Err(TransportError::Closed),
+            }
+        }
+    }
+
+    fn disconnect(&mut self, peer: usize) {
+        if peer >= self.writers.len() {
+            return;
+        }
+        // Orphan the peer's reader first so the EOF report caused by
+        // this very shutdown is not mistaken for fresh news.
+        self.gen[peer] += 1;
+        if let Some(stream) = self.writers[peer].take() {
+            stream.shutdown_both();
         }
     }
 
@@ -455,28 +694,82 @@ impl Transport for SocketMaster {
 
 impl Drop for SocketMaster {
     fn drop(&mut self) {
-        for w in &self.writers {
+        self.stop.store(true, Ordering::Relaxed);
+        for w in self.writers.iter().flatten() {
             w.shutdown_both();
         }
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
     }
 }
 
-/// Worker endpoint: one connection to the master.
+/// One dial attempt at `addr`, no retry and no handshake.
+fn dial_once(cfg: &TransportCfg, addr: &str) -> std::io::Result<Stream> {
+    match cfg.backend {
+        TransportBackend::Tcp => TcpStream::connect(addr).map(Stream::Tcp),
+        TransportBackend::Uds => UnixStream::connect(addr).map(Stream::Unix),
+        TransportBackend::InProcess => Err(std::io::Error::new(
+            ErrorKind::Unsupported,
+            "the in-process backend has no socket; use transport tcp or uds",
+        )),
+    }
+}
+
+/// Client side of the magic + version handshake; returns the stream
+/// configured with its steady-state read timeout.
+fn handshake_with_master(
+    mut stream: Stream,
+    addr: &str,
+    version: u32,
+    cfg: &TransportCfg,
+) -> anyhow::Result<Stream> {
+    if let Stream::Tcp(s) = &stream {
+        s.set_nodelay(true).context("setting TCP_NODELAY")?;
+    }
+    // Handshake under the connect deadline, then steady-state timeout.
+    let handshake_timeout =
+        timeout_of(cfg.connect_timeout_secs).or_else(|| timeout_of(cfg.read_timeout_secs));
+    stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
+    stream
+        .write_all(&encode_hello(version))
+        .and_then(|_| stream.flush())
+        .with_context(|| format!("sending hello to master at {addr}"))?;
+    let mut ack = [0u8; HANDSHAKE_LEN];
+    fill(&mut stream, &mut ack, true).map_err(|end| {
+        anyhow::anyhow!(
+            "no handshake ack from master at {addr} within {:.1}s: {}",
+            cfg.connect_timeout_secs,
+            describe_end(&end),
+        )
+    })?;
+    decode_ack(&ack, version).with_context(|| format!("handshake with master at {addr}"))?;
+    stream
+        .set_read_timeout(timeout_of(cfg.read_timeout_secs))
+        .context("setting read timeout")?;
+    Ok(stream)
+}
+
+/// Worker endpoint: one connection to the master. Keeps its
+/// [`TransportCfg`] so a severed link can be redialed
+/// ([`Transport::reconnect`]) with the configured backoff schedule.
 pub struct SocketWorker {
     stream: Stream,
     addr: String,
     stats: TransportStats,
-    read_timeout_secs: f64,
+    cfg: TransportCfg,
 }
 
 impl SocketWorker {
     /// Dial the master at `cfg.join` and handshake. Connection refusal
     /// is retried until `connect_timeout_secs` (workers may start
     /// before the master listens); the timeout error names the address
-    /// and the configured bound.
+    /// and the configured bound. A zero timeout *disables* the deadline
+    /// (retry until the master appears), consistent with the
+    /// 0-disables rule of the accept/read timeouts.
     pub fn connect(cfg: &TransportCfg) -> anyhow::Result<SocketWorker> {
         Self::connect_version(cfg, WIRE_VERSION)
     }
@@ -484,31 +777,26 @@ impl SocketWorker {
     fn connect_version(cfg: &TransportCfg, version: u32) -> anyhow::Result<SocketWorker> {
         let addr = cfg.join.clone();
         anyhow::ensure!(!addr.is_empty(), "transport.join is empty: no master address");
+        anyhow::ensure!(
+            cfg.backend != TransportBackend::InProcess,
+            "the in-process backend has no socket; use transport tcp or uds"
+        );
         let deadline = timeout_of(cfg.connect_timeout_secs).map(|d| Instant::now() + d);
         let stream = loop {
-            let attempt = match cfg.backend {
-                TransportBackend::Tcp => TcpStream::connect(&addr).map(Stream::Tcp),
-                TransportBackend::Uds => UnixStream::connect(&addr).map(Stream::Unix),
-                TransportBackend::InProcess => {
-                    anyhow::bail!("the in-process backend has no socket; use transport tcp or uds")
-                }
-            };
-            match attempt {
+            match dial_once(cfg, &addr) {
                 Ok(s) => break s,
                 // Refused / not-yet-bound are retried: the master may
                 // simply not be listening yet.
                 Err(e)
                     if matches!(e.kind(), ErrorKind::ConnectionRefused | ErrorKind::NotFound) =>
                 {
-                    let expired = match deadline {
-                        Some(dl) => Instant::now() >= dl,
-                        None => true, // zero timeout: single attempt
-                    };
-                    if expired {
-                        anyhow::bail!(
-                            "could not connect to master at {addr} within {:.1}s: {e}",
-                            cfg.connect_timeout_secs,
-                        );
+                    if let Some(dl) = deadline {
+                        if Instant::now() >= dl {
+                            anyhow::bail!(
+                                "could not connect to master at {addr} within {:.1}s: {e}",
+                                cfg.connect_timeout_secs,
+                            );
+                        }
                     }
                     std::thread::sleep(RETRY_EVERY);
                 }
@@ -519,37 +807,12 @@ impl SocketWorker {
                 }
             }
         };
-        if let Stream::Tcp(s) = &stream {
-            s.set_nodelay(true).context("setting TCP_NODELAY")?;
-        }
-
-        // Handshake under the connect deadline, then steady-state
-        // timeout.
-        let handshake_timeout =
-            timeout_of(cfg.connect_timeout_secs).or_else(|| timeout_of(cfg.read_timeout_secs));
-        stream.set_read_timeout(handshake_timeout).context("setting handshake read timeout")?;
-        let mut stream = stream;
-        stream
-            .write_all(&encode_hello(version))
-            .and_then(|_| stream.flush())
-            .with_context(|| format!("sending hello to master at {addr}"))?;
-        let mut ack = [0u8; HANDSHAKE_LEN];
-        fill(&mut stream, &mut ack, true).map_err(|end| {
-            anyhow::anyhow!(
-                "no handshake ack from master at {addr} within {:.1}s: {}",
-                cfg.connect_timeout_secs,
-                describe_end(&end),
-            )
-        })?;
-        decode_ack(&ack, version).with_context(|| format!("handshake with master at {addr}"))?;
-        stream
-            .set_read_timeout(timeout_of(cfg.read_timeout_secs))
-            .context("setting read timeout")?;
+        let stream = handshake_with_master(stream, &addr, version, cfg)?;
 
         let mut stats = TransportStats::new(1);
         stats.per_peer[MASTER].sent_bytes = HANDSHAKE_LEN as u64;
         stats.per_peer[MASTER].recv_bytes = HANDSHAKE_LEN as u64;
-        Ok(SocketWorker { stream, addr, stats, read_timeout_secs: cfg.read_timeout_secs })
+        Ok(SocketWorker { stream, addr, stats, cfg: cfg.clone() })
     }
 
     /// The master's address, for error messages.
@@ -582,11 +845,11 @@ impl Transport for SocketWorker {
                 Ok((MASTER, frame))
             }
             Err(ReadEnd::Wire(err)) => Err(TransportError::Wire { peer: MASTER, err }),
-            Err(ReadEnd::Timeout) => Err(TransportError::PeerGone {
+            Err(ReadEnd::Timeout) => Err(TransportError::PeerSilent {
                 peer: MASTER,
                 detail: format!(
-                    "master at {} silent past the {:.1}s read timeout",
-                    self.addr, self.read_timeout_secs
+                    "master at {} silent past the {:.1}s read timeout (connection still up)",
+                    self.addr, self.cfg.read_timeout_secs
                 ),
             }),
             Err(end) => Err(TransportError::PeerGone {
@@ -594,6 +857,49 @@ impl Transport for SocketWorker {
                 detail: format!("master at {} disconnected: {}", self.addr, describe_end(&end)),
             }),
         }
+    }
+
+    fn reconnect(&mut self, info: &RejoinInfo) -> Result<bool, TransportError> {
+        if self.cfg.reconnect_attempts == 0 {
+            return Ok(false);
+        }
+        self.stream.shutdown_both();
+        // Deterministic jitter: ±25% around the exponential schedule,
+        // seeded per worker so a severed cluster's redial herd spreads
+        // out while reruns stay reproducible.
+        let mut rng = Rng::new(0x9E37_79B9_7F4A_7C15 ^ info.worker_id as u64);
+        for attempt in 0..self.cfg.reconnect_attempts {
+            let exp = self.cfg.backoff_base_secs * f64::from(1u32 << attempt.min(20));
+            let delay = exp.min(self.cfg.backoff_max_secs) * (0.75 + 0.5 * rng.next_f64());
+            if delay > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(delay));
+            }
+            let Ok(stream) = dial_once(&self.cfg, &self.addr) else {
+                continue;
+            };
+            let Ok(mut stream) = handshake_with_master(stream, &self.addr, WIRE_VERSION, &self.cfg)
+            else {
+                continue;
+            };
+            // Introduce ourselves: the master's rejoin acceptor demands
+            // a Rejoin as the opening frame before readmitting a link.
+            match write_frame(&mut stream, &Frame::Rejoin(*info)) {
+                Ok(bytes) => {
+                    let p = &mut self.stats.per_peer[MASTER];
+                    p.sent_bytes += HANDSHAKE_LEN as u64 + bytes;
+                    p.recv_bytes += HANDSHAKE_LEN as u64;
+                    p.sent_frames += 1;
+                    self.stream = stream;
+                    return Ok(true);
+                }
+                Err(_) => continue,
+            }
+        }
+        Ok(false)
+    }
+
+    fn sever(&mut self) {
+        self.stream.shutdown_both();
     }
 
     fn peers(&self) -> usize {
@@ -625,6 +931,7 @@ mod tests {
             accept_timeout_secs: 5.0,
             read_timeout_secs: 5.0,
             accept_backlog: 8,
+            ..TransportCfg::default()
         }
     }
 
@@ -755,5 +1062,135 @@ mod tests {
             }
             other => panic!("expected PeerGone, got {other:?}"),
         }
+    }
+
+    /// Satellite fix: a zero connect timeout means "no deadline" —
+    /// retry until the master appears — consistent with the 0-disables
+    /// rule of the read/accept timeouts, not "single attempt".
+    #[test]
+    fn zero_connect_timeout_retries_until_master_appears() {
+        let path = std::env::temp_dir().join(format!("hdca-late-{}", std::process::id()));
+        let path_s = path.to_string_lossy().to_string();
+        let _ = std::fs::remove_file(&path_s);
+        let mut cfg = tcp_cfg(&path_s, &path_s);
+        cfg.backend = TransportBackend::Uds;
+        cfg.connect_timeout_secs = 0.0;
+        let wcfg = cfg.clone();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&wcfg).unwrap();
+            let (_, got) = w.recv().unwrap();
+            assert_eq!(got, Frame::Shutdown { vtime: 1.0, round: 1 });
+        });
+        // Bind only after the worker has (very likely) already dialed
+        // and been refused at least once.
+        std::thread::sleep(Duration::from_millis(120));
+        let listener = SocketListener::bind(&cfg).unwrap();
+        let mut m = listener.accept_cluster(1).unwrap();
+        m.send(0, Frame::Shutdown { vtime: 1.0, round: 1 }).unwrap();
+        worker.join().unwrap();
+        drop(m);
+        let _ = std::fs::remove_file(&path_s);
+    }
+
+    /// A silent worker surfaces as `PeerSilent` (strike material), not
+    /// `PeerGone`, and the reader keeps listening: the same connection
+    /// still delivers frames afterwards.
+    #[test]
+    fn silent_worker_is_suspect_not_dead() {
+        let mut lcfg = tcp_cfg("127.0.0.1:0", "");
+        lcfg.read_timeout_secs = 0.15;
+        let listener = SocketListener::bind(&lcfg).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&tcp_cfg("", &addr)).unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+            w.send(MASTER, update_frame()).unwrap();
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        let err = m.recv().unwrap_err();
+        assert!(matches!(err, TransportError::PeerSilent { peer: 0, .. }), "{err:?}");
+        let frame = loop {
+            match m.recv() {
+                Ok((0, f)) => break f,
+                Err(TransportError::PeerSilent { .. }) => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        assert_eq!(frame, update_frame());
+        worker.join().unwrap();
+    }
+
+    /// The liveness tick: `recv_timeout` expires with `Ok(None)` when
+    /// nothing is queued, without disturbing the link.
+    #[test]
+    fn master_recv_timeout_expires_with_none() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&tcp_cfg("", &addr)).unwrap();
+            w.recv()
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        assert_eq!(m.recv_timeout(Duration::from_millis(50)).unwrap(), None);
+        m.send(0, Frame::Shutdown { vtime: 0.0, round: 0 }).unwrap();
+        let (_, got) = worker.join().unwrap().unwrap();
+        assert_eq!(got, Frame::Shutdown { vtime: 0.0, round: 0 });
+    }
+
+    /// A severed worker dials back in with `Rejoin`; the master swaps
+    /// the link live and frames flow again on the new connection.
+    #[test]
+    fn severed_worker_rejoins_and_resumes() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let info = RejoinInfo { worker_id: 0, last_acked_round: 3, alpha_crc: 0xDEAD_BEEF };
+        let worker = std::thread::spawn(move || {
+            let mut cfg = tcp_cfg("", &addr);
+            cfg.backoff_base_secs = 0.01;
+            cfg.backoff_max_secs = 0.05;
+            let mut w = SocketWorker::connect(&cfg).unwrap();
+            w.send(MASTER, update_frame()).unwrap();
+            w.sever();
+            assert!(w.reconnect(&info).unwrap(), "reconnect gave up");
+            w.send(MASTER, update_frame()).unwrap();
+            let (_, reply) = w.recv().unwrap();
+            assert_eq!(reply, Frame::Shutdown { vtime: 9.0, round: 9 });
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        let (peer, first) = m.recv().unwrap();
+        assert_eq!((peer, first), (0, update_frame()));
+        // The severed link may report PeerGone before the fresh
+        // connection's Rejoin arrives; both orders are fine.
+        let rejoin = loop {
+            match m.recv() {
+                Ok((0, Frame::Rejoin(got))) => break got,
+                Ok(other) => panic!("unexpected frame {other:?}"),
+                Err(TransportError::PeerGone { .. } | TransportError::PeerSilent { .. }) => {}
+                Err(e) => panic!("unexpected transport error {e}"),
+            }
+        };
+        assert_eq!(rejoin, info);
+        let (_, second) = m.recv().unwrap();
+        assert_eq!(second, update_frame());
+        m.send(0, Frame::Shutdown { vtime: 9.0, round: 9 }).unwrap();
+        worker.join().unwrap();
+    }
+
+    /// `disconnect` releases one peer: subsequent sends to it fail fast
+    /// and its worker observes EOF.
+    #[test]
+    fn disconnected_peer_fails_fast_on_send() {
+        let listener = SocketListener::bind(&tcp_cfg("127.0.0.1:0", "")).unwrap();
+        let addr = listener.local_desc().to_string();
+        let worker = std::thread::spawn(move || {
+            let mut w = SocketWorker::connect(&tcp_cfg("", &addr)).unwrap();
+            w.recv()
+        });
+        let mut m = listener.accept_cluster(1).unwrap();
+        m.disconnect(0);
+        let err = m.send(0, Frame::Shutdown { vtime: 0.0, round: 0 }).unwrap_err();
+        assert!(matches!(err, TransportError::PeerGone { peer: 0, .. }), "{err:?}");
+        let werr = worker.join().unwrap().unwrap_err();
+        assert!(matches!(werr, TransportError::PeerGone { peer: MASTER, .. }), "{werr:?}");
     }
 }

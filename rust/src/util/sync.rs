@@ -146,6 +146,35 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Bounded-wait variant: block at most `dur` for a message.
+    /// `Ok(Some)` on a queued message, `Ok(None)` once the wait expires
+    /// with the queue still empty, `Err` once disconnected+drained —
+    /// the fault-tolerant master's liveness tick
+    /// (`coordinator::master`) is built on this.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, RecvError> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut state = self.inner.state.lock().expect("mailbox lock");
+        loop {
+            if let Some(t) = state.queue.pop_front() {
+                return Ok(Some(t));
+            }
+            if state.senders == 0 {
+                return Err(RecvError);
+            }
+            let now = std::time::Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return Ok(None);
+            };
+            // Spurious wakeups and waits cut short both land back in
+            // the loop, which re-derives the remaining budget from the
+            // absolute deadline.
+            let (guard, _timed_out) =
+                self.inner.ready_cv.wait_timeout(state, left).expect("mailbox wait");
+            state = guard;
+        }
+    }
+
     /// Non-blocking variant: `Ok(Some)` on a queued message, `Ok(None)`
     /// on an empty-but-connected queue, `Err` once disconnected+drained.
     pub fn try_recv(&self) -> Result<Option<T>, RecvError> {
@@ -235,6 +264,27 @@ mod tests {
         assert_eq!(rx.try_recv(), Ok(Some(1)));
         drop(tx);
         assert_eq!(rx.try_recv(), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_states() {
+        let (tx, rx) = mailbox();
+        // Empty but connected: expires with None.
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_millis(5)), Ok(None));
+        tx.send(3).unwrap();
+        // Queued message: returned without waiting out the budget.
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(60)), Ok(Some(3)));
+        drop(tx);
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_millis(5)), Err(RecvError));
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_send() {
+        let (tx, rx) = mailbox();
+        let h = std::thread::spawn(move || rx.recv_timeout(std::time::Duration::from_secs(60)));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        tx.send(11u32).unwrap();
+        assert_eq!(h.join().unwrap(), Ok(Some(11)));
     }
 
     #[test]

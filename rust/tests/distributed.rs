@@ -211,3 +211,109 @@ fn sparse_rounds_ship_fewer_bytes_than_dense() {
     }
     assert!(sparse.net.recv_bytes() < dense.net.recv_bytes());
 }
+
+// ---- chaos: scripted fault injection ----
+
+/// A worker killed mid-run must not deadlock the cluster: the master
+/// declares it dead after `suspicion_timeouts` silent ticks, shrinks
+/// the effective cluster to `K_live = K − 1`, finishes the run, and
+/// the degraded model still certifies a finite duality gap (the
+/// certificate recomputes the exact `v` from the assembled α, with
+/// the dead worker's rows at their initial 0).
+#[test]
+fn killed_worker_shrinks_k_live_and_still_certifies() {
+    let store = packed_store("chaos_kill");
+    let mut cfg = base_cfg(&store);
+    cfg.k_nodes = 3;
+    cfg.max_rounds = 8;
+    cfg.transport.read_timeout_secs = 0.05;
+    cfg.transport.suspicion_timeouts = 2;
+    cfg.chaos_plan = "kill:worker=2,round=1".into();
+
+    let report = run_in_process(Algorithm::HybridDca, &cfg);
+    assert_eq!(report.faults.k_live, 2, "K_live after one death: {:?}", report.faults);
+    assert_eq!(report.faults.total_deaths(), 1);
+    assert_eq!(report.faults.per_peer[2].declared_dead, 1);
+    assert!(
+        report.faults.events.iter().any(|e| e.peer == 2 && e.what.contains("dead")),
+        "no death event logged: {:?}",
+        report.faults.events
+    );
+    assert!(report.rounds > 0);
+
+    let session = Session::from_exp_config(&cfg).unwrap();
+    let source = session.load_source().unwrap();
+    let gap = report.certificate_gap_source(&source, &cfg);
+    assert!(gap.is_finite(), "certified gap {gap}");
+}
+
+/// One corrupted frame (CRC reject at the master) triggers a Nack
+/// retransmit, not a teardown — and because the retransmitted update
+/// carries the same payload and the conservative gather merges by
+/// virtual time rather than arrival order, the run stays
+/// bitwise-identical to the undisturbed one.
+#[test]
+fn corrupted_frame_retransmits_and_stays_bitwise_clean() {
+    let store = packed_store("chaos_corrupt");
+    let clean = run_in_process(Algorithm::HybridDca, &base_cfg(&store));
+
+    let mut cfg = base_cfg(&store);
+    cfg.chaos_plan = "corrupt:worker=0,round=1".into();
+    cfg.chaos_seed = 5;
+    let perturbed = run_in_process(Algorithm::HybridDca, &cfg);
+
+    assert!(
+        perturbed.faults.per_peer[0].retransmits >= 1,
+        "no retransmit recorded: {:?}",
+        perturbed.faults
+    );
+    assert_eq!(perturbed.faults.total_deaths(), 0);
+    assert_reports_bitwise_equal(&clean, &perturbed);
+}
+
+/// A worker that stalls past the suspicion threshold is declared dead
+/// and the barrier degrades — then the worker dials back in, rejoins
+/// (reconnect-with-backoff + `Rejoin` handshake, α intact in its own
+/// process), and finishes the run as a live member: `K_live` is
+/// restored and its final report arrives like any other's.
+#[test]
+fn stalled_worker_is_declared_dead_then_rejoins() {
+    let store = packed_store("chaos_stall_rejoin");
+    let mut cfg = base_cfg(&store);
+    cfg.max_rounds = 14;
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+    cfg.transport.read_timeout_secs = 0.05;
+    cfg.transport.suspicion_timeouts = 3;
+    cfg.transport.backoff_base_secs = 0.02;
+    cfg.transport.backoff_max_secs = 0.1;
+    // Worker 1 goes dark for 0.4 s (≫ the 3 × 0.05 s suspicion
+    // threshold) at its round 1; worker 0's paced rounds (each stall
+    // well under the threshold) keep the master's gather alive long
+    // enough for the rejoin to land mid-run.
+    let pace: String = (2..=10)
+        .map(|r| format!("stall:worker=0,round={r},secs=0.08"))
+        .collect::<Vec<_>>()
+        .join(";");
+    cfg.chaos_plan = format!("stall:worker=1,round=1,secs=0.4;{pace}");
+
+    let (report, summaries) = run_cluster(Algorithm::HybridDca, &cfg);
+    assert!(
+        report.faults.per_peer[1].declared_dead >= 1,
+        "worker 1 never declared dead: {:?}",
+        report.faults
+    );
+    assert!(
+        report.faults.per_peer[1].rejoins >= 1,
+        "worker 1 never rejoined: {:?}",
+        report.faults
+    );
+    assert_eq!(report.faults.k_live, 2, "worker 1 must be live again at the end");
+    for s in &summaries {
+        assert!(s.updates > 0, "worker {} did no work", s.worker_id);
+    }
+
+    let session = Session::from_exp_config(&cfg).unwrap();
+    let source = session.load_source().unwrap();
+    assert!(report.certificate_gap_source(&source, &cfg).is_finite());
+}

@@ -15,7 +15,7 @@
 
 use hybrid_dca::coordinator::messages::{DeltaV, MasterReply, WorkerFinal, WorkerMsg};
 use hybrid_dca::transport::frame::Assignment;
-use hybrid_dca::transport::Frame;
+use hybrid_dca::transport::{Frame, RejoinInfo};
 use hybrid_dca::util::proptest::{check, default_cases};
 use hybrid_dca::util::Rng;
 
@@ -51,7 +51,7 @@ fn gen_delta_v(r: &mut Rng) -> DeltaV {
 }
 
 fn gen_frame(r: &mut Rng) -> Frame {
-    match r.next_below(5) {
+    match r.next_below(7) {
         0 => Frame::Update(WorkerMsg {
             worker: r.next_below(16),
             local_round: r.next_below(1000),
@@ -74,7 +74,7 @@ fn gen_frame(r: &mut Rng) -> Frame {
             updates: r.next_u64() >> 32,
             vtime: r.next_f64() * 100.0,
         }),
-        _ => Frame::Assign(Assignment {
+        4 => Frame::Assign(Assignment {
             worker_id: r.next_below(16),
             k_nodes: r.next_below(16) + 1,
             n: r.next_below(100_000),
@@ -83,6 +83,12 @@ fn gen_frame(r: &mut Rng) -> Frame {
             allreduce: r.next_bool(0.5),
             config_json: "{\"k\": 2}".repeat(r.next_below(4)),
         }),
+        5 => Frame::Rejoin(RejoinInfo {
+            worker_id: r.next_below(16),
+            last_acked_round: r.next_below(1000),
+            alpha_crc: (r.next_u64() >> 32) as u32,
+        }),
+        _ => Frame::Nack { round: r.next_below(1000) },
     }
 }
 
@@ -137,6 +143,15 @@ fn edge_frames() -> Vec<Frame> {
             allreduce: false,
             config_json: String::new(),
         }),
+        Frame::Rejoin(RejoinInfo { worker_id: 0, last_acked_round: 0, alpha_crc: 0 }),
+        Frame::Rejoin(RejoinInfo {
+            // worker ids ride as u32 on the wire (like Update/Final).
+            worker_id: u32::MAX as usize,
+            last_acked_round: usize::MAX,
+            alpha_crc: u32::MAX,
+        }),
+        Frame::Nack { round: 0 },
+        Frame::Nack { round: usize::MAX },
     ]
 }
 
