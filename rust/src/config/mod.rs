@@ -9,6 +9,7 @@ pub mod toml;
 
 use crate::data::partition::Strategy;
 use crate::loss::LossKind;
+use crate::obs::ObsCfg;
 use crate::transport::{FaultPlan, TransportBackend, TransportCfg};
 use crate::util::json::Json;
 use toml::Document;
@@ -181,6 +182,11 @@ pub struct ExpConfig {
     /// Seed for the chaos plan's randomness (corrupt byte positions).
     /// A `seed=` entry inside `chaos_plan` overrides it.
     pub chaos_seed: u64,
+
+    // Observability (`[obs]` table / `--metrics-out` / `--trace-out`)
+    /// Run-scoped metrics registry and timeline tracer. Off by default;
+    /// never affects solver arithmetic or `--dump` output.
+    pub obs: ObsCfg,
 }
 
 impl Default for ExpConfig {
@@ -219,6 +225,7 @@ impl Default for ExpConfig {
             transport: TransportCfg::default(),
             chaos_plan: String::new(),
             chaos_seed: 0,
+            obs: ObsCfg::default(),
         }
     }
 }
@@ -433,6 +440,13 @@ impl ExpConfig {
             "transport.backoff-max" | "transport.backoff_max" => {
                 self.transport.backoff_max_secs = need_f64()?
             }
+            "obs.enabled" | "obs_enabled" => {
+                self.obs.enabled =
+                    val.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
+            "obs.trace" | "obs_trace" => {
+                self.obs.trace = val.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"))?
+            }
             "chaos.plan" | "chaos_plan" => self.chaos_plan = need_str()?.to_string(),
             "chaos.seed" | "chaos_seed" => {
                 self.chaos_seed = val
@@ -527,6 +541,13 @@ impl ExpConfig {
             ),
             ("chaos_plan".into(), Json::Str(self.chaos_plan.clone())),
             ("chaos_seed".into(), Json::Str(self.chaos_seed.to_string())),
+            (
+                "obs".into(),
+                Json::Obj(vec![
+                    ("enabled".into(), Json::Bool(self.obs.enabled)),
+                    ("trace".into(), Json::Bool(self.obs.trace)),
+                ]),
+            ),
         ])
     }
 
@@ -622,6 +643,10 @@ impl ExpConfig {
         cfg.chaos_seed = chaos_seed
             .parse::<u64>()
             .map_err(|e| anyhow::anyhow!("config json: bad chaos_seed '{chaos_seed}': {e}"))?;
+        let o = j
+            .get("obs")
+            .ok_or_else(|| anyhow::anyhow!("config json: missing object 'obs'"))?;
+        cfg.obs = ObsCfg { enabled: flag(o, "enabled")?, trace: flag(o, "trace")? };
         cfg.validate()?;
         Ok(cfg)
     }
@@ -864,6 +889,7 @@ backoff_max = 2.0
         cfg.transport.backoff_max_secs = 1.0 / 3.0; // not exact in decimal
         cfg.chaos_plan = "stall:worker=1,round=2,secs=0.25".into();
         cfg.chaos_seed = u64::MAX - 11;
+        cfg.obs = ObsCfg { enabled: true, trace: true };
         let back = ExpConfig::from_json(&cfg.to_json().to_pretty()).unwrap();
         assert_eq!(cfg, back);
     }

@@ -22,6 +22,8 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
 pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let cfg = ctx.cfg;
     cfg.validate()?;
+    let obs_guard = crate::obs::begin(&cfg.obs);
+    let rec = crate::obs::global();
     let loss = cfg.loss.build();
     let cost_model = CostModel::new(cfg.cost_per_nnz, cfg.net_latency, cfg.net_per_elem);
     let mut solver = Sdca::new(data, cfg.lambda, Rng::new(cfg.seed), &cost_model);
@@ -53,7 +55,9 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         if initial_stop {
             break;
         }
+        let updates_before = solver.updates;
         solver.run_round(&*loss, cfg.h_local);
+        rec.master_round(solver.updates - updates_before);
         // Periodic exact rescan cancels incremental rounding drift.
         if t % DUAL_RESYNC_EVERY == 0 {
             solver.resync_dual(&*loss);
@@ -68,9 +72,11 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             })
             .is_break();
         if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
+            let eval_t0 = rec.timer();
             let primal = eval.primal(&*loss, &solver.v, cfg.lambda);
             let dual = solver.dual_sum() / n - 0.5 * cfg.lambda * norm_sq(&solver.v);
             let gap = primal - dual;
+            rec.eval(t, eval_t0);
             let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
@@ -105,6 +111,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         worker_rounds: vec![rounds],
         net: Default::default(),
         faults: Default::default(),
+        obs: obs_guard.and_then(|g| g.finish()),
     })
 }
 

@@ -56,6 +56,9 @@ pub struct WorkerSummary {
     pub net: TransportStats,
     /// The master's address, for the exit report.
     pub master_addr: String,
+    /// Observability snapshot, when `[obs]` was enabled (by the
+    /// master's config or this node's own `--metrics-out`/`--trace-out`).
+    pub obs: Option<crate::obs::ObsSnapshot>,
 }
 
 /// Resolve the distributed protocol for `algo`: the effective config
@@ -97,6 +100,7 @@ pub fn run_master_with_listener(
 ) -> anyhow::Result<RunReport> {
     cfg.validate()?;
     let (cfg, opts) = plan_protocol(algo, cfg)?;
+    let obs_guard = crate::obs::begin(&cfg.obs);
     let store_dir = cfg.store_path.as_deref().ok_or_else(|| {
         anyhow::anyhow!(
             "--distributed requires a packed shard store (set --store or data.store): \
@@ -125,6 +129,11 @@ pub fn run_master_with_listener(
     let mut link: Box<dyn Transport> = Box::new(link);
     if !chaos.is_empty() {
         link = Box::new(ChaosTransport::wrap(link, chaos, None));
+    }
+    // Outermost so the timeline sees frames exactly as the master's
+    // gather loop does — after any chaos-injected drops or delays.
+    if cfg.obs.enabled && cfg.obs.trace {
+        link = crate::transport::ObsTransport::wrap(link);
     }
 
     let config_json = cfg.to_json().to_pretty();
@@ -169,6 +178,14 @@ pub fn run_master_with_listener(
         worker_rounds.push(fin.local_rounds);
     }
 
+    // Mirror the same stats object into the metrics snapshot that the
+    // report carries, so `RunReport.net` and the exported per-peer byte
+    // counters agree by construction.
+    let net = link.stats();
+    let rec = crate::obs::global();
+    rec.set_net(&net);
+    rec.gauge_set(crate::obs::Gauge::KLive, outcome.faults.k_live as u64);
+
     Ok(RunReport {
         label: opts.label.clone(),
         trace: outcome.trace,
@@ -179,8 +196,9 @@ pub fn run_master_with_listener(
         vtime: outcome.vtime,
         total_updates,
         worker_rounds,
-        net: link.stats(),
+        net,
         faults: outcome.faults,
+        obs: obs_guard.and_then(|g| g.finish()),
     })
 }
 
@@ -190,10 +208,13 @@ pub fn run_master_with_listener(
 ///
 /// `store_override` replaces the store directory from the master's
 /// config — for clusters whose nodes mount the store at different
-/// paths.
+/// paths. `obs_override` ORs into the obs config that rides in on the
+/// master's `Assign` frame, so one node can record its own timeline
+/// (`node --trace-out`) even when the master runs dark.
 pub fn run_worker_node(
     transport: &TransportCfg,
     store_override: Option<&str>,
+    obs_override: crate::obs::ObsCfg,
 ) -> anyhow::Result<WorkerSummary> {
     let mut link = SocketWorker::connect(transport)?;
     let assign = match link.recv() {
@@ -208,6 +229,11 @@ pub fn run_worker_node(
     };
     let cfg = ExpConfig::from_json(&assign.config_json)
         .context("parsing the master's experiment config")?;
+    let obs_cfg = crate::obs::ObsCfg {
+        enabled: cfg.obs.enabled || obs_override.enabled,
+        trace: cfg.obs.trace || obs_override.trace,
+    };
+    let obs_guard = crate::obs::begin(&obs_cfg);
     let w = assign.worker_id;
     anyhow::ensure!(
         w < assign.k_nodes && assign.k_nodes == cfg.k_nodes,
@@ -248,15 +274,21 @@ pub fn run_worker_node(
     if !chaos.is_empty() {
         link = Box::new(ChaosTransport::wrap(link, chaos, Some(w)));
     }
+    if obs_cfg.enabled && obs_cfg.trace {
+        link = crate::transport::ObsTransport::wrap(link);
+    }
 
     let fin = run_worker(
         &wcfg, slab.cells, &slab.data, &*loss, &slab.norms, &slab.costs, &mut *link, rng,
     )?;
+    let net = link.stats();
+    crate::obs::global().set_net(&net);
     Ok(WorkerSummary {
         worker_id: w,
         local_rounds: fin.local_rounds,
         updates: fin.updates,
-        net: link.stats(),
+        net,
         master_addr,
+        obs: obs_guard.and_then(|g| g.finish()),
     })
 }

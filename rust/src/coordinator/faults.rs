@@ -83,9 +83,12 @@ impl FaultLog {
             })
     }
 
-    /// Append one event to the ordered log.
+    /// Append one event to the ordered log (mirrored into the obs
+    /// trace as a `fault_log` instant when tracing is on).
     pub fn log(&mut self, vtime: f64, round: usize, peer: usize, what: impl Into<String>) {
-        self.events.push(FaultEvent { vtime, round, peer, what: what.into() });
+        let what = what.into();
+        crate::obs::global().fault_log(vtime, round, peer, &what);
+        self.events.push(FaultEvent { vtime, round, peer, what });
     }
 
     /// Total workers declared dead over the whole run.

@@ -351,12 +351,22 @@ fn drive(
 
     let master_cfg = plan_master_cfg(cfg, k, d, opts.policy, opts.sync_allreduce);
     let chaos = cfg.chaos()?;
+    // Observability scope: opened before the worker threads spawn so
+    // their round records land in this run's registry. `None` (the
+    // default) costs nothing anywhere below.
+    let obs_guard = crate::obs::begin(&cfg.obs);
     let (master_link, worker_links) = in_process(k);
     // Chaos decorates both ends only when the plan is non-empty, so
     // fault-free runs pay nothing and stay bitwise-identical.
     let mut master_link: Box<dyn Transport> = Box::new(master_link);
     if !chaos.is_empty() {
         master_link = Box::new(ChaosTransport::wrap(master_link, chaos.clone(), None));
+    }
+    // Frame tracing decorates the master end only (it sees both
+    // directions); installed outermost so chaos-injected retransmits
+    // show up as the extra frames they are.
+    if cfg.obs.enabled && cfg.obs.trace {
+        master_link = crate::transport::ObsTransport::wrap(master_link);
     }
     let worker_links: Vec<Box<dyn Transport>> = worker_links
         .into_iter()
@@ -447,6 +457,14 @@ fn drive(
         worker_rounds.push(fin.local_rounds);
     }
 
+    // The metrics snapshot mirrors the same final per-peer stats that
+    // fill `RunReport.net` — CI asserts the two agree byte for byte.
+    let net = master_link.stats();
+    let rec = crate::obs::global();
+    rec.set_net(&net);
+    rec.gauge_set(crate::obs::Gauge::KLive, faults.k_live as u64);
+    let obs_snapshot = obs_guard.and_then(|g| g.finish());
+
     Ok(RunReport {
         label: opts.label.clone(),
         trace,
@@ -457,8 +475,9 @@ fn drive(
         vtime,
         total_updates,
         worker_rounds,
-        net: master_link.stats(),
+        net,
         faults,
+        obs: obs_snapshot,
     })
 }
 

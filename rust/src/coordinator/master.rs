@@ -52,6 +52,7 @@ use anyhow::Context;
 
 use crate::loss::Loss;
 use crate::metrics::{Evaluator, Trace, TracePoint};
+use crate::obs::FaultKind as ObsFault;
 use crate::session::observer::{EvalEvent, ObserverHandle, RoundEvent};
 use crate::transport::{Frame, Transport, TransportError};
 use crate::util::{norm_sq, Stopwatch};
@@ -154,6 +155,10 @@ struct Pending {
     msg: WorkerMsg,
     /// Global round at which it was received.
     received_at: usize,
+    /// Γ_k at pop time — the *measured* staleness of this update, the
+    /// quantity the configured Γ bound constrains (recorded into the
+    /// obs staleness histogram when the update merges).
+    staleness: usize,
 }
 
 /// Everything [`declare_dead`] mutates, bundled so the call site stays
@@ -219,6 +224,7 @@ fn declare_dead(d: DeclareDead<'_>) {
         w,
         format!("declared dead (last acked round {last}); k_live now {}", *d.k_live),
     );
+    crate::obs::global().fault(ObsFault::DeclaredDead, w, d.t, "suspicion strikes exhausted");
 }
 
 /// Run Algorithm 2 until the gap threshold or `max_rounds`.
@@ -251,6 +257,7 @@ pub fn run_master(
 ) -> anyhow::Result<MasterOutcome> {
     let k = cfg.k_nodes;
     assert_eq!(link.peers(), k);
+    let rec = crate::obs::global();
     let s_eff = cfg.s_barrier.min(k);
     let n = eval.n() as f64;
     let mut v = vec![0.0; eval.d()]; // v⁽⁰⁾ = (1/λn)·X·0 = 0
@@ -314,6 +321,10 @@ pub fn run_master(
     // is still worth keeping.
     let mut finals: Vec<Option<WorkerFinal>> = (0..k).map(|_| None).collect();
     'rounds: while t < cfg.max_rounds && !initial_stop {
+        // Wall-clock span of the whole gather: physical holds plus the
+        // virtual-order pops — everything the S-barrier makes us wait
+        // for before the merge can run.
+        let barrier_t0 = rec.timer();
         // ---- conservative DES step 1: hold one message per in-flight
         // live worker so the next virtual arrival is known exactly ----
         while computing_count > 0 {
@@ -341,6 +352,7 @@ pub fn run_master(
                         // or the worker redialed before it arrived):
                         // drop the copy, repeat the reply.
                         faults.per_peer[w].retransmits += 1;
+                        rec.fault(ObsFault::Retransmit, w, t, "duplicate update, reply repeated");
                         if let Some(reply) = last_reply[w].clone() {
                             let _ = link.send(w, reply);
                         }
@@ -395,10 +407,12 @@ pub fn run_master(
                             ),
                         );
                     }
+                    rec.fault(ObsFault::Rejoin, w, t, "rejoin handshake accepted");
                 }
                 Ok(Some((peer, Frame::Nack { .. }))) if peer < k => {
                     // "Resend your last reply" — our Merged was lost.
                     faults.per_peer[peer].retransmits += 1;
+                    rec.fault(ObsFault::Retransmit, peer, t, "nack, last reply resent");
                     if let Some(reply) = last_reply[peer].clone() {
                         let _ = link.send(peer, reply);
                     }
@@ -428,6 +442,7 @@ pub fn run_master(
                         if live[w] && computing[w] {
                             strikes[w] += 1;
                             faults.per_peer[w].stalls += 1;
+                            rec.fault(ObsFault::Stall, w, t, "silent liveness tick");
                             let _ = link.send(w, Frame::Nack { round: t });
                         }
                     }
@@ -436,6 +451,7 @@ pub fn run_master(
                     if live[peer] && computing[peer] {
                         strikes[peer] += 1;
                         faults.per_peer[peer].stalls += 1;
+                        rec.fault(ObsFault::Stall, peer, t, "peer silent past read timeout");
                         let _ = link.send(peer, Frame::Nack { round: t });
                     }
                 }
@@ -446,12 +462,14 @@ pub fn run_master(
                     if live[peer] {
                         strikes[peer] += 1;
                         faults.per_peer[peer].stalls += 1;
+                        rec.fault(ObsFault::Stall, peer, t, "peer connection lost");
                     }
                 }
                 Err(TransportError::Wire { peer, .. }) if peer < k && live[peer] => {
                     // A frame arrived corrupted (CRC reject): ask for a
                     // retransmit instead of tearing the cluster down.
                     faults.per_peer[peer].retransmits += 1;
+                    rec.fault(ObsFault::Retransmit, peer, t, "corrupt frame, nack sent");
                     let _ = link.send(peer, Frame::Nack { round: t });
                 }
                 Err(TransportError::Closed) => {
@@ -508,11 +526,13 @@ pub fn run_master(
             let Reverse(arr) = pq.pop().expect("all live workers are in P or pq");
             vtime = vtime.max(arr.vtime);
             let w = arr.msg.worker;
+            let staleness = gamma_k[w];
             gamma_k[w] = 1;
             dual_sums[w] = arr.msg.dual_sum;
             arrival_order.push_back(w);
-            pending[w] = Some(Pending { msg: arr.msg, received_at: t });
+            pending[w] = Some(Pending { msg: arr.msg, received_at: t, staleness });
         }
+        rec.barrier_wait(t, s_eff, barrier_t0);
 
         // ---- pick S workers ----
         // Priority: pending updates whose freshness counter has passed Γ
@@ -544,12 +564,15 @@ pub fn run_master(
         // ---- merge v ← v + ν Σ Δv at the gather-complete time ----
         let mut merged_ids = Vec::with_capacity(picked.len());
         let mut queue_wait = Vec::with_capacity(picked.len());
+        let mut round_updates = 0u64;
         for &w in &picked {
             let p = pending[w].take().expect("picked worker has a pending update");
             // One add per coordinate whether the delta arrived dense or
             // sparse — representations are merge-equivalent.
             p.msg.delta_v.add_scaled_into(&mut v, cfg.nu);
             total_updates += p.msg.updates;
+            round_updates += p.msg.updates;
+            rec.merged_update(t + 1, w, p.staleness, vtime);
             merged_ids.push((w, p.msg.local_round));
             queue_wait.push(t - p.received_at);
         }
@@ -562,6 +585,7 @@ pub fn run_master(
             }
         }
         t += 1;
+        rec.master_round(round_updates);
 
         let merge_ev = MergeEvent {
             round: t,
@@ -582,9 +606,11 @@ pub fn run_master(
         // ---- evaluate + stopping decision ----
         let mut stop = t >= cfg.max_rounds || observer_stop;
         if t % cfg.eval_every == 0 || stop {
+            let eval_t0 = rec.timer();
             let primal = eval.primal(loss, &v, cfg.lambda);
             let dual = dual_sums.iter().sum::<f64>() / n - 0.5 * cfg.lambda * norm_sq(&v);
             let gap = primal - dual;
+            rec.eval(t, eval_t0);
             let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
@@ -688,12 +714,14 @@ pub fn run_master(
                     // Too late to rejoin the barrier — tell it to wrap
                     // up (it will answer with its Final).
                     faults.per_peer[peer].rejoins += 1;
+                    rec.fault(ObsFault::Rejoin, peer, t, "rejoin during shutdown drain");
                     let f = Frame::Shutdown { vtime, round: t };
                     last_reply[peer] = Some(f.clone());
                     let _ = link.send(peer, f);
                 }
                 Ok(Some((peer, Frame::Nack { .. }))) if peer < k => {
                     faults.per_peer[peer].retransmits += 1;
+                    rec.fault(ObsFault::Retransmit, peer, t, "nack during shutdown drain");
                     if let Some(reply) = last_reply[peer].clone() {
                         let _ = link.send(peer, reply);
                     }
@@ -718,6 +746,7 @@ pub fn run_master(
                         if live[w] && finals[w].is_none() {
                             strikes[w] += 1;
                             faults.per_peer[w].stalls += 1;
+                            rec.fault(ObsFault::Stall, w, t, "silent during shutdown drain");
                         }
                     }
                 }
@@ -725,6 +754,7 @@ pub fn run_master(
                     if live[peer] && finals[peer].is_none() {
                         strikes[peer] += 1;
                         faults.per_peer[peer].stalls += 1;
+                        rec.fault(ObsFault::Stall, peer, t, "silent during shutdown drain");
                     }
                 }
                 Err(TransportError::PeerGone { peer, detail }) if peer < k => {
@@ -740,10 +770,12 @@ pub fn run_master(
                         );
                         strikes[peer] += 1;
                         faults.per_peer[peer].stalls += 1;
+                        rec.fault(ObsFault::Stall, peer, t, "connection lost during drain");
                     }
                 }
                 Err(TransportError::Wire { peer, .. }) if peer < k => {
                     faults.per_peer[peer].retransmits += 1;
+                    rec.fault(ObsFault::Retransmit, peer, t, "corrupt frame during drain");
                     let _ = link.send(peer, Frame::Nack { round: t });
                 }
                 Err(TransportError::Closed) => break,
@@ -769,6 +801,7 @@ pub fn run_master(
                                  report); k_live now {k_live}"
                             ),
                         );
+                        rec.fault(ObsFault::DeclaredDead, w, t, "no final report");
                     }
                 }
             }

@@ -60,6 +60,10 @@ pub struct RunReport {
     /// the master logged, plus the surviving `k_live`. Empty/default
     /// for single-node algorithms and clean for undisturbed runs.
     pub faults: FaultLog,
+    /// Observability snapshot (counters, gauges, histograms, trace
+    /// timeline) captured when `[obs]` is enabled; `None` otherwise.
+    /// Never serialized by `--dump`, so bitwise-parity checks stand.
+    pub obs: Option<crate::obs::ObsSnapshot>,
 }
 
 impl RunReport {

@@ -28,6 +28,8 @@ pub fn run(data: &Dataset, cfg: &ExpConfig) -> anyhow::Result<RunReport> {
 pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
     let cfg = ctx.cfg;
     cfg.validate()?;
+    let obs_guard = crate::obs::begin(&cfg.obs);
+    let rec = crate::obs::global();
     let loss = cfg.loss.build();
     let mut rng = Rng::new(cfg.seed);
     let partition = Partition::build(data.n(), 1, cfg.r_cores, cfg.partition, &mut rng);
@@ -76,6 +78,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             break;
         }
         let stats = solver.run_round(data, &*loss, &norms, &costs, cfg.h_local);
+        rec.master_round(stats.updates);
         solver.commit(1.0); // ν = 1: α_cur is the truth
         commits += 1;
         // ν = 1 keeps the tracked dual exact; the periodic rescan only
@@ -91,11 +94,13 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
             .on_round(&RoundEvent { round: t, vtime, updates: total_updates })
             .is_break();
         if t % cfg.eval_every == 0 || t == cfg.max_rounds || stop {
+            let eval_t0 = rec.timer();
             solver.v.snapshot_into(&mut v_buf);
             // One primal pass; the dual rides on the tracked sums.
             let primal = eval.primal(&*loss, &v_buf, cfg.lambda);
             let dual = solver.dual_sum() / n - 0.5 * cfg.lambda * norm_sq(&v_buf);
             let gap = primal - dual;
+            rec.eval(t, eval_t0);
             let point = TracePoint {
                 round: t,
                 wall_secs: sw.elapsed_secs(),
@@ -132,6 +137,7 @@ pub fn run_ctx(data: &Dataset, ctx: &RunCtx<'_>) -> anyhow::Result<RunReport> {
         worker_rounds: vec![rounds],
         net: Default::default(),
         faults: Default::default(),
+        obs: obs_guard.and_then(|g| g.finish()),
     })
 }
 

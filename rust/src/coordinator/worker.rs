@@ -116,10 +116,14 @@ pub fn run_worker(
     let mut last_global_round = 0usize;
 
     loop {
-        // R cores × H iterations (lines 4–9).
+        // R cores × H iterations (lines 4–9). The obs span brackets the
+        // physical compute only — one record per round, never per
+        // update, so the hot loop stays untouched.
+        let round_t0 = crate::obs::global().timer();
         let stats = solver.run_round(data, loss, norms, costs, cfg.h_local);
         total_updates += stats.updates;
         vtime += cfg.straggler * stats.node_secs();
+        crate::obs::global().worker_round(cfg.worker_id, local_rounds, stats.updates, round_t0);
 
         // Commit α ← α + ν·δ (line 12).
         //

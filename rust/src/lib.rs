@@ -55,6 +55,7 @@ pub mod data;
 pub mod harness;
 pub mod loss;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "xla-runtime")]
 pub mod runtime;
 pub mod session;

@@ -11,7 +11,9 @@
 //! * `data`      — shard store: `pack` LIBSVM text into binary CSR
 //!   shards, `inspect` a packed store.
 //! * `stats`     — dataset statistics (Table 1 columns).
-//! * `bench`     — regenerate a paper table/figure (table1, fig3…fig7).
+//! * `bench`     — regenerate a paper table/figure (table1, fig3…fig7),
+//!   or `bench report`: latest-vs-previous deltas over the committed
+//!   `BENCH_*.json` perf trajectories.
 //! * `artifacts` — list/verify the AOT artifacts.
 
 use hybrid_dca::cli::{self, FlagSpec};
@@ -20,6 +22,7 @@ use hybrid_dca::coordinator::{distributed, RunReport};
 use hybrid_dca::data::{libsvm, DatasetStats, Preset, Strategy};
 use hybrid_dca::harness;
 use hybrid_dca::loss::LossKind;
+use hybrid_dca::obs::report::kv_line;
 use hybrid_dca::session::{
     self, Chain, CsvStreamObserver, DataSource, Observer, ObserverHandle, PrintObserver, Session,
 };
@@ -71,7 +74,7 @@ fn print_usage() {
          \x20 gen-data   write a synthetic preset as a LIBSVM file\n\
          \x20 data       shard store: pack LIBSVM → binary CSR shards, inspect a store\n\
          \x20 stats      dataset statistics (Table 1)\n\
-         \x20 bench      regenerate a paper table/figure (table1, fig3..fig7)\n\
+         \x20 bench      regenerate a paper table/figure (table1, fig3..fig7) or 'report'\n\
          \x20 artifacts  list/verify the AOT artifacts\n\n\
          Use '<subcommand> --help' for flags."
     );
@@ -120,6 +123,16 @@ fn train_specs() -> Vec<FlagSpec> {
             "chaos",
             "",
             "fault-injection plan, e.g. \"seed=7;kill:worker=1,round=2\" (see README)",
+        ),
+        FlagSpec::value(
+            "metrics-out",
+            "",
+            "write the run's metrics snapshot here (.json, else Prometheus text)",
+        ),
+        FlagSpec::value(
+            "trace-out",
+            "",
+            "write a Chrome-trace timeline here (open in Perfetto / chrome://tracing)",
         ),
         FlagSpec::switch("help", "show help"),
     ]
@@ -221,6 +234,17 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
         cfg.chaos_plan = chaos.to_string();
         cfg.validate()?;
     }
+    // Same contract for the observability outputs: they watch a run,
+    // they do not define the experiment. --trace-out implies the
+    // timeline tracer; either flag implies the metrics registry.
+    let metrics_out = args.get("metrics-out").unwrap().to_string();
+    let trace_out = args.get("trace-out").unwrap().to_string();
+    if !metrics_out.is_empty() || !trace_out.is_empty() {
+        cfg.obs.enabled = true;
+    }
+    if !trace_out.is_empty() {
+        cfg.obs.trace = true;
+    }
     // The typed session API is the execution path; the flat config is
     // only the CLI-flag surface.
     let session = Session::from_exp_config(&cfg)?;
@@ -282,6 +306,19 @@ fn cmd_train(argv: &[String]) -> anyhow::Result<()> {
     if !report.faults.is_clean() {
         print_fault_report(&report);
     }
+    if let Some(snap) = &report.obs {
+        for line in hybrid_dca::obs::report::obs_lines(snap) {
+            println!("{line}");
+        }
+        if !metrics_out.is_empty() {
+            hybrid_dca::obs::export::write_metrics(&metrics_out, snap)?;
+            println!("# obs: metrics written to {metrics_out}");
+        }
+        if !trace_out.is_empty() {
+            hybrid_dca::obs::export::write_trace(&trace_out, snap)?;
+            println!("# obs: trace written to {trace_out}");
+        }
+    }
     let dump = args.get("dump").unwrap();
     if !dump.is_empty() {
         dump_state(dump, &report)?;
@@ -325,17 +362,32 @@ fn run_train(
 /// Per-peer wire traffic, as seen from the master. `sent` is
 /// master→worker (v broadcasts), `recv` is worker→master (Δv updates) —
 /// sparse rounds show up directly as smaller `recv` byte counts.
+/// Formatting goes through [`kv_line`] so all `# <channel>:` report
+/// lines share one shape; the exact strings are grepped by CI.
 fn print_transport_report(report: &RunReport) {
     for (w, p) in report.net.per_peer.iter().enumerate() {
         println!(
-            "# transport: worker {w} sent={}B/{} frames recv={}B/{} frames",
-            p.sent_bytes, p.sent_frames, p.recv_bytes, p.recv_frames
+            "{}",
+            kv_line(
+                "transport",
+                &format!("worker {w}"),
+                &[
+                    ("sent", format!("{}B/{} frames", p.sent_bytes, p.sent_frames)),
+                    ("recv", format!("{}B/{} frames", p.recv_bytes, p.recv_frames)),
+                ]
+            )
         );
     }
     println!(
-        "# transport: total sent={}B recv={}B",
-        report.net.sent_bytes(),
-        report.net.recv_bytes()
+        "{}",
+        kv_line(
+            "transport",
+            "total",
+            &[
+                ("sent", format!("{}B", report.net.sent_bytes())),
+                ("recv", format!("{}B", report.net.recv_bytes())),
+            ]
+        )
     );
 }
 
@@ -349,22 +401,41 @@ fn print_fault_report(report: &RunReport) {
             continue;
         }
         println!(
-            "# faults: worker {w} stalls={} retransmits={} rejoins={} declared-dead={} \
-             last-acked-round={}",
-            p.stalls, p.retransmits, p.rejoins, p.declared_dead, p.last_acked_round
+            "{}",
+            kv_line(
+                "faults",
+                &format!("worker {w}"),
+                &[
+                    ("stalls", p.stalls.to_string()),
+                    ("retransmits", p.retransmits.to_string()),
+                    ("rejoins", p.rejoins.to_string()),
+                    ("declared-dead", p.declared_dead.to_string()),
+                    ("last-acked-round", p.last_acked_round.to_string()),
+                ]
+            )
         );
     }
     for e in &f.events {
         println!(
-            "# faults: [vtime {:.3} round {}] worker {}: {}",
-            e.vtime, e.round, e.peer, e.what
+            "{}",
+            kv_line(
+                "faults",
+                &format!("[vtime {:.3} round {}] worker {}: {}", e.vtime, e.round, e.peer, e.what),
+                &[]
+            )
         );
     }
     println!(
-        "# faults: k_live={} deaths={} rejoins={}",
-        f.k_live,
-        f.total_deaths(),
-        f.total_rejoins()
+        "{}",
+        kv_line(
+            "faults",
+            "",
+            &[
+                ("k_live", f.k_live.to_string()),
+                ("deaths", f.total_deaths().to_string()),
+                ("rejoins", f.total_rejoins().to_string()),
+            ]
+        )
     );
 }
 
@@ -411,6 +482,16 @@ fn cmd_node(argv: &[String]) -> anyhow::Result<()> {
         FlagSpec::value("store", "", "shard-store directory (default: the master's store path)"),
         FlagSpec::value("connect-timeout", "10", "seconds to keep retrying the connect"),
         FlagSpec::value("read-timeout", "30", "seconds of master silence before giving up"),
+        FlagSpec::value(
+            "metrics-out",
+            "",
+            "write this node's metrics snapshot here (.json, else Prometheus text)",
+        ),
+        FlagSpec::value(
+            "trace-out",
+            "",
+            "write this node's Chrome-trace timeline here (open in Perfetto)",
+        ),
         FlagSpec::switch("help", "show help"),
     ];
     let args = cli::parse(&specs, argv)?;
@@ -432,7 +513,16 @@ fn cmd_node(argv: &[String]) -> anyhow::Result<()> {
     tcfg.validate()?;
     let store = args.get("store").unwrap();
     let store_override = if store.is_empty() { None } else { Some(store) };
-    let summary = distributed::run_worker_node(&tcfg, store_override)?;
+    // Either output flag turns recording on for this node even when
+    // the master's config runs dark; the master's `[obs]` table (riding
+    // in on the Assign frame) also turns it on cluster-wide.
+    let metrics_out = args.get("metrics-out").unwrap();
+    let trace_out = args.get("trace-out").unwrap();
+    let obs_override = hybrid_dca::obs::ObsCfg {
+        enabled: !metrics_out.is_empty() || !trace_out.is_empty(),
+        trace: !trace_out.is_empty(),
+    };
+    let summary = distributed::run_worker_node(&tcfg, store_override, obs_override)?;
     println!(
         "# worker {} done: rounds={} updates={} sent={}B recv={}B (master at {})",
         summary.worker_id,
@@ -442,6 +532,16 @@ fn cmd_node(argv: &[String]) -> anyhow::Result<()> {
         summary.net.recv_bytes(),
         summary.master_addr
     );
+    if let Some(snap) = &summary.obs {
+        if !metrics_out.is_empty() {
+            hybrid_dca::obs::export::write_metrics(metrics_out, snap)?;
+            println!("# obs: metrics written to {metrics_out}");
+        }
+        if !trace_out.is_empty() {
+            hybrid_dca::obs::export::write_trace(trace_out, snap)?;
+            println!("# obs: trace written to {trace_out}");
+        }
+    }
     Ok(())
 }
 
@@ -656,11 +756,108 @@ fn cmd_bench(argv: &[String]) -> anyhow::Result<()> {
         "fig5" => harness::fig5::run_and_print(harness::QuickFull::Quick),
         "fig6" => harness::fig6::run_and_print(harness::QuickFull::Quick),
         "fig7" => harness::fig7::run_and_print(harness::QuickFull::Quick),
+        "report" => cmd_bench_report(&argv[1..]),
         other => anyhow::bail!(
-            "unknown bench '{other}'; expected table1|fig3|fig4|fig5|fig6|fig7 \
+            "unknown bench '{other}'; expected table1|fig3|fig4|fig5|fig6|fig7|report \
              (full sweeps: cargo bench --bench <name>)"
         ),
     }
+}
+
+/// The perf trajectories `cargo bench` appends to (committed at the
+/// repo root).
+const BENCH_TRAJECTORIES: [&str; 3] =
+    ["BENCH_hot_loop.json", "BENCH_data_io.json", "BENCH_transport.json"];
+
+/// `bench report` — compare the latest run in each committed
+/// `BENCH_*.json` trajectory against the previous one, per benched
+/// path, on `p50_secs`. Advisory (always exits 0): the first step
+/// toward the ROADMAP's CI perf-regression gate.
+fn cmd_bench_report(argv: &[String]) -> anyhow::Result<()> {
+    let specs = vec![
+        FlagSpec::value("dir", ".", "directory holding the BENCH_*.json trajectories"),
+        FlagSpec::value("band", "5", "noise band in percent; |Δp50| inside it prints as '~'"),
+        FlagSpec::switch("help", "show help"),
+    ];
+    let args = cli::parse(&specs, argv)?;
+    if args.flag("help") {
+        print!("{}", cli::help("bench report", "latest-vs-previous perf deltas", &specs));
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get("dir").unwrap());
+    let band: f64 = args.get_parse("band")?;
+    anyhow::ensure!(band.is_finite() && band >= 0.0, "--band must be a percentage ≥ 0");
+    for name in BENCH_TRAJECTORIES {
+        let path = dir.join(name);
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            println!("# {name}: missing (skipped)");
+            continue;
+        };
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        print_trajectory_deltas(name, &doc, band)?;
+    }
+    Ok(())
+}
+
+/// One trajectory's latest-vs-previous comparison. Rows are matched by
+/// their `path` name, so a reordered or extended bench still lines up.
+fn print_trajectory_deltas(name: &str, doc: &Json, band_pct: f64) -> anyhow::Result<()> {
+    let runs = doc
+        .get("runs")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{name}: no 'runs' array"))?;
+    let label = |run: &Json| -> String {
+        run.get("label").and_then(|l| l.as_str()).unwrap_or("?").to_string()
+    };
+    let rows = |run: &Json| -> Vec<(String, f64)> {
+        run.get("rows")
+            .and_then(|r| r.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|row| {
+                        let p = row.get("path")?.as_str()?;
+                        let p50 = row.get("p50_secs")?.as_f64()?;
+                        Some((p.to_string(), p50))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let Some(latest) = runs.last() else {
+        println!("# {name}: no runs recorded");
+        return Ok(());
+    };
+    if runs.len() < 2 {
+        println!("# {name}: one run ('{}') — nothing to compare yet", label(latest));
+        return Ok(());
+    }
+    let prev = &runs[runs.len() - 2];
+    println!(
+        "# {name}: latest '{}' vs previous '{}' (noise band ±{band_pct}%)",
+        label(latest),
+        label(prev)
+    );
+    let prev_rows = rows(prev);
+    for (p, p50) in rows(latest) {
+        match prev_rows.iter().find(|(q, _)| *q == p) {
+            Some(&(_, prev_p50)) if prev_p50 > 0.0 => {
+                let delta_pct = (p50 - prev_p50) / prev_p50 * 100.0;
+                let verdict = if delta_pct.abs() <= band_pct {
+                    "~ within band"
+                } else if delta_pct > 0.0 {
+                    "SLOWER"
+                } else {
+                    "faster"
+                };
+                println!(
+                    "    {p:<28} p50 {prev_p50:.3e}s → {p50:.3e}s  {delta_pct:+.1}%  {verdict}"
+                );
+            }
+            _ => println!("    {p:<28} p50 {p50:.3e}s  (new path)"),
+        }
+    }
+    Ok(())
 }
 
 #[cfg(not(feature = "xla-runtime"))]

@@ -153,7 +153,13 @@ impl<'a> Evaluator<'a> {
                 fold_in_memory(data, &mut self.partials, threads, &term)
             }
             EvalSource::Sharded(store) => {
-                fold_sharded(store, &mut self.partials, threads, &term)
+                fold_sharded(store, &mut self.partials, threads, &term);
+                // Surface the store's lease high-water mark: how many
+                // shards this eval actually held resident at once.
+                crate::obs::global().gauge_max(
+                    crate::obs::Gauge::ResidencyPeak,
+                    store.residency_peak() as u64,
+                );
             }
         }
         self.partials.iter().sum()

@@ -1,0 +1,250 @@
+//! Snapshot exporters: Prometheus text exposition, metrics JSON, and
+//! Chrome-trace-event JSON (all serde-free via `util::json`).
+//!
+//! `train --metrics-out PATH` picks the format by extension — `.json`
+//! writes [`metrics_json`], anything else writes
+//! [`metrics_prometheus`] — and `--trace-out PATH` always writes
+//! [`trace_json`] (the format Perfetto / `chrome://tracing` load).
+
+use super::ObsSnapshot;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Metric-name prefix for the Prometheus exposition, so a scrape of a
+/// mixed fleet can select this process family.
+const PROM_PREFIX: &str = "hdca_";
+
+/// The metrics snapshot as one JSON object: `counters` and `gauges`
+/// are flat name→value maps in catalog order, `histograms` carry
+/// cumulative `le` buckets, `net` the per-peer byte/frame totals
+/// (equal to `RunReport.net` by construction).
+pub fn metrics_json(snap: &ObsSnapshot) -> Json {
+    let counters =
+        snap.counters.iter().map(|&(n, v)| (n.to_string(), Json::Num(v as f64))).collect();
+    let gauges = snap.gauges.iter().map(|&(n, v)| (n.to_string(), Json::Num(v as f64))).collect();
+    let hists = snap
+        .hists
+        .iter()
+        .map(|h| {
+            Json::Obj(vec![
+                ("name".into(), Json::Str(h.name.into())),
+                ("count".into(), Json::Num(h.count as f64)),
+                ("sum".into(), Json::Num(h.sum as f64)),
+                (
+                    "buckets".into(),
+                    Json::Arr(
+                        h.buckets
+                            .iter()
+                            .map(|&(le, cum)| {
+                                Json::Obj(vec![
+                                    ("le".into(), Json::Num(le as f64)),
+                                    ("count".into(), Json::Num(cum as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let net = snap
+        .net
+        .iter()
+        .enumerate()
+        .map(|(peer, p)| {
+            Json::Obj(vec![
+                ("peer".into(), Json::Num(peer as f64)),
+                ("sent_bytes".into(), Json::Num(p.sent_bytes as f64)),
+                ("recv_bytes".into(), Json::Num(p.recv_bytes as f64)),
+                ("sent_frames".into(), Json::Num(p.sent_frames as f64)),
+                ("recv_frames".into(), Json::Num(p.recv_frames as f64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("counters".into(), Json::Obj(counters)),
+        ("gauges".into(), Json::Obj(gauges)),
+        ("histograms".into(), Json::Arr(hists)),
+        ("net".into(), Json::Arr(net)),
+    ])
+}
+
+/// The metrics snapshot in Prometheus text exposition format
+/// (version 0.0.4): `# TYPE` lines, `_bucket{le=...}` cumulative
+/// histogram series ending in `le="+Inf"`, and per-peer net counters
+/// as labeled series.
+pub fn metrics_prometheus(snap: &ObsSnapshot) -> String {
+    let mut out = String::new();
+    for &(name, v) in &snap.counters {
+        let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} counter");
+        let _ = writeln!(out, "{PROM_PREFIX}{name} {v}");
+    }
+    for &(name, v) in &snap.gauges {
+        let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} gauge");
+        let _ = writeln!(out, "{PROM_PREFIX}{name} {v}");
+    }
+    for h in &snap.hists {
+        let name = h.name;
+        let _ = writeln!(out, "# TYPE {PROM_PREFIX}{name} histogram");
+        for &(le, cum) in &h.buckets {
+            let _ = writeln!(out, "{PROM_PREFIX}{name}_bucket{{le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "{PROM_PREFIX}{name}_bucket{{le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(out, "{PROM_PREFIX}{name}_sum {}", h.sum);
+        let _ = writeln!(out, "{PROM_PREFIX}{name}_count {}", h.count);
+    }
+    let net_fields: [(&str, fn(&super::PeerNet) -> u64); 4] = [
+        ("net_sent_bytes", |p| p.sent_bytes),
+        ("net_recv_bytes", |p| p.recv_bytes),
+        ("net_sent_frames", |p| p.sent_frames),
+        ("net_recv_frames", |p| p.recv_frames),
+    ];
+    for (which, get) in net_fields {
+        if snap.net.is_empty() {
+            continue;
+        }
+        let _ = writeln!(out, "# TYPE {PROM_PREFIX}{which} counter");
+        for (peer, p) in snap.net.iter().enumerate() {
+            let _ = writeln!(out, "{PROM_PREFIX}{which}{{peer=\"{peer}\"}} {}", get(p));
+        }
+    }
+    out
+}
+
+/// The timeline as Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` object form): complete spans carry
+/// `ph: "X"` with `ts`/`dur` in microseconds, instants `ph: "i"` with
+/// thread scope. `pid` is the recording OS process, `tid` 0 the
+/// master, `tid = w + 1` worker `w`.
+pub fn trace_json(snap: &ObsSnapshot) -> Json {
+    let pid = std::process::id() as f64;
+    let events = snap
+        .trace
+        .iter()
+        .map(|e| {
+            let mut kv = vec![
+                ("name".into(), Json::Str(e.name.into())),
+                ("cat".into(), Json::Str(e.cat.into())),
+                ("ph".into(), Json::Str(e.ph.to_string())),
+                ("ts".into(), Json::Num(e.ts_us as f64)),
+            ];
+            if e.ph == 'X' {
+                kv.push(("dur".into(), Json::Num(e.dur_us as f64)));
+            }
+            if e.ph == 'i' {
+                // Thread-scoped instants render as small arrows.
+                kv.push(("s".into(), Json::Str("t".into())));
+            }
+            kv.push(("pid".into(), Json::Num(pid)));
+            kv.push(("tid".into(), Json::Num(e.tid as f64)));
+            kv.push((
+                "args".into(),
+                Json::Obj(e.args.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect()),
+            ));
+            Json::Obj(kv)
+        })
+        .collect();
+    Json::Obj(vec![("traceEvents".into(), Json::Arr(events))])
+}
+
+/// Write the metrics snapshot to `path`, JSON for a `.json` extension,
+/// Prometheus text otherwise.
+pub fn write_metrics(path: &str, snap: &ObsSnapshot) -> anyhow::Result<()> {
+    let body = if path.ends_with(".json") {
+        metrics_json(snap).to_pretty()
+    } else {
+        metrics_prometheus(snap)
+    };
+    std::fs::write(path, body).map_err(|e| anyhow::anyhow!("write metrics {path}: {e}"))
+}
+
+/// Write the Chrome-trace JSON to `path`.
+pub fn write_trace(path: &str, snap: &ObsSnapshot) -> anyhow::Result<()> {
+    std::fs::write(path, trace_json(snap).to_pretty())
+        .map_err(|e| anyhow::anyhow!("write trace {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{HistSnapshot, PeerNet, TraceEvent};
+
+    fn sample() -> ObsSnapshot {
+        ObsSnapshot {
+            counters: vec![("rounds_total", 8), ("merges_total", 14)],
+            gauges: vec![("eval_shard_residency_peak", 1)],
+            hists: vec![HistSnapshot {
+                name: "staleness_rounds",
+                count: 14,
+                sum: 19,
+                buckets: vec![(1, 10), (3, 14)],
+            }],
+            net: vec![
+                PeerNet { sent_bytes: 100, recv_bytes: 200, sent_frames: 3, recv_frames: 4 },
+                PeerNet { sent_bytes: 10, recv_bytes: 20, sent_frames: 1, recv_frames: 2 },
+            ],
+            trace: vec![
+                TraceEvent {
+                    name: "worker_round",
+                    cat: "compute",
+                    ph: 'X',
+                    ts_us: 5,
+                    dur_us: 120,
+                    tid: 1,
+                    args: vec![("updates", Json::Num(256.0))],
+                },
+                TraceEvent {
+                    name: "merge",
+                    cat: "master",
+                    ph: 'i',
+                    ts_us: 130,
+                    dur_us: 0,
+                    tid: 0,
+                    args: vec![("staleness", Json::Num(2.0))],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn metrics_json_round_trips() {
+        let j = metrics_json(&sample());
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("rounds_total").unwrap().as_f64(), Some(8.0));
+        let net = back.get("net").unwrap().as_arr().unwrap();
+        assert_eq!(net.len(), 2);
+        assert_eq!(net[1].get("recv_bytes").unwrap().as_f64(), Some(20.0));
+        let h = &back.get("histograms").unwrap().as_arr().unwrap()[0];
+        assert_eq!(h.get("count").unwrap().as_f64(), Some(14.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = metrics_prometheus(&sample());
+        assert!(text.contains("# TYPE hdca_rounds_total counter"), "{text}");
+        assert!(text.contains("hdca_rounds_total 8"), "{text}");
+        assert!(text.contains("hdca_eval_shard_residency_peak 1"), "{text}");
+        assert!(text.contains("hdca_staleness_rounds_bucket{le=\"3\"} 14"), "{text}");
+        assert!(text.contains("hdca_staleness_rounds_bucket{le=\"+Inf\"} 14"), "{text}");
+        assert!(text.contains("hdca_staleness_rounds_sum 19"), "{text}");
+        assert!(text.contains("hdca_net_sent_bytes{peer=\"0\"} 100"), "{text}");
+        assert!(text.contains("hdca_net_recv_frames{peer=\"1\"} 2"), "{text}");
+    }
+
+    #[test]
+    fn trace_json_is_chrome_shaped() {
+        let j = trace_json(&sample());
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let span = &events[0];
+        assert_eq!(span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(120.0));
+        assert_eq!(span.get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(span.get("args").unwrap().get("updates").unwrap().as_f64(), Some(256.0));
+        let inst = &events[1];
+        assert_eq!(inst.get("ph").unwrap().as_str(), Some("i"));
+        assert!(inst.get("dur").is_none(), "instants carry no dur");
+        assert_eq!(inst.get("s").unwrap().as_str(), Some("t"));
+    }
+}

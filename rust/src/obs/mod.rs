@@ -1,0 +1,893 @@
+//! Process-wide observability: a run-scoped metrics registry and an
+//! async-timeline tracer, off by default and costing one relaxed
+//! atomic load per record call when disabled.
+//!
+//! ## Design
+//!
+//! The paper's contribution is a *schedule* — the bounded barrier `S`,
+//! the staleness bound `Γ`, stragglers overlapping compute with
+//! communication — and none of it is visible in a final objective
+//! value. This module makes the schedule observable through one seam,
+//! [`Recorder`], that every layer reports into:
+//!
+//! * **Metrics** — fixed-catalog counters, gauges, and log2-bucket
+//!   histograms (see [`Counter`], [`Gauge`], [`HistId`]) allocated once
+//!   per process and updated through the `util::sync` façade with
+//!   `Relaxed` ordering. The solver side aggregates *per round*, never
+//!   per coordinate update, so the 18.3M updates/s hot loop is
+//!   untouched. A run's snapshot lands in `RunReport.obs`, prints as
+//!   `# obs:` lines, and exports as Prometheus text or JSON
+//!   (`train --metrics-out`).
+//! * **Timeline trace** — Chrome-trace-event JSON
+//!   (`train --trace-out`, open in Perfetto or `chrome://tracing`):
+//!   spans for worker compute rounds, S-barrier waits, and eval
+//!   rounds; instants for merges (tagged with the *measured* staleness
+//!   Γ of each merged update), per-peer frame send/recv with byte
+//!   sizes, and every chaos/fault event (stall, retransmit,
+//!   declared-dead, rejoin).
+//!
+//! ## Lifecycle and parity
+//!
+//! The recorder is process-global ([`global`]) because worker threads,
+//! transport decorators, and the evaluator pool all need it without
+//! threading a handle through every signature. A run brackets itself
+//! with [`begin`] / [`RunGuard::finish`]; the first `begin` in a
+//! process (the *primary* — the master, or a `node` process's single
+//! run) resets and enables the registry and its `finish` takes the
+//! snapshot. Nested begins (worker threads of an in-process cluster
+//! test) share the primary's registry and snapshot nothing, so a
+//! same-process master + workers topology cannot deadlock or
+//! double-count.
+//!
+//! Observability never feeds back into the solve: recording only
+//! *reads* solver state, `RunReport.obs` is excluded from `--dump` by
+//! construction, and with the default `ObsCfg { enabled: false }`
+//! every record call is a single relaxed load — which is why all
+//! bitwise-parity CI runs unchanged.
+
+pub mod export;
+pub mod report;
+
+use crate::transport::TransportStats;
+use crate::util::json::Json;
+use crate::util::sync::{AtomicBool, AtomicU64, Mutex, OnceLock, Ordering};
+use std::time::Instant;
+
+/// `[obs]` config table: both knobs default off, so observability is
+/// strictly opt-in (`--metrics-out` / `--trace-out` imply `enabled`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ObsCfg {
+    /// Master switch for the metrics registry (and the trace, below).
+    pub enabled: bool,
+    /// Also record the Chrome-trace-event timeline. Implies nothing
+    /// about `enabled` — a trace without metrics makes no sense, so
+    /// `trace = true` only records when `enabled` is also set.
+    pub trace: bool,
+}
+
+/// Monotonic counters in the fixed catalog (see README "Observability"
+/// for meanings). Indexes into the recorder's counter table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Master global rounds completed (merge events).
+    Rounds,
+    /// Worker updates folded into merges (≥ rounds when S > 1).
+    Merges,
+    /// Coordinate updates carried by merged messages (master view).
+    Updates,
+    /// Local rounds completed across all workers.
+    WorkerRounds,
+    /// Objective evaluations performed.
+    Evals,
+    /// Liveness-tick strikes against silent computing peers.
+    FaultStalls,
+    /// Nack-triggered retransmits (corrupt or lost frames).
+    FaultRetransmits,
+    /// Workers readmitted through the Rejoin handshake.
+    FaultRejoins,
+    /// Workers declared dead by the suspicion policy.
+    FaultDeaths,
+}
+
+impl Counter {
+    pub const ALL: [Counter; 9] = [
+        Counter::Rounds,
+        Counter::Merges,
+        Counter::Updates,
+        Counter::WorkerRounds,
+        Counter::Evals,
+        Counter::FaultStalls,
+        Counter::FaultRetransmits,
+        Counter::FaultRejoins,
+        Counter::FaultDeaths,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Rounds => "rounds_total",
+            Counter::Merges => "merges_total",
+            Counter::Updates => "updates_total",
+            Counter::WorkerRounds => "worker_rounds_total",
+            Counter::Evals => "evals_total",
+            Counter::FaultStalls => "fault_stalls_total",
+            Counter::FaultRetransmits => "fault_retransmits_total",
+            Counter::FaultRejoins => "fault_rejoins_total",
+            Counter::FaultDeaths => "fault_deaths_total",
+        }
+    }
+}
+
+/// Gauges (last-value or high-water-mark) in the fixed catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak simultaneously-resident decoded shards during evaluation
+    /// (the PR 6 residency gauge, surfaced from `store::sharded`).
+    ResidencyPeak,
+    /// Live workers at the end of the run (`K_live` after deaths and
+    /// rejoins).
+    KLive,
+}
+
+impl Gauge {
+    pub const ALL: [Gauge; 2] = [Gauge::ResidencyPeak, Gauge::KLive];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::ResidencyPeak => "eval_shard_residency_peak",
+            Gauge::KLive => "k_live",
+        }
+    }
+}
+
+/// Log2-bucket histograms in the fixed catalog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HistId {
+    /// Measured staleness Γ of each merged update, in rounds — the
+    /// distribution the configured `gamma` bound caps.
+    Staleness,
+    /// Wall-clock time the master spent holding the S-barrier open,
+    /// per round, in microseconds.
+    BarrierWaitUs,
+    /// Wall-clock time per worker compute round (R cores × H
+    /// iterations), in microseconds.
+    WorkerRoundUs,
+    /// Wall-clock time per objective evaluation, in microseconds.
+    EvalUs,
+}
+
+impl HistId {
+    pub const ALL: [HistId; 4] =
+        [HistId::Staleness, HistId::BarrierWaitUs, HistId::WorkerRoundUs, HistId::EvalUs];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HistId::Staleness => "staleness_rounds",
+            HistId::BarrierWaitUs => "barrier_wait_us",
+            HistId::WorkerRoundUs => "worker_round_us",
+            HistId::EvalUs => "eval_us",
+        }
+    }
+}
+
+/// Typed fault kinds — the trace-event names the chaos tests grep for,
+/// and the mapping onto the `fault_*_total` counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Stall,
+    Retransmit,
+    DeclaredDead,
+    Rejoin,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Stall => "stall",
+            FaultKind::Retransmit => "retransmit",
+            FaultKind::DeclaredDead => "declared_dead",
+            FaultKind::Rejoin => "rejoin",
+        }
+    }
+
+    fn counter(self) -> Counter {
+        match self {
+            FaultKind::Stall => Counter::FaultStalls,
+            FaultKind::Retransmit => Counter::FaultRetransmits,
+            FaultKind::DeclaredDead => Counter::FaultDeaths,
+            FaultKind::Rejoin => Counter::FaultRejoins,
+        }
+    }
+}
+
+/// Number of log2 buckets: index 0 holds exact zeros, index `i ≥ 1`
+/// holds values in `[2^(i-1), 2^i − 1]`, so index 64 (values with the
+/// top bit set) is the last — no clamping needed for any `u64`.
+const HIST_BUCKETS: usize = 65;
+
+/// Bucket index for `v`: 0 for 0, otherwise `64 − leading_zeros(v)`.
+fn bucket_index(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `i` (`2^i − 1`, saturating).
+fn bucket_le(i: usize) -> u64 {
+    if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// One log2-bucket histogram. All fields are relaxed atomics: each
+/// observation is independent and the snapshot happens after every
+/// recording thread has joined, so no ordering is needed beyond
+/// atomicity (same argument as the residency gauge in
+/// `store::sharded`).
+struct Hist {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Hist {
+    fn new() -> Hist {
+        Hist {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, v: u64) {
+        // ORDERING: Relaxed — independent monotone accumulators read
+        // only at snapshot time, after recording threads joined.
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, id: HistId) -> HistSnapshot {
+        let raw: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let last = raw.iter().rposition(|&c| c > 0).map_or(0, |i| i + 1);
+        let mut cumulative = 0u64;
+        let buckets = raw[..last]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                cumulative += c;
+                (bucket_le(i), cumulative)
+            })
+            .collect();
+        HistSnapshot {
+            name: id.name(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram: `buckets` are
+/// `(inclusive upper bound, cumulative count)` pairs, truncated after
+/// the last non-empty bucket (Prometheus `le` semantics).
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistSnapshot {
+    /// Inclusive upper bound of the bucket containing the q-quantile
+    /// (0 ≤ q ≤ 1), or `None` on an empty histogram. Log2 buckets make
+    /// this a ≤ 2× over-estimate — good enough for `# obs:` lines.
+    pub fn quantile_le(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        self.buckets.iter().find(|&&(_, cum)| cum >= rank).map(|&(le, _)| le)
+    }
+
+    /// Inclusive upper bound of the highest non-empty bucket.
+    pub fn max_le(&self) -> Option<u64> {
+        self.buckets.last().map(|&(le, _)| le)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Per-peer transport byte/frame totals mirrored from the run's final
+/// [`TransportStats`] so the exported snapshot matches `RunReport.net`
+/// exactly (CI asserts this).
+#[derive(Debug, Clone, Default)]
+pub struct PeerNet {
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
+    pub sent_frames: u64,
+    pub recv_frames: u64,
+}
+
+/// One Chrome-trace event: a complete span (`ph = 'X'`, with a
+/// duration) or an instant (`ph = 'i'`). `tid` 0 is the master /
+/// single-process driver; worker `w` records as `tid = w + 1`.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub ph: char,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// Mutex-guarded recorder state: the trace buffer and everything else
+/// that is not a simple monotone counter. Trace pushes take this lock,
+/// which is fine because every span/instant is per-round or per-frame,
+/// never per coordinate update.
+struct Inner {
+    /// Concurrently-active `begin` scopes in this process (> 1 only
+    /// for in-process cluster topologies, e.g. tests).
+    active_runs: usize,
+    /// Wall-clock zero of the current run's trace timestamps.
+    epoch: Option<Instant>,
+    trace: Vec<TraceEvent>,
+    net: Vec<PeerNet>,
+}
+
+/// The observability seam: every layer (solver round boundaries,
+/// master barrier/merge, transport frames, evaluator, chaos faults)
+/// records through this one type. Obtain it via [`global`]; bracket a
+/// run with [`begin`] / [`RunGuard::finish`].
+pub struct Recorder {
+    enabled: AtomicBool,
+    tracing: AtomicBool,
+    counters: Vec<AtomicU64>,
+    gauges: Vec<AtomicU64>,
+    hists: Vec<Hist>,
+    inner: Mutex<Inner>,
+}
+
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+
+/// The process-wide recorder (disabled until a [`begin`] enables it).
+pub fn global() -> &'static Recorder {
+    RECORDER.get_or_init(Recorder::new)
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            enabled: AtomicBool::new(false),
+            tracing: AtomicBool::new(false),
+            counters: Counter::ALL.iter().map(|_| AtomicU64::new(0)).collect(),
+            gauges: Gauge::ALL.iter().map(|_| AtomicU64::new(0)).collect(),
+            hists: HistId::ALL.iter().map(|_| Hist::new()).collect(),
+            inner: Mutex::new(Inner {
+                active_runs: 0,
+                epoch: None,
+                trace: Vec::new(),
+                net: Vec::new(),
+            }),
+        }
+    }
+
+    /// Is the registry recording? One relaxed load — the entire cost
+    /// of every record call in a default (disabled) run.
+    pub fn on(&self) -> bool {
+        // ORDERING: Relaxed — a stale read during the begin/finish
+        // transition at worst drops or keeps one observation; the
+        // registry is reset under the inner lock before `enabled`
+        // flips on, so no stale *data* can leak between runs.
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Is the timeline tracer recording?
+    pub fn tracing_on(&self) -> bool {
+        // ORDERING: Relaxed — same argument as `on`.
+        self.tracing.load(Ordering::Relaxed)
+    }
+
+    /// Start a wall-clock measurement, or `None` when disabled — the
+    /// `Some` branch is the only time `Instant::now()` is called, so
+    /// disabled runs pay no clock reads.
+    pub fn timer(&self) -> Option<Instant> {
+        if self.on() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    pub fn add(&self, c: Counter, n: u64) {
+        if self.on() {
+            // ORDERING: Relaxed — monotone counter, snapshot-time read.
+            self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Raise `g` to at least `v` (high-water-mark semantics).
+    pub fn gauge_max(&self, g: Gauge, v: u64) {
+        if self.on() {
+            // ORDERING: Relaxed — independent high-water mark.
+            self.gauges[g as usize].fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Set `g` to `v` (last-writer-wins semantics).
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        if self.on() {
+            // ORDERING: Relaxed — last value wins; writers are the
+            // master thread only.
+            self.gauges[g as usize].store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn observe(&self, h: HistId, v: u64) {
+        if self.on() {
+            self.hists[h as usize].observe(v);
+        }
+    }
+
+    /// Microseconds since the run epoch for timestamp `t`.
+    fn ts_us(inner: &Inner, t: Instant) -> u64 {
+        match inner.epoch {
+            Some(epoch) => t.checked_duration_since(epoch).unwrap_or_default().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Record a complete span from `t0` (a [`Self::timer`] token) to
+    /// now. The histogram side (if any) is the caller's job — spans
+    /// only exist when tracing.
+    pub fn span(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        tid: u64,
+        t0: Option<Instant>,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        let Some(t0) = t0 else { return };
+        if !self.tracing_on() {
+            return;
+        }
+        let dur_us = t0.elapsed().as_micros() as u64;
+        let mut inner = self.inner.lock().expect("obs lock");
+        let ts_us = Self::ts_us(&inner, t0);
+        inner.trace.push(TraceEvent { name, cat, ph: 'X', ts_us, dur_us, tid, args });
+    }
+
+    /// Record an instant event at the current time.
+    pub fn instant(
+        &self,
+        name: &'static str,
+        cat: &'static str,
+        tid: u64,
+        args: Vec<(&'static str, Json)>,
+    ) {
+        if !self.tracing_on() {
+            return;
+        }
+        let now = Instant::now();
+        let mut inner = self.inner.lock().expect("obs lock");
+        let ts_us = Self::ts_us(&inner, now);
+        inner.trace.push(TraceEvent { name, cat, ph: 'i', ts_us, dur_us: 0, tid, args });
+    }
+
+    // ---- Domain-level recording (one method per instrumented site) ----
+
+    /// One worker compute round (R cores × H iterations) finished.
+    pub fn worker_round(&self, worker: usize, local_round: usize, updates: u64, t0: Option<Instant>) {
+        if !self.on() {
+            return;
+        }
+        self.add(Counter::WorkerRounds, 1);
+        if let Some(t0) = t0 {
+            self.observe(HistId::WorkerRoundUs, t0.elapsed().as_micros() as u64);
+        }
+        self.span(
+            "worker_round",
+            "compute",
+            worker as u64 + 1,
+            t0,
+            vec![
+                ("worker", Json::Num(worker as f64)),
+                ("round", Json::Num(local_round as f64)),
+                ("updates", Json::Num(updates as f64)),
+            ],
+        );
+    }
+
+    /// The master held the S-barrier open from `t0` until now.
+    pub fn barrier_wait(&self, round: usize, merged: usize, t0: Option<Instant>) {
+        if !self.on() {
+            return;
+        }
+        if let Some(t0) = t0 {
+            self.observe(HistId::BarrierWaitUs, t0.elapsed().as_micros() as u64);
+        }
+        self.span(
+            "s_barrier_wait",
+            "barrier",
+            0,
+            t0,
+            vec![("round", Json::Num(round as f64)), ("merged", Json::Num(merged as f64))],
+        );
+    }
+
+    /// One worker update was folded into a merge, with the measured
+    /// staleness (`gamma_k` at pop time — the Γ the bound constrains).
+    pub fn merged_update(&self, round: usize, worker: usize, staleness: usize, vtime: f64) {
+        if !self.on() {
+            return;
+        }
+        self.add(Counter::Merges, 1);
+        self.observe(HistId::Staleness, staleness as u64);
+        self.instant(
+            "merge",
+            "master",
+            0,
+            vec![
+                ("round", Json::Num(round as f64)),
+                ("worker", Json::Num(worker as f64)),
+                ("staleness", Json::Num(staleness as f64)),
+                ("vtime", Json::Num(vtime)),
+            ],
+        );
+    }
+
+    /// One master global round completed, carrying `updates` coordinate
+    /// updates across its merged messages.
+    pub fn master_round(&self, updates: u64) {
+        self.add(Counter::Rounds, 1);
+        self.add(Counter::Updates, updates);
+    }
+
+    /// One objective evaluation finished.
+    pub fn eval(&self, round: usize, t0: Option<Instant>) {
+        if !self.on() {
+            return;
+        }
+        self.add(Counter::Evals, 1);
+        if let Some(t0) = t0 {
+            self.observe(HistId::EvalUs, t0.elapsed().as_micros() as u64);
+        }
+        self.span("eval", "eval", 0, t0, vec![("round", Json::Num(round as f64))]);
+    }
+
+    /// A chaos/fault event: bumps the kind's counter and drops a trace
+    /// instant named after the kind (the chaos-trace test greps these).
+    pub fn fault(&self, kind: FaultKind, worker: usize, round: usize, detail: &str) {
+        if !self.on() {
+            return;
+        }
+        self.add(kind.counter(), 1);
+        self.instant(
+            kind.name(),
+            "fault",
+            0,
+            vec![
+                ("worker", Json::Num(worker as f64)),
+                ("round", Json::Num(round as f64)),
+                ("detail", Json::Str(detail.to_string())),
+            ],
+        );
+    }
+
+    /// A free-text fault-log line (mirror of `RunReport.faults.events`).
+    pub fn fault_log(&self, vtime: f64, round: usize, worker: usize, what: &str) {
+        self.instant(
+            "fault_log",
+            "fault",
+            0,
+            vec![
+                ("worker", Json::Num(worker as f64)),
+                ("round", Json::Num(round as f64)),
+                ("vtime", Json::Num(vtime)),
+                ("detail", Json::Str(what.to_string())),
+            ],
+        );
+    }
+
+    /// A transport frame left for `peer` (`bytes` = wire length).
+    pub fn frame_sent(&self, peer: usize, kind: &'static str, bytes: u64) {
+        self.instant(
+            "send",
+            "net",
+            0,
+            vec![
+                ("peer", Json::Num(peer as f64)),
+                ("kind", Json::Str(kind.to_string())),
+                ("bytes", Json::Num(bytes as f64)),
+            ],
+        );
+    }
+
+    /// A transport frame arrived from `peer`.
+    pub fn frame_recv(&self, peer: usize, kind: &'static str, bytes: u64) {
+        self.instant(
+            "recv",
+            "net",
+            0,
+            vec![
+                ("peer", Json::Num(peer as f64)),
+                ("kind", Json::Str(kind.to_string())),
+                ("bytes", Json::Num(bytes as f64)),
+            ],
+        );
+    }
+
+    /// Mirror the run's final per-peer transport totals into the
+    /// snapshot, so exported counters equal `RunReport.net` exactly.
+    pub fn set_net(&self, stats: &TransportStats) {
+        if !self.on() {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("obs lock");
+        inner.net = stats
+            .per_peer
+            .iter()
+            .map(|p| PeerNet {
+                sent_bytes: p.sent_bytes,
+                recv_bytes: p.recv_bytes,
+                sent_frames: p.sent_frames,
+                recv_frames: p.recv_frames,
+            })
+            .collect();
+    }
+
+    fn reset(&self, inner: &mut Inner) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for g in &self.gauges {
+            g.store(0, Ordering::Relaxed);
+        }
+        for h in &self.hists {
+            h.reset();
+        }
+        inner.trace.clear();
+        inner.net.clear();
+    }
+
+    fn snapshot(&self, inner: &mut Inner) -> ObsSnapshot {
+        ObsSnapshot {
+            counters: Counter::ALL
+                .iter()
+                .map(|&c| (c.name(), self.counters[c as usize].load(Ordering::Relaxed)))
+                .collect(),
+            gauges: Gauge::ALL
+                .iter()
+                .map(|&g| (g.name(), self.gauges[g as usize].load(Ordering::Relaxed)))
+                .collect(),
+            hists: HistId::ALL.iter().map(|&h| self.hists[h as usize].snapshot(h)).collect(),
+            net: std::mem::take(&mut inner.net),
+            trace: std::mem::take(&mut inner.trace),
+        }
+    }
+}
+
+/// Point-in-time copy of the whole registry, taken by the primary
+/// [`RunGuard::finish`] and carried in `RunReport.obs`. Counters and
+/// gauges are in catalog order.
+#[derive(Debug, Default)]
+pub struct ObsSnapshot {
+    pub counters: Vec<(&'static str, u64)>,
+    pub gauges: Vec<(&'static str, u64)>,
+    pub hists: Vec<HistSnapshot>,
+    pub net: Vec<PeerNet>,
+    pub trace: Vec<TraceEvent>,
+}
+
+impl ObsSnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map_or(0, |&(_, v)| v)
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.iter().find(|(n, _)| *n == name).map_or(0, |&(_, v)| v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+}
+
+/// Scope token from [`begin`]. The primary guard's [`finish`]
+/// (first `begin` in the process) yields the run's snapshot and
+/// disables the registry; secondary guards yield `None`.
+///
+/// [`finish`]: RunGuard::finish
+#[must_use = "finish() takes the snapshot; dropping the guard discards it"]
+pub struct RunGuard {
+    primary: bool,
+    done: bool,
+}
+
+/// Begin an observed run. `None` when `cfg.enabled` is false — the
+/// caller then skips the finish/snapshot plumbing entirely.
+pub fn begin(cfg: &ObsCfg) -> Option<RunGuard> {
+    if !cfg.enabled {
+        return None;
+    }
+    let rec = global();
+    let mut inner = rec.inner.lock().expect("obs lock");
+    let primary = inner.active_runs == 0;
+    inner.active_runs += 1;
+    if primary {
+        rec.reset(&mut inner);
+        inner.epoch = Some(Instant::now());
+        // ORDERING: Relaxed — the reset above happens under the inner
+        // lock before recording is observable; late recorders racing
+        // the flip merely miss one observation.
+        rec.enabled.store(true, Ordering::Relaxed);
+        rec.tracing.store(cfg.trace, Ordering::Relaxed);
+    } else if cfg.trace && !rec.tracing_on() {
+        // A nested scope may widen (but never narrow) the trace.
+        rec.tracing.store(true, Ordering::Relaxed);
+    }
+    drop(inner);
+    Some(RunGuard { primary, done: false })
+}
+
+impl RunGuard {
+    /// End the scope. The primary guard returns the run's snapshot and
+    /// turns recording off; nested guards return `None`.
+    pub fn finish(mut self) -> Option<ObsSnapshot> {
+        let rec = global();
+        let mut inner = rec.inner.lock().expect("obs lock");
+        inner.active_runs = inner.active_runs.saturating_sub(1);
+        self.done = true;
+        if !self.primary {
+            return None;
+        }
+        // ORDERING: Relaxed — see `begin`; stragglers recording after
+        // this flip lose their observation, which is the documented
+        // contract for nested scopes outliving the primary.
+        rec.enabled.store(false, Ordering::Relaxed);
+        rec.tracing.store(false, Ordering::Relaxed);
+        inner.epoch = None;
+        Some(rec.snapshot(&mut inner))
+    }
+}
+
+impl Drop for RunGuard {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // Error-path unwind: release the scope without snapshotting.
+        let rec = global();
+        let mut inner = rec.inner.lock().expect("obs lock");
+        inner.active_runs = inner.active_runs.saturating_sub(1);
+        if self.primary {
+            rec.enabled.store(false, Ordering::Relaxed);
+            rec.tracing.store(false, Ordering::Relaxed);
+            inner.epoch = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Lifecycle tests mutate the process-global recorder; serialize
+    /// them so parallel `cargo test` threads cannot interleave scopes.
+    fn lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+    use crate::util::sync::MutexGuard;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        // Every power of two starts a new bucket; its predecessor ends
+        // the previous one.
+        for i in 1..64 {
+            let p = 1u64 << i;
+            assert_eq!(bucket_index(p), i + 1, "2^{i}");
+            assert_eq!(bucket_index(p - 1), i, "2^{i} - 1");
+        }
+        assert_eq!(bucket_index(u64::MAX), 64);
+        // `le` bounds are the inclusive bucket tops.
+        assert_eq!(bucket_le(0), 0);
+        assert_eq!(bucket_le(1), 1);
+        assert_eq!(bucket_le(2), 3);
+        assert_eq!(bucket_le(64), u64::MAX);
+        for v in [0u64, 1, 2, 3, 4, 5, 1023, 1024, 1025, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_le(i), "{v} ≤ le({i})");
+            assert!(i == 0 || v > bucket_le(i - 1), "{v} > le({})", i - 1);
+        }
+    }
+
+    #[test]
+    fn hist_snapshot_quantiles() {
+        let h = Hist::new();
+        for v in [1u64, 1, 1, 2, 4, 100] {
+            h.observe(v);
+        }
+        let snap = h.snapshot(HistId::Staleness);
+        assert_eq!(snap.count, 6);
+        assert_eq!(snap.sum, 109);
+        assert_eq!(snap.quantile_le(0.5), Some(1)); // rank 3 of 6 → bucket le=1
+        assert_eq!(snap.max_le(), Some(127)); // 100 lands in [64, 127]
+        assert!((snap.mean() - 109.0 / 6.0).abs() < 1e-12);
+        // Cumulative counts are monotone and end at `count`.
+        assert_eq!(snap.buckets.last().map(|&(_, c)| c), Some(6));
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let _g = lock();
+        let rec = global();
+        assert!(!rec.on());
+        rec.add(Counter::Rounds, 5);
+        rec.observe(HistId::Staleness, 3);
+        rec.instant("merge", "master", 0, vec![]);
+        // An enabled scope starts from zero regardless.
+        let guard = begin(&ObsCfg { enabled: true, trace: false }).expect("enabled");
+        let snap = guard.finish().expect("primary");
+        assert_eq!(snap.counter("rounds_total"), 0);
+        assert!(snap.trace.is_empty());
+    }
+
+    #[test]
+    fn begin_finish_snapshot_cycle() {
+        let _g = lock();
+        assert!(begin(&ObsCfg::default()).is_none(), "disabled config yields no guard");
+        let guard = begin(&ObsCfg { enabled: true, trace: true }).expect("enabled");
+        let rec = global();
+        assert!(rec.on() && rec.tracing_on());
+        rec.master_round(128);
+        rec.merged_update(1, 0, 2, 0.5);
+        rec.fault(FaultKind::Rejoin, 1, 3, "test rejoin");
+        rec.gauge_max(Gauge::ResidencyPeak, 2);
+        let snap = guard.finish().expect("primary snapshot");
+        assert!(!rec.on(), "finish disables recording");
+        assert_eq!(snap.counter("rounds_total"), 1);
+        assert_eq!(snap.counter("updates_total"), 128);
+        assert_eq!(snap.counter("merges_total"), 1);
+        assert_eq!(snap.counter("fault_rejoins_total"), 1);
+        assert_eq!(snap.gauge("eval_shard_residency_peak"), 2);
+        let hist = snap.hist("staleness_rounds").expect("catalog hist");
+        assert_eq!(hist.count, 1);
+        let names: Vec<_> = snap.trace.iter().map(|e| e.name).collect();
+        assert!(names.contains(&"merge") && names.contains(&"rejoin"), "{names:?}");
+    }
+
+    #[test]
+    fn nested_scopes_share_the_primary_registry() {
+        let _g = lock();
+        let outer = begin(&ObsCfg { enabled: true, trace: false }).expect("outer");
+        let inner = begin(&ObsCfg { enabled: true, trace: false }).expect("inner");
+        global().add(Counter::WorkerRounds, 3);
+        assert!(inner.finish().is_none(), "nested scope has no snapshot");
+        assert!(global().on(), "primary scope still recording");
+        let snap = outer.finish().expect("primary");
+        assert_eq!(snap.counter("worker_rounds_total"), 3);
+    }
+}

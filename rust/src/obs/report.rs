@@ -1,0 +1,157 @@
+//! One formatting helper for every `# <channel>:` report printer.
+//!
+//! The CLI ends a run with machine-greppable stdout lines — `# transport:`,
+//! `# faults:`, `# obs:` — and CI smoke steps grep them literally
+//! (e.g. `grep -q "# faults: k_live=1 deaths=1"`). Routing all three
+//! printers through [`kv_line`] keeps the shape in one place: a `# `
+//! prefix, the channel name, a colon, an optional free-form head, then
+//! space-separated `key=value` fields. Values may contain spaces
+//! (`sent=12B/3 frames`); keys must not.
+
+use super::ObsSnapshot;
+
+/// Format one report line: `# {channel}: {head} k=v k=v`. An empty
+/// `head` is skipped (no double space); an empty field list gives a
+/// head-only line.
+pub fn kv_line(channel: &str, head: &str, fields: &[(&str, String)]) -> String {
+    let mut s = format!("# {channel}:");
+    if !head.is_empty() {
+        s.push(' ');
+        s.push_str(head);
+    }
+    for (k, v) in fields {
+        s.push(' ');
+        s.push_str(k);
+        s.push('=');
+        s.push_str(v);
+    }
+    s
+}
+
+/// The `# obs:` summary of a run's metrics snapshot — counters first,
+/// then non-empty histograms (approximate p50/max from the log2
+/// buckets), then non-zero gauges, then a trace note. Keys are stable;
+/// CI greps them.
+pub fn obs_lines(snap: &ObsSnapshot) -> Vec<String> {
+    let mut lines = Vec::new();
+    lines.push(kv_line(
+        "obs",
+        "",
+        &[
+            ("rounds", snap.counter("rounds_total").to_string()),
+            ("merges", snap.counter("merges_total").to_string()),
+            ("updates", snap.counter("updates_total").to_string()),
+            ("worker_rounds", snap.counter("worker_rounds_total").to_string()),
+            ("evals", snap.counter("evals_total").to_string()),
+        ],
+    ));
+    let faults = [
+        ("stalls", snap.counter("fault_stalls_total")),
+        ("retransmits", snap.counter("fault_retransmits_total")),
+        ("rejoins", snap.counter("fault_rejoins_total")),
+        ("deaths", snap.counter("fault_deaths_total")),
+    ];
+    if faults.iter().any(|&(_, v)| v > 0) {
+        lines.push(kv_line(
+            "obs",
+            "faults",
+            &faults.map(|(k, v)| (k, v.to_string())),
+        ));
+    }
+    for h in &snap.hists {
+        if h.count == 0 {
+            continue;
+        }
+        lines.push(kv_line(
+            "obs",
+            h.name,
+            &[
+                ("count", h.count.to_string()),
+                ("mean", format!("{:.1}", h.mean())),
+                ("p50_le", h.quantile_le(0.5).unwrap_or(0).to_string()),
+                ("max_le", h.max_le().unwrap_or(0).to_string()),
+            ],
+        ));
+    }
+    let residency = snap.gauge("eval_shard_residency_peak");
+    if residency > 0 {
+        lines.push(kv_line("obs", "", &[("residency_peak", residency.to_string())]));
+    }
+    if !snap.trace.is_empty() {
+        lines.push(kv_line("obs", "", &[("trace_events", snap.trace.len().to_string())]));
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::HistSnapshot;
+
+    #[test]
+    fn kv_line_shapes() {
+        assert_eq!(kv_line("obs", "", &[("rounds", "8".into())]), "# obs: rounds=8");
+        // Values may contain spaces — the `# transport:` per-peer form.
+        assert_eq!(
+            kv_line(
+                "transport",
+                "worker 0",
+                &[("sent", "12B/3 frames".into()), ("recv", "4B/1 frames".into())]
+            ),
+            "# transport: worker 0 sent=12B/3 frames recv=4B/1 frames"
+        );
+        // Head-only lines (the fault event log).
+        assert_eq!(
+            kv_line("faults", "[vtime 0.100 round 2] worker 1: stalled", &[]),
+            "# faults: [vtime 0.100 round 2] worker 1: stalled"
+        );
+    }
+
+    #[test]
+    fn obs_lines_are_stable_and_sparse() {
+        let mut snap = ObsSnapshot {
+            counters: vec![
+                ("rounds_total", 8),
+                ("merges_total", 14),
+                ("updates_total", 4096),
+                ("worker_rounds_total", 14),
+                ("evals_total", 4),
+                ("fault_stalls_total", 0),
+                ("fault_retransmits_total", 0),
+                ("fault_rejoins_total", 0),
+                ("fault_deaths_total", 0),
+            ],
+            gauges: vec![("eval_shard_residency_peak", 0)],
+            hists: vec![HistSnapshot {
+                name: "staleness_rounds",
+                count: 14,
+                sum: 19,
+                buckets: vec![(1, 10), (3, 14)],
+            }],
+            net: Vec::new(),
+            trace: Vec::new(),
+        };
+        let lines = obs_lines(&snap);
+        assert_eq!(
+            lines[0],
+            "# obs: rounds=8 merges=14 updates=4096 worker_rounds=14 evals=4"
+        );
+        assert!(lines.iter().any(|l| l.starts_with("# obs: staleness_rounds count=14")), "{lines:?}");
+        // Clean run: no faults line, no residency line.
+        assert!(!lines.iter().any(|l| l.contains("faults")), "{lines:?}");
+        assert!(!lines.iter().any(|l| l.contains("residency")), "{lines:?}");
+        // A dirty run gets both.
+        for c in snap.counters.iter_mut() {
+            if c.0 == "fault_rejoins_total" {
+                c.1 = 1;
+            }
+        }
+        snap.gauges = vec![("eval_shard_residency_peak", 2)];
+        let lines = obs_lines(&snap);
+        assert!(
+            lines.iter().any(|l| l == "# obs: faults stalls=0 retransmits=0 rejoins=1 deaths=0"),
+            "{lines:?}"
+        );
+        assert!(lines.iter().any(|l| l == "# obs: residency_peak=2"), "{lines:?}");
+    }
+}

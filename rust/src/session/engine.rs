@@ -258,6 +258,7 @@ mod tests {
                     worker_rounds: Vec::new(),
                     net: Default::default(),
                     faults: Default::default(),
+                    obs: None,
                 })
             }
         }

@@ -25,11 +25,13 @@
 pub mod chaos;
 pub mod frame;
 mod inprocess;
+pub mod obs;
 mod socket;
 
 pub use chaos::{ChaosTransport, FaultKind, FaultPlan};
 pub use frame::{Frame, RejoinInfo, WireError, WIRE_MAGIC, WIRE_VERSION};
 pub use inprocess::{in_process, InProcessMaster, InProcessWorker};
+pub use obs::ObsTransport;
 pub use socket::{SocketListener, SocketMaster, SocketWorker};
 
 /// The worker-side peer index of the master.

@@ -1,0 +1,138 @@
+//! Frame-level trace decorator.
+//!
+//! [`ObsTransport`] wraps any [`Transport`] and drops a trace instant
+//! per successful frame send/recv — peer index, frame kind, and wire
+//! length ([`Frame::wire_len`], the same billing the stats counters
+//! use). It is installed outermost (over the chaos decorator, when
+//! present) and only when the run's `[obs]` config asks for a trace,
+//! so un-traced runs never pay the extra virtual dispatch. Metrics-side
+//! per-peer byte totals are *not* diffed here: they are mirrored once
+//! at run end from the same [`Transport::stats`] that fills
+//! `RunReport.net`, which is what lets CI assert snapshot == report.
+
+use super::{Frame, RejoinInfo, Transport, TransportError, TransportStats};
+
+/// Decorator recording one trace instant per frame moved.
+pub struct ObsTransport {
+    inner: Box<dyn Transport>,
+}
+
+impl ObsTransport {
+    /// Wrap `inner`. The caller decides *whether* (tracing enabled);
+    /// the wrapper itself re-checks per frame so a secondary scope
+    /// widening the trace mid-run is picked up too.
+    pub fn wrap(inner: Box<dyn Transport>) -> Box<dyn Transport> {
+        Box::new(ObsTransport { inner })
+    }
+}
+
+impl Transport for ObsTransport {
+    fn send(&mut self, to: usize, frame: Frame) -> Result<(), TransportError> {
+        let rec = crate::obs::global();
+        // Capture kind/len before the frame moves into the inner send.
+        let meta = if rec.tracing_on() {
+            Some((frame.kind_name(), frame.wire_len() as u64))
+        } else {
+            None
+        };
+        self.inner.send(to, frame)?;
+        if let Some((kind, bytes)) = meta {
+            rec.frame_sent(to, kind, bytes);
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame), TransportError> {
+        let (from, frame) = self.inner.recv()?;
+        let rec = crate::obs::global();
+        if rec.tracing_on() {
+            rec.frame_recv(from, frame.kind_name(), frame.wire_len() as u64);
+        }
+        Ok((from, frame))
+    }
+
+    fn peers(&self) -> usize {
+        self.inner.peers()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.inner.stats()
+    }
+
+    fn recv_timeout(
+        &mut self,
+        dur: std::time::Duration,
+    ) -> Result<Option<(usize, Frame)>, TransportError> {
+        let got = self.inner.recv_timeout(dur)?;
+        if let Some((from, frame)) = &got {
+            let rec = crate::obs::global();
+            if rec.tracing_on() {
+                rec.frame_recv(*from, frame.kind_name(), frame.wire_len() as u64);
+            }
+        }
+        Ok(got)
+    }
+
+    fn reconnect(&mut self, info: &RejoinInfo) -> Result<bool, TransportError> {
+        self.inner.reconnect(info)
+    }
+
+    fn disconnect(&mut self, peer: usize) {
+        self.inner.disconnect(peer);
+    }
+
+    fn sever(&mut self) {
+        self.inner.sever();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{begin, ObsCfg};
+    use crate::transport::in_process;
+    use crate::util::sync::{Mutex, MutexGuard};
+
+    /// Serialize with the other tests that toggle the global recorder.
+    fn lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn traced_frames_become_instants() {
+        let _g = lock();
+        let guard = begin(&ObsCfg { enabled: true, trace: true }).expect("enabled");
+        let (master, mut workers) = in_process(1);
+        let mut master = ObsTransport::wrap(Box::new(master));
+        let mut worker = workers.pop().expect("one worker");
+        let shutdown = Frame::Shutdown { vtime: 0.0, round: 0 };
+        let wire_len = shutdown.wire_len();
+        master.send(0, shutdown).expect("send");
+        let (_, frame) = worker.recv().expect("recv");
+        assert!(matches!(frame, Frame::Shutdown { .. }));
+        let snap = guard.finish().expect("primary");
+        let sends: Vec<_> = snap.trace.iter().filter(|e| e.name == "send").collect();
+        assert_eq!(sends.len(), 1);
+        assert_eq!(sends[0].cat, "net");
+        let bytes = sends[0]
+            .args
+            .iter()
+            .find(|(k, _)| *k == "bytes")
+            .and_then(|(_, v)| v.as_f64())
+            .expect("bytes arg");
+        assert_eq!(bytes, wire_len as f64);
+    }
+
+    #[test]
+    fn untraced_wrapper_is_transparent() {
+        let _g = lock();
+        let (master, mut workers) = in_process(1);
+        let mut master = ObsTransport::wrap(Box::new(master));
+        let mut worker = workers.pop().expect("one worker");
+        master.send(0, Frame::Shutdown { vtime: 0.0, round: 0 }).expect("send");
+        assert!(matches!(worker.recv(), Ok((_, Frame::Shutdown { .. }))));
+        assert_eq!(master.peers(), 1);
+        assert_eq!(master.stats().per_peer.len(), 1);
+    }
+}

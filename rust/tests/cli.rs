@@ -199,6 +199,40 @@ fn stats_all_presets() {
 }
 
 #[test]
+fn bench_report_compares_trajectories() {
+    let dir = std::env::temp_dir().join("hybrid_dca_cli_bench_report");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("BENCH_hot_loop.json"),
+        r#"{
+  "bench": "hot_loop",
+  "runs": [
+    {"label": "before", "rows": [{"path": "local sequential", "p50_secs": 0.1}]},
+    {"label": "after", "rows": [
+      {"path": "local sequential", "p50_secs": 0.15},
+      {"path": "local wild", "p50_secs": 0.05}
+    ]}
+  ]
+}"#,
+    )
+    .unwrap();
+    let (stdout, stderr, ok) = run(&["bench", "report", "--dir", dir.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("latest 'after' vs previous 'before'"), "{stdout}");
+    assert!(stdout.contains("SLOWER"), "{stdout}");
+    assert!(stdout.contains("(new path)"), "{stdout}");
+    assert!(stdout.contains("BENCH_data_io.json: missing (skipped)"), "{stdout}");
+    // A generous band turns the same delta into noise — and the
+    // report stays advisory either way (exit 0).
+    let (stdout, _, ok) =
+        run(&["bench", "report", "--dir", dir.to_str().unwrap(), "--band", "60"]);
+    assert!(ok);
+    assert!(stdout.contains("~ within band"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn bad_flags_rejected() {
     let (_, stderr, ok) = run(&["train", "--algo", "bogus"]);
     assert!(!ok);

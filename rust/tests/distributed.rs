@@ -58,7 +58,9 @@ fn run_cluster(algo: Algorithm, cfg: &ExpConfig) -> (RunReport, Vec<WorkerSummar
     let handles: Vec<_> = (0..cfg.k_nodes)
         .map(|_| {
             let jc = join_cfg.clone();
-            std::thread::spawn(move || distributed::run_worker_node(&jc, None))
+            std::thread::spawn(move || {
+                distributed::run_worker_node(&jc, None, hybrid_dca::obs::ObsCfg::default())
+            })
         })
         .collect();
     let report =

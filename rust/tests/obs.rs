@@ -1,0 +1,296 @@
+//! Observability end-to-end. Two claims are pinned here:
+//!
+//! 1. **Recording never perturbs the math.** `--dump` state is
+//!    bitwise-identical with observability on vs off, both in-process
+//!    and across a real UDS cluster — the obs layer aggregates at
+//!    round boundaries and is excluded from the dump by construction.
+//! 2. **The timeline tells the real story.** A chaos run's Chrome
+//!    trace parses with `util::json` and contains worker-round spans,
+//!    the S-barrier wait span, merge instants carrying their measured
+//!    staleness, and the stall → declared_dead → rejoin fault arc.
+
+use std::process::Command;
+
+use hybrid_dca::config::{Algorithm, ExpConfig};
+use hybrid_dca::coordinator::distributed;
+use hybrid_dca::data::{Preset, Strategy};
+use hybrid_dca::obs::{self, ObsCfg};
+use hybrid_dca::session::ObserverHandle;
+use hybrid_dca::store::{self, PackOptions};
+use hybrid_dca::transport::{SocketListener, TransportBackend};
+use hybrid_dca::util::json::Json;
+use hybrid_dca::util::Rng;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_hybrid-dca")
+}
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(bin()).args(args).output().expect("spawn binary");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+/// All trace events of the `{"traceEvents": [...]}` document.
+fn trace_events(doc: &Json) -> &[Json] {
+    doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array")
+}
+
+fn names(events: &[Json]) -> Vec<&str> {
+    events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect()
+}
+
+/// Observability on vs off must leave the in-process `--dump` state
+/// byte-identical, and the artifacts must parse and carry the run.
+#[test]
+fn in_process_dump_identical_with_obs_on() {
+    let tmp = std::env::temp_dir();
+    let dump_off = tmp.join("hybrid_dca_obs_dump_off.json");
+    let dump_on = tmp.join("hybrid_dca_obs_dump_on.json");
+    let metrics = tmp.join("hybrid_dca_obs_metrics.json");
+    let trace = tmp.join("hybrid_dca_obs_trace.json");
+    for f in [&dump_off, &dump_on, &metrics, &trace] {
+        let _ = std::fs::remove_file(f);
+    }
+
+    let common = [
+        "train", "--algo", "hybrid", "--dataset", "tiny", "--lambda", "0.01", "--nodes", "2",
+        "--cores", "1", "--s", "1", "--gamma", "2", "--h", "64", "--rounds", "8", "--threshold",
+        "1e-9", "--seed", "7",
+    ];
+    let mut off_args = common.to_vec();
+    off_args.extend_from_slice(&["--dump", dump_off.to_str().unwrap()]);
+    let (_, stderr, ok) = run(&off_args);
+    assert!(ok, "obs-off run failed: {stderr}");
+
+    let mut on_args = common.to_vec();
+    on_args.extend_from_slice(&[
+        "--dump",
+        dump_on.to_str().unwrap(),
+        "--metrics-out",
+        metrics.to_str().unwrap(),
+        "--trace-out",
+        trace.to_str().unwrap(),
+    ]);
+    let (stdout, stderr, ok) = run(&on_args);
+    assert!(ok, "obs-on run failed: {stderr}");
+    assert!(stdout.contains("# obs: rounds="), "{stdout}");
+
+    let off = std::fs::read(&dump_off).expect("obs-off dump");
+    let on = std::fs::read(&dump_on).expect("obs-on dump");
+    assert!(!off.is_empty());
+    assert_eq!(off, on, "observability changed the dumped final state");
+
+    // The metrics snapshot parses and saw the whole run.
+    let m = Json::parse(&std::fs::read_to_string(&metrics).unwrap()).expect("metrics JSON");
+    let rounds = m.get("counters").unwrap().get("rounds_total").unwrap().as_f64().unwrap();
+    assert!(rounds >= 1.0, "rounds_total={rounds}");
+    let updates = m.get("counters").unwrap().get("updates_total").unwrap().as_f64().unwrap();
+    assert!(updates > 0.0);
+
+    // The trace parses Chrome-shaped with the expected span families.
+    let t = Json::parse(&std::fs::read_to_string(&trace).unwrap()).expect("trace JSON");
+    let events = trace_events(&t);
+    let names = names(events);
+    assert!(names.contains(&"worker_round"), "{names:?}");
+    assert!(names.contains(&"s_barrier_wait"), "{names:?}");
+    assert!(names.contains(&"merge"), "{names:?}");
+
+    for f in [&dump_off, &dump_on, &metrics, &trace] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+/// Same parity claim over a real multi-process UDS cluster: the master
+/// recording metrics + timeline must dump the exact bytes a dark
+/// cluster dumps.
+#[test]
+fn uds_cluster_dump_identical_with_obs_on() {
+    let tmp = std::env::temp_dir();
+    let store = tmp.join("hybrid_dca_obs_uds_store");
+    let _ = std::fs::remove_dir_all(&store);
+    let (_, stderr, ok) = run(&[
+        "data", "pack", "--preset", "tiny", "--out", store.to_str().unwrap(), "--shard-rows",
+        "50", "--align", "2",
+    ]);
+    assert!(ok, "pack failed: {stderr}");
+
+    let run_cluster = |tag: &str, obs_flags: &[&str]| -> Vec<u8> {
+        let dump = tmp.join(format!("hybrid_dca_obs_uds_dump_{tag}.json"));
+        let sock = tmp.join(format!("hybrid_dca_obs_uds_{tag}.sock"));
+        let _ = std::fs::remove_file(&dump);
+        let _ = std::fs::remove_file(&sock);
+        let store_s = store.to_str().unwrap().to_string();
+        let mut args = vec![
+            "train", "--algo", "hybrid", "--store", &store_s, "--lambda", "0.01", "--nodes",
+            "2", "--cores", "1", "--s", "1", "--gamma", "2", "--h", "64", "--rounds", "8",
+            "--threshold", "1e-9", "--seed", "7", "--distributed", "--transport", "uds",
+        ];
+        let sock_s = sock.to_str().unwrap().to_string();
+        let dump_s = dump.to_str().unwrap().to_string();
+        args.extend_from_slice(&["--listen", &sock_s, "--dump", &dump_s]);
+        args.extend_from_slice(obs_flags);
+        let master = Command::new(bin())
+            .args(&args)
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn master");
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                Command::new(bin())
+                    .args(["node", "--transport", "uds", "--join", &sock_s])
+                    .stdout(std::process::Stdio::piped())
+                    .stderr(std::process::Stdio::piped())
+                    .spawn()
+                    .expect("spawn worker")
+            })
+            .collect();
+        let mout = master.wait_with_output().expect("master exit");
+        assert!(
+            mout.status.success(),
+            "master ({tag}) failed: {}",
+            String::from_utf8_lossy(&mout.stderr)
+        );
+        for w in workers {
+            let out = w.wait_with_output().expect("worker exit");
+            assert!(
+                out.status.success(),
+                "worker ({tag}) failed: {}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        std::fs::read(&dump).expect("cluster dump")
+    };
+
+    let metrics = tmp.join("hybrid_dca_obs_uds_metrics.prom");
+    let trace = tmp.join("hybrid_dca_obs_uds_trace.json");
+    let _ = std::fs::remove_file(&metrics);
+    let _ = std::fs::remove_file(&trace);
+    let dark = run_cluster("off", &[]);
+    let lit = run_cluster(
+        "on",
+        &[
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ],
+    );
+    assert!(!dark.is_empty());
+    assert_eq!(dark, lit, "observability changed the cluster's dumped final state");
+
+    // The Prometheus exposition carries the per-peer byte counters.
+    let prom = std::fs::read_to_string(&metrics).expect("prometheus text");
+    assert!(prom.contains("# TYPE hdca_rounds_total counter"), "{prom}");
+    assert!(prom.contains("hdca_net_sent_bytes{peer=\"0\"}"), "{prom}");
+    assert!(prom.contains("hdca_net_recv_bytes{peer=\"1\"}"), "{prom}");
+    // And the master's trace saw real frames on the wire.
+    let t = Json::parse(&std::fs::read_to_string(&trace).unwrap()).expect("trace JSON");
+    let names = names(trace_events(&t));
+    assert!(names.contains(&"recv"), "{names:?}");
+    assert!(names.contains(&"send"), "{names:?}");
+
+    let _ = std::fs::remove_dir_all(&store);
+    let _ = std::fs::remove_file(&metrics);
+    let _ = std::fs::remove_file(&trace);
+}
+
+/// A chaos run (stall past suspicion → declared dead → reconnect +
+/// rejoin) recorded with the timeline on must produce a parseable
+/// Chrome trace containing the whole fault arc, in order, plus the
+/// compute/barrier/merge spans around it.
+#[test]
+fn chaos_trace_contains_the_fault_arc() {
+    let dir = std::env::temp_dir().join("hybrid_dca_obs_chaos_store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ds = Preset::Tiny.generate(&mut Rng::new(7));
+    let opts = PackOptions { shard_rows: 50, align: 2, seed: 7, ..Default::default() };
+    store::pack_dataset(&ds, &dir, &opts, Strategy::Contiguous).unwrap();
+
+    let mut cfg = ExpConfig::default();
+    cfg.dataset = "tiny".into();
+    cfg.store_path = Some(dir.to_string_lossy().into_owned());
+    cfg.lambda = 1e-2;
+    cfg.k_nodes = 2;
+    cfg.r_cores = 1;
+    cfg.s_barrier = 1;
+    cfg.gamma = 2;
+    cfg.h_local = 64;
+    cfg.max_rounds = 14;
+    cfg.gap_threshold = 1e-9;
+    cfg.eval_every = 2;
+    cfg.seed = 42;
+    cfg.obs = ObsCfg { enabled: true, trace: true };
+    cfg.transport.backend = TransportBackend::Tcp;
+    cfg.transport.listen = "127.0.0.1:0".into();
+    cfg.transport.read_timeout_secs = 0.05;
+    cfg.transport.suspicion_timeouts = 3;
+    cfg.transport.backoff_base_secs = 0.02;
+    cfg.transport.backoff_max_secs = 0.1;
+    // Worker 1 goes dark well past the suspicion threshold at its
+    // round 1; worker 0's paced sub-threshold stalls keep the gather
+    // alive long enough for the rejoin to land mid-run (same recipe as
+    // the fault-tolerance test in tests/distributed.rs).
+    let pace: String = (2..=10)
+        .map(|r| format!("stall:worker=0,round={r},secs=0.08"))
+        .collect::<Vec<_>>()
+        .join(";");
+    cfg.chaos_plan = format!("stall:worker=1,round=1,secs=0.4;{pace}");
+
+    let listener = SocketListener::bind(&cfg.transport).unwrap();
+    let mut join_cfg = cfg.transport.clone();
+    join_cfg.join = listener.local_desc().to_string();
+    let handles: Vec<_> = (0..cfg.k_nodes)
+        .map(|_| {
+            let jc = join_cfg.clone();
+            std::thread::spawn(move || distributed::run_worker_node(&jc, None, ObsCfg::default()))
+        })
+        .collect();
+    let report = distributed::run_master_with_listener(
+        Algorithm::HybridDca,
+        &cfg,
+        listener,
+        &ObserverHandle::silent(),
+    )
+    .unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert!(report.faults.per_peer[1].declared_dead >= 1, "{:?}", report.faults);
+    assert!(report.faults.per_peer[1].rejoins >= 1, "{:?}", report.faults);
+
+    let snap = report.obs.as_ref().expect("obs snapshot");
+    assert!(snap.counter("fault_deaths_total") >= 1);
+    assert!(snap.counter("fault_rejoins_total") >= 1);
+
+    // The exported trace must survive a parse round trip.
+    let doc = Json::parse(&obs::export::trace_json(snap).to_pretty()).expect("trace JSON");
+    let events = trace_events(&doc);
+    let names = names(events);
+    assert!(names.contains(&"worker_round"), "{names:?}");
+    assert!(names.contains(&"s_barrier_wait"), "{names:?}");
+    let first = |what: &str| {
+        names
+            .iter()
+            .position(|&n| n == what)
+            .unwrap_or_else(|| panic!("no '{what}' event in {names:?}"))
+    };
+    // The arc happens in causal order: silence strikes, then the death
+    // verdict, then the rejoin handshake.
+    assert!(first("stall") < first("declared_dead"));
+    assert!(first("declared_dead") < first("rejoin"));
+
+    // Merges carry the measured staleness Γ the bound constrains.
+    let merge = events
+        .iter()
+        .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("merge"))
+        .expect("merge instant");
+    let staleness = merge.get("args").unwrap().get("staleness").unwrap().as_f64().unwrap();
+    assert!(staleness >= 1.0, "staleness {staleness}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
